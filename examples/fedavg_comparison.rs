@@ -1,0 +1,45 @@
+//! Dynamic averaging vs Federated Averaging (paper §5, Figs 5.2/5.3):
+//! sweeps Δ and the FedAvg client fraction C on the MNIST-like CNN and
+//! prints the communication/quality trade-off table.
+//!
+//! ```text
+//! cargo run --release --example fedavg_comparison [-- --rounds 200 --m 10]
+//! ```
+
+use anyhow::Result;
+
+use dynavg::coordinator::ProtocolSpec;
+use dynavg::experiments::{fig5_2, Dataset, Harness};
+use dynavg::runtime::Runtime;
+use dynavg::sim::SimConfig;
+use dynavg::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let rounds = args.get_usize("rounds", 200) as u64;
+    let m = args.get_usize("m", 10);
+    let b = args.get_usize("b", 25) as u64;
+
+    let rt = Runtime::new(dynavg::artifacts_dir())?;
+    let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+    cfg.seed = 21;
+    cfg.final_eval = true;
+    let harness = Harness::new(&rt, cfg, Dataset::MnistLike, "fedavg_comparison");
+
+    let mut specs = vec![ProtocolSpec::Periodic { period: b }];
+    for delta in [0.2, 0.4, 0.8] {
+        specs.push(ProtocolSpec::Dynamic {
+            delta,
+            check_every: b,
+        });
+    }
+    for c in [0.3, 0.5, 0.7] {
+        specs.push(ProtocolSpec::FedAvg {
+            period: b,
+            fraction: c,
+        });
+    }
+    let results = harness.run_all(&specs, false)?;
+    fig5_2::print_relative(&results);
+    Ok(())
+}

@@ -1,0 +1,277 @@
+"""AOT compile path: lower every model x optimizer step to XLA HLO *text*.
+
+Why text: jax >= 0.5 serializes HloModuleProto with 64-bit instruction ids
+which the rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+``HloModuleProto::from_text_file`` reassigns ids, so text round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+  <name>.hlo.txt        — one module per artifact (train / eval / infer)
+  <model>_init.bin      — Glorot-initialized flat f32[P] parameter vector
+  <model>_scales.bin    — per-element init scales (for eps-heterogeneous init)
+  manifest.json         — machine-readable index consumed by rust/src/runtime
+
+Python runs ONCE at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import models as M
+from . import optimizers as O
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def make_train_step(model: M.Model, opt):
+    def step(params, state, x, y, lr):
+        (loss, metric), grad = jax.value_and_grad(model.loss_flat, has_aux=True)(
+            params, x, y
+        )
+        new_params, new_state = opt.update(params, state, grad, lr)
+        return new_params, new_state, loss, metric
+
+    return step
+
+
+def make_eval_step(model: M.Model):
+    def step(params, x, y):
+        loss, metric = model.loss_flat(params, x, y)
+        return loss, metric
+
+    return step
+
+
+def make_infer_step(model: M.Model):
+    def step(params, x):
+        return (model.apply(model.spec.unflatten(params), x),)
+
+    return step
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(shape, DTYPES[dtype])
+
+
+def x_spec(model: M.Model, batch: int):
+    return spec((batch, *model.x_shape), model.x_dtype)
+
+
+def y_spec(model: M.Model, batch: int):
+    if model.y_shape == (0,):  # e.g. transformer: targets derived from x
+        return spec((batch, 1), model.y_dtype)
+    return spec((batch, *model.y_shape), model.y_dtype)
+
+
+def build_artifact(out_dir, name, lowered, extra_meta):
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    meta = dict(extra_meta)
+    meta["name"] = name
+    meta["hlo"] = f"{name}.hlo.txt"
+    meta["hlo_sha256"] = hashlib.sha256(text.encode()).hexdigest()
+    meta["hlo_bytes"] = len(text)
+    print(f"  {name}: {len(text)} chars")
+    return meta
+
+
+def dump_init(out_dir, model: M.Model, seed: int):
+    flat, scales = model.spec.init(jax.random.PRNGKey(seed))
+    init_path = os.path.join(out_dir, f"{model.name}_init.bin")
+    np.asarray(flat, dtype="<f4").tofile(init_path)
+    scales_path = os.path.join(out_dir, f"{model.name}_scales.bin")
+    np.asarray(scales, dtype="<f4").tofile(scales_path)
+    return f"{model.name}_init.bin", f"{model.name}_scales.bin"
+
+
+# (model, optimizer, train batch) triples to compile.
+TRAIN_MATRIX = [
+    ("drift_mlp", "sgd", 10),
+    ("mnist_cnn", "sgd", 10),
+    ("mnist_cnn", "adam", 10),
+    ("mnist_cnn", "rmsprop", 10),
+    ("driving_cnn", "sgd", 10),
+    ("transformer_lm", "adam", 8),
+]
+EVAL_BATCH = {"drift_mlp": 100, "mnist_cnn": 100, "driving_cnn": 100, "transformer_lm": 8}
+INFER_MODELS = [("driving_cnn", 1)]
+# XLA-side protocol statistics (perf ablation vs the L3-native scan):
+# (name, m learners, model whose P sets the vector width)
+SYNC_STATS = [("sync_stats_m10_mnist", 10, "mnist_cnn")]
+
+
+def make_sync_stats():
+    from .kernels import reduce as red_k
+
+    def step(models, r):
+        dists, mean, div = red_k.sync_stats(models, r)
+        return dists, mean, div
+
+    return step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--only", default=None, help="comma list of model names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    model_cache: dict[str, M.Model] = {}
+
+    def get_model(name):
+        if name not in model_cache:
+            model_cache[name] = M.get(name)
+        return model_cache[name]
+
+    manifest = {"seed": args.seed, "artifacts": [], "models": {}}
+
+    wanted_models = {m for m, _, _ in TRAIN_MATRIX}
+    for mname in sorted(wanted_models):
+        if only and mname not in only:
+            continue
+        model = get_model(mname)
+        init_bin, scales_bin = dump_init(args.out, model, args.seed)
+        manifest["models"][mname] = {
+            "param_count": model.spec.total,
+            "x_shape": list(model.x_shape),
+            "x_dtype": model.x_dtype,
+            "y_shape": list(model.y_shape),
+            "y_dtype": model.y_dtype,
+            "metric": model.metric,
+            "init_bin": init_bin,
+            "scales_bin": scales_bin,
+            "tensors": [
+                {"name": n, "shape": list(s)} for (n, s, _, _) in model.spec.entries
+            ],
+        }
+        print(f"model {mname}: P={model.spec.total}")
+
+    for mname, oname, batch in TRAIN_MATRIX:
+        if only and mname not in only:
+            continue
+        model = get_model(mname)
+        opt = O.get(oname)
+        step = make_train_step(model, opt)
+        ssize = opt.state_size(model.spec.total)
+        lowered = jax.jit(step, keep_unused=True).lower(
+            spec((model.spec.total,)),
+            spec((ssize,)),
+            x_spec(model, batch),
+            y_spec(model, batch),
+            spec(()),
+        )
+        manifest["artifacts"].append(
+            build_artifact(
+                args.out,
+                f"{mname}_{oname}_train",
+                lowered,
+                {
+                    "kind": "train",
+                    "model": mname,
+                    "optimizer": oname,
+                    "batch": batch,
+                    "param_count": model.spec.total,
+                    "state_size": ssize,
+                    "outputs": ["params", "opt_state", "loss", "metric"],
+                },
+            )
+        )
+
+    for mname in sorted(wanted_models):
+        if only and mname not in only:
+            continue
+        model = get_model(mname)
+        batch = EVAL_BATCH[mname]
+        lowered = jax.jit(make_eval_step(model), keep_unused=True).lower(
+            spec((model.spec.total,)), x_spec(model, batch), y_spec(model, batch)
+        )
+        manifest["artifacts"].append(
+            build_artifact(
+                args.out,
+                f"{mname}_eval",
+                lowered,
+                {
+                    "kind": "eval",
+                    "model": mname,
+                    "batch": batch,
+                    "param_count": model.spec.total,
+                    "outputs": ["loss", "metric"],
+                },
+            )
+        )
+
+    for mname, batch in INFER_MODELS:
+        if only and mname not in only:
+            continue
+        model = get_model(mname)
+        lowered = jax.jit(make_infer_step(model), keep_unused=True).lower(
+            spec((model.spec.total,)), x_spec(model, batch)
+        )
+        manifest["artifacts"].append(
+            build_artifact(
+                args.out,
+                f"{mname}_infer",
+                lowered,
+                {
+                    "kind": "infer",
+                    "model": mname,
+                    "batch": batch,
+                    "param_count": model.spec.total,
+                    "outputs": ["out"],
+                },
+            )
+        )
+
+    for name, m_learners, mname in SYNC_STATS:
+        if only and mname not in only:
+            continue
+        model = get_model(mname)
+        p = model.spec.total
+        lowered = jax.jit(make_sync_stats(), keep_unused=True).lower(
+            spec((m_learners, p)), spec((p,))
+        )
+        manifest["artifacts"].append(
+            build_artifact(
+                args.out,
+                name,
+                lowered,
+                {
+                    "kind": "sync_stats",
+                    "model": mname,
+                    "batch": m_learners,
+                    "param_count": p,
+                    "outputs": ["dists", "mean", "divergence"],
+                },
+            )
+        )
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Flat-parameter packing (L2 <-> L3 contract).
+
+Every model's parameters travel through the system as ONE contiguous
+``f32[P]`` vector — the object the paper's protocol actually manipulates
+(averaging, divergence, local conditions are all vector ops). Packing
+order is the declaration order of the model's parameter spec; unflattening
+happens inside the jitted step function so the HLO artifact consumes and
+produces flat vectors.
+
+Initialization follows Glorot/Xavier uniform (paper ref [41]) for weight
+matrices and zeros for biases; per-element init *scales* are exported too
+so the rust side can reproduce the paper's heterogeneous-initialization
+study (Fig 6.2: noise at scale eps *relative to the homogeneous init*).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec:
+    """Ordered list of named tensors making up a model's flat vector."""
+
+    def __init__(self, entries):
+        # entries: list of (name, shape, fan_in, fan_out) ; fans for init
+        self.entries = list(entries)
+        self.shapes = [e[1] for e in self.entries]
+        self.sizes = [int(np.prod(s)) if len(s) else 1 for s in self.shapes]
+        self.offsets = np.cumsum([0] + self.sizes).tolist()
+        self.total = int(self.offsets[-1])
+
+    def unflatten(self, flat):
+        """flat: (P,) jnp array -> list of tensors in declaration order."""
+        out = []
+        for (name, shape, _, _), off, size in zip(
+            self.entries, self.offsets, self.sizes
+        ):
+            out.append(jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape))
+        return out
+
+    def flatten(self, tensors):
+        return jnp.concatenate([t.reshape(-1) for t in tensors])
+
+    def init(self, key):
+        """Glorot-uniform init -> (flat f32[P], per-element scale f32[P]).
+
+        scale[j] is the std of the distribution element j was drawn from
+        (0 bias entries get the mean weight scale so eps-noise still
+        perturbs them proportionally, matching the paper's 'noise at the
+        scale of the homogeneous initialization')."""
+        flats, scales = [], []
+        weight_stds = []
+        for i, (name, shape, fan_in, fan_out) in enumerate(self.entries):
+            key, sub = jax.random.split(key)
+            if fan_in > 0:
+                limit = math.sqrt(6.0 / (fan_in + fan_out))
+                t = jax.random.uniform(sub, shape, jnp.float32, -limit, limit)
+                std = limit / math.sqrt(3.0)
+                weight_stds.append(std)
+            else:  # bias / layernorm offset
+                t = jnp.zeros(shape, jnp.float32)
+                std = 0.0
+            flats.append(t.reshape(-1))
+            scales.append(jnp.full((int(np.prod(shape)) if len(shape) else 1,), std))
+        mean_std = float(np.mean(weight_stds)) if weight_stds else 1.0
+        scale_vec = jnp.concatenate(scales)
+        scale_vec = jnp.where(scale_vec == 0.0, mean_std, scale_vec)
+        return jnp.concatenate(flats), scale_vec
+
+
+def dense_entries(name, d_in, d_out):
+    return [
+        (f"{name}.w", (d_in, d_out), d_in, d_out),
+        (f"{name}.b", (d_out,), 0, 0),
+    ]
+
+
+def conv_entries(name, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    fan_out = kh * kw * cout
+    return [
+        (f"{name}.w", (kh, kw, cin, cout), fan_in, fan_out),
+        (f"{name}.b", (cout,), 0, 0),
+    ]

@@ -1,0 +1,107 @@
+"""L1: conv2d as im2col patch extraction + Pallas MXU matmul.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): on TPU the canonical way
+to run a convolution is to rewrite it as a matmul feeding the MXU systolic
+array — im2col turns the (B,H,W,Cin) input into a (B*OH*OW, KH*KW*Cin)
+patch matrix which multiplies the (KH*KW*Cin, Cout) filter matrix. The
+patch extraction is pure data movement (differentiable jnp ops, XLA fuses
+it); the FLOPs all land in the Pallas ``dense`` kernel, so the hot loop is
+tiled for VMEM exactly like the dense layers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+
+def _extract_patches(x, kh: int, kw: int, stride: int):
+    """(B,H,W,C) -> (B, OH, OW, kh*kw*C) valid-padding patch tensor."""
+    b, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    # Gather kh*kw shifted slices; XLA turns these into cheap strided slices.
+    rows = []
+    for di in range(kh):
+        cols = []
+        for dj in range(kw):
+            sl = jax.lax.slice(
+                x,
+                (0, di, dj, 0),
+                (b, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(sl)
+        rows.append(jnp.concatenate(cols, axis=-1))
+    patches = jnp.concatenate(rows, axis=-1)  # (B, OH, OW, kh*kw*C)
+    return patches, oh, ow
+
+
+def _conv2d_raw(x, w, b, stride: int, activation: str | None):
+    kh, kw, cin, cout = w.shape
+    patches, oh, ow = _extract_patches(x, kh, kw, stride)
+    bsz = x.shape[0]
+    flat = patches.reshape(bsz * oh * ow, kh * kw * cin)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = mm.matmul_bias_act_raw(flat, wmat, b, activation)
+    return out.reshape(bsz, oh, ow, cout)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def conv2d(x, w, b, stride: int = 1, activation: str | None = None):
+    """Differentiable conv2d (valid padding) via im2col + Pallas dense.
+
+    x: (B,H,W,Cin), w: (kh,kw,Cin,Cout), b: (Cout,).
+
+    Backward: dW = patches^T @ dOut through the Pallas matmul (recomputing
+    patches, FlashAttention-style rematerialization); dX through XLA's
+    transposed convolution (on TPU that is itself an MXU matmul — routing
+    it through im2col would materialize a huge scatter instead).
+    """
+    return _conv2d_raw(x, w, b, stride, activation)
+
+
+def _conv2d_fwd(x, w, b, stride, activation):
+    out = _conv2d_raw(x, w, b, stride, activation)
+    return out, (x, w, out)
+
+
+def _conv2d_bwd(stride, activation, res, g):
+    x, w, out = res
+    kh, kw, cin, cout = w.shape
+    if activation == "relu":
+        g = g * (out > 0.0).astype(g.dtype)
+    elif activation == "tanh":
+        g = g * (1.0 - out * out)
+    elif activation is not None:
+        raise ValueError(activation)
+    bsz, oh, ow, _ = g.shape
+    gflat = g.reshape(bsz * oh * ow, cout)
+    patches, _, _ = _extract_patches(x, kh, kw, stride)
+    flat = patches.reshape(bsz * oh * ow, kh * kw * cin)
+    dw = mm.matmul_raw(flat.T, gflat).reshape(kh, kw, cin, cout)
+    db = jnp.sum(gflat, axis=0)
+    # dX via XLA transposed conv (derived with jax.vjp over the lax conv)
+    def fwd_noact(xx):
+        return jax.lax.conv_general_dilated(
+            xx, w, (stride, stride), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    _, pull = jax.vjp(fwd_noact, x)
+    (dx,) = pull(g)
+    return dx, dw, db
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+def max_pool2(x):
+    """2x2 max pooling, stride 2 (paper's MaxPooling2D)."""
+    b, h, w, c = x.shape
+    x = x[:, : h - h % 2, : w - w % 2, :]
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))

@@ -1,0 +1,155 @@
+"""L1: tiled Pallas matmul with fused bias + activation, and its VJP.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the kernel computes one
+``(bm, bn)`` output tile per grid cell from a ``(bm, K)`` LHS stripe and a
+``(K, bn)`` RHS stripe held in VMEM; ``jnp.dot`` inside the kernel targets
+the MXU with f32 accumulation (``preferred_element_type``). ``BlockSpec``
+index maps express the HBM->VMEM schedule that a CUDA implementation would
+express with thread blocks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels are traced to plain HLO. Correctness is pinned to
+``ref.py`` by ``python/tests/test_kernels.py``.
+
+Autodiff: ``pallas_call`` has no built-in reverse rule, so ``matmul`` (and
+the fused variants) carry a ``jax.custom_vjp`` whose backward pass is two
+more Pallas matmuls (dX = dO @ W^T, dW = X^T @ dO) plus the activation
+derivative computed from saved forward values.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM on a modern TPU core is ~16 MiB; keep each grid cell's working set
+# (LHS stripe + RHS stripe + out tile, f32) well under that.
+_VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (>=1)."""
+    t = min(dim, target)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def tile_shape(m: int, n: int, k: int, bm: int = 2048, bn: int = 256):
+    """Choose (bm, bn) tiles dividing (m, n) and fitting the VMEM budget."""
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    # shrink until the working set fits VMEM (f32 = 4 bytes)
+    while 4 * (bm * k + k * bn + bm * bn) > _VMEM_BUDGET_BYTES and (bm > 8 or bn > 8):
+        if bm >= bn and bm > 8:
+            bm = _pick_tile(m, bm // 2)
+        else:
+            bn = _pick_tile(n, bn // 2)
+    return bm, bn
+
+
+def vmem_bytes(m: int, n: int, k: int, bm: int, bn: int) -> int:
+    """Per-grid-cell VMEM working set in bytes (used by perf estimates)."""
+    return 4 * (bm * k + k * bn + bm * bn)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _mm_bias_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    o_ref[...] = acc
+
+
+def matmul_raw(x: jax.Array, w: jax.Array, bm: int = 2048, bn: int = 256) -> jax.Array:
+    """Tiled Pallas matmul, no autodiff rule. x: (M, K), w: (K, N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    bm, bn = tile_shape(m, n, k, bm, bn)
+    return pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_bias_act_raw(x, w, b, activation: str | None = None, bm: int = 2048, bn: int = 256):
+    """Fused (x @ w + b) then optional activation, one Pallas pass."""
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn = tile_shape(m, n, k, bm, bn)
+    kern = functools.partial(_mm_bias_kernel, activation=activation)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w, b)
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable Pallas matmul: softmax-free core primitive of L2."""
+    return matmul_raw(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_raw(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    return matmul_raw(g, w.T), matmul_raw(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation: str | None = None):
+    """Differentiable fused dense layer: act(x @ w + b)."""
+    return matmul_bias_act_raw(x, w, b, activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    out = matmul_bias_act_raw(x, w, b, activation)
+    return out, (x, w, out)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, out = res
+    if activation == "relu":
+        g = g * (out > 0.0).astype(g.dtype)
+    elif activation == "tanh":
+        g = g * (1.0 - out * out)
+    elif activation is not None:
+        raise ValueError(f"unknown activation {activation!r}")
+    dx = matmul_raw(g, w.T)
+    dw = matmul_raw(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,84 @@
+"""L1: Pallas reduction kernels for the protocol math (divergence, averaging).
+
+These power the optional XLA-side sync artifacts (``sync_stats``): given the
+stacked model configuration ``models: (m, P)`` and reference ``r: (P,)``
+they produce the per-learner local-condition values ``||f_i - r||^2`` and
+the mean model — i.e. one fused pass over the configuration that the
+coordinator can invoke instead of its native scan. L3-native vs XLA-side is
+a perf ablation (EXPERIMENTS.md §Perf).
+
+Grid: one cell per parameter chunk; each cell reduces a (m, bp) tile held
+in VMEM and accumulates partial sums into the output. Accumulation across
+grid cells uses the standard Pallas revisiting-output pattern (the output
+block index map ignores the chunk axis, so the same output tile is revisited
+and accumulated across iterations).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_chunk(p: int, target: int = 4096) -> int:
+    c = min(p, target)
+    while p % c:
+        c -= 1
+    return c
+
+
+def _sqdist_kernel(models_ref, r_ref, o_ref):
+    j = pl.program_id(0)
+    d = models_ref[...] - r_ref[...][None, :]
+    partial = jnp.sum(d * d, axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+def sqdist(models, r):
+    """(m, P), (P,) -> (m,) squared distances, chunked Pallas reduction."""
+    m, p = models.shape
+    bp = _pick_chunk(p)
+    return pl.pallas_call(
+        _sqdist_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((m, bp), lambda j: (0, j)),
+            pl.BlockSpec((bp,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda j: (0,)),
+        interpret=True,
+    )(models, r)
+
+
+def _mean_kernel(models_ref, o_ref):
+    o_ref[...] = jnp.mean(models_ref[...], axis=0)
+
+
+def mean_model(models):
+    """(m, P) -> (P,) average model, chunked over P."""
+    m, p = models.shape
+    bp = _pick_chunk(p)
+    return pl.pallas_call(
+        _mean_kernel,
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        grid=(p // bp,),
+        in_specs=[pl.BlockSpec((m, bp), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((bp,), lambda j: (j,)),
+        interpret=True,
+    )(models)
+
+
+def sync_stats(models, r):
+    """Fused protocol statistics: per-learner ||f_i - r||^2, mean model,
+    and the configuration divergence (paper eq. 2)."""
+    dists = sqdist(models, r)
+    mean = mean_model(models)
+    div = jnp.mean(sqdist(models, mean))
+    return dists, mean, div

@@ -1,0 +1,60 @@
+"""Pure-jnp correctness oracles for every Pallas kernel (L1).
+
+These are the ground truth the pytest suite pins the kernels to; they are
+also used to cross-check gradients (custom VJPs vs jax autodiff through the
+reference implementations).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x, w):
+    return jnp.matmul(x, w)
+
+
+def dense(x, w, b, activation=None):
+    out = jnp.matmul(x, w) + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    elif activation is not None:
+        raise ValueError(activation)
+    return out
+
+
+def attention(q, k, v):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D). Causal scaled dot-product."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.tril(jnp.ones((q.shape[2], k.shape[2]), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v)
+
+
+def sqdist(models, r):
+    """models: (m, P), r: (P,) -> per-learner squared distances (m,)."""
+    d = models - r[None, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def divergence(models):
+    """Paper eq. (2): 1/m sum_i ||f_i - mean||^2."""
+    mean = jnp.mean(models, axis=0)
+    return jnp.mean(sqdist(models, mean))
+
+
+def conv2d(x, w, b, stride=1):
+    """x: (B,H,W,Cin), w: (kh,kw,Cin,Cout), valid padding."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b

@@ -1,0 +1,87 @@
+"""L2: optimizers over flat parameter vectors (paper Appendix A.5).
+
+The paper treats the learning algorithm phi as a black box; we provide the
+three it evaluates — mini-batch SGD (the default phi^mSGD), ADAM and
+RMSprop (Keras-default hyperparameters, as the paper used Keras).
+
+Uniform state contract so every train artifact has the same signature:
+``state`` is a flat f32 vector of size ``state_size(P)`` (>=1; SGD keeps a
+1-element dummy so the rust runtime never deals with zero-length buffers).
+The learning rate is a runtime scalar input, so protocol sweeps never
+recompile.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class Sgd:
+    name = "sgd"
+
+    @staticmethod
+    def state_size(p: int) -> int:
+        return 1  # dummy slot; keeps artifact signatures uniform
+
+    @staticmethod
+    def init_state(p: int):
+        return jnp.zeros((1,), jnp.float32)
+
+    @staticmethod
+    def update(params, state, grad, lr):
+        return params - lr * grad, state
+
+
+class Adam:
+    """Keras defaults: beta1=0.9, beta2=0.999, eps=1e-7."""
+
+    name = "adam"
+    B1, B2, EPS = 0.9, 0.999, 1e-7
+
+    @staticmethod
+    def state_size(p: int) -> int:
+        return 2 * p + 1  # m, v, step counter
+
+    @staticmethod
+    def init_state(p: int):
+        return jnp.zeros((2 * p + 1,), jnp.float32)
+
+    @classmethod
+    def update(cls, params, state, grad, lr):
+        p = params.shape[0]
+        m, v, t = state[:p], state[p : 2 * p], state[2 * p]
+        t = t + 1.0
+        m = cls.B1 * m + (1.0 - cls.B1) * grad
+        v = cls.B2 * v + (1.0 - cls.B2) * grad * grad
+        mhat = m / (1.0 - cls.B1**t)
+        vhat = v / (1.0 - cls.B2**t)
+        new = params - lr * mhat / (jnp.sqrt(vhat) + cls.EPS)
+        return new, jnp.concatenate([m, v, t[None]])
+
+
+class RmsProp:
+    """Keras defaults: rho=0.9, eps=1e-7."""
+
+    name = "rmsprop"
+    RHO, EPS = 0.9, 1e-7
+
+    @staticmethod
+    def state_size(p: int) -> int:
+        return p
+
+    @staticmethod
+    def init_state(p: int):
+        return jnp.zeros((p,), jnp.float32)
+
+    @classmethod
+    def update(cls, params, state, grad, lr):
+        v = cls.RHO * state + (1.0 - cls.RHO) * grad * grad
+        new = params - lr * grad / (jnp.sqrt(v) + cls.EPS)
+        return new, v
+
+
+OPTIMIZERS = {"sgd": Sgd, "adam": Adam, "rmsprop": RmsProp}
+
+
+def get(name: str):
+    return OPTIMIZERS[name]

@@ -1,0 +1,210 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and the fused-activation variants); gradients of
+the custom VJPs are pinned to jax autodiff through the references.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import attention as attn_k
+from compile.kernels import conv2d as conv_k
+from compile.kernels import matmul as mm
+from compile.kernels import reduce as red_k
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ------------------------------------------------------------------ matmul
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+)
+def test_matmul_matches_ref(m, k, n):
+    x, w = rand(0, m, k), rand(1, k, n)
+    np.testing.assert_allclose(mm.matmul(x, w), ref.matmul(x, w), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 32),
+    act=st.sampled_from([None, "relu", "tanh"]),
+)
+def test_dense_matches_ref(m, k, n, act):
+    x, w, b = rand(0, m, k), rand(1, k, n), rand(2, n)
+    np.testing.assert_allclose(
+        mm.dense(x, w, b, act), ref.dense(x, w, b, act), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("act", [None, "relu", "tanh"])
+def test_dense_grads_match_ref(act):
+    x, w, b = rand(0, 12, 20), rand(1, 20, 8), rand(2, 8)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(mm.dense(x, w, b, act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.dense(x, w, b, act) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_grad_matches_ref():
+    x, w = rand(0, 9, 17), rand(1, 17, 5)
+    gk = jax.grad(lambda x, w: jnp.sum(jnp.sin(mm.matmul(x, w))), argnums=(0, 1))(x, w)
+    gr = jax.grad(lambda x, w: jnp.sum(jnp.sin(ref.matmul(x, w))), argnums=(0, 1))(x, w)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5)
+
+
+@given(m=st.integers(129, 400), k=st.integers(1, 16))
+@settings(max_examples=8)
+def test_matmul_multi_tile_grid(m, k):
+    """Shapes that force a multi-cell grid (m > default tile)."""
+    x, w = rand(3, m, k), rand(4, k, 8)
+    np.testing.assert_allclose(
+        mm.matmul_raw(x, w, bm=64, bn=8), ref.matmul(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_tile_shape_respects_vmem_budget():
+    for m, n, k in [(4096, 4096, 4096), (6760, 8, 9), (10, 2304, 64)]:
+        bm, bn = mm.tile_shape(m, n, k)
+        assert m % bm == 0 and n % bn == 0
+        assert mm.vmem_bytes(m, n, k, bm, bn) <= mm._VMEM_BUDGET_BYTES
+
+
+# ------------------------------------------------------------------ conv2d
+@given(
+    b=st.integers(1, 6),
+    h=st.integers(6, 20),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 8),
+    kh=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+)
+@settings(max_examples=20)
+def test_conv2d_matches_ref(b, h, cin, cout, kh, stride):
+    w_dim = h + 2
+    x = rand(0, b, h, w_dim, cin)
+    w = rand(1, kh, kh, cin, cout)
+    bias = rand(2, cout)
+    got = conv_k.conv2d(x, w, bias, stride)
+    want = ref.conv2d(x, w, bias, stride)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("stride,act", [(1, None), (2, "relu"), (1, "tanh")])
+def test_conv2d_grads_match_ref(stride, act):
+    x = rand(0, 3, 10, 12, 2)
+    w = rand(1, 3, 3, 2, 5)
+    bias = rand(2, 5)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(conv_k.conv2d(x, w, b, stride, act) ** 2)
+
+    def f_ref(x, w, b):
+        out = ref.conv2d(x, w, b, stride)
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif act == "tanh":
+            out = jnp.tanh(out)
+        return jnp.sum(out**2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, bias)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_max_pool2():
+    x = rand(0, 2, 8, 8, 3)
+    got = conv_k.max_pool2(x)
+    want = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    np.testing.assert_allclose(got, want)
+
+
+def test_max_pool2_odd_dims_truncate():
+    x = rand(0, 1, 7, 9, 2)
+    assert conv_k.max_pool2(x).shape == (1, 3, 4, 2)
+
+
+# --------------------------------------------------------------- attention
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([1, 4, 16, 33]),
+    d=st.sampled_from([4, 8, 16]),
+)
+@settings(max_examples=15)
+def test_attention_matches_ref(b, h, s, d):
+    q, k, v = rand(0, b, h, s, d), rand(1, b, h, s, d), rand(2, b, h, s, d)
+    np.testing.assert_allclose(
+        attn_k.attention(q, k, v), ref.attention(q, k, v), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_attention_grads_match_ref():
+    q, k, v = rand(0, 2, 2, 8, 8), rand(1, 2, 2, 8, 8), rand(2, 2, 2, 8, 8)
+    gk = jax.grad(lambda q, k, v: jnp.sum(attn_k.attention(q, k, v) ** 2), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda q, k, v: jnp.sum(ref.attention(q, k, v) ** 2), argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_is_causal():
+    """Output at position t must not depend on inputs at positions > t."""
+    q, k, v = rand(0, 1, 1, 8, 4), rand(1, 1, 1, 8, 4), rand(2, 1, 1, 8, 4)
+    base = attn_k.attention(q, k, v)
+    k2 = k.at[:, :, 7, :].set(99.0)
+    v2 = v.at[:, :, 7, :].set(-99.0)
+    pert = attn_k.attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, :7], pert[:, :, :7], rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ reduce
+@given(m=st.integers(1, 12), p=st.integers(1, 600))
+@settings(max_examples=20)
+def test_sqdist_matches_ref(m, p):
+    models, r = rand(0, m, p), rand(1, p)
+    np.testing.assert_allclose(
+        red_k.sqdist(models, r), ref.sqdist(models, r), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(m=st.integers(1, 12), p=st.integers(1, 600))
+@settings(max_examples=20)
+def test_mean_model_matches_ref(m, p):
+    models = rand(0, m, p)
+    np.testing.assert_allclose(
+        red_k.mean_model(models), jnp.mean(models, axis=0), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_sync_stats_divergence_matches_eq2():
+    models = rand(0, 8, 512)
+    dists, mean, div = red_k.sync_stats(models, jnp.zeros(512))
+    np.testing.assert_allclose(div, ref.divergence(models), rtol=1e-5)
+    np.testing.assert_allclose(mean, jnp.mean(models, axis=0), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dists, ref.sqdist(models, jnp.zeros(512)), rtol=1e-4)

@@ -1,0 +1,161 @@
+"""L2 correctness: flat-param models, shapes, losses, optimizer algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import flatten as fl
+from compile import models as M
+from compile import optimizers as O
+from compile.aot import make_eval_step, make_train_step
+
+
+def batch_for(model, B, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if model.x_dtype == "i32":
+        x = jax.random.randint(key, (B, *model.x_shape), 0, model.vocab - 1)
+        y = jnp.zeros((B, 1), jnp.int32)
+    else:
+        x = jax.random.normal(key, (B, *model.x_shape), jnp.float32)
+        if model.metric == "mse":
+            y = jax.random.uniform(key, (B, *model.y_shape), jnp.float32, -1, 1)
+        else:
+            y = jax.nn.one_hot(jnp.arange(B) % model.y_shape[0], model.y_shape[0])
+    return x, y
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_loss_is_finite_scalar(name):
+    model = M.get(name)
+    flat, scales = model.spec.init(jax.random.PRNGKey(0))
+    assert flat.shape == (model.spec.total,)
+    assert scales.shape == (model.spec.total,)
+    assert bool(jnp.all(scales > 0))
+    x, y = batch_for(model, 4)
+    loss, metric = model.loss_flat(flat, x, y)
+    assert loss.shape == () and metric.shape == ()
+    assert np.isfinite(float(loss)) and np.isfinite(float(metric))
+
+
+@pytest.mark.parametrize("name,opt", [("drift_mlp", "sgd"), ("mnist_cnn", "sgd"),
+                                      ("driving_cnn", "sgd"), ("transformer_lm", "adam")])
+def test_train_step_reduces_loss_on_fixed_batch(name, opt):
+    model, o = M.get(name), O.get(opt)
+    step = jax.jit(make_train_step(model, o))
+    p, _ = model.spec.init(jax.random.PRNGKey(0))
+    s = o.init_state(model.spec.total)
+    x, y = batch_for(model, 8 if name == "transformer_lm" else 10)
+    lr = jnp.float32(0.01 if opt == "adam" else 0.1)
+    first = None
+    for i in range(25):
+        p, s, loss, _ = step(p, s, x, y, lr)
+        if i == 0:
+            first = float(loss)
+    assert float(loss) < first, f"{name}/{opt}: {first} -> {float(loss)}"
+
+
+def test_flatten_roundtrip():
+    spec = fl.ParamSpec(
+        fl.dense_entries("a", 7, 5) + fl.conv_entries("c", 3, 3, 2, 4)
+    )
+    flat, _ = spec.init(jax.random.PRNGKey(1))
+    tensors = spec.unflatten(flat)
+    assert [t.shape for t in tensors] == [(7, 5), (5,), (3, 3, 2, 4), (4,)]
+    np.testing.assert_allclose(spec.flatten(tensors), flat)
+
+
+def test_glorot_init_scale():
+    spec = fl.ParamSpec(fl.dense_entries("a", 300, 200))
+    flat, scales = spec.init(jax.random.PRNGKey(2))
+    w = flat[: 300 * 200]
+    limit = np.sqrt(6.0 / 500.0)
+    assert float(jnp.max(jnp.abs(w))) <= limit
+    # empirical std within 5% of limit/sqrt(3)
+    assert abs(float(jnp.std(w)) - limit / np.sqrt(3)) < 0.05 * limit
+
+
+# --------------------------------------------------------------- optimizers
+def test_sgd_update_rule():
+    p = jnp.array([1.0, 2.0])
+    g = jnp.array([0.5, -1.0])
+    new, s = O.Sgd.update(p, O.Sgd.init_state(2), g, jnp.float32(0.1))
+    np.testing.assert_allclose(new, [0.95, 2.1], rtol=1e-6)
+
+
+def test_adam_matches_reference_formula():
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.normal(size=16), jnp.float32)
+    s = O.Adam.init_state(16)
+    m = np.zeros(16)
+    v = np.zeros(16)
+    pn = np.asarray(p)
+    for t in range(1, 6):
+        g = rng.normal(size=16).astype(np.float32)
+        p, s = O.Adam.update(p, s, jnp.asarray(g), jnp.float32(0.01))
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9**t)
+        vh = v / (1 - 0.999**t)
+        pn = pn - 0.01 * mh / (np.sqrt(vh) + 1e-7)
+    np.testing.assert_allclose(np.asarray(p), pn, rtol=1e-4, atol=1e-6)
+
+
+def test_rmsprop_matches_reference_formula():
+    rng = np.random.default_rng(1)
+    p = jnp.asarray(rng.normal(size=8), jnp.float32)
+    s = O.RmsProp.init_state(8)
+    v = np.zeros(8)
+    pn = np.asarray(p)
+    for _ in range(4):
+        g = rng.normal(size=8).astype(np.float32)
+        p, s = O.RmsProp.update(p, s, jnp.asarray(g), jnp.float32(0.01))
+        v = 0.9 * v + 0.1 * g * g
+        pn = pn - 0.01 * g / (np.sqrt(v) + 1e-7)
+    np.testing.assert_allclose(np.asarray(p), pn, rtol=1e-4, atol=1e-6)
+
+
+def test_optimizer_state_sizes():
+    assert O.Sgd.state_size(100) == 1
+    assert O.Adam.state_size(100) == 201
+    assert O.RmsProp.state_size(100) == 100
+
+
+# ------------------------------------------------------- paper Proposition 3
+def test_proposition3_continuous_averaging_equals_serial():
+    """sigma_1(mSGD_{B,eta} x m) == mSGD_{mB, eta/m}: averaging m one-step-
+    updated replicas equals one serial step on the union batch with lr/m."""
+    model = M.get("drift_mlp")
+    p0, _ = model.spec.init(jax.random.PRNGKey(3))
+    m_learners, B = 4, 5
+    key = jax.random.PRNGKey(4)
+    xs = jax.random.normal(key, (m_learners, B, 50))
+    ys = jax.nn.one_hot(jax.random.randint(key, (m_learners, B), 0, 2), 2)
+    eta = 0.2
+
+    def grad_sum(p, x, y):
+        # sum (not mean) of per-sample gradient: paper's phi^mSGD
+        def total_loss(p):
+            l, _ = model.loss_flat(p, x, y)
+            return l * x.shape[0]  # undo the mean -> sum over batch
+
+        return jax.grad(total_loss)(p)
+
+    # m local updates then average
+    locals_ = [p0 - eta * grad_sum(p0, xs[i], ys[i]) for i in range(m_learners)]
+    averaged = jnp.mean(jnp.stack(locals_), axis=0)
+    # serial with batch mB and lr eta/m
+    x_all = xs.reshape(m_learners * B, 50)
+    y_all = ys.reshape(m_learners * B, 2)
+    serial = p0 - (eta / m_learners) * grad_sum(p0, x_all, y_all)
+    np.testing.assert_allclose(averaged, serial, rtol=1e-4, atol=1e-6)
+
+
+def test_eval_step_consistent_with_loss():
+    model = M.get("drift_mlp")
+    p, _ = model.spec.init(jax.random.PRNGKey(0))
+    x, y = batch_for(model, 10)
+    l1, m1 = jax.jit(make_eval_step(model))(p, x, y)
+    l2, m2 = model.loss_flat(p, x, y)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+    np.testing.assert_allclose(m1, m2, rtol=1e-6)

@@ -1,0 +1,37 @@
+//! Driving-substrate benchmarks: camera rendering (the closed-loop hot
+//! path), simulator stepping, closest-point search, and expert labelling.
+
+use dynavg::data::Stream;
+use dynavg::driving::{Car, CarParams, DrivingStream, PdDriver, Track};
+use dynavg::util::bench::{bench, black_box, header};
+use dynavg::util::rng::Rng;
+
+fn main() {
+    header();
+    let track = Track::standard();
+    let mut car = Car::on_track(&track, 0.3, CarParams::default());
+    let mut img = vec![0.0f32; 32 * 64];
+
+    bench("camera_render_32x64", 100, || {
+        dynavg::driving::camera::render(black_box(&car), &track, &mut img);
+    });
+
+    bench("car_step_with_closest_point", 100, || {
+        car.step(0.1, &track);
+    });
+
+    let driver = PdDriver::default();
+    let mut rng = Rng::new(1);
+    bench("pd_driver_steer", 100, || {
+        black_box(driver.steer(&car, &track, &mut rng));
+    });
+
+    let mut stream = DrivingStream::new(1, 2, false);
+    bench("driving_stream_batch10 (data gen per round)", 20, || {
+        black_box(stream.next_batch(10));
+    });
+
+    bench("track_closest_theta_cold", 100, || {
+        black_box(track.closest_theta(50.0, 30.0, 0.0));
+    });
+}

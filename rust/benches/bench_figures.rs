@@ -1,0 +1,34 @@
+//! End-to-end figure benches: one tiny-scale run per paper figure, timing
+//! the full pipeline (data gen -> XLA train steps -> protocol -> metrics)
+//! and asserting each figure's qualitative shape. `dynavg exp <id>` runs
+//! the full-scale versions; these keep the whole harness continuously
+//! exercised under `cargo bench`.
+
+use std::time::Instant;
+
+use dynavg::experiments::{self, Scale};
+use dynavg::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::new(dynavg::artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping figure benches (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    println!("-- end-to-end figure harnesses at tiny scale --");
+    for id in [
+        "fig1_1a", "fig5_1", "fig5_2", "fig5_4", "fig5_5", "fig6_1", "fig6_2",
+        "fig6_2d", "figA_1", "figA_6",
+    ] {
+        let t0 = Instant::now();
+        match experiments::dispatch(&rt, id, Scale::Tiny, 7) {
+            Ok(()) => println!(">> bench {id}: {:.2} s\n", t0.elapsed().as_secs_f64()),
+            Err(e) => {
+                eprintln!(">> bench {id} FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

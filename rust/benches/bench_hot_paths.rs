@@ -1,0 +1,113 @@
+//! Hot-path microbenchmarks (L3): the protocol vector algebra at the real
+//! model sizes, train-step dispatch latency, and memory-bandwidth
+//! reference (memcpy) for the roofline comparison in EXPERIMENTS.md §Perf.
+
+use dynavg::data::{synth_mnist::MnistLike, Stream};
+use dynavg::model::params;
+use dynavg::runtime::{ModelRuntime, Runtime};
+use dynavg::util::bench::{bench, black_box, header};
+use dynavg::util::rng::Rng;
+
+fn vecs(m: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| (0..p).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+fn main() {
+    header();
+    let p = 149_418; // mnist_cnn P
+    let models = vecs(10, p, 1);
+    let r = models[0].clone();
+    let mut out = vec![0.0f32; p];
+    let idx: Vec<usize> = (0..10).collect();
+
+    // memory-bandwidth reference: copy P f32
+    let src = models[1].clone();
+    let memcpy = bench("memcpy_P150k (roofline ref)", 50, || {
+        out.copy_from_slice(black_box(&src));
+    });
+
+    let sq = bench("sq_dist_P150k (local condition)", 50, || {
+        black_box(params::sq_dist(black_box(&models[0]), black_box(&r)));
+    });
+    bench("sq_norm_P150k", 50, || {
+        black_box(params::sq_norm(black_box(&models[0])));
+    });
+    let avg = bench("average_m10_P150k (sync op)", 20, || {
+        params::average_into(black_box(&models), &idx, &mut out);
+    });
+    bench("weighted_average_m10_P150k (Alg 2)", 20, || {
+        params::weighted_average_into(
+            black_box(&models),
+            &idx,
+            &[1.0, 2.0, 1.0, 3.0, 1.0, 1.0, 2.0, 1.0, 1.0, 1.0],
+            &mut out,
+        );
+    });
+    bench("divergence_m10_P150k (eq. 2)", 10, || {
+        black_box(params::divergence(black_box(&models)));
+    });
+
+    // bandwidth utilization summary (2 streams for sq_dist, m+1 for avg)
+    let gbps = |bytes: f64, ns: f64| bytes / ns; // bytes/ns == GB/s
+    println!();
+    println!(
+        "memcpy bandwidth        : {:>7.2} GB/s (read+write {} MB)",
+        gbps(2.0 * 4.0 * p as f64, memcpy.median_ns),
+        8.0 * p as f64 / 1e6
+    );
+    println!(
+        "sq_dist bandwidth       : {:>7.2} GB/s ({:.0}% of memcpy)",
+        gbps(2.0 * 4.0 * p as f64, sq.median_ns),
+        100.0 * memcpy.median_ns / sq.median_ns
+    );
+    println!(
+        "average m=10 bandwidth  : {:>7.2} GB/s",
+        gbps(11.0 * 4.0 * p as f64, avg.median_ns)
+    );
+
+    // train-step dispatch: XLA execute + literal packing at B=10
+    println!();
+    if let Ok(rt) = Runtime::new(dynavg::artifacts_dir()) {
+        for (model, opt) in [("drift_mlp", "sgd"), ("mnist_cnn", "sgd"), ("driving_cnn", "sgd")] {
+            let mrt = ModelRuntime::load(&rt, model, opt).unwrap();
+            let mut params_v = rt.init_params(model).unwrap();
+            let mut state = vec![0.0; mrt.train.exe.info.state_size];
+            let batch = match model {
+                "mnist_cnn" => MnistLike::new(1, 2).next_batch(10),
+                "drift_mlp" => {
+                    dynavg::data::graphical::GraphicalStream::new(1, 2).next_batch(10)
+                }
+                _ => dynavg::driving::DrivingStream::new(1, 2, false).next_batch(10),
+            };
+            bench(&format!("train_step_{model} (XLA execute)"), 10, || {
+                black_box(
+                    mrt.train
+                        .step(&mut params_v, &mut state, &batch, 0.1)
+                        .unwrap(),
+                );
+            });
+        }
+
+        // ablation: XLA-side sync statistics (L1 reduce kernels) vs the
+        // L3-native scan above — quantifies the host<->PJRT round-trip
+        if let Ok(exe) = rt.load("sync_stats_m10_mnist") {
+            let flat: Vec<f32> = models.iter().flatten().copied().collect();
+            let mshape = [10usize, p];
+            let rshape = [p];
+            bench("sync_stats_xla_m10_P150k (ablation)", 10, || {
+                black_box(
+                    exe.run(&[
+                        dynavg::runtime::Input::F32(&flat, &mshape),
+                        dynavg::runtime::Input::F32(&r, &rshape),
+                    ])
+                    .unwrap(),
+                );
+            });
+        }
+    } else {
+        println!("(skipping XLA benches — run `make artifacts`)");
+    }
+}

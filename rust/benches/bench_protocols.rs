@@ -1,0 +1,123 @@
+//! Protocol-layer benchmarks: sync cost per round for each operator at
+//! paper-like sizes, plus the augmentation-strategy ablation (DESIGN.md).
+
+use dynavg::coordinator::{
+    Augmentation, DynamicAveraging, DynamicConfig, Protocol, ProtocolSpec, SyncCtx,
+};
+use dynavg::network::NetStats;
+use dynavg::util::bench::{bench, header};
+use dynavg::util::rng::Rng;
+
+fn configuration(m: usize, p: usize, spread: f32, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let reference: Vec<f32> = (0..p).map(|_| rng.normal_f32()).collect();
+    let models = (0..m)
+        .map(|_| {
+            reference
+                .iter()
+                .map(|&r| r + spread * rng.normal_f32())
+                .collect()
+        })
+        .collect();
+    (models, reference)
+}
+
+fn main() {
+    header();
+    let m = 30;
+    let p = 149_418;
+
+    for (label, spread) in [("quiescent", 0.0002f32), ("violating", 0.02f32)] {
+        let (models0, reference) = configuration(m, p, spread, 3);
+        let weights = vec![1.0f32; m];
+        for spec in [
+            ProtocolSpec::Dynamic {
+                delta: 0.5,
+                check_every: 1,
+            },
+            ProtocolSpec::Periodic { period: 1 },
+            ProtocolSpec::FedAvg {
+                period: 1,
+                fraction: 0.3,
+            },
+        ] {
+            let mut protocol = spec.build();
+            if let ProtocolSpec::Dynamic { .. } = spec {
+                // reference set via first-round adoption below
+            }
+            let mut rng = Rng::new(9);
+            let mut models = models0.clone();
+            let mut net = NetStats::new();
+            // seed dynamic reference
+            if let ProtocolSpec::Dynamic { delta, check_every } = spec {
+                let mut d = DynamicAveraging::new(DynamicConfig::new(delta, check_every));
+                d.set_reference(reference.clone());
+                let mut round = 0u64;
+                bench(
+                    &format!("dynamic_sync_{label}_m30_P150k"),
+                    10,
+                    || {
+                        round += 1;
+                        d.sync(&mut SyncCtx {
+                            round,
+                            models: &mut models,
+                            weights: &weights,
+                            net: &mut net,
+                            rng: &mut rng,
+                        });
+                        // restore divergence so every iteration does work
+                        models.clone_from(&models0);
+                    },
+                );
+                continue;
+            }
+            let mut round = 0u64;
+            bench(&format!("{}_sync_{label}_m30_P150k", protocol.name()), 10, || {
+                round += 1;
+                protocol.sync(&mut SyncCtx {
+                    round,
+                    models: &mut models,
+                    weights: &weights,
+                    net: &mut net,
+                    rng: &mut rng,
+                });
+                models.clone_from(&models0);
+            });
+        }
+    }
+
+    // augmentation strategy ablation: balancing cost + resulting |B|
+    println!("\n-- balancing augmentation ablation (m=30, violating) --");
+    for strategy in [
+        Augmentation::Random,
+        Augmentation::RoundRobin,
+        Augmentation::FarthestFirst,
+    ] {
+        let (models0, reference) = configuration(m, 10_000, 0.05, 5);
+        let weights = vec![1.0f32; m];
+        let mut updated_total = 0usize;
+        let mut iters = 0usize;
+        bench(&format!("balancing_{strategy:?}"), 10, || {
+            let mut cfg = DynamicConfig::new(0.5, 1);
+            cfg.augmentation = strategy;
+            let mut d = DynamicAveraging::new(cfg);
+            d.set_reference(reference.clone());
+            let mut models = models0.clone();
+            let mut net = NetStats::new();
+            let mut rng = Rng::new(1);
+            let rep = d.sync(&mut SyncCtx {
+                round: 1,
+                models: &mut models,
+                weights: &weights,
+                net: &mut net,
+                rng: &mut rng,
+            });
+            updated_total += rep.updated;
+            iters += 1;
+        });
+        println!(
+            "    {strategy:?}: avg |B| after balancing = {:.1}",
+            updated_total as f64 / iters as f64
+        );
+    }
+}

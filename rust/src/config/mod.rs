@@ -1,0 +1,166 @@
+//! Experiment configuration files: JSON documents describing one full
+//! protocol-comparison run (engine config + protocol grid + dataset).
+//! Used by `dynavg run --config configs/<name>.json`; the presets under
+//! `configs/` encode the paper's Tables 2/3/4/6.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ProtocolSpec;
+use crate::experiments::Dataset;
+use crate::model::InitPolicy;
+use crate::sim::engine::DriftProb;
+use crate::sim::SimConfig;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub sim: SimConfig,
+    pub dataset: Dataset,
+    pub protocols: Vec<ProtocolSpec>,
+    pub with_serial: bool,
+}
+
+impl ExperimentConfig {
+    pub fn load(path: impl AsRef<Path>) -> Result<ExperimentConfig> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let root = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(&root)
+    }
+
+    pub fn from_json(root: &Json) -> Result<ExperimentConfig> {
+        let name = root
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("custom")
+            .to_string();
+        let model = root.req("model")?.as_str().context("model")?.to_string();
+        let optimizer = root
+            .get("optimizer")
+            .and_then(|v| v.as_str())
+            .unwrap_or("sgd")
+            .to_string();
+        let m = root.get("m").and_then(|v| v.as_usize()).unwrap_or(10);
+        let rounds = root.get("rounds").and_then(|v| v.as_usize()).unwrap_or(100) as u64;
+        let lr = root.get("lr").and_then(|v| v.as_f64()).unwrap_or(0.1) as f32;
+        let mut sim = SimConfig::new(&model, &optimizer, m, rounds, lr);
+        if let Some(seed) = root.get("seed").and_then(|v| v.as_f64()) {
+            sim.seed = seed as u64;
+        }
+        if let Some(threads) = root.get("threads").and_then(|v| v.as_usize()) {
+            sim.threads = threads;
+        }
+        sim.final_eval = root
+            .get("final_eval")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(true);
+        if let Some(eps) = root.get("init_eps").and_then(|v| v.as_f64()) {
+            if eps > 0.0 {
+                sim.init = InitPolicy::Heterogeneous { eps: eps as f32 };
+            }
+        }
+        if let Some(d) = root.get("drift") {
+            if let Some(p) = d.get("probability").and_then(|v| v.as_f64()) {
+                sim.drift = DriftProb::Random(p);
+            } else if let Some(rs) = d.get("forced_rounds").and_then(|v| v.as_arr()) {
+                sim.drift = DriftProb::Forced(
+                    rs.iter().filter_map(|r| r.as_f64()).map(|r| r as u64).collect(),
+                );
+            }
+        }
+        if let Some(rates) = root.get("sample_rates").and_then(|v| v.as_arr()) {
+            sim.sample_rates = rates.iter().filter_map(|r| r.as_usize()).collect();
+        }
+
+        let dataset = match root
+            .get("dataset")
+            .and_then(|v| v.as_str())
+            .unwrap_or("auto")
+        {
+            "mnist_like" => Dataset::MnistLike,
+            "graphical" => Dataset::Graphical,
+            "driving" => Dataset::Driving { regional: false },
+            "driving_regional" => Dataset::Driving { regional: true },
+            "corpus" => Dataset::Corpus { window: 65 },
+            "auto" => match model.as_str() {
+                "mnist_cnn" => Dataset::MnistLike,
+                "drift_mlp" => Dataset::Graphical,
+                "driving_cnn" => Dataset::Driving { regional: false },
+                "transformer_lm" => Dataset::Corpus { window: 65 },
+                other => anyhow::bail!("no default dataset for model {other:?}"),
+            },
+            other => anyhow::bail!("unknown dataset {other:?}"),
+        };
+
+        let protocols = root
+            .req("protocols")?
+            .as_arr()
+            .context("protocols must be an array")?
+            .iter()
+            .map(|p| {
+                p.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("protocol entries are strings"))
+                    .and_then(|s| ProtocolSpec::parse(s))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(ExperimentConfig {
+            name,
+            sim,
+            dataset,
+            protocols,
+            with_serial: root
+                .get("serial")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let j = Json::parse(
+            r#"{
+              "name": "tab2", "model": "mnist_cnn", "optimizer": "sgd",
+              "m": 12, "rounds": 77, "lr": 0.25, "seed": 9,
+              "drift": {"probability": 0.01},
+              "protocols": ["periodic:10", "dynamic:0.7:10", "fedavg:50:0.3", "nosync"],
+              "serial": true
+            }"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.sim.m, 12);
+        assert_eq!(c.sim.rounds, 77);
+        assert_eq!(c.protocols.len(), 4);
+        assert!(c.with_serial);
+        assert!(matches!(c.sim.drift, DriftProb::Random(p) if p == 0.01));
+    }
+
+    #[test]
+    fn forced_drift_and_hetero_init() {
+        let j = Json::parse(
+            r#"{"model": "drift_mlp", "init_eps": 3.0,
+                "drift": {"forced_rounds": [10, 20]},
+                "protocols": ["continuous"]}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert!(matches!(c.sim.init, InitPolicy::Heterogeneous { eps } if eps == 3.0));
+        assert!(matches!(&c.sim.drift, DriftProb::Forced(v) if v == &vec![10, 20]));
+    }
+
+    #[test]
+    fn rejects_unknown_model_dataset() {
+        let j = Json::parse(r#"{"model": "wat", "protocols": []}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Augmentation strategies for the balancing loop (paper Algorithm 1:
+//! "augment B by augmentation strategy").
+//!
+//! The paper leaves the strategy open; we implement three and benchmark
+//! them as an ablation (`bench_balancing`):
+//! - `Random`: uniform over learners outside B (the default — matches the
+//!   original dynamic-synchronization papers [14, 17]).
+//! - `RoundRobin`: deterministic sweep, useful for reproducible debugging.
+//! - `FarthestFirst`: pick the learner whose model is farthest from the
+//!   current partial average — greedy divergence reduction, costs one
+//!   O(P) scan per candidate.
+
+use crate::model::params;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Augmentation {
+    Random,
+    RoundRobin,
+    FarthestFirst,
+}
+
+impl Augmentation {
+    pub fn parse(s: &str) -> Option<Augmentation> {
+        match s {
+            "random" => Some(Augmentation::Random),
+            "round_robin" => Some(Augmentation::RoundRobin),
+            "farthest" => Some(Augmentation::FarthestFirst),
+            _ => None,
+        }
+    }
+
+    /// Choose the next learner to pull into B. `in_b[i]` marks members.
+    /// `partial_avg` is the current average of B's models.
+    pub fn pick(
+        &self,
+        in_b: &[bool],
+        models: &[Vec<f32>],
+        partial_avg: &[f32],
+        rng: &mut Rng,
+    ) -> usize {
+        let candidates: Vec<usize> = (0..in_b.len()).filter(|&i| !in_b[i]).collect();
+        debug_assert!(!candidates.is_empty(), "augmenting a full set");
+        match self {
+            Augmentation::Random => candidates[rng.below(candidates.len())],
+            Augmentation::RoundRobin => candidates[0],
+            Augmentation::FarthestFirst => candidates
+                .into_iter()
+                .max_by(|&a, &b| {
+                    let da = params::sq_dist(&models[a], partial_avg);
+                    let db = params::sq_dist(&models[b], partial_avg);
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_picks_members() {
+        let in_b = vec![true, false, true, false];
+        let models = vec![vec![0.0]; 4];
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let pick = Augmentation::Random.pick(&in_b, &models, &[0.0], &mut rng);
+            assert!(pick == 1 || pick == 3);
+        }
+    }
+
+    #[test]
+    fn round_robin_is_first_free() {
+        let in_b = vec![true, true, false, false];
+        let models = vec![vec![0.0]; 4];
+        let mut rng = Rng::new(1);
+        assert_eq!(
+            Augmentation::RoundRobin.pick(&in_b, &models, &[0.0], &mut rng),
+            2
+        );
+    }
+
+    #[test]
+    fn farthest_first_picks_max_distance() {
+        let in_b = vec![true, false, false];
+        let models = vec![vec![0.0], vec![1.0], vec![-5.0]];
+        let mut rng = Rng::new(1);
+        assert_eq!(
+            Augmentation::FarthestFirst.pick(&in_b, &models, &[0.0], &mut rng),
+            2
+        );
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Augmentation::parse("random"), Some(Augmentation::Random));
+        assert_eq!(
+            Augmentation::parse("farthest"),
+            Some(Augmentation::FarthestFirst)
+        );
+        assert_eq!(Augmentation::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,362 @@
+//! Dynamic averaging protocol — paper Algorithm 1 (and Algorithm 2 for
+//! unbalanced sampling rates).
+//!
+//! Every `b` rounds each learner checks its local condition
+//! `||f_i - r||^2 <= Δ` against the shared reference model `r`. Violating
+//! learners send their model to the coordinator. The coordinator tries to
+//! *balance* the violation locally: starting from the violation set B it
+//! incrementally queries more learners (augmentation strategy) until the
+//! average of the received models is back inside the safe zone
+//! (`||avg(B) - r||^2 <= Δ`) or B = [m]. The average is sent back to the
+//! participating learners. A cumulative violation counter v forces a full
+//! synchronization once v reaches m; full syncs update the reference
+//! vector (and reset v, following Kamp et al. 2014's protocol semantics —
+//! Alg. 1's pseudocode resets v only in the `v = m` branch, but leaving v
+//! stale after a naturally-full balancing would double-count violations).
+//!
+//! Guarantees tested in `tests/` and `rust/benches/`:
+//!   (i) the global mean model is invariant under sync (Def. 2(i));
+//!  (ii) after a sync round every local condition holds, hence the
+//!       divergence is bounded by Δ (Def. 2(ii), via [14, Thm. 6]).
+
+use crate::model::params;
+use crate::network::MsgKind;
+
+use super::balancing::Augmentation;
+use super::protocol::{Protocol, SyncCtx, SyncReport};
+
+#[derive(Clone, Debug)]
+pub struct DynamicConfig {
+    /// Divergence threshold Δ.
+    pub delta: f64,
+    /// Local-condition check period b (in rounds).
+    pub check_every: u64,
+    /// How the coordinator augments the violation set while balancing.
+    pub augmentation: Augmentation,
+    /// Weighted averaging by sample counts (Algorithm 2).
+    pub weighted: bool,
+}
+
+impl DynamicConfig {
+    pub fn new(delta: f64, check_every: u64) -> DynamicConfig {
+        DynamicConfig {
+            delta,
+            check_every,
+            augmentation: Augmentation::Random,
+            weighted: false,
+        }
+    }
+}
+
+pub struct DynamicAveraging {
+    pub cfg: DynamicConfig,
+    /// Reference model r (None until the first full sync; initialised to
+    /// the common init by the engine via `set_reference`).
+    reference: Option<Vec<f32>>,
+    /// Cumulative violation counter v.
+    violations_seen: usize,
+    scratch: Vec<f32>,
+}
+
+impl DynamicAveraging {
+    pub fn new(cfg: DynamicConfig) -> DynamicAveraging {
+        DynamicAveraging {
+            cfg,
+            reference: None,
+            violations_seen: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Algorithm 1 initialisation: r <- the common initial model.
+    pub fn set_reference(&mut self, r: Vec<f32>) {
+        self.reference = Some(r);
+    }
+
+    pub fn reference(&self) -> Option<&[f32]> {
+        self.reference.as_deref()
+    }
+
+    fn average(
+        weighted: bool,
+        models: &[Vec<f32>],
+        idx: &[usize],
+        weights: &[f32],
+        out: &mut [f32],
+    ) {
+        if weighted {
+            params::weighted_average_into(models, idx, weights, out);
+        } else {
+            params::average_into(models, idx, out);
+        }
+    }
+}
+
+impl Protocol for DynamicAveraging {
+    fn name(&self) -> String {
+        let mut n = format!("sigma_d={}", self.cfg.delta);
+        if self.cfg.check_every != 1 {
+            n.push_str(&format!(",b={}", self.cfg.check_every));
+        }
+        if self.cfg.weighted {
+            n.push_str(",weighted");
+        }
+        n
+    }
+
+    fn sync(&mut self, ctx: &mut SyncCtx) -> SyncReport {
+        let mut report = SyncReport::default();
+        if ctx.round % self.cfg.check_every != 0 {
+            return report;
+        }
+        let m = ctx.models.len();
+        let p = ctx.models[0].len();
+        let r = self
+            .reference
+            .get_or_insert_with(|| ctx.models[0].clone())
+            .clone();
+
+        // --- local condition checks (each learner, in isolation) ---------
+        let mut in_b = vec![false; m];
+        let mut violators: Vec<usize> = Vec::new();
+        for i in 0..m {
+            if params::sq_dist(&ctx.models[i], &r) > self.cfg.delta {
+                in_b[i] = true;
+                violators.push(i);
+                // learner i sends its model with the violation notice
+                ctx.net.send(MsgKind::ViolationWithModel, p);
+            }
+        }
+        report.violations = violators.len();
+        if violators.is_empty() {
+            return report;
+        }
+        report.communicated = true;
+        ctx.net.sync_events += 1;
+
+        // --- coordinator: violation counter may force a full sync --------
+        self.violations_seen += violators.len();
+        let mut selected = violators;
+        if self.violations_seen >= m {
+            for i in 0..m {
+                if !in_b[i] {
+                    // poll the remaining learners' models
+                    ctx.net.send(MsgKind::QueryModel, 0);
+                    ctx.net.send(MsgKind::ModelUpload, p);
+                    in_b[i] = true;
+                    selected.push(i);
+                }
+            }
+            self.violations_seen = 0;
+        }
+
+        // --- balancing loop ----------------------------------------------
+        if self.scratch.len() != p {
+            self.scratch = vec![0.0; p];
+        }
+        loop {
+            Self::average(
+                self.cfg.weighted,
+                ctx.models,
+                &selected,
+                ctx.weights,
+                &mut self.scratch,
+            );
+            let balanced = params::sq_dist(&self.scratch, &r) <= self.cfg.delta;
+            if balanced || selected.len() == m {
+                break;
+            }
+            // augment B and receive the new member's model
+            let next = self
+                .cfg
+                .augmentation
+                .pick(&in_b, ctx.models, &self.scratch, ctx.rng);
+            ctx.net.send(MsgKind::QueryModel, 0);
+            ctx.net.send(MsgKind::ModelUpload, p);
+            in_b[next] = true;
+            selected.push(next);
+        }
+
+        // --- distribute the (partial) average -----------------------------
+        for &i in &selected {
+            ctx.models[i].copy_from_slice(&self.scratch);
+            ctx.net.send(MsgKind::ModelDownload, p);
+        }
+        report.updated = selected.len();
+        if selected.len() == m {
+            // full synchronization: new reference vector
+            self.reference = Some(self.scratch.clone());
+            self.violations_seen = 0;
+            report.full = true;
+            ctx.net.full_syncs += 1;
+        }
+        report
+    }
+
+    fn reset(&mut self) {
+        self.reference = None;
+        self.violations_seen = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::NetStats;
+    use crate::util::rng::Rng;
+
+    fn ctx_parts(m: usize, p: usize) -> (Vec<Vec<f32>>, Vec<f32>, NetStats, Rng) {
+        (
+            vec![vec![0.0; p]; m],
+            vec![1.0; m],
+            NetStats::new(),
+            Rng::new(0),
+        )
+    }
+
+    fn run_sync(
+        proto: &mut DynamicAveraging,
+        round: u64,
+        models: &mut Vec<Vec<f32>>,
+        weights: &[f32],
+        net: &mut NetStats,
+        rng: &mut Rng,
+    ) -> SyncReport {
+        let mut ctx = SyncCtx {
+            round,
+            models,
+            weights,
+            net,
+            rng,
+        };
+        proto.sync(&mut ctx)
+    }
+
+    #[test]
+    fn quiescence_when_models_agree() {
+        let (mut models, w, mut net, mut rng) = ctx_parts(5, 8);
+        let mut proto = DynamicAveraging::new(DynamicConfig::new(1.0, 1));
+        proto.set_reference(vec![0.0; 8]);
+        let rep = run_sync(&mut proto, 1, &mut models, &w, &mut net, &mut rng);
+        assert!(!rep.communicated);
+        assert_eq!(net.total_bytes(), 0);
+    }
+
+    #[test]
+    fn violation_triggers_balancing_and_bounds_divergence() {
+        let (mut models, w, mut net, mut rng) = ctx_parts(4, 2);
+        // one learner drifts far away
+        models[2] = vec![10.0, 0.0];
+        let mut proto = DynamicAveraging::new(DynamicConfig::new(1.0, 1));
+        proto.set_reference(vec![0.0, 0.0]);
+        let mean_before: Vec<f32> = {
+            let mut out = vec![0.0; 2];
+            params::average_into(&models, &[0, 1, 2, 3], &mut out);
+            out
+        };
+        let rep = run_sync(&mut proto, 1, &mut models, &w, &mut net, &mut rng);
+        assert!(rep.communicated);
+        assert!(rep.violations >= 1);
+        // Def 2(i): global mean unchanged
+        let mut mean_after = vec![0.0; 2];
+        params::average_into(&models, &[0, 1, 2, 3], &mut mean_after);
+        for (a, b) in mean_before.iter().zip(&mean_after) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // Def 2(ii): all local conditions hold after sync
+        let r = proto.reference().unwrap();
+        for f in models.iter() {
+            assert!(params::sq_dist(f, r) <= 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn check_period_respected() {
+        let (mut models, w, mut net, mut rng) = ctx_parts(3, 2);
+        models[0] = vec![100.0, 100.0];
+        let mut proto = DynamicAveraging::new(DynamicConfig::new(0.1, 10));
+        proto.set_reference(vec![0.0, 0.0]);
+        for t in 1..=9 {
+            let rep = run_sync(&mut proto, t, &mut models, &w, &mut net, &mut rng);
+            assert!(!rep.communicated, "no check before t=b");
+        }
+        let rep = run_sync(&mut proto, 10, &mut models, &w, &mut net, &mut rng);
+        assert!(rep.communicated);
+    }
+
+    #[test]
+    fn violation_counter_forces_full_sync() {
+        // one *mild* persistent violator: each check adds 1 violation that
+        // balancing resolves with a single partner (partial sync), so the
+        // counter accumulates; after m checks v = m forces a full sync.
+        let m = 4;
+        let (mut models, w, mut net, mut rng) = ctx_parts(m, 2);
+        let mut proto = DynamicAveraging::new(DynamicConfig::new(1.0, 1));
+        proto.set_reference(vec![0.0, 0.0]);
+        let mut fulls = Vec::new();
+        for t in 1..=(m as u64) {
+            // re-displace one learner each round so it keeps violating, but
+            // mildly: dist 1.44 > 1, while the pair-average is back in the
+            // safe zone (0.36 <= 1)
+            models[0] = vec![1.2, 0.0];
+            let rep = run_sync(&mut proto, t, &mut models, &w, &mut net, &mut rng);
+            if rep.full {
+                fulls.push(t);
+            }
+            assert!(rep.communicated);
+        }
+        assert_eq!(fulls, vec![m as u64], "full sync exactly when v reaches m");
+        assert_eq!(net.full_syncs, 1);
+    }
+
+    #[test]
+    fn full_sync_updates_reference() {
+        let (mut models, w, mut net, mut rng) = ctx_parts(2, 2);
+        models[0] = vec![4.0, 0.0];
+        models[1] = vec![-4.0, 0.0];
+        let mut proto = DynamicAveraging::new(DynamicConfig::new(0.5, 1));
+        proto.set_reference(vec![1.0, 1.0]);
+        let rep = run_sync(&mut proto, 1, &mut models, &w, &mut net, &mut rng);
+        assert!(rep.full);
+        // reference must now be the average (0,0)
+        let r = proto.reference().unwrap();
+        assert!(params::sq_norm(r) < 1e-10);
+        assert_eq!(models[0], models[1]);
+    }
+
+    #[test]
+    fn weighted_averaging_respects_sample_counts() {
+        let (mut models, _w, mut net, mut rng) = ctx_parts(2, 1);
+        models[0] = vec![3.0];
+        models[1] = vec![9.0];
+        let weights = vec![1.0, 3.0];
+        let mut cfg = DynamicConfig::new(0.001, 1);
+        cfg.weighted = true;
+        let mut proto = DynamicAveraging::new(cfg);
+        proto.set_reference(vec![0.0]);
+        run_sync(&mut proto, 1, &mut models, &weights, &mut net, &mut rng);
+        // weighted avg = (3 + 27) / 4 = 7.5
+        assert!((models[0][0] - 7.5).abs() < 1e-6);
+        assert!((models[1][0] - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn partial_balancing_leaves_nonparticipants_untouched() {
+        let (mut models, w, mut net, mut rng) = ctx_parts(4, 1);
+        // learners 0 and 1 drift symmetrically: their average is back at r
+        models[0] = vec![2.0];
+        models[1] = vec![-2.0];
+        models[2] = vec![0.1];
+        models[3] = vec![-0.1];
+        let mut proto = DynamicAveraging::new(DynamicConfig::new(1.0, 1));
+        proto.set_reference(vec![0.0]);
+        let rep = run_sync(&mut proto, 1, &mut models, &w, &mut net, &mut rng);
+        assert!(rep.communicated);
+        assert!(!rep.full, "balancing should resolve locally");
+        assert_eq!(rep.updated, 2);
+        assert_eq!(models[0], vec![0.0]);
+        assert_eq!(models[1], vec![0.0]);
+        assert_eq!(models[2], vec![0.1]);
+        assert_eq!(models[3], vec![-0.1]);
+    }
+}

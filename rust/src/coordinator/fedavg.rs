@@ -1,0 +1,135 @@
+//! FedAvg as the paper models it (§5 "Comparison with FedAvg"): periodic
+//! averaging over a randomly sampled fraction C of the learners, weighted
+//! by per-learner sample counts (McMahan et al. 2017). The sampled subset
+//! uploads, the coordinator averages, and the result is sent back to that
+//! subset only — a constant-factor communication reduction with a
+//! moderate loss penalty.
+
+use crate::model::params;
+use crate::network::MsgKind;
+
+use super::protocol::{Protocol, SyncCtx, SyncReport};
+
+pub struct FedAvg {
+    /// Synchronization period b (paper uses b=50 against FedAvg's E=b/B).
+    pub period: u64,
+    /// Fraction C of learners included per synchronization.
+    pub fraction: f64,
+    scratch: Vec<f32>,
+}
+
+impl FedAvg {
+    pub fn new(period: u64, fraction: f64) -> FedAvg {
+        assert!(period >= 1);
+        assert!((0.0..=1.0).contains(&fraction) && fraction > 0.0);
+        FedAvg {
+            period,
+            fraction,
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl Protocol for FedAvg {
+    fn name(&self) -> String {
+        format!("fedavg_C={}", self.fraction)
+    }
+
+    fn sync(&mut self, ctx: &mut SyncCtx) -> SyncReport {
+        let mut report = SyncReport::default();
+        if ctx.round % self.period != 0 {
+            return report;
+        }
+        let m = ctx.models.len();
+        let p = ctx.models[0].len();
+        let k = ((self.fraction * m as f64).ceil() as usize).clamp(1, m);
+        let chosen = ctx.rng.sample_indices(m, k);
+        if self.scratch.len() != p {
+            self.scratch = vec![0.0; p];
+        }
+        params::weighted_average_into(ctx.models, &chosen, ctx.weights, &mut self.scratch);
+        for &i in &chosen {
+            ctx.net.send(MsgKind::ModelUpload, p);
+            ctx.models[i].copy_from_slice(&self.scratch);
+            ctx.net.send(MsgKind::ModelDownload, p);
+        }
+        ctx.net.sync_events += 1;
+        if k == m {
+            ctx.net.full_syncs += 1;
+            report.full = true;
+        }
+        report.communicated = true;
+        report.updated = k;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::NetStats;
+    use crate::util::rng::Rng;
+
+    fn run_one(frac: f64, m: usize) -> (Vec<Vec<f32>>, NetStats, SyncReport) {
+        let mut models: Vec<Vec<f32>> = (0..m).map(|i| vec![i as f32]).collect();
+        let w = vec![1.0; m];
+        let mut net = NetStats::new();
+        let mut rng = Rng::new(7);
+        let mut proto = FedAvg::new(1, frac);
+        let rep = proto.sync(&mut SyncCtx {
+            round: 1,
+            models: &mut models,
+            weights: &w,
+            net: &mut net,
+            rng: &mut rng,
+        });
+        (models, net, rep)
+    }
+
+    #[test]
+    fn subset_size_is_ceil_cm() {
+        let (_, net, rep) = run_one(0.3, 10);
+        assert_eq!(rep.updated, 3);
+        assert_eq!(net.models_sent, 6); // 3 up + 3 down
+    }
+
+    #[test]
+    fn c_one_is_full_periodic() {
+        let (models, _, rep) = run_one(1.0, 4);
+        assert!(rep.full);
+        // all equal to the average of 0..3 = 1.5
+        for f in models {
+            assert!((f[0] - 1.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unsampled_learners_untouched() {
+        let (models, _, rep) = run_one(0.5, 8);
+        assert_eq!(rep.updated, 4);
+        let untouched = models
+            .iter()
+            .enumerate()
+            .filter(|(i, f)| f[0] == *i as f32)
+            .count();
+        assert_eq!(untouched, 4);
+    }
+
+    #[test]
+    fn weighted_by_sample_counts() {
+        let mut models = vec![vec![0.0f32], vec![10.0f32]];
+        let w = vec![3.0, 1.0];
+        let mut net = NetStats::new();
+        let mut rng = Rng::new(0);
+        let mut proto = FedAvg::new(1, 1.0);
+        proto.sync(&mut SyncCtx {
+            round: 1,
+            models: &mut models,
+            weights: &w,
+            net: &mut net,
+            rng: &mut rng,
+        });
+        // (3*0 + 1*10)/4 = 2.5
+        assert!((models[0][0] - 2.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,273 @@
+//! Hierarchical synchronization (paper §4: "the synchronization operator
+//! can be implemented ... in a hierarchical communication scheme").
+//!
+//! Two-level star-of-stars: learners are partitioned into `groups`;
+//! each group has a mid-level aggregator that runs the *inner* dynamic
+//! protocol against a group reference; group averages are then checked
+//! against a *global* reference with a coarser threshold, and only
+//! group-level violations travel to the root. This models e.g. per-region
+//! fleet servers in the paper's in-fleet-learning motivation. Byte
+//! accounting attributes leaf<->aggregator traffic at full model cost and
+//! aggregator<->root traffic likewise (one model per group).
+//!
+//! Invariants (tested): global mean invariance; after a sync every leaf's
+//! distance to its group reference ≤ delta_local, and every group mean's
+//! distance to the global reference ≤ delta_global.
+
+use crate::model::params;
+use crate::network::MsgKind;
+
+use super::protocol::{Protocol, SyncCtx, SyncReport};
+
+pub struct HierarchicalDynamic {
+    pub groups: usize,
+    pub delta_local: f64,
+    pub delta_global: f64,
+    pub check_every: u64,
+    group_refs: Vec<Vec<f32>>,
+    global_ref: Option<Vec<f32>>,
+}
+
+impl HierarchicalDynamic {
+    pub fn new(groups: usize, delta_local: f64, delta_global: f64, check_every: u64) -> Self {
+        assert!(groups >= 1);
+        HierarchicalDynamic {
+            groups,
+            delta_local,
+            delta_global,
+            check_every,
+            group_refs: Vec::new(),
+            global_ref: None,
+        }
+    }
+
+    fn members(&self, g: usize, m: usize) -> Vec<usize> {
+        (0..m).filter(|i| i % self.groups == g).collect()
+    }
+}
+
+impl Protocol for HierarchicalDynamic {
+    fn name(&self) -> String {
+        format!(
+            "hier_g{}_dl={},dg={}",
+            self.groups, self.delta_local, self.delta_global
+        )
+    }
+
+    fn sync(&mut self, ctx: &mut SyncCtx) -> SyncReport {
+        let mut report = SyncReport::default();
+        if ctx.round % self.check_every != 0 {
+            return report;
+        }
+        let m = ctx.models.len();
+        let p = ctx.models[0].len();
+        let groups = self.groups.min(m);
+        if self.group_refs.len() != groups {
+            self.group_refs = vec![ctx.models[0].clone(); groups];
+        }
+        let global_ref = self
+            .global_ref
+            .get_or_insert_with(|| ctx.models[0].clone())
+            .clone();
+
+        let mut group_means: Vec<Vec<f32>> = Vec::with_capacity(groups);
+        let mut group_synced = vec![false; groups];
+        // --- level 1: leaf -> group aggregator (dynamic, per group) ------
+        for g in 0..groups {
+            let members = self.members(g, m);
+            let gref = &self.group_refs[g];
+            let violators: Vec<usize> = members
+                .iter()
+                .copied()
+                .filter(|&i| params::sq_dist(&ctx.models[i], gref) > self.delta_local)
+                .collect();
+            let mut mean = vec![0.0f32; p];
+            params::average_into(ctx.models, &members, &mut mean);
+            if !violators.is_empty() {
+                for _ in &violators {
+                    ctx.net.send(MsgKind::ViolationWithModel, p);
+                }
+                // aggregator pulls the rest of its group and averages
+                for i in &members {
+                    if !violators.contains(i) {
+                        ctx.net.send(MsgKind::QueryModel, 0);
+                        ctx.net.send(MsgKind::ModelUpload, p);
+                    }
+                }
+                for &i in &members {
+                    ctx.models[i].copy_from_slice(&mean);
+                    ctx.net.send(MsgKind::ModelDownload, p);
+                }
+                self.group_refs[g] = mean.clone();
+                group_synced[g] = true;
+                report.violations += violators.len();
+                report.updated += members.len();
+                report.communicated = true;
+            }
+            group_means.push(mean);
+        }
+
+        // --- level 2: group aggregators -> root (coarser threshold) ------
+        let group_violations: Vec<usize> = (0..groups)
+            .filter(|&g| params::sq_dist(&group_means[g], &global_ref) > self.delta_global)
+            .collect();
+        if !group_violations.is_empty() {
+            // all aggregators ship their group mean to the root
+            for _ in 0..groups {
+                ctx.net.send(MsgKind::ModelUpload, p);
+            }
+            // root averages group means weighted by group size
+            let mut global = vec![0.0f32; p];
+            let mut total = 0.0f32;
+            for g in 0..groups {
+                let w = self.members(g, m).len() as f32;
+                total += w;
+                for (o, &v) in global.iter_mut().zip(&group_means[g]) {
+                    *o += w * v;
+                }
+            }
+            for o in global.iter_mut() {
+                *o /= total;
+            }
+            // distribute to every leaf through the aggregators
+            for g in 0..groups {
+                ctx.net.send(MsgKind::ModelDownload, p); // root -> aggregator
+                for &i in &self.members(g, m) {
+                    ctx.models[i].copy_from_slice(&global);
+                    ctx.net.send(MsgKind::ModelDownload, p); // aggregator -> leaf
+                }
+                self.group_refs[g] = global.clone();
+            }
+            self.global_ref = Some(global);
+            ctx.net.full_syncs += 1;
+            report.full = true;
+            report.updated = m;
+            report.communicated = true;
+        }
+        if report.communicated {
+            ctx.net.sync_events += 1;
+        }
+        report
+    }
+
+    fn reset(&mut self) {
+        self.group_refs.clear();
+        self.global_ref = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::NetStats;
+    use crate::util::rng::Rng;
+
+    fn sync(
+        proto: &mut HierarchicalDynamic,
+        models: &mut Vec<Vec<f32>>,
+    ) -> (SyncReport, NetStats) {
+        let w = vec![1.0; models.len()];
+        let mut net = NetStats::new();
+        let mut rng = Rng::new(0);
+        let rep = proto.sync(&mut SyncCtx {
+            round: 1,
+            models,
+            weights: &w,
+            net: &mut net,
+            rng: &mut rng,
+        });
+        (rep, net)
+    }
+
+    #[test]
+    fn quiescent_when_all_close() {
+        let mut proto = HierarchicalDynamic::new(2, 1.0, 1.0, 1);
+        let mut models = vec![vec![0.0f32; 4]; 6];
+        let (rep, net) = sync(&mut proto, &mut models);
+        assert!(!rep.communicated);
+        assert_eq!(net.total_bytes(), 0);
+    }
+
+    #[test]
+    fn local_violation_stays_in_group() {
+        let mut proto = HierarchicalDynamic::new(2, 0.5, 1e9, 1);
+        let mut models = vec![vec![0.0f32; 2]; 6];
+        models[0] = vec![2.0, 0.0]; // group 0 member drifts
+        let before_mean = {
+            let mut out = vec![0.0; 2];
+            params::average_into(&models, &(0..6).collect::<Vec<_>>(), &mut out);
+            out
+        };
+        let (rep, _) = sync(&mut proto, &mut models);
+        assert!(rep.communicated && !rep.full);
+        // group 0 = {0,2,4} got averaged; group 1 = {1,3,5} untouched
+        assert_eq!(models[0], models[2]);
+        assert_eq!(models[1], vec![0.0, 0.0]);
+        // global mean preserved
+        let mut after_mean = vec![0.0; 2];
+        params::average_into(&models, &(0..6).collect::<Vec<_>>(), &mut after_mean);
+        for (a, b) in before_mean.iter().zip(&after_mean) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn global_violation_full_syncs_everyone() {
+        let mut proto = HierarchicalDynamic::new(2, 1e9, 0.5, 1);
+        let mut models = vec![vec![0.0f32; 2]; 4];
+        for m in models.iter_mut().skip(2) {
+            *m = vec![4.0, 0.0];
+        }
+        // group means: g0 = {0,2} -> (2,0); dist to ref (0,0) = 4 > 0.5
+        let (rep, net) = sync(&mut proto, &mut models);
+        assert!(rep.full);
+        assert_eq!(net.full_syncs, 1);
+        let first = models[0].clone();
+        for m in &models {
+            assert_eq!(*m, first);
+        }
+        assert_eq!(first, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn hierarchy_cheaper_than_flat_when_one_group_drifts() {
+        // drift confined to one group: hierarchical resolves it among the
+        // group's members only; flat periodic pays the full broadcast
+        let m = 8;
+        let p = 64;
+        let mk = || -> Vec<Vec<f32>> {
+            (0..m)
+                .map(|i| {
+                    // group 0 (i % 4 == 0) members drift, rest identical
+                    if i % 4 == 0 {
+                        vec![1.0; p]
+                    } else {
+                        vec![0.0; p]
+                    }
+                })
+                .collect()
+        };
+        let mut hier = HierarchicalDynamic::new(4, 0.5, 1e9, 1);
+        let mut hmodels = mk();
+        let (hrep, hnet) = sync(&mut hier, &mut hmodels);
+        assert!(hrep.communicated && !hrep.full);
+        let mut per = super::super::periodic::PeriodicAveraging::new(1);
+        let mut pmodels = mk();
+        let w = vec![1.0; m];
+        let mut pnet = NetStats::new();
+        let mut prng = Rng::new(0);
+        per.sync(&mut SyncCtx {
+            round: 1,
+            models: &mut pmodels,
+            weights: &w,
+            net: &mut pnet,
+            rng: &mut prng,
+        });
+        assert!(
+            hnet.total_bytes() < pnet.total_bytes(),
+            "hier {} vs flat {}",
+            hnet.total_bytes(),
+            pnet.total_bytes()
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! The paper's L3 contribution: synchronization operators for
+//! decentralized deep learning (§3, Algorithms 1 & 2) plus the baselines
+//! it is evaluated against (§4, §5).
+
+pub mod balancing;
+pub mod dynamic;
+pub mod fedavg;
+pub mod hierarchical;
+pub mod nosync;
+pub mod periodic;
+pub mod protocol;
+
+pub use balancing::Augmentation;
+pub use dynamic::{DynamicAveraging, DynamicConfig};
+pub use fedavg::FedAvg;
+pub use hierarchical::HierarchicalDynamic;
+pub use nosync::NoSync;
+pub use periodic::PeriodicAveraging;
+pub use protocol::{Protocol, SyncCtx, SyncReport};
+
+/// Protocol configuration — the rows of the paper's Tables 2/3/4/6.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProtocolSpec {
+    Dynamic { delta: f64, check_every: u64 },
+    DynamicWeighted { delta: f64, check_every: u64 },
+    Periodic { period: u64 },
+    Continuous,
+    FedAvg { period: u64, fraction: f64 },
+    NoSync,
+}
+
+impl ProtocolSpec {
+    pub fn build(&self) -> Box<dyn Protocol> {
+        match *self {
+            ProtocolSpec::Dynamic { delta, check_every } => Box::new(DynamicAveraging::new(
+                DynamicConfig::new(delta, check_every),
+            )),
+            ProtocolSpec::DynamicWeighted { delta, check_every } => {
+                let mut cfg = DynamicConfig::new(delta, check_every);
+                cfg.weighted = true;
+                Box::new(DynamicAveraging::new(cfg))
+            }
+            ProtocolSpec::Periodic { period } => Box::new(PeriodicAveraging::new(period)),
+            ProtocolSpec::Continuous => Box::new(PeriodicAveraging::continuous()),
+            ProtocolSpec::FedAvg { period, fraction } => Box::new(FedAvg::new(period, fraction)),
+            ProtocolSpec::NoSync => Box::new(NoSync),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.build().name()
+    }
+
+    /// Parse e.g. `dynamic:0.7:10`, `periodic:20`, `fedavg:50:0.3`,
+    /// `continuous`, `nosync`.
+    pub fn parse(s: &str) -> anyhow::Result<ProtocolSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let spec = match parts.as_slice() {
+            ["dynamic", d, b] => ProtocolSpec::Dynamic {
+                delta: d.parse()?,
+                check_every: b.parse()?,
+            },
+            ["dynamic", d] => ProtocolSpec::Dynamic {
+                delta: d.parse()?,
+                check_every: 1,
+            },
+            ["periodic", b] => ProtocolSpec::Periodic { period: b.parse()? },
+            ["continuous"] => ProtocolSpec::Continuous,
+            ["fedavg", b, c] => ProtocolSpec::FedAvg {
+                period: b.parse()?,
+                fraction: c.parse()?,
+            },
+            ["nosync"] => ProtocolSpec::NoSync,
+            _ => anyhow::bail!("cannot parse protocol spec {s:?}"),
+        };
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            ProtocolSpec::parse("dynamic:0.7:10").unwrap(),
+            ProtocolSpec::Dynamic {
+                delta: 0.7,
+                check_every: 10
+            }
+        );
+        assert_eq!(
+            ProtocolSpec::parse("periodic:20").unwrap(),
+            ProtocolSpec::Periodic { period: 20 }
+        );
+        assert_eq!(
+            ProtocolSpec::parse("fedavg:50:0.3").unwrap(),
+            ProtocolSpec::FedAvg {
+                period: 50,
+                fraction: 0.3
+            }
+        );
+        assert!(ProtocolSpec::parse("wat").is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(
+            ProtocolSpec::Periodic { period: 10 }.label(),
+            "sigma_b=10"
+        );
+        assert_eq!(
+            ProtocolSpec::Dynamic {
+                delta: 0.7,
+                check_every: 10
+            }
+            .label(),
+            "sigma_d=0.7,b=10"
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! The non-communicating baseline (paper "nosync"): adaptive but not
+//! consistent — each learner trains in isolation.
+
+use super::protocol::{Protocol, SyncCtx, SyncReport};
+
+pub struct NoSync;
+
+impl Protocol for NoSync {
+    fn name(&self) -> String {
+        "nosync".to_string()
+    }
+
+    fn sync(&mut self, _ctx: &mut SyncCtx) -> SyncReport {
+        SyncReport::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::NetStats;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn never_communicates() {
+        let mut models = vec![vec![1.0f32], vec![2.0f32]];
+        let w = vec![1.0; 2];
+        let mut net = NetStats::new();
+        let mut rng = Rng::new(0);
+        let mut proto = NoSync;
+        for t in 1..=100 {
+            let rep = proto.sync(&mut SyncCtx {
+                round: t,
+                models: &mut models,
+                weights: &w,
+                net: &mut net,
+                rng: &mut rng,
+            });
+            assert!(!rep.communicated);
+        }
+        assert_eq!(net.total_bytes(), 0);
+        assert_eq!(models[0], vec![1.0]);
+    }
+}

@@ -1,0 +1,135 @@
+//! Periodic averaging σ_b and continuous averaging σ_1 (paper §4).
+//!
+//! Every b rounds, all m learners upload their models, the coordinator
+//! replaces every local model with the joint (optionally weighted)
+//! average and broadcasts it back. Communication is invested regardless
+//! of utility — the consistent-but-not-adaptive baseline.
+
+use crate::model::params;
+use crate::network::MsgKind;
+
+use super::protocol::{Protocol, SyncCtx, SyncReport};
+
+pub struct PeriodicAveraging {
+    pub period: u64,
+    pub weighted: bool,
+    scratch: Vec<f32>,
+}
+
+impl PeriodicAveraging {
+    pub fn new(period: u64) -> PeriodicAveraging {
+        assert!(period >= 1);
+        PeriodicAveraging {
+            period,
+            weighted: false,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// σ_1 — the continuous averaging protocol.
+    pub fn continuous() -> PeriodicAveraging {
+        PeriodicAveraging::new(1)
+    }
+}
+
+impl Protocol for PeriodicAveraging {
+    fn name(&self) -> String {
+        if self.period == 1 {
+            "sigma_1".to_string()
+        } else {
+            format!("sigma_b={}", self.period)
+        }
+    }
+
+    fn sync(&mut self, ctx: &mut SyncCtx) -> SyncReport {
+        let mut report = SyncReport::default();
+        if ctx.round % self.period != 0 {
+            return report;
+        }
+        let m = ctx.models.len();
+        let p = ctx.models[0].len();
+        let idx: Vec<usize> = (0..m).collect();
+        if self.scratch.len() != p {
+            self.scratch = vec![0.0; p];
+        }
+        if self.weighted {
+            params::weighted_average_into(ctx.models, &idx, ctx.weights, &mut self.scratch);
+        } else {
+            params::average_into(ctx.models, &idx, &mut self.scratch);
+        }
+        for i in 0..m {
+            ctx.net.send(MsgKind::ModelUpload, p);
+            ctx.models[i].copy_from_slice(&self.scratch);
+            ctx.net.send(MsgKind::ModelDownload, p);
+        }
+        ctx.net.sync_events += 1;
+        ctx.net.full_syncs += 1;
+        report.communicated = true;
+        report.updated = m;
+        report.full = true;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::NetStats;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn averages_all_on_period() {
+        let mut models = vec![vec![2.0f32, 0.0], vec![0.0, 2.0]];
+        let w = vec![1.0, 1.0];
+        let mut net = NetStats::new();
+        let mut rng = Rng::new(0);
+        let mut proto = PeriodicAveraging::new(5);
+        for t in 1..=4 {
+            let rep = proto.sync(&mut SyncCtx {
+                round: t,
+                models: &mut models,
+                weights: &w,
+                net: &mut net,
+                rng: &mut rng,
+            });
+            assert!(!rep.communicated);
+        }
+        let rep = proto.sync(&mut SyncCtx {
+            round: 5,
+            models: &mut models,
+            weights: &w,
+            net: &mut net,
+            rng: &mut rng,
+        });
+        assert!(rep.full);
+        assert_eq!(models[0], vec![1.0, 1.0]);
+        assert_eq!(models[1], vec![1.0, 1.0]);
+        // 2 uploads + 2 downloads of P=2 models
+        assert_eq!(net.models_sent, 4);
+    }
+
+    #[test]
+    fn continuous_is_period_one() {
+        assert_eq!(PeriodicAveraging::continuous().name(), "sigma_1");
+    }
+
+    #[test]
+    fn comm_is_linear_in_rounds() {
+        let mut models = vec![vec![0.0f32; 4]; 3];
+        let w = vec![1.0; 3];
+        let mut net = NetStats::new();
+        let mut rng = Rng::new(0);
+        let mut proto = PeriodicAveraging::new(2);
+        for t in 1..=10 {
+            proto.sync(&mut SyncCtx {
+                round: t,
+                models: &mut models,
+                weights: &w,
+                net: &mut net,
+                rng: &mut rng,
+            });
+        }
+        // 5 sync rounds x 3 learners x 2 directions
+        assert_eq!(net.models_sent, 30);
+    }
+}

@@ -1,0 +1,48 @@
+//! The synchronization-operator interface (paper §2).
+//!
+//! A decentralized learning protocol Π = (φ, σ) pairs a local learning
+//! algorithm φ (the AOT train step, chosen per-experiment) with a
+//! synchronization operator σ. Implementations of [`Protocol`] are the σ's:
+//! dynamic averaging (the paper's contribution), periodic/continuous
+//! averaging, FedAvg, and nosync.
+
+use crate::network::NetStats;
+use crate::util::rng::Rng;
+
+/// Everything a synchronization operator may observe/mutate in one round.
+pub struct SyncCtx<'a> {
+    /// Current round t (1-based).
+    pub round: u64,
+    /// The model configuration f_t — one flat vector per learner.
+    pub models: &'a mut [Vec<f32>],
+    /// Per-learner sample weights B^i (Algorithm 2). All-equal => Alg 1.
+    pub weights: &'a [f32],
+    /// Byte accounting.
+    pub net: &'a mut NetStats,
+    /// Protocol-owned randomness (FedAvg subsampling, random augmentation).
+    pub rng: &'a mut Rng,
+}
+
+/// What a sync invocation did (for metrics / the figures).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SyncReport {
+    /// did any communication happen this round
+    pub communicated: bool,
+    /// number of learners whose model was replaced
+    pub updated: usize,
+    /// was this a full (all-m) synchronization
+    pub full: bool,
+    /// number of local-condition violations observed (dynamic only)
+    pub violations: usize,
+}
+
+pub trait Protocol: Send {
+    /// Human-readable configuration name, e.g. `sigma_b=10` / `sigma_d=0.7`.
+    fn name(&self) -> String;
+
+    /// Apply the synchronization operator for round `ctx.round`.
+    fn sync(&mut self, ctx: &mut SyncCtx) -> SyncReport;
+
+    /// Reset protocol state (reference vector etc.) for a fresh run.
+    fn reset(&mut self) {}
+}

@@ -1,0 +1,116 @@
+//! Byte-level text stream for the decentralized-transformer example.
+//!
+//! A small built-in English corpus (public-domain-style sentences about
+//! the paper's own domain, repeated with variation) is sharded across
+//! learners; each batch is a set of random (S+1)-byte windows. "Drift"
+//! switches to an alternative corpus with different token statistics.
+
+use crate::runtime::Batch;
+use crate::util::rng::Rng;
+
+use super::Stream;
+
+const BASE_CORPUS: &str = "\
+the fleet of learners trains a single shared model from local streams. \
+each vehicle observes its own road and adapts the network weights. \
+when the models drift apart the coordinator averages them back together. \
+communication is expensive so the protocol only synchronizes on demand. \
+a local condition guards the divergence of the configuration. \
+if the squared distance to the reference exceeds the threshold a violation is sent. \
+the coordinator balances violations by querying additional learners. \
+averaging leaves the mean of the configuration invariant. \
+gradient noise pushes the replicas apart while averaging pulls them together. \
+concept drift makes the target distribution change without warning. \
+after a drift the learners suffer loss and communication spikes. \
+between drifts the system converges and communication goes quiet. \
+the serial baseline sees all data but must centralize every sample. \
+federated averaging samples a fraction of the nodes in every round. \
+dynamic averaging invests communication only when it is useful. \
+";
+
+const DRIFT_CORPUS: &str = "\
+zebra quartz jukebox vexing wizards frolic midnight oxygen puzzle. \
+quick brown foxes jump over lazy dogs while sphinxes judge my vow. \
+pack my box with five dozen liquor jugs and amazing jackdaws quiz. \
+how vexingly quick daft zebras jump as the five boxing wizards do. \
+";
+
+pub struct CorpusStream {
+    text: Vec<u8>,
+    rng: Rng,
+    window: usize, // S+1
+}
+
+impl CorpusStream {
+    pub fn new(stream_seed: u64, window: usize) -> CorpusStream {
+        CorpusStream {
+            text: BASE_CORPUS.as_bytes().to_vec(),
+            rng: Rng::new(stream_seed ^ 0xC0F0),
+            window,
+        }
+    }
+
+    /// Vocabulary bound used by the transformer artifact (ASCII).
+    pub const VOCAB: i32 = 128;
+}
+
+impl Stream for CorpusStream {
+    fn next_batch(&mut self, batch: usize) -> Batch {
+        let mut x = Vec::with_capacity(batch * self.window);
+        for _ in 0..batch {
+            let start = self.rng.below(self.text.len() - self.window);
+            x.extend(
+                self.text[start..start + self.window]
+                    .iter()
+                    .map(|&b| (b as i32).min(Self::VOCAB - 1)),
+            );
+        }
+        Batch::I32 { x }
+    }
+
+    fn drift(&mut self, epoch: u64) {
+        self.text = if epoch % 2 == 1 {
+            DRIFT_CORPUS.as_bytes().to_vec()
+        } else {
+            BASE_CORPUS.as_bytes().to_vec()
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_have_right_shape_and_range() {
+        let mut s = CorpusStream::new(1, 65);
+        let Batch::I32 { x } = s.next_batch(4) else {
+            panic!()
+        };
+        assert_eq!(x.len(), 4 * 65);
+        assert!(x.iter().all(|&t| (0..128).contains(&t)));
+    }
+
+    #[test]
+    fn windows_are_contiguous_text() {
+        let mut s = CorpusStream::new(2, 10);
+        let Batch::I32 { x } = s.next_batch(1) else {
+            panic!()
+        };
+        let bytes: Vec<u8> = x.iter().map(|&t| t as u8).collect();
+        let snippet = String::from_utf8(bytes).unwrap();
+        assert!(BASE_CORPUS.contains(&snippet), "window {snippet:?} not in corpus");
+    }
+
+    #[test]
+    fn drift_switches_corpus() {
+        let mut s = CorpusStream::new(3, 8);
+        s.drift(1);
+        let Batch::I32 { x } = s.next_batch(1) else {
+            panic!()
+        };
+        let bytes: Vec<u8> = x.iter().map(|&t| t as u8).collect();
+        let snippet = String::from_utf8(bytes).unwrap();
+        assert!(DRIFT_CORPUS.contains(&snippet));
+    }
+}

@@ -1,0 +1,95 @@
+//! Sample-stream substrates (paper §2: each learner observes a batch from
+//! a time-variant distribution P_t every round).
+//!
+//! Offline environment: MNIST cannot be downloaded, so `synth_mnist`
+//! provides a deterministic CNN-learnable 10-class image task with the
+//! same shapes (28x28x1); the drift dataset follows the paper's random-
+//! graphical-model construction; `corpus` feeds the byte-LM example.
+//! See DESIGN.md "Offline-environment substitutions".
+
+pub mod corpus;
+pub mod graphical;
+pub mod synth_mnist;
+
+use crate::runtime::Batch;
+
+/// A per-learner data stream: yields one mini-batch per round and can
+/// undergo a concept drift (regenerate its underlying distribution).
+pub trait Stream: Send {
+    /// Next mini-batch of the given size, advancing the stream.
+    fn next_batch(&mut self, batch: usize) -> Batch;
+
+    /// Apply a concept drift. `epoch` identifies the new concept so all
+    /// learners drift to the *same* new target distribution.
+    fn drift(&mut self, epoch: u64);
+}
+
+/// Drift scheduler: triggers drifts at random rounds with probability p
+/// per round (paper §5: p = 0.001), identically across all learners.
+pub struct DriftSchedule {
+    pub probability: f64,
+    pub epoch: u64,
+    /// also support forced drifts at specific rounds (Fig 1.1a)
+    pub forced_rounds: Vec<u64>,
+    pub drift_rounds: Vec<u64>,
+}
+
+impl DriftSchedule {
+    pub fn random(probability: f64) -> DriftSchedule {
+        DriftSchedule {
+            probability,
+            epoch: 0,
+            forced_rounds: Vec::new(),
+            drift_rounds: Vec::new(),
+        }
+    }
+
+    pub fn forced(rounds: Vec<u64>) -> DriftSchedule {
+        DriftSchedule {
+            probability: 0.0,
+            epoch: 0,
+            forced_rounds: rounds,
+            drift_rounds: Vec::new(),
+        }
+    }
+
+    pub fn none() -> DriftSchedule {
+        DriftSchedule::random(0.0)
+    }
+
+    /// Returns Some(new_epoch) if a drift fires this round.
+    pub fn tick(&mut self, round: u64, rng: &mut crate::util::rng::Rng) -> Option<u64> {
+        let fire = self.forced_rounds.contains(&round)
+            || (self.probability > 0.0 && rng.bernoulli(self.probability));
+        if fire {
+            self.epoch += 1;
+            self.drift_rounds.push(round);
+            Some(self.epoch)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forced_drift_fires_exactly_there() {
+        let mut s = DriftSchedule::forced(vec![5, 9]);
+        let mut rng = Rng::new(0);
+        let fired: Vec<u64> = (1..=10).filter(|&t| s.tick(t, &mut rng).is_some()).collect();
+        assert_eq!(fired, vec![5, 9]);
+        assert_eq!(s.epoch, 2);
+    }
+
+    #[test]
+    fn random_drift_rate() {
+        let mut s = DriftSchedule::random(0.01);
+        let mut rng = Rng::new(3);
+        let fired = (0..100_000).filter(|&t| s.tick(t, &mut rng).is_some()).count();
+        assert!((fired as f64 / 100_000.0 - 0.01).abs() < 0.002, "{fired}");
+    }
+}

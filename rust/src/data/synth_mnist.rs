@@ -1,0 +1,161 @@
+//! Deterministic MNIST-like 10-class image task (28x28x1).
+//!
+//! Each class c has a prototype image built from k class-seeded Gaussian
+//! blobs (a crude "digit stroke pattern"); a sample is the prototype under
+//! a random shift, per-blob intensity jitter and pixel noise. The task is
+//! CNN-learnable (a linear model underfits it; a small CNN reaches >90%)
+//! which is what the paper's protocol study needs: a meaningful loss
+//! signal whose gradients decay as learners converge.
+
+use crate::runtime::Batch;
+use crate::util::rng::Rng;
+
+use super::Stream;
+
+pub const SIDE: usize = 28;
+pub const CLASSES: usize = 10;
+const BLOBS: usize = 5;
+
+#[derive(Clone, Copy)]
+struct Blob {
+    cx: f32,
+    cy: f32,
+    sx: f32,
+    sy: f32,
+    amp: f32,
+}
+
+/// Class prototypes for one concept epoch.
+pub struct MnistLike {
+    blobs: Vec<[Blob; BLOBS]>, // per class
+    noise: f32,
+    rng: Rng,
+    concept_seed: u64,
+}
+
+impl MnistLike {
+    /// `stream_seed` decorrelates learners; `concept_seed` must be shared
+    /// so all learners observe the same target distribution.
+    pub fn new(concept_seed: u64, stream_seed: u64) -> MnistLike {
+        MnistLike {
+            blobs: Self::make_prototypes(concept_seed),
+            noise: 0.15,
+            rng: Rng::new(stream_seed ^ 0xD1A5),
+            concept_seed,
+        }
+    }
+
+    fn make_prototypes(concept_seed: u64) -> Vec<[Blob; BLOBS]> {
+        let mut protos = Vec::with_capacity(CLASSES);
+        for c in 0..CLASSES {
+            let mut rng = Rng::new(concept_seed.wrapping_mul(1009).wrapping_add(c as u64));
+            let mut blobs = [Blob {
+                cx: 0.0,
+                cy: 0.0,
+                sx: 1.0,
+                sy: 1.0,
+                amp: 0.0,
+            }; BLOBS];
+            for b in blobs.iter_mut() {
+                *b = Blob {
+                    cx: rng.range(6.0, 22.0) as f32,
+                    cy: rng.range(6.0, 22.0) as f32,
+                    sx: rng.range(1.5, 4.5) as f32,
+                    sy: rng.range(1.5, 4.5) as f32,
+                    amp: rng.range(0.6, 1.0) as f32,
+                };
+            }
+            protos.push(blobs);
+        }
+        protos
+    }
+
+    /// Render one sample of class `c` into `img` (len SIDE*SIDE).
+    pub fn render(&mut self, c: usize, img: &mut [f32]) {
+        debug_assert_eq!(img.len(), SIDE * SIDE);
+        let dx = self.rng.range(-2.0, 2.0) as f32;
+        let dy = self.rng.range(-2.0, 2.0) as f32;
+        let jitter: Vec<f32> = (0..BLOBS)
+            .map(|_| 1.0 + 0.2 * self.rng.normal_f32())
+            .collect();
+        for (yi, row) in img.chunks_mut(SIDE).enumerate() {
+            for (xi, px) in row.iter_mut().enumerate() {
+                let mut v = 0.0f32;
+                for (bi, b) in self.blobs[c].iter().enumerate() {
+                    let ux = (xi as f32 - (b.cx + dx)) / b.sx;
+                    let uy = (yi as f32 - (b.cy + dy)) / b.sy;
+                    v += b.amp * jitter[bi] * (-(ux * ux + uy * uy) / 2.0).exp();
+                }
+                *px = (v + self.noise * self.rng.normal_f32()).clamp(0.0, 1.5);
+            }
+        }
+    }
+
+    /// Generate a labelled batch (x flattened [B,28,28,1], y one-hot [B,10]).
+    pub fn batch(&mut self, b: usize) -> Batch {
+        let mut x = vec![0.0f32; b * SIDE * SIDE];
+        let mut y = vec![0.0f32; b * CLASSES];
+        for i in 0..b {
+            let c = self.rng.below(CLASSES);
+            self.render(c, &mut x[i * SIDE * SIDE..(i + 1) * SIDE * SIDE]);
+            y[i * CLASSES + c] = 1.0;
+        }
+        Batch::F32 { x, y }
+    }
+}
+
+impl Stream for MnistLike {
+    fn next_batch(&mut self, batch: usize) -> Batch {
+        self.batch(batch)
+    }
+
+    fn drift(&mut self, epoch: u64) {
+        self.blobs = Self::make_prototypes(self.concept_seed.wrapping_add(epoch));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_in_range_and_labels_onehot() {
+        let mut g = MnistLike::new(1, 2);
+        let Batch::F32 { x, y } = g.batch(8) else {
+            panic!()
+        };
+        assert_eq!(x.len(), 8 * 28 * 28);
+        assert!(x.iter().all(|&v| (0.0..=1.5).contains(&v)));
+        for row in y.chunks(10) {
+            assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn same_concept_seed_same_prototypes() {
+        let a = MnistLike::make_prototypes(7);
+        let b = MnistLike::make_prototypes(7);
+        assert_eq!(a[3][2].cx, b[3][2].cx);
+    }
+
+    #[test]
+    fn drift_changes_prototypes() {
+        let mut g = MnistLike::new(1, 2);
+        let before = g.blobs[0][0].cx;
+        g.drift(1);
+        assert_ne!(before, g.blobs[0][0].cx);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // prototype images of different classes should differ substantially
+        let mut g = MnistLike::new(1, 2);
+        g.noise = 0.0;
+        let mut a = vec![0.0; 28 * 28];
+        let mut b = vec![0.0; 28 * 28];
+        g.render(0, &mut a);
+        g.render(1, &mut b);
+        let dist: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(dist > 10.0, "classes too similar: {dist}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Front-view camera renderer: inverse-perspective projection of the lane
+//! boundaries into a 32x64 grayscale image (the driving CNN's input).
+//!
+//! For each image row below the horizon we compute the ground distance it
+//! images, sample the track's left/right boundary at that look-ahead in
+//! the car frame, and paint boundary lines bright on a grey road / dark
+//! off-road background — the same information a Udacity-style front
+//! camera provides for lane keeping.
+
+use super::car::Car;
+use super::track::Track;
+
+pub const CAM_H: usize = 32;
+pub const CAM_W: usize = 64;
+const HORIZON: usize = 6; // rows [0, HORIZON) are sky
+const CAM_HEIGHT: f64 = 1.4; // camera height above ground (m)
+const FOCAL: f64 = 28.0; // focal length in pixel units
+const MAX_DEPTH: f64 = 60.0;
+
+/// Render the front view into `img` (len CAM_H*CAM_W, row-major, values
+/// in [0, 1]).
+pub fn render(car: &Car, track: &Track, img: &mut [f32]) {
+    debug_assert_eq!(img.len(), CAM_H * CAM_W);
+    // sky
+    for px in img[..HORIZON * CAM_W].iter_mut() {
+        *px = 0.05;
+    }
+    let s = &car.state;
+    let (cx, cy) = (s.x, s.y);
+    let (fx, fy) = (s.psi.cos(), s.psi.sin()); // forward
+    let (lx, ly) = (-fy, fx); // left
+
+    for row in HORIZON..CAM_H {
+        // ground depth imaged by this row (pinhole, flat ground)
+        let dy = (row - HORIZON) as f64 + 0.5;
+        let depth = (FOCAL * CAM_HEIGHT / dy).min(MAX_DEPTH);
+        // centerline param at this look-ahead (arc ≈ angle * radius)
+        let theta_ahead = s.theta + depth / track.radius(s.theta);
+        let (px, py) = track.point(theta_ahead);
+        let (hx, hy) = track.heading(theta_ahead);
+        // boundary points in world frame
+        let w = track.half_width;
+        let (lbx, lby) = (px - w * hy, py + w * hx);
+        let (rbx, rby) = (px + w * hy, py - w * hx);
+        // project into camera: lateral offset in car frame / depth
+        let proj = |wx: f64, wy: f64| -> Option<f64> {
+            let rx = wx - cx;
+            let ry = wy - cy;
+            let fwd = rx * fx + ry * fy;
+            if fwd < 0.5 {
+                return None;
+            }
+            let lat = rx * lx + ry * ly;
+            Some(CAM_W as f64 / 2.0 - FOCAL * lat / fwd)
+        };
+        let lcol = proj(lbx, lby);
+        let rcol = proj(rbx, rby);
+        let ccol = proj(px, py);
+
+        let row_px = &mut img[row * CAM_W..(row + 1) * CAM_W];
+        for (col, px_) in row_px.iter_mut().enumerate() {
+            let c = col as f64 + 0.5;
+            // default: off-road dark; between boundaries: road grey
+            let on_road = match (lcol, rcol) {
+                (Some(l), Some(r)) => {
+                    let (lo, hi) = if l < r { (l, r) } else { (r, l) };
+                    c >= lo && c <= hi
+                }
+                _ => false,
+            };
+            *px_ = if on_road { 0.45 } else { 0.12 };
+            // lane boundary lines (bright), centerline dash (faint)
+            let near = |edge: Option<f64>, width: f64| {
+                edge.map(|e| (c - e).abs() < width).unwrap_or(false)
+            };
+            let line_w = 1.0 + (CAM_H - row) as f64 * 0.05; // thicker up close
+            if near(lcol, line_w) || near(rcol, line_w) {
+                *px_ = 1.0;
+            } else if near(ccol, line_w * 0.5) {
+                *px_ = 0.65;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driving::car::CarParams;
+
+    fn render_at(theta: f64, offset: f64) -> Vec<f32> {
+        let t = Track::standard();
+        let mut car = Car::on_track(&t, theta, CarParams::default());
+        // displace laterally
+        let (hx, hy) = t.heading(theta);
+        car.state.x += -hy * offset;
+        car.state.y += hx * offset;
+        let mut img = vec![0.0; CAM_H * CAM_W];
+        render(&car, &t, &mut img);
+        img
+    }
+
+    #[test]
+    fn image_values_in_range() {
+        let img = render_at(0.3, 0.0);
+        assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn road_visible_from_centerline() {
+        let img = render_at(0.3, 0.0);
+        let bright = img.iter().filter(|&&v| v > 0.9).count();
+        let road = img.iter().filter(|&&v| (0.4..0.5).contains(&v)).count();
+        assert!(bright > 20, "lane lines visible: {bright}");
+        assert!(road > 200, "road surface visible: {road}");
+    }
+
+    #[test]
+    fn view_changes_with_lateral_offset() {
+        let a = render_at(0.3, 0.0);
+        let b = render_at(0.3, 2.5);
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 20.0, "offset must shift the view: {diff}");
+    }
+
+    #[test]
+    fn sky_is_dark() {
+        let img = render_at(1.0, 0.0);
+        for px in &img[..HORIZON * CAM_W] {
+            assert!(*px < 0.1);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Kinematic bicycle model driven at constant speed (the paper evaluates
+//! models "driven with a constant speed" in the simulator).
+
+use super::track::Track;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CarState {
+    pub x: f64,
+    pub y: f64,
+    /// heading angle ψ (radians, world frame)
+    pub psi: f64,
+    /// cached centerline parameter (warm start for closest-point search)
+    pub theta: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CarParams {
+    pub speed: f64,       // m/s, constant
+    pub wheelbase: f64,   // m
+    pub max_steer: f64,   // rad — steering command in [-1,1] maps to ±max
+    pub dt: f64,          // s per tick
+}
+
+impl Default for CarParams {
+    fn default() -> CarParams {
+        CarParams {
+            speed: 8.0,
+            wheelbase: 2.5,
+            max_steer: 0.45,
+            dt: 0.05,
+        }
+    }
+}
+
+pub struct Car {
+    pub state: CarState,
+    pub params: CarParams,
+}
+
+impl Car {
+    /// Place the car on the centerline at angle θ, facing along the track.
+    pub fn on_track(track: &Track, theta: f64, params: CarParams) -> Car {
+        let (x, y) = track.point(theta);
+        let (hx, hy) = track.heading(theta);
+        Car {
+            state: CarState {
+                x,
+                y,
+                psi: hy.atan2(hx),
+                theta,
+            },
+            params,
+        }
+    }
+
+    /// Advance one tick with normalized steering command in [-1, 1].
+    pub fn step(&mut self, steer_cmd: f64, track: &Track) {
+        let delta = steer_cmd.clamp(-1.0, 1.0) * self.params.max_steer;
+        let s = &mut self.state;
+        let v = self.params.speed;
+        let dt = self.params.dt;
+        s.psi += v / self.params.wheelbase * delta.tan() * dt;
+        s.x += v * s.psi.cos() * dt;
+        s.y += v * s.psi.sin() * dt;
+        s.theta = track.closest_theta(s.x, s.y, s.theta);
+    }
+
+    /// Signed lateral offset from the centerline (m).
+    pub fn lateral_offset(&self, track: &Track) -> f64 {
+        track.lateral_offset(self.state.x, self.state.y, self.state.theta)
+    }
+
+    /// Heading error relative to the centerline tangent (rad, wrapped).
+    pub fn heading_error(&self, track: &Track) -> f64 {
+        let (hx, hy) = track.heading(self.state.theta);
+        let target = hy.atan2(hx);
+        let mut e = self.state.psi - target;
+        while e > std::f64::consts::PI {
+            e -= 2.0 * std::f64::consts::PI;
+        }
+        while e < -std::f64::consts::PI {
+            e += 2.0 * std::f64::consts::PI;
+        }
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_on_centerline() {
+        let t = Track::standard();
+        let car = Car::on_track(&t, 0.5, CarParams::default());
+        assert!(car.lateral_offset(&t).abs() < 1e-6);
+        assert!(car.heading_error(&t).abs() < 1e-6);
+    }
+
+    #[test]
+    fn straight_steer_zero_moves_forward() {
+        let t = Track::standard();
+        let mut car = Car::on_track(&t, 0.0, CarParams::default());
+        let (x0, y0) = (car.state.x, car.state.y);
+        car.step(0.0, &t);
+        let d = ((car.state.x - x0).powi(2) + (car.state.y - y0).powi(2)).sqrt();
+        assert!((d - 8.0 * 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn steering_turns_the_car() {
+        let t = Track::standard();
+        let mut car = Car::on_track(&t, 0.0, CarParams::default());
+        let psi0 = car.state.psi;
+        for _ in 0..10 {
+            car.step(1.0, &t);
+        }
+        assert!(car.state.psi > psi0, "positive steer must turn left");
+    }
+}

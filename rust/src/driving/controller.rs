@@ -1,0 +1,87 @@
+//! The "human driver": a PD lane-keeping controller used to generate the
+//! training labels (the paper records human driving behaviour in a
+//! simulator; our expert plays that role, with small action noise so the
+//! dataset covers off-center states).
+
+use crate::util::rng::Rng;
+
+use super::car::Car;
+use super::track::Track;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PdDriver {
+    pub k_offset: f64,
+    pub k_heading: f64,
+    pub k_lookahead: f64,
+    pub noise: f64,
+}
+
+impl Default for PdDriver {
+    fn default() -> PdDriver {
+        PdDriver {
+            k_offset: 0.35,
+            k_heading: 1.6,
+            k_lookahead: 0.9,
+            noise: 0.02,
+        }
+    }
+}
+
+impl PdDriver {
+    /// Normalized steering command in [-1, 1].
+    pub fn steer(&self, car: &Car, track: &Track, rng: &mut Rng) -> f64 {
+        let off = car.lateral_offset(track);
+        let he = car.heading_error(track);
+        // feed-forward: curvature of the road ahead
+        let th = car.state.theta;
+        let look = 6.0 / track.radius(th);
+        let (h0x, h0y) = track.heading(th);
+        let (h1x, h1y) = track.heading(th + look);
+        let turn = (h0x * h1y - h0y * h1x).asin();
+        let cmd = -self.k_offset * off - self.k_heading * he + self.k_lookahead * turn
+            + self.noise * rng.normal();
+        cmd.clamp(-1.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driving::car::CarParams;
+
+    #[test]
+    fn expert_keeps_car_on_track_for_two_laps() {
+        let track = Track::standard();
+        let mut car = Car::on_track(&track, 0.0, CarParams::default());
+        let driver = PdDriver::default();
+        let mut rng = Rng::new(11);
+        let two_laps = 2.0 * 2.0 * std::f64::consts::PI;
+        let mut ticks = 0usize;
+        while car.state.theta < two_laps && ticks < 200_000 {
+            let steer = driver.steer(&car, &track, &mut rng);
+            car.step(steer, &track);
+            assert!(
+                car.lateral_offset(&track).abs() < track.half_width,
+                "expert left the road at tick {ticks}"
+            );
+            ticks += 1;
+        }
+        assert!(car.state.theta >= two_laps, "expert too slow: {ticks} ticks");
+    }
+
+    #[test]
+    fn expert_recovers_from_offset() {
+        let track = Track::standard();
+        let mut car = Car::on_track(&track, 1.0, CarParams::default());
+        let (hx, hy) = track.heading(1.0);
+        car.state.x += -hy * 2.0; // 2m left of center
+        car.state.y += hx * 2.0;
+        let driver = PdDriver::default();
+        let mut rng = Rng::new(3);
+        for _ in 0..400 {
+            let steer = driver.steer(&car, &track, &mut rng);
+            car.step(steer, &track);
+        }
+        assert!(car.lateral_offset(&track).abs() < 1.0, "expert must re-center");
+    }
+}

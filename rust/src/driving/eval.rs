@@ -1,0 +1,159 @@
+//! Closed-loop evaluation with the paper's custom deep-driving loss
+//! (Appendix A.4):
+//!
+//!   L_dd = λ (t_max − t)/t_max + μ c/c_max + (1 − μ − λ) t_line / t
+//!
+//! where t = time on road before going off / crashing, c = sideline-
+//! crossing frequency (#crossings / t), t_line = time spent on the
+//! sideline; λ = 0.8, μ = 0.15. t_max is the best time among all models
+//! in the experiment (capped at two laps), c_max the worst frequency.
+
+use anyhow::Result;
+
+use crate::runtime::InferStep;
+
+use super::camera::{render, CAM_H, CAM_W};
+use super::car::{Car, CarParams};
+use super::track::Track;
+
+pub const LAMBDA: f64 = 0.8;
+pub const MU: f64 = 0.15;
+
+/// Raw closed-loop measurements for one model.
+#[derive(Clone, Copy, Debug)]
+pub struct DriveStats {
+    /// seconds on road before going off (or reaching the 2-lap cap)
+    pub time_on_road: f64,
+    /// number of sideline touch events
+    pub crossings: u64,
+    /// seconds spent on the sideline
+    pub time_on_line: f64,
+    /// laps completed
+    pub laps: f64,
+    pub finished_two_laps: bool,
+}
+
+impl DriveStats {
+    pub fn crossing_freq(&self) -> f64 {
+        if self.time_on_road <= 0.0 {
+            0.0
+        } else {
+            self.crossings as f64 / self.time_on_road
+        }
+    }
+}
+
+/// Drive the model closed-loop until it leaves the road or finishes two laps.
+pub fn drive(infer: &InferStep, params: &[f32], track: &Track, seed_theta: f64) -> Result<DriveStats> {
+    let mut car = Car::on_track(track, seed_theta, CarParams::default());
+    let dt = car.params.dt;
+    let two_laps = seed_theta + 2.0 * 2.0 * std::f64::consts::PI;
+    // sideline band: |offset| in [half_width - line_band, half_width]
+    let line_band = 0.5;
+    let mut img = vec![0.0f32; CAM_H * CAM_W];
+    let mut stats = DriveStats {
+        time_on_road: 0.0,
+        crossings: 0,
+        time_on_line: 0.0,
+        laps: 0.0,
+        finished_two_laps: false,
+    };
+    let mut on_line_prev = false;
+    let max_ticks = 40_000;
+    for _ in 0..max_ticks {
+        render(&car, track, &mut img);
+        let out = infer.infer(params, &img)?;
+        let steer = out[0].clamp(-1.0, 1.0) as f64;
+        car.step(steer, track);
+        let off = car.lateral_offset(track).abs();
+        if off > track.half_width {
+            break; // off the road
+        }
+        stats.time_on_road += dt;
+        let on_line = off >= track.half_width - line_band;
+        if on_line {
+            stats.time_on_line += dt;
+            if !on_line_prev {
+                stats.crossings += 1;
+            }
+        }
+        on_line_prev = on_line;
+        if car.state.theta >= two_laps {
+            stats.finished_two_laps = true;
+            break;
+        }
+    }
+    stats.laps = (car.state.theta - seed_theta) / (2.0 * std::f64::consts::PI);
+    Ok(stats)
+}
+
+/// Combine raw stats into the paper's custom loss, normalizing by the
+/// best time / worst crossing frequency across the compared models.
+pub fn custom_loss(all: &[DriveStats]) -> Vec<f64> {
+    let t_max = all
+        .iter()
+        .map(|s| s.time_on_road)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let c_max = all
+        .iter()
+        .map(|s| s.crossing_freq())
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    all.iter()
+        .map(|s| {
+            let t = s.time_on_road.max(1e-9);
+            LAMBDA * (t_max - s.time_on_road) / t_max
+                + MU * s.crossing_freq() / c_max
+                + (1.0 - MU - LAMBDA) * s.time_on_line / t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(t: f64, crossings: u64, t_line: f64) -> DriveStats {
+        DriveStats {
+            time_on_road: t,
+            crossings,
+            time_on_line: t_line,
+            laps: 0.0,
+            finished_two_laps: false,
+        }
+    }
+
+    #[test]
+    fn perfect_driver_gets_zero_loss() {
+        let all = vec![stats(100.0, 0, 0.0), stats(50.0, 5, 10.0)];
+        let losses = custom_loss(&all);
+        assert!(losses[0] < 1e-9);
+        assert!(losses[1] > 0.4, "worse driver penalized: {}", losses[1]);
+    }
+
+    #[test]
+    fn loss_orders_by_quality() {
+        let all = vec![
+            stats(100.0, 0, 0.0),
+            stats(80.0, 2, 4.0),
+            stats(30.0, 8, 12.0),
+        ];
+        let l = custom_loss(&all);
+        assert!(l[0] < l[1] && l[1] < l[2], "{l:?}");
+    }
+
+    #[test]
+    fn crossing_freq_normalizes_by_time() {
+        let s = stats(50.0, 10, 0.0);
+        assert!((s.crossing_freq() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_bounded_by_one() {
+        let all = vec![stats(100.0, 3, 5.0), stats(1.0, 50, 1.0)];
+        for l in custom_loss(&all) {
+            assert!((0.0..=1.0 + 1e-9).contains(&l), "{l}");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Deep-driving substrate (paper §5 case study, Appendix A.4): a 2-D
+//! closed-track simulator with a perspective front camera, a PD "human
+//! driver" producing training labels, an in-fleet data stream, and the
+//! closed-loop evaluator implementing the paper's custom loss L_dd.
+
+pub mod camera;
+pub mod car;
+pub mod controller;
+pub mod eval;
+pub mod stream;
+pub mod track;
+
+pub use camera::{CAM_H, CAM_W};
+pub use car::{Car, CarParams};
+pub use controller::PdDriver;
+pub use eval::{custom_loss, drive, DriveStats};
+pub use stream::DrivingStream;
+pub use track::Track;

@@ -1,0 +1,125 @@
+//! In-fleet training data stream: the PD "human driver" drives its
+//! regional track and records (front-camera frame, steering) pairs
+//! (paper App. A.4: per-region homogeneous data; different learners may
+//! use differently-seeded tracks to mimic regional variation).
+
+use crate::data::Stream;
+use crate::runtime::Batch;
+use crate::util::rng::Rng;
+
+use super::camera::{render, CAM_H, CAM_W};
+use super::car::{Car, CarParams};
+use super::controller::PdDriver;
+use super::track::Track;
+
+pub struct DrivingStream {
+    track: Track,
+    car: Car,
+    driver: PdDriver,
+    rng: Rng,
+    /// occasionally re-spawn with a lateral perturbation so the dataset
+    /// includes recovery situations (as human data does)
+    respawn_every: usize,
+    ticks: usize,
+}
+
+impl DrivingStream {
+    pub fn new(concept_seed: u64, stream_seed: u64, regional: bool) -> DrivingStream {
+        let mut seed_rng = Rng::new(concept_seed ^ 0x0D12);
+        let track = if regional {
+            let mut r = Rng::new(stream_seed.wrapping_mul(31).wrapping_add(concept_seed));
+            Track::random(&mut r)
+        } else {
+            let _ = &mut seed_rng;
+            Track::standard()
+        };
+        let mut rng = Rng::new(stream_seed ^ 0xD21B);
+        let theta0 = rng.range(0.0, 6.28);
+        let car = Car::on_track(&track, theta0, CarParams::default());
+        DrivingStream {
+            track,
+            car,
+            driver: PdDriver::default(),
+            rng,
+            respawn_every: 400,
+            ticks: 0,
+        }
+    }
+
+    fn maybe_respawn(&mut self) {
+        if self.ticks % self.respawn_every == 0 && self.ticks > 0 {
+            let theta = self.rng.range(0.0, 6.28);
+            self.car = Car::on_track(&self.track, theta, CarParams::default());
+            // lateral + heading perturbation for recovery coverage
+            let off = self.rng.range(-2.0, 2.0);
+            let (hx, hy) = self.track.heading(theta);
+            self.car.state.x += -hy * off;
+            self.car.state.y += hx * off;
+            self.car.state.psi += self.rng.range(-0.15, 0.15);
+        }
+    }
+}
+
+impl Stream for DrivingStream {
+    fn next_batch(&mut self, batch: usize) -> Batch {
+        let frame = CAM_H * CAM_W;
+        let mut x = vec![0.0f32; batch * frame];
+        let mut y = vec![0.0f32; batch];
+        for i in 0..batch {
+            self.maybe_respawn();
+            render(&self.car, &self.track, &mut x[i * frame..(i + 1) * frame]);
+            let steer = self.driver.steer(&self.car, &self.track, &mut self.rng);
+            y[i] = steer as f32;
+            self.car.step(steer, &self.track);
+            // if the expert somehow left the road, respawn
+            if self.car.lateral_offset(&self.track).abs() > self.track.half_width {
+                self.ticks = self.respawn_every - 1;
+            }
+            self.ticks += 1;
+        }
+        Batch::F32 { x, y }
+    }
+
+    fn drift(&mut self, epoch: u64) {
+        // region change: new track geometry
+        let mut r = Rng::new(epoch.wrapping_mul(0xC0FFEE).wrapping_add(5));
+        self.track = Track::random(&mut r);
+        let theta = self.rng.range(0.0, 6.28);
+        self.car = Car::on_track(&self.track, theta, CarParams::default());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_match_driving_cnn() {
+        let mut s = DrivingStream::new(1, 2, false);
+        let Batch::F32 { x, y } = s.next_batch(6) else {
+            panic!()
+        };
+        assert_eq!(x.len(), 6 * 32 * 64);
+        assert_eq!(y.len(), 6);
+        assert!(y.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn steering_labels_have_signal() {
+        let mut s = DrivingStream::new(1, 2, false);
+        let Batch::F32 { y, .. } = s.next_batch(500) else {
+            panic!()
+        };
+        let mean: f32 = y.iter().sum::<f32>() / y.len() as f32;
+        let var: f32 =
+            y.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / y.len() as f32;
+        assert!(var > 1e-4, "steering labels almost constant: var {var}");
+    }
+
+    #[test]
+    fn regional_tracks_differ() {
+        let a = DrivingStream::new(1, 10, true);
+        let b = DrivingStream::new(1, 20, true);
+        assert_ne!(a.track.r0, b.track.r0);
+    }
+}

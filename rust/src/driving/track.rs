@@ -1,0 +1,167 @@
+//! Closed 2-D track geometry for the deep-driving case study (paper §5 /
+//! App. A.4 — substitute for the Udacity simulator's lake track).
+//!
+//! The centerline is a "wavy circle": radius varying with angle through a
+//! couple of sinusoidal modes, giving alternating left/right curves of
+//! different sharpness. Arc positions are parameterized by angle θ.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Track {
+    pub r0: f64,
+    modes: Vec<(f64, f64, f64)>, // (amplitude, frequency, phase)
+    pub half_width: f64,
+}
+
+impl Track {
+    /// The default evaluation track.
+    pub fn standard() -> Track {
+        Track {
+            r0: 60.0,
+            modes: vec![(8.0, 2.0, 0.3), (4.0, 3.0, 1.7), (2.0, 5.0, 4.0)],
+            half_width: 4.0,
+        }
+    }
+
+    /// A randomized track (regional variation; used for per-learner data).
+    pub fn random(rng: &mut Rng) -> Track {
+        Track {
+            r0: rng.range(50.0, 70.0),
+            modes: vec![
+                (rng.range(5.0, 10.0), 2.0, rng.range(0.0, 6.28)),
+                (rng.range(2.0, 6.0), 3.0, rng.range(0.0, 6.28)),
+                (rng.range(1.0, 3.0), 5.0, rng.range(0.0, 6.28)),
+            ],
+            half_width: 4.0,
+        }
+    }
+
+    pub fn radius(&self, theta: f64) -> f64 {
+        self.r0
+            + self
+                .modes
+                .iter()
+                .map(|(a, f, p)| a * (f * theta + p).sin())
+                .sum::<f64>()
+    }
+
+    /// Centerline point at angle θ.
+    pub fn point(&self, theta: f64) -> (f64, f64) {
+        let r = self.radius(theta);
+        (r * theta.cos(), r * theta.sin())
+    }
+
+    /// Centerline tangent direction (unit heading) at θ.
+    pub fn heading(&self, theta: f64) -> (f64, f64) {
+        let eps = 1e-4;
+        let (x0, y0) = self.point(theta - eps);
+        let (x1, y1) = self.point(theta + eps);
+        let (dx, dy) = (x1 - x0, y1 - y0);
+        let n = (dx * dx + dy * dy).sqrt();
+        (dx / n, dy / n)
+    }
+
+    /// Closest centerline angle to a world point (coarse-to-fine search,
+    /// warm-started by `hint`).
+    pub fn closest_theta(&self, x: f64, y: f64, hint: f64) -> f64 {
+        let mut best = hint;
+        let mut best_d = f64::INFINITY;
+        // coarse sweep around the hint
+        for k in -40..=40 {
+            let th = hint + k as f64 * 0.01;
+            let (px, py) = self.point(th);
+            let d = (px - x).powi(2) + (py - y).powi(2);
+            if d < best_d {
+                best_d = d;
+                best = th;
+            }
+        }
+        // refine
+        let mut lo = best - 0.01;
+        let mut hi = best + 0.01;
+        for _ in 0..20 {
+            let m1 = lo + (hi - lo) / 3.0;
+            let m2 = hi - (hi - lo) / 3.0;
+            let d1 = {
+                let (px, py) = self.point(m1);
+                (px - x).powi(2) + (py - y).powi(2)
+            };
+            let d2 = {
+                let (px, py) = self.point(m2);
+                (px - x).powi(2) + (py - y).powi(2)
+            };
+            if d1 < d2 {
+                hi = m2;
+            } else {
+                lo = m1;
+            }
+        }
+        (lo + hi) / 2.0
+    }
+
+    /// Signed lateral offset of a world point from the centerline at θ
+    /// (positive = left of travel direction).
+    pub fn lateral_offset(&self, x: f64, y: f64, theta: f64) -> f64 {
+        let (cx, cy) = self.point(theta);
+        let (hx, hy) = self.heading(theta);
+        // left normal = (-hy, hx)
+        (x - cx) * (-hy) + (y - cy) * hx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn centerline_is_closed() {
+        let t = Track::standard();
+        let (x0, y0) = t.point(0.0);
+        let (x1, y1) = t.point(2.0 * std::f64::consts::PI);
+        assert!((x0 - x1).abs() < 1e-6 && (y0 - y1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn radius_stays_positive_and_bounded() {
+        let t = Track::standard();
+        for k in 0..1000 {
+            let r = t.radius(k as f64 * 0.0063);
+            assert!(r > 40.0 && r < 80.0, "r={r}");
+        }
+    }
+
+    #[test]
+    fn closest_theta_recovers_centerline_points() {
+        let t = Track::standard();
+        for k in 0..20 {
+            let th = k as f64 * 0.3;
+            let (x, y) = t.point(th);
+            let found = t.closest_theta(x, y, th + 0.05);
+            let (fx, fy) = t.point(found);
+            let d = ((fx - x).powi(2) + (fy - y).powi(2)).sqrt();
+            assert!(d < 0.05, "theta {th}: dist {d}");
+        }
+    }
+
+    #[test]
+    fn lateral_offset_sign_and_magnitude() {
+        let t = Track::standard();
+        let th = 0.7;
+        let (cx, cy) = t.point(th);
+        let (hx, hy) = t.heading(th);
+        // a point 2m to the left of travel
+        let (lx, ly) = (cx - 2.0 * hy, cy + 2.0 * hx);
+        let off = t.lateral_offset(lx, ly, th);
+        assert!((off - 2.0).abs() < 1e-6, "off={off}");
+    }
+
+    #[test]
+    fn heading_is_unit() {
+        let t = Track::standard();
+        for k in 0..50 {
+            let (hx, hy) = t.heading(k as f64 * 0.13);
+            assert!(((hx * hx + hy * hy).sqrt() - 1.0).abs() < 1e-6);
+        }
+    }
+}

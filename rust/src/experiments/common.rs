@@ -1,0 +1,157 @@
+//! Shared experiment-driver machinery: scales, stream factories, table
+//! printing, CSV output.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::ProtocolSpec;
+use crate::data::{corpus::CorpusStream, graphical::GraphicalStream, synth_mnist::MnistLike, Stream};
+use crate::driving::DrivingStream;
+use crate::metrics::{write_summary_csv, Summary};
+use crate::runtime::Runtime;
+use crate::sim::{Engine, RunResult, SimConfig};
+
+/// Experiment scale: `Small` is the recorded default (minutes on CPU),
+/// `Medium` approaches the paper's learner counts, `Paper` matches them
+/// (hours on CPU — available but not run by default; see DESIGN.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Tiny, // used by `cargo bench` smoke harnesses
+    Small,
+    Medium,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Scale {
+        match s {
+            "tiny" => Scale::Tiny,
+            "medium" => Scale::Medium,
+            "paper" => Scale::Paper,
+            _ => Scale::Small,
+        }
+    }
+
+    /// (m, rounds) scaled from the paper's (m_paper, rounds_paper).
+    pub fn size(&self, m_paper: usize, rounds_paper: u64) -> (usize, u64) {
+        match self {
+            Scale::Tiny => (4, rounds_paper.min(20)),
+            Scale::Small => (10.min(m_paper), (rounds_paper / 4).max(40)),
+            Scale::Medium => (m_paper.min(30), rounds_paper / 2),
+            Scale::Paper => (m_paper, rounds_paper),
+        }
+    }
+}
+
+/// The dataset used by an experiment.
+#[derive(Clone, Copy, Debug)]
+pub enum Dataset {
+    MnistLike,
+    Graphical,
+    Driving { regional: bool },
+    Corpus { window: usize },
+}
+
+impl Dataset {
+    /// Stream factory closure for the engine; `seed` is the experiment
+    /// seed (concept is shared across learners, samples are not).
+    pub fn factory(&self, seed: u64) -> Box<dyn Fn(usize) -> Box<dyn Stream> + '_> {
+        let d = *self;
+        Box::new(move |i: usize| -> Box<dyn Stream> {
+            let stream_seed = seed.wrapping_mul(7919).wrapping_add(i as u64 + 1);
+            match d {
+                Dataset::MnistLike => Box::new(MnistLike::new(seed, stream_seed)),
+                Dataset::Graphical => Box::new(GraphicalStream::new(seed, stream_seed)),
+                Dataset::Driving { regional } => {
+                    Box::new(DrivingStream::new(seed, stream_seed, regional))
+                }
+                Dataset::Corpus { window } => Box::new(CorpusStream::new(stream_seed, window)),
+            }
+        })
+    }
+}
+
+/// Run a list of protocol configs under one engine config; prints the
+/// summary table and writes per-protocol time series + a summary CSV.
+pub struct Harness<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: SimConfig,
+    pub dataset: Dataset,
+    pub out_dir: PathBuf,
+    pub experiment: String,
+}
+
+impl<'a> Harness<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        cfg: SimConfig,
+        dataset: Dataset,
+        experiment: &str,
+    ) -> Harness<'a> {
+        Harness {
+            rt,
+            cfg,
+            dataset,
+            out_dir: crate::results_dir().join(experiment),
+            experiment: experiment.to_string(),
+        }
+    }
+
+    pub fn run_protocol(&self, spec: &ProtocolSpec) -> Result<RunResult> {
+        let engine = Engine::new(self.rt, self.cfg.clone())?;
+        let factory = self.dataset.factory(self.cfg.seed);
+        let result = engine.run(spec, &factory)?;
+        self.save(&result)?;
+        Ok(result)
+    }
+
+    pub fn run_serial(&self) -> Result<RunResult> {
+        let factory = self.dataset.factory(self.cfg.seed);
+        let result = crate::sim::engine::run_serial(self.rt, &self.cfg, &factory)?;
+        self.save(&result)?;
+        Ok(result)
+    }
+
+    fn save(&self, result: &RunResult) -> Result<()> {
+        let label = result.summary.protocol.replace(['=', ',', '.'], "_");
+        let path = self.out_dir.join(format!("{label}.csv"));
+        result.recorder.write_csv(&path, &result.summary.protocol)?;
+        Ok(())
+    }
+
+    /// Run all specs (+ optional serial/nosync baselines), print the table.
+    pub fn run_all(&self, specs: &[ProtocolSpec], with_serial: bool) -> Result<Vec<RunResult>> {
+        let mut results = Vec::new();
+        println!("== {} (m={}, rounds={}, model={}/{}, lr={}) ==",
+            self.experiment, self.cfg.m, self.cfg.rounds, self.cfg.model,
+            self.cfg.optimizer, self.cfg.lr);
+        println!("{}", Summary::table_header());
+        for spec in specs {
+            let r = self.run_protocol(spec)?;
+            println!("{}", r.summary.table_row());
+            results.push(r);
+        }
+        if with_serial {
+            let r = self.run_serial()?;
+            println!("{}", r.summary.table_row());
+            results.push(r);
+        }
+        let summaries: Vec<Summary> = results.iter().map(|r| r.summary.clone()).collect();
+        write_summary_csv(&self.out_dir.join("summary.csv"), &summaries)?;
+        Ok(results)
+    }
+}
+
+/// Paper-shape assertion helpers used by benches and tests: find a result
+/// by protocol-name prefix.
+pub fn by_prefix<'r>(results: &'r [RunResult], prefix: &str) -> Option<&'r RunResult> {
+    results
+        .iter()
+        .find(|r| r.summary.protocol.starts_with(prefix))
+}
+
+pub fn ensure_dir(p: &Path) -> Result<()> {
+    std::fs::create_dir_all(p)?;
+    Ok(())
+}

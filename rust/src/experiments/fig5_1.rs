@@ -1,0 +1,48 @@
+//! Fig 5.1: cumulative loss & communication of periodic (σ_b) vs dynamic
+//! (σ_Δ) protocols, plus nosync and serial baselines, on the MNIST-like
+//! CNN task. Paper: m=100 learners, B=10, T=14000 samples/learner,
+//! η=0.25 distributed / 0.1 serial.
+//!
+//! Expected shape: (i) more communication → lower cumulative loss, serial
+//! best; (ii) for each σ_b there is a σ_Δ with similar loss at a fraction
+//! of the communication; (iii) σ_b=40 can be worse than nosync (non-convex
+//! averaging pathology, Fig 1.1b).
+
+use anyhow::Result;
+
+use crate::coordinator::ProtocolSpec;
+use crate::runtime::Runtime;
+use crate::sim::{RunResult, SimConfig};
+
+use super::common::{Dataset, Harness, Scale};
+
+pub fn specs() -> Vec<ProtocolSpec> {
+    vec![
+        ProtocolSpec::Periodic { period: 10 },
+        ProtocolSpec::Periodic { period: 20 },
+        ProtocolSpec::Periodic { period: 40 },
+        ProtocolSpec::Dynamic {
+            delta: 0.3,
+            check_every: 10,
+        },
+        ProtocolSpec::Dynamic {
+            delta: 0.7,
+            check_every: 10,
+        },
+        ProtocolSpec::Dynamic {
+            delta: 1.0,
+            check_every: 10,
+        },
+        ProtocolSpec::NoSync,
+    ]
+}
+
+pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
+    // paper: m=100, 1400 rounds of B=10
+    let (m, rounds) = scale.size(100, 1400);
+    let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+    cfg.seed = seed;
+    cfg.final_eval = true;
+    let harness = Harness::new(rt, cfg, Dataset::MnistLike, "fig5_1");
+    harness.run_all(&specs(), scale != Scale::Tiny)
+}

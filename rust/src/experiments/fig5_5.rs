@@ -1,0 +1,110 @@
+//! Fig 5.5 / App. A.4 (Tables 5 & 6, Fig A.5): deep-driving case study.
+//! Paper: m=10 learners, B=10, 25000 samples/learner; periodic
+//! b∈{10,20,40,80} vs dynamic Δ∈{0.01,0.05,0.1,0.3}; models evaluated
+//! closed-loop in the simulator with the custom loss L_dd.
+//!
+//! Expected shape: each periodic protocol is beaten by some dynamic one;
+//! both too little (nosync) *and* too much communication (σ_b=10,
+//! σ_Δ=0.01) drive poorly; mid-Δ configs approach the serial model.
+
+use anyhow::Result;
+
+use crate::coordinator::ProtocolSpec;
+use crate::driving::{custom_loss, drive, DriveStats, Track};
+use crate::runtime::Runtime;
+use crate::sim::SimConfig;
+
+use super::common::{Dataset, Harness, Scale};
+
+pub fn specs() -> Vec<ProtocolSpec> {
+    let mut v = Vec::new();
+    for b in [10u64, 20, 40, 80] {
+        v.push(ProtocolSpec::Periodic { period: b });
+    }
+    for delta in [0.01, 0.05, 0.1, 0.3] {
+        v.push(ProtocolSpec::Dynamic {
+            delta,
+            check_every: 10,
+        });
+    }
+    v.push(ProtocolSpec::NoSync);
+    v
+}
+
+pub struct DrivingOutcome {
+    pub protocol: String,
+    pub comm_bytes: u64,
+    pub stats: DriveStats,
+    pub custom_loss: f64,
+}
+
+pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<DrivingOutcome>> {
+    // paper: 2500 rounds (25000 samples at B=10); scaled down
+    let (m, rounds) = scale.size(10, 1200);
+    let mut cfg = SimConfig::new("driving_cnn", "sgd", m, rounds, 0.1);
+    cfg.seed = seed;
+    let harness = Harness::new(rt, cfg.clone(), Dataset::Driving { regional: false }, "fig5_5");
+    let results = harness.run_all(&specs(), scale != Scale::Tiny)?;
+
+    // closed-loop evaluation of each protocol's averaged model
+    let mrt = crate::runtime::ModelRuntime::load(rt, "driving_cnn", "sgd")?;
+    let infer = mrt
+        .infer
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("driving_cnn_infer artifact missing"))?;
+    let track = Track::standard();
+    let mut all_stats = Vec::new();
+    for r in &results {
+        let stats = drive(infer, &r.averaged, &track, 0.0)?;
+        all_stats.push(stats);
+    }
+    let losses = custom_loss(&all_stats);
+    println!("\n-- fig5_5 closed-loop driving evaluation (L_dd) --");
+    println!(
+        "{:<22} {:>12} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "protocol", "comm_MB", "L_dd", "time_s", "laps", "crossings", "line_s"
+    );
+    let mut outcomes = Vec::new();
+    for ((r, s), l) in results.iter().zip(&all_stats).zip(&losses) {
+        println!(
+            "{:<22} {:>12.2} {:>10.4} {:>10.1} {:>10.2} {:>9} {:>9.1}",
+            r.summary.protocol,
+            r.summary.comm_bytes as f64 / 1e6,
+            l,
+            s.time_on_road,
+            s.laps,
+            s.crossings,
+            s.time_on_line
+        );
+        outcomes.push(DrivingOutcome {
+            protocol: r.summary.protocol.clone(),
+            comm_bytes: r.summary.comm_bytes,
+            stats: *s,
+            custom_loss: *l,
+        });
+    }
+    write_outcomes(&outcomes)?;
+    Ok(outcomes)
+}
+
+fn write_outcomes(outcomes: &[DrivingOutcome]) -> Result<()> {
+    use std::io::Write;
+    let dir = crate::results_dir().join("fig5_5");
+    std::fs::create_dir_all(&dir)?;
+    let mut f = std::fs::File::create(dir.join("driving_eval.csv"))?;
+    writeln!(f, "protocol,comm_bytes,custom_loss,time_on_road,laps,crossings,time_on_line")?;
+    for o in outcomes {
+        writeln!(
+            f,
+            "{},{},{:.6},{:.2},{:.3},{},{:.2}",
+            o.protocol,
+            o.comm_bytes,
+            o.custom_loss,
+            o.stats.time_on_road,
+            o.stats.laps,
+            o.stats.crossings,
+            o.stats.time_on_line
+        )?;
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Fig 6.1 / App. A.6 (Fig A.7): scale-out — the same protocols at
+//! m ∈ {10, 100, 200} (scaled: {4, 10, 20}). Cumulative loss is divided
+//! by m to compare across setups.
+//!
+//! Expected shape: with more learners the dynamic protocols' advantage
+//! grows (σ_Δ=0.7 matches σ_b=20 at m small, beats it at m large;
+//! σ_Δ=0.3 needs less comm than σ_b=10 at the largest m).
+
+use anyhow::Result;
+
+use crate::coordinator::ProtocolSpec;
+use crate::runtime::Runtime;
+use crate::sim::SimConfig;
+
+use super::common::{Dataset, Harness, Scale};
+
+pub fn specs() -> Vec<ProtocolSpec> {
+    vec![
+        ProtocolSpec::Periodic { period: 10 },
+        ProtocolSpec::Periodic { period: 20 },
+        ProtocolSpec::Dynamic {
+            delta: 0.3,
+            check_every: 10,
+        },
+        ProtocolSpec::Dynamic {
+            delta: 0.7,
+            check_every: 10,
+        },
+    ]
+}
+
+pub struct ScaleOutRow {
+    pub m: usize,
+    pub protocol: String,
+    pub loss_per_learner: f64,
+    pub comm_bytes: u64,
+    pub eval_metric: Option<f64>,
+}
+
+pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<ScaleOutRow>> {
+    let ms: Vec<(usize, u64)> = match scale {
+        Scale::Tiny => vec![(2, 20), (4, 20)],
+        Scale::Small => vec![(4, 150), (10, 150), (20, 150)],
+        Scale::Medium => vec![(10, 300), (30, 300), (60, 300)],
+        Scale::Paper => vec![(10, 140), (100, 1400), (200, 2800)],
+    };
+    let mut rows = Vec::new();
+    for (m, rounds) in ms {
+        let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+        cfg.seed = seed;
+        cfg.final_eval = true;
+        let harness = Harness::new(rt, cfg, Dataset::MnistLike, &format!("fig6_1/m{m}"));
+        let results = harness.run_all(&specs(), false)?;
+        for r in &results {
+            rows.push(ScaleOutRow {
+                m,
+                protocol: r.summary.protocol.clone(),
+                loss_per_learner: r.summary.cumulative_loss / m as f64,
+                comm_bytes: r.summary.comm_bytes,
+                eval_metric: r.summary.eval_metric,
+            });
+        }
+    }
+    println!("\n-- fig6_1 scale-out (loss normalized per learner) --");
+    println!(
+        "{:<6} {:<22} {:>16} {:>14} {:>12}",
+        "m", "protocol", "loss/learner", "comm_MB", "eval_metric"
+    );
+    for r in &rows {
+        println!(
+            "{:<6} {:<22} {:>16.2} {:>14.2} {:>12}",
+            r.m,
+            r.protocol,
+            r.loss_per_learner,
+            r.comm_bytes as f64 / 1e6,
+            r.eval_metric
+                .map(|v| format!("{v:.4}"))
+                .unwrap_or_else(|| "-".into())
+        );
+    }
+    write_rows(&rows)?;
+    Ok(rows)
+}
+
+fn write_rows(rows: &[ScaleOutRow]) -> Result<()> {
+    use std::io::Write;
+    let dir = crate::results_dir().join("fig6_1");
+    std::fs::create_dir_all(&dir)?;
+    let mut f = std::fs::File::create(dir.join("scaleout.csv"))?;
+    writeln!(f, "m,protocol,loss_per_learner,comm_bytes,eval_metric")?;
+    for r in rows {
+        writeln!(
+            f,
+            "{},{},{:.6},{},{}",
+            r.m,
+            r.protocol,
+            r.loss_per_learner,
+            r.comm_bytes,
+            r.eval_metric.map(|v| format!("{v:.6}")).unwrap_or_default()
+        )?;
+    }
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Fig 6.2 / App. A.7 (Fig A.8): stability under heterogeneous model
+//! initializations. Paper: m=10 learners, B=10, 500 samples/learner;
+//! grid over noise scale ε ∈ {0,1,2,3,5,10,20} (relative to the Glorot
+//! init scale) × local batches per round b/B ∈ {1,...,~50}; accuracy of
+//! the averaged model, relative to the (ε=0, b/B=1) configuration.
+//!
+//! Expected shape: mild heterogeneity (ε≈1..3) tolerates any b/B and can
+//! even help; ε ≥ 10 collapses; the transition sits between ε=5 and 10
+//! and depends strongly on b/B.
+
+use anyhow::Result;
+
+use crate::coordinator::ProtocolSpec;
+use crate::model::InitPolicy;
+use crate::runtime::Runtime;
+use crate::sim::SimConfig;
+
+use super::common::{Dataset, Harness, Scale};
+
+pub struct HeteroRow {
+    pub eps: f32,
+    pub period: u64,
+    pub protocol: String,
+    pub eval_metric: f64,
+    pub relative: f64,
+}
+
+pub fn run(rt: &Runtime, scale: Scale, seed: u64, dynamic: bool) -> Result<Vec<HeteroRow>> {
+    let (m, rounds) = scale.size(10, 50);
+    let eps_grid: Vec<f32> = match scale {
+        Scale::Tiny => vec![0.0, 5.0],
+        _ => vec![0.0, 1.0, 2.0, 3.0, 5.0, 10.0, 20.0],
+    };
+    let periods: Vec<u64> = match scale {
+        Scale::Tiny => vec![1, 8],
+        _ => vec![1, 2, 5, 10, 25],
+    };
+    let mut rows = Vec::new();
+    let mut baseline: Option<f64> = None;
+    for &eps in &eps_grid {
+        for &period in &periods {
+            let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+            cfg.seed = seed;
+            cfg.final_eval = true;
+            cfg.init = if eps == 0.0 {
+                InitPolicy::Homogeneous
+            } else {
+                InitPolicy::Heterogeneous { eps }
+            };
+            let spec = if dynamic {
+                ProtocolSpec::Dynamic {
+                    delta: 0.3,
+                    check_every: period,
+                }
+            } else {
+                ProtocolSpec::Periodic { period }
+            };
+            let harness = Harness::new(
+                rt,
+                cfg,
+                Dataset::MnistLike,
+                &format!("fig6_2/eps{eps}_b{period}"),
+            );
+            let r = harness.run_protocol(&spec)?;
+            let metric = r.summary.eval_metric.unwrap_or(r.summary.tail_metric);
+            if baseline.is_none() {
+                baseline = Some(metric.max(1e-9));
+            }
+            rows.push(HeteroRow {
+                eps,
+                period,
+                protocol: r.summary.protocol.clone(),
+                eval_metric: metric,
+                relative: metric / baseline.unwrap(),
+            });
+        }
+    }
+    println!(
+        "\n-- fig6_2 heterogeneous init ({}) : relative accuracy vs (eps=0,b/B=1) --",
+        if dynamic { "dynamic" } else { "periodic" }
+    );
+    print!("{:<8}", "eps\\b/B");
+    for &p in &periods {
+        print!(" {p:>8}");
+    }
+    println!();
+    for &eps in &eps_grid {
+        print!("{eps:<8}");
+        for &p in &periods {
+            let r = rows
+                .iter()
+                .find(|r| r.eps == eps && r.period == p)
+                .unwrap();
+            print!(" {:>8.3}", r.relative);
+        }
+        println!();
+    }
+    write_rows(&rows, dynamic)?;
+    Ok(rows)
+}
+
+fn write_rows(rows: &[HeteroRow], dynamic: bool) -> Result<()> {
+    use std::io::Write;
+    let dir = crate::results_dir().join("fig6_2");
+    std::fs::create_dir_all(&dir)?;
+    let name = if dynamic { "hetero_dynamic.csv" } else { "hetero_periodic.csv" };
+    let mut f = std::fs::File::create(dir.join(name))?;
+    writeln!(f, "eps,period,protocol,eval_metric,relative")?;
+    for r in rows {
+        writeln!(
+            f,
+            "{},{},{},{:.6},{:.6}",
+            r.eps, r.period, r.protocol, r.eval_metric, r.relative
+        )?;
+    }
+    Ok(())
+}

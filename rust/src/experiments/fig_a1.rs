@@ -1,0 +1,40 @@
+//! Fig A.1: cumulative communication & cumulative error *over time* for
+//! a similarly-performing pair: σ_Δ=0.3 (b=10) vs σ_b=10, long MNIST run.
+//! Expected shape: dynamic invests more communication early (while loss
+//! is high), then backs off; its cumulative-comm curve flattens while the
+//! periodic one keeps climbing linearly.
+
+use anyhow::Result;
+
+use crate::coordinator::ProtocolSpec;
+use crate::runtime::Runtime;
+use crate::sim::{RunResult, SimConfig};
+
+use super::common::{Dataset, Harness, Scale};
+
+pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
+    let (m, rounds) = scale.size(100, 2800); // paper: 40 epochs
+    let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+    cfg.seed = seed;
+    let harness = Harness::new(rt, cfg, Dataset::MnistLike, "figA_1");
+    let specs = vec![
+        ProtocolSpec::Periodic { period: 10 },
+        ProtocolSpec::Dynamic {
+            delta: 0.3,
+            check_every: 10,
+        },
+    ];
+    let results = harness.run_all(&specs, false)?;
+    // report the early/late communication split that the figure shows
+    for r in &results {
+        let n = r.recorder.rows.len();
+        let early = r.recorder.rows[n / 4].cum_bytes;
+        let total = r.recorder.final_bytes();
+        println!(
+            "{}: {:.0}% of communication in the first quarter of training",
+            r.summary.protocol,
+            100.0 * early as f64 / total.max(1) as f64
+        );
+    }
+    Ok(results)
+}

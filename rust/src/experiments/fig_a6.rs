@@ -1,0 +1,41 @@
+//! Fig A.6: black-box property — dynamic vs periodic averaging with SGD,
+//! ADAM, and RMSprop as the underlying learner (paper App. A.5).
+//! Expected shape: for every optimizer, some dynamic config matches the
+//! periodic protocol's loss with less communication.
+
+use anyhow::Result;
+
+use crate::coordinator::ProtocolSpec;
+use crate::metrics::Summary;
+use crate::runtime::Runtime;
+use crate::sim::SimConfig;
+
+use super::common::{Dataset, Harness, Scale};
+
+pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<(String, Summary)>> {
+    let (m, rounds) = scale.size(10, 280); // paper: 2 epochs, m=10
+    let mut out = Vec::new();
+    for (opt, lr, delta) in [
+        ("sgd", 0.1f32, 0.7),
+        ("adam", 0.002, 30.0),
+        ("rmsprop", 0.002, 30.0),
+    ] {
+        let mut cfg = SimConfig::new("mnist_cnn", opt, m, rounds, lr);
+        cfg.seed = seed;
+        cfg.final_eval = true;
+        let harness = Harness::new(rt, cfg, Dataset::MnistLike, &format!("figA_6/{opt}"));
+        let specs = vec![
+            ProtocolSpec::Periodic { period: 10 },
+            ProtocolSpec::Dynamic {
+                delta,
+                check_every: 10,
+            },
+        ];
+        println!("\n--- optimizer: {opt} (lr={lr}) ---");
+        let results = harness.run_all(&specs, false)?;
+        for r in results {
+            out.push((opt.to_string(), r.summary));
+        }
+    }
+    Ok(out)
+}

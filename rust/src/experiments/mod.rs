@@ -1,0 +1,82 @@
+//! Experiment drivers — one per paper figure/table (see DESIGN.md's
+//! experiment index). Each driver prints the paper's table/series shape
+//! and writes CSVs under `results/<experiment>/`.
+
+pub mod common;
+pub mod fig1_1;
+pub mod fig5_1;
+pub mod fig5_2;
+pub mod fig5_4;
+pub mod fig5_5;
+pub mod fig6_1;
+pub mod fig6_2;
+pub mod fig_a1;
+pub mod fig_a6;
+
+pub use common::{Dataset, Harness, Scale};
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig1_1a", "motivating figure: serial vs nosync vs periodic around a drift"),
+    ("fig5_1", "MNIST-like CNN: periodic vs dynamic vs nosync/serial"),
+    ("fig5_2", "dynamic averaging vs FedAvg (incl. fig5_3 relative table)"),
+    ("fig5_4", "concept-drift adaptivity on the graphical-model stream"),
+    ("fig5_5", "deep driving case study with closed-loop L_dd evaluation"),
+    ("fig6_1", "scale-out: m in {4,10,20} (paper {10,100,200})"),
+    ("fig6_2", "heterogeneous initialization grid (periodic)"),
+    ("fig6_2d", "heterogeneous initialization grid (dynamic, Fig A.8b)"),
+    ("figA_1", "communication/loss over time: sigma_d=0.3 vs sigma_b=10"),
+    ("figA_6", "black-box optimizers: SGD / ADAM / RMSprop"),
+];
+
+/// Dispatch an experiment by id. Returns after printing its tables and
+/// writing its CSVs.
+pub fn dispatch(rt: &Runtime, id: &str, scale: Scale, seed: u64) -> Result<()> {
+    match id {
+        "fig1_1a" => {
+            fig1_1::run(rt, scale, seed)?;
+        }
+        "fig5_1" => {
+            fig5_1::run(rt, scale, seed)?;
+        }
+        "fig5_2" | "fig5_3" | "figA_2" | "figA_3" => {
+            fig5_2::run(rt, scale, seed)?;
+        }
+        "fig5_4" | "figA_4" => {
+            fig5_4::run(rt, scale, seed)?;
+        }
+        "fig5_5" | "figA_5" => {
+            fig5_5::run(rt, scale, seed)?;
+        }
+        "fig6_1" | "figA_7" => {
+            fig6_1::run(rt, scale, seed)?;
+        }
+        "fig6_2" | "figA_8" => {
+            fig6_2::run(rt, scale, seed, false)?;
+        }
+        "fig6_2d" | "figA_8b" => {
+            fig6_2::run(rt, scale, seed, true)?;
+        }
+        "figA_1" => {
+            fig_a1::run(rt, scale, seed)?;
+        }
+        "figA_6" => {
+            fig_a6::run(rt, scale, seed)?;
+        }
+        "all" => {
+            for (name, _) in EXPERIMENTS {
+                if *name != "all" {
+                    dispatch(rt, name, scale, seed)?;
+                }
+            }
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; available: {:?}",
+            EXPERIMENTS.iter().map(|(n, _)| *n).collect::<Vec<_>>()
+        ),
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! # dynavg
+//!
+//! Reproduction of *"Efficient Decentralized Deep Learning by Dynamic
+//! Model Averaging"* (Kamp et al., ECML PKDD 2018) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the decentralized-training coordinator: the
+//!   dynamic averaging protocol (Algorithms 1 & 2), the baselines it is
+//!   evaluated against (periodic/continuous averaging, FedAvg, nosync,
+//!   serial), a round-synchronous simulation engine, data-stream and
+//!   driving-simulator substrates, and the experiment drivers that
+//!   regenerate every figure/table of the paper.
+//! - **L2 (python/compile)** — JAX models on flat parameter vectors,
+//!   AOT-lowered to HLO text once (`make artifacts`).
+//! - **L1 (python/compile/kernels)** — Pallas kernels for the compute
+//!   hot-spots (tiled matmul, im2col conv, fused attention).
+//!
+//! Python never runs on the training path: the rust binary executes the
+//! AOT artifacts through the PJRT CPU client (`xla` crate).
+//!
+//! ## Quickstart
+//! ```text
+//! make artifacts && cargo build --release
+//! ./target/release/dynavg exp fig5_1 --scale small
+//! cargo run --release --example quickstart
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod driving;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod network;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("DYNAVG_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// Default results directory.
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("DYNAVG_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}

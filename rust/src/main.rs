@@ -1,0 +1,127 @@
+//! `dynavg` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   exp <id> [--scale tiny|small|medium|paper] [--seed N]
+//!       run an experiment driver (see `dynavg list`)
+//!   run --model M --optimizer O --protocol SPEC --m N --rounds T [--lr ..]
+//!       one custom protocol run; SPEC like dynamic:0.7:10, periodic:20,
+//!       fedavg:50:0.3, continuous, nosync
+//!   list       available experiments and artifacts
+//!   info       manifest / runtime info
+
+use anyhow::Result;
+
+use dynavg::coordinator::ProtocolSpec;
+use dynavg::experiments::{self, Scale};
+use dynavg::runtime::Runtime;
+use dynavg::sim::SimConfig;
+use dynavg::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("exp") => cmd_exp(&args),
+        Some("run") => cmd_run(&args),
+        Some("list") => cmd_list(),
+        Some("info") => cmd_info(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!("dynavg — dynamic model averaging for decentralized deep learning");
+    println!("usage:");
+    println!("  dynavg exp <id> [--scale tiny|small|medium|paper] [--seed N]");
+    println!("  dynavg run --model M --protocol SPEC [--optimizer O] [--m N] [--rounds T] [--lr F]");
+    println!("  dynavg list | info");
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: dynavg exp <id>"))?;
+    let scale = Scale::parse(&args.get_str("scale", "small"));
+    let seed = args.get_usize("seed", 42) as u64;
+    let rt = Runtime::new(dynavg::artifacts_dir())?;
+    experiments::dispatch(&rt, id, scale, seed)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    // config-file mode: dynavg run --config configs/table2_mnist.json
+    if let Some(path) = args.get("config") {
+        let cfg = dynavg::config::ExperimentConfig::load(path)?;
+        let rt = Runtime::new(dynavg::artifacts_dir())?;
+        let harness =
+            experiments::Harness::new(&rt, cfg.sim.clone(), cfg.dataset, &cfg.name);
+        harness.run_all(&cfg.protocols, cfg.with_serial)?;
+        return Ok(());
+    }
+    let model = args.get_str("model", "mnist_cnn");
+    let optimizer = args.get_str("optimizer", "sgd");
+    let spec = ProtocolSpec::parse(&args.get_str("protocol", "dynamic:0.7:10"))?;
+    let m = args.get_usize("m", 10);
+    let rounds = args.get_usize("rounds", 100) as u64;
+    let lr = args.get_f64("lr", 0.1) as f32;
+    let seed = args.get_usize("seed", 42) as u64;
+    let dataset = match model.as_str() {
+        "mnist_cnn" => experiments::Dataset::MnistLike,
+        "drift_mlp" => experiments::Dataset::Graphical,
+        "driving_cnn" => experiments::Dataset::Driving { regional: false },
+        "transformer_lm" => experiments::Dataset::Corpus { window: 65 },
+        other => anyhow::bail!("unknown model {other:?}"),
+    };
+    let rt = Runtime::new(dynavg::artifacts_dir())?;
+    let mut cfg = SimConfig::new(&model, &optimizer, m, rounds, lr);
+    cfg.seed = seed;
+    cfg.final_eval = true;
+    let harness = experiments::Harness::new(&rt, cfg, dataset, "custom");
+    harness.run_all(&[spec], args.has("serial"))?;
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments (dynavg exp <id>):");
+    for (id, desc) in experiments::EXPERIMENTS {
+        println!("  {id:<10} {desc}");
+    }
+    if let Ok(rt) = Runtime::new(dynavg::artifacts_dir()) {
+        println!("\nartifacts:");
+        for (name, a) in &rt.manifest.artifacts {
+            println!(
+                "  {name:<28} kind={:<6} model={:<15} B={:<4} P={}",
+                a.kind, a.model, a.batch, a.param_count
+            );
+        }
+    } else {
+        println!("\n(no artifacts — run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::new(dynavg::artifacts_dir())?;
+    println!("artifacts dir: {:?}", dynavg::artifacts_dir());
+    println!("manifest seed: {}", rt.manifest.seed);
+    println!("models:");
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  {name:<16} P={:<8} x{:?} metric={}",
+            m.param_count, m.x_shape, m.metric
+        );
+        for (tname, shape) in &m.tensors {
+            println!("      {tname:<14} {shape:?}");
+        }
+    }
+    Ok(())
+}

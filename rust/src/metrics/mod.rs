@@ -1,0 +1,200 @@
+//! Metrics: cumulative loss L(T,m), cumulative communication C(T,m),
+//! per-round time series, and CSV output for the figure harnesses.
+
+pub mod plot;
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One row of the per-round time series.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// Σ_i batch-loss of learner i this round (paper's Σ_i ℓ_t^i).
+    pub loss_sum: f64,
+    /// mean training metric across learners (accuracy or mse)
+    pub metric_mean: f64,
+    /// cumulative communication bytes up to and including this round
+    pub cum_bytes: u64,
+    /// did the protocol communicate this round
+    pub synced: bool,
+    /// was a concept drift triggered this round
+    pub drifted: bool,
+}
+
+/// Recorder for one protocol run.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub rows: Vec<RoundRecord>,
+    pub cumulative_loss: f64,
+    /// final holdout evaluation (loss, metric), if performed
+    pub final_eval: Option<(f64, f64)>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record(&mut self, row: RoundRecord) {
+        self.cumulative_loss += row.loss_sum;
+        self.rows.push(row);
+    }
+
+    pub fn final_bytes(&self) -> u64 {
+        self.rows.last().map(|r| r.cum_bytes).unwrap_or(0)
+    }
+
+    /// Mean training metric over the last `k` rounds (stable estimate).
+    pub fn tail_metric(&self, k: usize) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        let tail = &self.rows[self.rows.len().saturating_sub(k)..];
+        tail.iter().map(|r| r.metric_mean).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Write the time series as CSV.
+    pub fn write_csv(&self, path: &Path, label: &str) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(
+            f,
+            "protocol,round,loss_sum,cum_loss,metric_mean,cum_bytes,synced,drifted"
+        )?;
+        let mut cum = 0.0;
+        for r in &self.rows {
+            cum += r.loss_sum;
+            writeln!(
+                f,
+                "{label},{},{:.6},{:.6},{:.6},{},{},{}",
+                r.round,
+                r.loss_sum,
+                cum,
+                r.metric_mean,
+                r.cum_bytes,
+                r.synced as u8,
+                r.drifted as u8
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Summary row for result tables (one per protocol configuration).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub protocol: String,
+    pub cumulative_loss: f64,
+    pub comm_bytes: u64,
+    pub tail_metric: f64,
+    pub eval_loss: Option<f64>,
+    pub eval_metric: Option<f64>,
+    pub sync_events: u64,
+    pub full_syncs: u64,
+}
+
+impl Summary {
+    pub fn table_header() -> String {
+        format!(
+            "{:<22} {:>14} {:>14} {:>12} {:>11} {:>11} {:>7} {:>6}",
+            "protocol", "cum_loss", "comm_bytes", "comm_MB", "tail_metric", "eval_metric", "syncs", "full"
+        )
+    }
+
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<22} {:>14.2} {:>14} {:>12.2} {:>11.4} {:>11} {:>7} {:>6}",
+            self.protocol,
+            self.cumulative_loss,
+            self.comm_bytes,
+            self.comm_bytes as f64 / 1e6,
+            self.tail_metric,
+            self.eval_metric
+                .map(|v| format!("{v:.4}"))
+                .unwrap_or_else(|| "-".into()),
+            self.sync_events,
+            self.full_syncs
+        )
+    }
+}
+
+/// Write a set of summaries as CSV.
+pub fn write_summary_csv(path: &Path, rows: &[Summary]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(
+        f,
+        "protocol,cum_loss,comm_bytes,tail_metric,eval_loss,eval_metric,sync_events,full_syncs"
+    )?;
+    for s in rows {
+        writeln!(
+            f,
+            "{},{:.6},{},{:.6},{},{},{},{}",
+            s.protocol,
+            s.cumulative_loss,
+            s.comm_bytes,
+            s.tail_metric,
+            s.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            s.eval_metric.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            s.sync_events,
+            s.full_syncs
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(round: u64, loss: f64, bytes: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            loss_sum: loss,
+            metric_mean: 0.5,
+            cum_bytes: bytes,
+            synced: false,
+            drifted: false,
+        }
+    }
+
+    #[test]
+    fn cumulative_loss_accumulates() {
+        let mut r = Recorder::new();
+        r.record(row(1, 2.0, 10));
+        r.record(row(2, 3.0, 20));
+        assert_eq!(r.cumulative_loss, 5.0);
+        assert_eq!(r.final_bytes(), 20);
+    }
+
+    #[test]
+    fn tail_metric_window() {
+        let mut r = Recorder::new();
+        for t in 1..=10 {
+            let mut rr = row(t, 0.0, 0);
+            rr.metric_mean = t as f64;
+            r.record(rr);
+        }
+        assert!((r.tail_metric(3) - 9.0).abs() < 1e-9);
+        assert!((r.tail_metric(100) - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut r = Recorder::new();
+        r.record(row(1, 1.5, 100));
+        let p = std::env::temp_dir().join("dynavg_metrics_test/out.csv");
+        r.write_csv(&p, "sigma_b=10").unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().nth(1).unwrap().starts_with("sigma_b=10,1,"));
+    }
+}

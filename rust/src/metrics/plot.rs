@@ -1,0 +1,132 @@
+//! Terminal ASCII plots for the experiment series (no plotting deps
+//! offline). Renders the paper's figure shapes — cumulative
+//! communication / loss over time per protocol — directly in the
+//! terminal and into `results/<exp>/plot.txt`.
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, points: Vec<(f64, f64)>) -> Series {
+        Series {
+            label: label.into(),
+            points,
+        }
+    }
+}
+
+const GLYPHS: &[char] = &['*', '+', 'o', 'x', '#', '@', '%', '&', '$', '~'];
+
+/// Render series into a `width` x `height` character grid with axes.
+pub fn render(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let pts: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if pts.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = g;
+        }
+    }
+    for (ri, row) in grid.iter().enumerate() {
+        let ylab = if ri == 0 {
+            format!("{y1:>10.3e}")
+        } else if ri == height - 1 {
+            format!("{y0:>10.3e}")
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&ylab);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(10));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "{:>11}{:<w$}{:>12}\n",
+        format!("{x0:.0}"),
+        "",
+        format!("{x1:.0}"),
+        w = width.saturating_sub(11)
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", GLYPHS[si % GLYPHS.len()], s.label));
+    }
+    out
+}
+
+/// Downsample a long series to ~`n` points (median-free stride pick).
+pub fn thin(points: &[(f64, f64)], n: usize) -> Vec<(f64, f64)> {
+    if points.len() <= n || n == 0 {
+        return points.to_vec();
+    }
+    let stride = points.len() as f64 / n as f64;
+    (0..n)
+        .map(|i| points[((i as f64 * stride) as usize).min(points.len() - 1)])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_axes_and_legend() {
+        let s = vec![
+            Series::new("sigma_b=10", vec![(0.0, 0.0), (10.0, 100.0)]),
+            Series::new("sigma_d=0.7", vec![(0.0, 0.0), (10.0, 40.0)]),
+        ];
+        let txt = render("comm over time", &s, 40, 10);
+        assert!(txt.contains("comm over time"));
+        assert!(txt.contains("sigma_b=10"));
+        assert!(txt.contains('*'));
+        assert!(txt.contains('+'));
+        assert!(txt.lines().count() > 12);
+    }
+
+    #[test]
+    fn handles_empty_and_constant_series() {
+        assert!(render("t", &[], 20, 5).contains("no data"));
+        let s = vec![Series::new("flat", vec![(0.0, 5.0), (1.0, 5.0)])];
+        let txt = render("t", &s, 20, 5);
+        assert!(txt.contains('*'));
+    }
+
+    #[test]
+    fn thin_preserves_endpoints_count() {
+        let pts: Vec<(f64, f64)> = (0..1000).map(|i| (i as f64, i as f64)).collect();
+        let t = thin(&pts, 50);
+        assert_eq!(t.len(), 50);
+        assert_eq!(t[0], (0.0, 0.0));
+    }
+}

@@ -1,0 +1,89 @@
+//! Local-model initialization policies (paper §6 / Fig 6.2 / App. A.7).
+//!
+//! The paper studies the transition from homogeneous initialization
+//! (every learner starts from the same Glorot draw — McMahan et al.'s
+//! recommendation) to heterogeneous initialization: noise at scale ε
+//! *relative to the homogeneous init's scale* is added per learner.
+//! ε ∈ {1,2,3} still converges (and can even help); ε ≥ 10 fails.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitPolicy {
+    /// All learners share the artifact's Glorot init.
+    Homogeneous,
+    /// init + eps * scale ⊙ N(0,1), independent per learner.
+    Heterogeneous { eps: f32 },
+}
+
+impl InitPolicy {
+    /// Build the m initial local models from the artifact's init vector
+    /// and per-element scales.
+    pub fn build(
+        &self,
+        init: &[f32],
+        scales: &[f32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<f32>> {
+        match *self {
+            InitPolicy::Homogeneous => vec![init.to_vec(); m],
+            InitPolicy::Heterogeneous { eps } => (0..m)
+                .map(|_| {
+                    init.iter()
+                        .zip(scales)
+                        .map(|(&v, &s)| v + eps * s * rng.normal_f32())
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params;
+
+    #[test]
+    fn homogeneous_identical() {
+        let init = vec![1.0f32, -2.0, 3.0];
+        let scales = vec![0.1f32; 3];
+        let mut rng = Rng::new(0);
+        let models = InitPolicy::Homogeneous.build(&init, &scales, 4, &mut rng);
+        for m in &models {
+            assert_eq!(*m, init);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_noise_scales_with_eps() {
+        let p = 2000;
+        let init = vec![0.0f32; p];
+        let scales = vec![0.05f32; p];
+        let mut rng = Rng::new(1);
+        for eps in [1.0f32, 5.0] {
+            let models =
+                InitPolicy::Heterogeneous { eps }.build(&init, &scales, 2, &mut rng);
+            let dist = params::sq_dist(&models[0], &models[1]).sqrt();
+            // E[||a-b||] ~ eps*scale*sqrt(2p)
+            let expect = (eps * 0.05) as f64 * (2.0 * p as f64).sqrt();
+            assert!(
+                (dist / expect - 1.0).abs() < 0.15,
+                "eps={eps}: {dist} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn eps_zero_equals_homogeneous() {
+        let init = vec![1.0f32; 10];
+        let scales = vec![0.5f32; 10];
+        let mut rng = Rng::new(2);
+        let models =
+            InitPolicy::Heterogeneous { eps: 0.0 }.build(&init, &scales, 3, &mut rng);
+        for m in &models {
+            assert_eq!(*m, init);
+        }
+    }
+}

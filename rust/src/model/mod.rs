@@ -1,0 +1,7 @@
+//! Model-state handling on the L3 side: flat parameter vectors, their
+//! algebra (the protocol hot path), and initialization policies.
+
+pub mod init;
+pub mod params;
+
+pub use init::InitPolicy;

@@ -1,0 +1,96 @@
+//! Simulated star-topology network with exact byte accounting.
+//!
+//! The paper measures protocols by cumulative communication `C(T,m) =
+//! Σ_t c(f_t)` in bytes. Every model transfer costs `4·P` payload bytes
+//! plus a fixed header; control-only messages (violation notices, queries)
+//! cost the header. Both directions are counted, matching the paper's
+//! "bytes required by the protocol to synchronize".
+
+/// Fixed per-message overhead (source, type, round tag, length).
+pub const HEADER_BYTES: u64 = 16;
+
+/// Message taxonomy on the learner<->coordinator star.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgKind {
+    /// learner -> coordinator: local condition violated, model attached
+    ViolationWithModel,
+    /// coordinator -> learner: request model (balancing augmentation)
+    QueryModel,
+    /// learner -> coordinator: model in response to a query
+    ModelUpload,
+    /// coordinator -> learner: new (partial or full) average model
+    ModelDownload,
+}
+
+/// Accumulating traffic statistics for one protocol run.
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    pub messages: u64,
+    pub models_sent: u64,
+    /// number of rounds in which any communication happened
+    pub sync_events: u64,
+    /// number of *full* synchronizations (all m learners averaged)
+    pub full_syncs: u64,
+}
+
+impl NetStats {
+    pub fn new() -> NetStats {
+        NetStats::default()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.up_bytes + self.down_bytes
+    }
+
+    /// Record a message carrying a model of `p` f32 parameters.
+    pub fn send(&mut self, kind: MsgKind, p: usize) {
+        let model_bytes = 4 * p as u64;
+        self.messages += 1;
+        match kind {
+            MsgKind::ViolationWithModel | MsgKind::ModelUpload => {
+                self.up_bytes += HEADER_BYTES + model_bytes;
+                self.models_sent += 1;
+            }
+            MsgKind::ModelDownload => {
+                self.down_bytes += HEADER_BYTES + model_bytes;
+                self.models_sent += 1;
+            }
+            MsgKind::QueryModel => {
+                self.down_bytes += HEADER_BYTES;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_transfer_costs_4p_plus_header() {
+        let mut n = NetStats::new();
+        n.send(MsgKind::ModelUpload, 100);
+        assert_eq!(n.up_bytes, HEADER_BYTES + 400);
+        assert_eq!(n.down_bytes, 0);
+        assert_eq!(n.models_sent, 1);
+    }
+
+    #[test]
+    fn query_is_header_only() {
+        let mut n = NetStats::new();
+        n.send(MsgKind::QueryModel, 12345);
+        assert_eq!(n.down_bytes, HEADER_BYTES);
+        assert_eq!(n.models_sent, 0);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut n = NetStats::new();
+        n.send(MsgKind::ViolationWithModel, 10);
+        n.send(MsgKind::ModelDownload, 10);
+        assert_eq!(n.total_bytes(), 2 * (HEADER_BYTES + 40));
+        assert_eq!(n.messages, 2);
+    }
+}

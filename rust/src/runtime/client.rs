@@ -1,0 +1,164 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: HLO *text* is the
+//! interchange format (jax >= 0.5 emits 64-bit instruction ids in protos
+//! which xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactInfo, Manifest};
+
+/// A compiled executable plus the metadata needed to drive it.
+///
+/// # Thread safety
+/// `xla::PjRtLoadedExecutable` wraps a C++ PjRtLoadedExecutable; the PJRT
+/// CPU client documents `Execute` as thread-safe (each call builds its own
+/// input buffers and output streams). The crate does not mark the wrapper
+/// `Sync` only because it holds a raw pointer. The simulation engine relies
+/// on concurrent `execute` calls from the per-learner worker threads, which
+/// is exactly the supported PJRT usage, so we assert Send+Sync here.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// Input tensor for one execute call.
+pub enum Input<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl Executable {
+    /// Run the artifact. Inputs must match the lowered signature order.
+    /// Returns the flattened f32 contents of each tuple output.
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let literals = Self::literals(inputs)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.info.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+
+    fn literals(inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        inputs
+            .iter()
+            .map(|inp| match inp {
+                Input::F32(data, shape) => {
+                    let lit = xla::Literal::vec1(data);
+                    if shape.len() == 1 {
+                        Ok(lit)
+                    } else {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        lit.reshape(&dims).context("reshaping f32 input")
+                    }
+                }
+                Input::I32(data, shape) => {
+                    let lit = xla::Literal::vec1(data);
+                    if shape.len() == 1 {
+                        Ok(lit)
+                    } else {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        lit.reshape(&dims).context("reshaping i32 input")
+                    }
+                }
+            })
+            .collect::<Result<Vec<_>>>()
+            .and_then(|lits| {
+                // scalars: vec1 of len 1 must become rank-0 for f32[] args —
+                // handled by caller passing shape []
+                Ok(lits)
+            })
+    }
+
+    /// Scalar literal helper (f32[] inputs such as the learning rate).
+    pub fn scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+}
+
+/// Runtime: one PJRT CPU client + a lazily-populated executable cache.
+///
+/// # Thread safety
+/// `xla::PjRtClient` holds an `Rc` handle, so the compiler cannot derive
+/// `Send`/`Sync`. All client access (compilation) is serialized under the
+/// `cache` mutex below, compiled executables are cached in `Arc`s that
+/// live for the process lifetime, and PJRT's CPU client is internally
+/// thread-safe for `Execute` — so sharing the `Runtime` across threads is
+/// sound as long as `load` remains the only path touching `client`.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile an artifact (cached). The cache lock is held across
+    /// compilation: this serializes all `client` access (see the Runtime
+    /// thread-safety note) and deduplicates concurrent loads.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            info.hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", info.hlo_path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let arc = Arc::new(Executable { info, exe });
+        cache.insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Initial (Glorot) flat parameter vector for a model.
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let info = self.manifest.model(model)?;
+        let v = super::manifest::load_f32_bin(&info.init_bin)?;
+        anyhow::ensure!(
+            v.len() == info.param_count,
+            "init bin length {} != param_count {}",
+            v.len(),
+            info.param_count
+        );
+        Ok(v)
+    }
+
+    /// Per-element init scales (for heterogeneous initialization, Fig 6.2).
+    pub fn init_scales(&self, model: &str) -> Result<Vec<f32>> {
+        let info = self.manifest.model(model)?;
+        super::manifest::load_f32_bin(&info.scales_bin)
+    }
+}

@@ -1,0 +1,223 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the rust runtime (which loads it).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// Static description of one model (shared across its artifacts).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub param_count: usize,
+    pub x_shape: Vec<usize>, // excluding batch
+    pub x_dtype: Dtype,
+    pub y_shape: Vec<usize>,
+    pub metric: String,
+    pub init_bin: PathBuf,
+    pub scales_bin: PathBuf,
+    /// (tensor name, shape) in flat packing order — for introspection.
+    pub tensors: Vec<(String, Vec<usize>)>,
+}
+
+/// One compiled HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: String, // train | eval | infer
+    pub model: String,
+    pub optimizer: Option<String>,
+    pub batch: usize,
+    pub param_count: usize,
+    pub state_size: usize, // 0 for eval/infer
+    pub outputs: Vec<String>,
+    pub hlo_path: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.req("models")?.as_obj().context("models not an object")? {
+            let tensors = m
+                .req("tensors")?
+                .as_arr()
+                .context("tensors")?
+                .iter()
+                .map(|t| {
+                    let tname = t.req("name")?.as_str().context("tensor name")?.to_string();
+                    let shape = t
+                        .req("shape")?
+                        .as_arr()
+                        .context("tensor shape")?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect();
+                    Ok((tname, shape))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    param_count: m.req("param_count")?.as_usize().context("param_count")?,
+                    x_shape: m
+                        .req("x_shape")?
+                        .as_arr()
+                        .context("x_shape")?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    x_dtype: Dtype::parse(m.req("x_dtype")?.as_str().context("x_dtype")?)?,
+                    y_shape: m
+                        .req("y_shape")?
+                        .as_arr()
+                        .context("y_shape")?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    metric: m.req("metric")?.as_str().context("metric")?.to_string(),
+                    init_bin: dir.join(m.req("init_bin")?.as_str().context("init_bin")?),
+                    scales_bin: dir.join(m.req("scales_bin")?.as_str().context("scales_bin")?),
+                    tensors,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.req("artifacts")?.as_arr().context("artifacts")? {
+            let name = a.req("name")?.as_str().context("name")?.to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    kind: a.req("kind")?.as_str().context("kind")?.to_string(),
+                    model: a.req("model")?.as_str().context("model")?.to_string(),
+                    optimizer: a.get("optimizer").and_then(|o| o.as_str()).map(String::from),
+                    batch: a.req("batch")?.as_usize().context("batch")?,
+                    param_count: a.req("param_count")?.as_usize().context("param_count")?,
+                    state_size: a.get("state_size").and_then(|s| s.as_usize()).unwrap_or(0),
+                    outputs: a
+                        .req("outputs")?
+                        .as_arr()
+                        .context("outputs")?
+                        .iter()
+                        .filter_map(|o| o.as_str().map(String::from))
+                        .collect(),
+                    hlo_path: dir.join(a.req("hlo")?.as_str().context("hlo")?),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            seed: root.get("seed").and_then(|s| s.as_f64()).unwrap_or(0.0) as u64,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Train artifact name for (model, optimizer).
+    pub fn train_name(model: &str, optimizer: &str) -> String {
+        format!("{model}_{optimizer}_train")
+    }
+}
+
+/// Load a little-endian f32 binary blob (init / scales vectors).
+pub fn load_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{path:?} length not a multiple of 4");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("dynavg_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{
+          "seed": 42,
+          "models": {"toy": {"param_count": 4, "x_shape": [2], "x_dtype": "f32",
+            "y_shape": [2], "y_dtype": "f32", "metric": "accuracy",
+            "init_bin": "toy_init.bin", "scales_bin": "toy_scales.bin",
+            "tensors": [{"name": "w", "shape": [2, 2]}]}},
+          "artifacts": [{"name": "toy_sgd_train", "kind": "train", "model": "toy",
+            "optimizer": "sgd", "batch": 10, "param_count": 4, "state_size": 1,
+            "outputs": ["params", "opt_state", "loss", "metric"],
+            "hlo": "toy_sgd_train.hlo.txt"}]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.seed, 42);
+        let model = m.model("toy").unwrap();
+        assert_eq!(model.param_count, 4);
+        assert_eq!(model.x_dtype, Dtype::F32);
+        let a = m.artifact("toy_sgd_train").unwrap();
+        assert_eq!(a.state_size, 1);
+        assert_eq!(a.outputs.len(), 4);
+        assert_eq!(Manifest::train_name("toy", "sgd"), "toy_sgd_train");
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("dynavg_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let vals = [1.5f32, -2.25, 0.0, 1e-7];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(load_f32_bin(&p).unwrap(), vals);
+    }
+}

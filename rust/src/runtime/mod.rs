@@ -1,0 +1,49 @@
+//! L3 runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the PJRT CPU client (xla crate).
+//!
+//! Python never runs at request time: `make artifacts` is the only python
+//! invocation; after that the rust binary is self-contained.
+
+pub mod client;
+pub mod manifest;
+pub mod step;
+
+pub use client::{Executable, Input, Runtime};
+pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo};
+pub use step::{Batch, EvalStep, InferStep, StepStats, TrainStep};
+
+use anyhow::Result;
+
+/// Convenience: the typed train/eval/infer wrappers for one model.
+pub struct ModelRuntime {
+    pub model: ModelInfo,
+    pub train: TrainStep,
+    pub eval: Option<EvalStep>,
+    pub infer: Option<InferStep>,
+}
+
+impl ModelRuntime {
+    pub fn load(rt: &Runtime, model: &str, optimizer: &str) -> Result<ModelRuntime> {
+        let info = rt.manifest.model(model)?.clone();
+        let train_exe = rt.load(&Manifest::train_name(model, optimizer))?;
+        let train = TrainStep::new(train_exe, &info.x_shape, &info.y_shape, info.x_dtype);
+        let eval = if rt.manifest.artifacts.contains_key(&format!("{model}_eval")) {
+            let e = rt.load(&format!("{model}_eval"))?;
+            Some(EvalStep::new(e, &info.x_shape, &info.y_shape, info.x_dtype))
+        } else {
+            None
+        };
+        let infer = if rt.manifest.artifacts.contains_key(&format!("{model}_infer")) {
+            let e = rt.load(&format!("{model}_infer"))?;
+            Some(InferStep::new(e, &info.x_shape))
+        } else {
+            None
+        };
+        Ok(ModelRuntime {
+            model: info,
+            train,
+            eval,
+            infer,
+        })
+    }
+}

@@ -1,0 +1,172 @@
+//! Typed wrappers over the artifact signatures (train / eval / infer).
+//!
+//! These own the literal packing for the three artifact kinds so the rest
+//! of L3 never touches xla types directly.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::client::{Executable, Input};
+use super::manifest::Dtype;
+
+/// Mini-batch of training data in the layout the artifact expects.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// x: flattened f32 of shape [B, ..x_shape], y: flattened f32 labels
+    F32 { x: Vec<f32>, y: Vec<f32> },
+    /// token windows: flattened i32 of shape [B, S+1] (self-labelled LM)
+    I32 { x: Vec<i32> },
+}
+
+/// `(params, opt_state, x, y, lr) -> (params', opt_state', loss, metric)`
+pub struct TrainStep {
+    pub exe: Arc<Executable>,
+    pub x_shape: Vec<usize>, // including batch dim
+    pub y_shape: Vec<usize>,
+    pub x_dtype: Dtype,
+}
+
+/// Result of one local mini-batch step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    pub metric: f32,
+}
+
+impl TrainStep {
+    pub fn new(exe: Arc<Executable>, x_shape_tail: &[usize], y_shape_tail: &[usize], x_dtype: Dtype) -> TrainStep {
+        let b = exe.info.batch;
+        let mut x_shape = vec![b];
+        x_shape.extend_from_slice(x_shape_tail);
+        let mut y_shape = vec![b];
+        if y_shape_tail == [0] {
+            // zero-width labels (transformer): artifact takes i32[B,1] dummy
+            y_shape.push(1);
+        } else {
+            y_shape.extend_from_slice(y_shape_tail);
+        }
+        TrainStep {
+            exe,
+            x_shape,
+            y_shape,
+            x_dtype,
+        }
+    }
+
+    /// Run one step in place: params and opt_state are updated.
+    pub fn step(
+        &self,
+        params: &mut Vec<f32>,
+        opt_state: &mut Vec<f32>,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let lr_slice = [lr];
+        let pshape = [params.len()];
+        let sshape = [opt_state.len()];
+        let outs = match (batch, self.x_dtype) {
+            (Batch::F32 { x, y }, Dtype::F32) => self.exe.run(&[
+                Input::F32(params, &pshape),
+                Input::F32(opt_state, &sshape),
+                Input::F32(x, &self.x_shape),
+                Input::F32(y, &self.y_shape),
+                Input::F32(&lr_slice, &[]),
+            ])?,
+            (Batch::I32 { x }, Dtype::I32) => {
+                let dummy_y = vec![0i32; self.y_shape.iter().product()];
+                self.exe.run(&[
+                    Input::F32(params, &pshape),
+                    Input::F32(opt_state, &sshape),
+                    Input::I32(x, &self.x_shape),
+                    Input::I32(&dummy_y, &self.y_shape),
+                    Input::F32(&lr_slice, &[]),
+                ])?
+            }
+            _ => anyhow::bail!("batch dtype does not match artifact"),
+        };
+        anyhow::ensure!(outs.len() == 4, "train artifact must return 4 outputs");
+        *params = outs[0].clone();
+        *opt_state = outs[1].clone();
+        Ok(StepStats {
+            loss: outs[2][0],
+            metric: outs[3][0],
+        })
+    }
+}
+
+/// `(params, x, y) -> (loss, metric)`
+pub struct EvalStep {
+    pub exe: Arc<Executable>,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub x_dtype: Dtype,
+}
+
+impl EvalStep {
+    pub fn new(exe: Arc<Executable>, x_shape_tail: &[usize], y_shape_tail: &[usize], x_dtype: Dtype) -> EvalStep {
+        let b = exe.info.batch;
+        let mut x_shape = vec![b];
+        x_shape.extend_from_slice(x_shape_tail);
+        let mut y_shape = vec![b];
+        if y_shape_tail == [0] {
+            y_shape.push(1);
+        } else {
+            y_shape.extend_from_slice(y_shape_tail);
+        }
+        EvalStep {
+            exe,
+            x_shape,
+            y_shape,
+            x_dtype,
+        }
+    }
+
+    pub fn eval(&self, params: &[f32], batch: &Batch) -> Result<StepStats> {
+        let pshape = [params.len()];
+        let outs = match (batch, self.x_dtype) {
+            (Batch::F32 { x, y }, Dtype::F32) => self.exe.run(&[
+                Input::F32(params, &pshape),
+                Input::F32(x, &self.x_shape),
+                Input::F32(y, &self.y_shape),
+            ])?,
+            (Batch::I32 { x }, Dtype::I32) => {
+                let dummy_y = vec![0i32; self.y_shape.iter().product()];
+                self.exe.run(&[
+                    Input::F32(params, &pshape),
+                    Input::I32(x, &self.x_shape),
+                    Input::I32(&dummy_y, &self.y_shape),
+                ])?
+            }
+            _ => anyhow::bail!("batch dtype does not match artifact"),
+        };
+        anyhow::ensure!(outs.len() == 2, "eval artifact must return 2 outputs");
+        Ok(StepStats {
+            loss: outs[0][0],
+            metric: outs[1][0],
+        })
+    }
+}
+
+/// `(params, x) -> (out,)` — closed-loop inference (deep driving).
+pub struct InferStep {
+    pub exe: Arc<Executable>,
+    pub x_shape: Vec<usize>,
+}
+
+impl InferStep {
+    pub fn new(exe: Arc<Executable>, x_shape_tail: &[usize]) -> InferStep {
+        let b = exe.info.batch;
+        let mut x_shape = vec![b];
+        x_shape.extend_from_slice(x_shape_tail);
+        InferStep { exe, x_shape }
+    }
+
+    pub fn infer(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let pshape = [params.len()];
+        let outs = self
+            .exe
+            .run(&[Input::F32(params, &pshape), Input::F32(x, &self.x_shape)])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+}

@@ -1,0 +1,292 @@
+//! Round-synchronous simulation engine for Π = (φ, σ).
+
+
+use anyhow::Result;
+
+use crate::coordinator::{Protocol, ProtocolSpec, SyncCtx};
+use crate::data::{DriftSchedule, Stream};
+use crate::metrics::{Recorder, RoundRecord, Summary};
+use crate::model::InitPolicy;
+use crate::network::NetStats;
+use crate::runtime::{Batch, EvalStep, ModelRuntime, Runtime};
+use crate::util::rng::Rng;
+use crate::util::threads;
+
+use super::learner::Learner;
+
+/// Configuration of one protocol run.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub model: String,
+    pub optimizer: String,
+    /// number of local learners m
+    pub m: usize,
+    /// rounds T (each learner sees `batch` samples per round)
+    pub rounds: u64,
+    pub lr: f32,
+    pub seed: u64,
+    pub init: InitPolicy,
+    /// worker threads for the per-round local steps
+    pub threads: usize,
+    /// per-learner sampling rates; empty = all equal to artifact batch
+    pub sample_rates: Vec<usize>,
+    /// concept-drift schedule
+    pub drift: DriftProb,
+    /// evaluate on a holdout stream at the end
+    pub final_eval: bool,
+}
+
+#[derive(Clone, Debug)]
+pub enum DriftProb {
+    None,
+    Random(f64),
+    Forced(Vec<u64>),
+}
+
+impl SimConfig {
+    pub fn new(model: &str, optimizer: &str, m: usize, rounds: u64, lr: f32) -> SimConfig {
+        SimConfig {
+            model: model.to_string(),
+            optimizer: optimizer.to_string(),
+            m,
+            rounds,
+            lr,
+            seed: 42,
+            init: InitPolicy::Homogeneous,
+            threads: threads::default_threads(),
+            sample_rates: Vec::new(),
+            drift: DriftProb::None,
+            final_eval: false,
+        }
+    }
+}
+
+/// Everything produced by one run.
+pub struct RunResult {
+    pub summary: Summary,
+    pub recorder: Recorder,
+    pub net: NetStats,
+    /// final local models (for post-hoc analysis, e.g. driving eval)
+    pub models: Vec<Vec<f32>>,
+    /// final averaged model
+    pub averaged: Vec<f32>,
+}
+
+/// Factory for per-learner streams: `(learner_id) -> Stream`.
+pub type StreamFactory<'a> = dyn Fn(usize) -> Box<dyn Stream> + 'a;
+
+pub struct Engine<'a> {
+    pub rt: &'a Runtime,
+    pub mrt: ModelRuntime,
+    pub cfg: SimConfig,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(rt: &'a Runtime, cfg: SimConfig) -> Result<Engine<'a>> {
+        let mrt = ModelRuntime::load(rt, &cfg.model, &cfg.optimizer)?;
+        Ok(Engine { rt, mrt, cfg })
+    }
+
+    fn build_learners(&self, streams: &StreamFactory) -> Result<Vec<Learner>> {
+        let init = self.rt.init_params(&self.cfg.model)?;
+        let scales = self.rt.init_scales(&self.cfg.model)?;
+        let mut rng = Rng::new(self.cfg.seed ^ 0x1717);
+        let models = self
+            .cfg
+            .init
+            .build(&init, &scales, self.cfg.m, &mut rng);
+        let state_size = self.mrt.train.exe.info.state_size;
+        let batch = self.mrt.train.exe.info.batch;
+        Ok(models
+            .into_iter()
+            .enumerate()
+            .map(|(i, params)| {
+                let rate = self.cfg.sample_rates.get(i).copied().unwrap_or(batch);
+                Learner::new(i, params, state_size, streams(i), rate)
+            })
+            .collect())
+    }
+
+    /// Run protocol σ (spec) with learning algorithm φ (the train artifact).
+    pub fn run(&self, spec: &ProtocolSpec, streams: &StreamFactory) -> Result<RunResult> {
+        let mut protocol = spec.build();
+        let mut learners = self.build_learners(streams)?;
+        // Algorithm 1 init: reference vector <- the common initial model.
+        if let InitPolicy::Homogeneous = self.cfg.init {
+            // (heterogeneous runs leave r = first learner's model, set on
+            //  first check — matching "one random f" only in the hom. case)
+        }
+        self.run_with(&mut *protocol, &mut learners)
+    }
+
+    /// Run with an explicit protocol instance (for stateful reuse/ablations).
+    pub fn run_with(
+        &self,
+        protocol: &mut dyn Protocol,
+        learners: &mut Vec<Learner>,
+    ) -> Result<RunResult> {
+        let m = learners.len();
+        let mut recorder = Recorder::new();
+        let mut net = NetStats::new();
+        let mut proto_rng = Rng::new(self.cfg.seed ^ 0xABCD);
+        let mut drift_rng = Rng::new(self.cfg.seed ^ 0xD81F);
+        let mut drift_sched = match &self.cfg.drift {
+            DriftProb::None => DriftSchedule::none(),
+            DriftProb::Random(p) => DriftSchedule::random(*p),
+            DriftProb::Forced(rounds) => DriftSchedule::forced(rounds.clone()),
+        };
+        let weights: Vec<f32> = learners.iter().map(|l| l.sample_rate as f32).collect();
+        let train = &self.mrt.train;
+        let lr = self.cfg.lr;
+
+        for t in 1..=self.cfg.rounds {
+            // concept drift (identical new concept for all learners)
+            let drifted = if let Some(epoch) = drift_sched.tick(t, &mut drift_rng) {
+                for l in learners.iter_mut() {
+                    l.stream.drift(epoch);
+                }
+                true
+            } else {
+                false
+            };
+
+            // local mini-batch steps, concurrent across learners
+            threads::parallel_for_each_mut(learners, self.cfg.threads, |_, l| {
+                l.local_step(train, lr);
+            });
+            if let Some(err) = learners.iter().find_map(|l| l.last_err.clone()) {
+                anyhow::bail!("local step failed: {err}");
+            }
+            let loss_sum: f64 = learners
+                .iter()
+                .map(|l| l.last.map(|s| s.loss as f64).unwrap_or(0.0))
+                .sum();
+            let metric_mean: f64 = learners
+                .iter()
+                .map(|l| l.last.map(|s| s.metric as f64).unwrap_or(0.0))
+                .sum::<f64>()
+                / m as f64;
+
+            // synchronization operator
+            let mut models: Vec<Vec<f32>> = learners
+                .iter_mut()
+                .map(|l| std::mem::take(&mut l.params))
+                .collect();
+            let report = protocol.sync(&mut SyncCtx {
+                round: t,
+                models: &mut models,
+                weights: &weights,
+                net: &mut net,
+                rng: &mut proto_rng,
+            });
+            for (l, p) in learners.iter_mut().zip(models) {
+                l.params = p;
+            }
+
+            recorder.record(RoundRecord {
+                round: t,
+                loss_sum,
+                metric_mean,
+                cum_bytes: net.total_bytes(),
+                synced: report.communicated,
+                drifted,
+            });
+        }
+
+        // final holdout evaluation of the averaged model
+        let models: Vec<Vec<f32>> = learners.iter().map(|l| l.params.clone()).collect();
+        let mut averaged = vec![0.0f32; models[0].len()];
+        let idx: Vec<usize> = (0..m).collect();
+        crate::model::params::average_into(&models, &idx, &mut averaged);
+        let mut eval_loss = None;
+        let mut eval_metric = None;
+        if self.cfg.final_eval {
+            if let Some(ev) = &self.mrt.eval {
+                let stats = self.holdout_eval(ev, &averaged, learners)?;
+                eval_loss = Some(stats.0);
+                eval_metric = Some(stats.1);
+                recorder.final_eval = Some(stats);
+            }
+        }
+
+        let summary = Summary {
+            protocol: protocol.name(),
+            cumulative_loss: recorder.cumulative_loss,
+            comm_bytes: net.total_bytes(),
+            tail_metric: recorder.tail_metric(50),
+            eval_loss,
+            eval_metric,
+            sync_events: net.sync_events,
+            full_syncs: net.full_syncs,
+        };
+        Ok(RunResult {
+            summary,
+            recorder,
+            net,
+            models,
+            averaged,
+        })
+    }
+
+    fn holdout_eval(
+        &self,
+        ev: &EvalStep,
+        averaged: &[f32],
+        learners: &mut [Learner],
+    ) -> Result<(f64, f64)> {
+        // evaluate the averaged model on fresh batches from learner 0's
+        // stream (same distribution, unseen samples)
+        let eval_batch = ev.exe.info.batch;
+        let mut loss = 0.0;
+        let mut metric = 0.0;
+        let reps = 5;
+        for _ in 0..reps {
+            let batch = learners[0].stream.next_batch(eval_batch);
+            let s = ev.eval(averaged, &batch)?;
+            loss += s.loss as f64;
+            metric += s.metric as f64;
+        }
+        Ok((loss / reps as f64, metric / reps as f64))
+    }
+}
+
+/// Serial baseline: one learner sees the interleaved union of all streams
+/// (mT samples at the artifact batch size), lr per paper's serial setup.
+pub fn run_serial(
+    rt: &Runtime,
+    cfg: &SimConfig,
+    streams: &StreamFactory,
+) -> Result<RunResult> {
+    let mut serial_cfg = cfg.clone();
+    serial_cfg.m = 1;
+    serial_cfg.rounds = cfg.rounds * cfg.m as u64;
+    let engine = Engine::new(rt, serial_cfg)?;
+
+    // interleave the m streams round-robin
+    struct Union {
+        streams: Vec<Box<dyn Stream>>,
+        next: usize,
+    }
+    impl Stream for Union {
+        fn next_batch(&mut self, batch: usize) -> Batch {
+            let b = self.streams[self.next].next_batch(batch);
+            self.next = (self.next + 1) % self.streams.len();
+            b
+        }
+        fn drift(&mut self, epoch: u64) {
+            for s in self.streams.iter_mut() {
+                s.drift(epoch);
+            }
+        }
+    }
+    let m = cfg.m;
+    let result = engine.run(&ProtocolSpec::NoSync, &|_| {
+        Box::new(Union {
+            streams: (0..m).map(|i| streams(i)).collect(),
+            next: 0,
+        })
+    })?;
+    let mut result = result;
+    result.summary.protocol = "serial".to_string();
+    Ok(result)
+}

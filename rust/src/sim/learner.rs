@@ -1,0 +1,58 @@
+//! One local learner: flat model + optimizer state + its data stream.
+
+use anyhow::Result;
+
+use crate::data::Stream;
+use crate::runtime::{Batch, StepStats, TrainStep};
+
+pub struct Learner {
+    pub id: usize,
+    pub params: Vec<f32>,
+    pub opt_state: Vec<f32>,
+    pub stream: Box<dyn Stream>,
+    /// per-round sampling rate B^i (Algorithm 2 weights; constant here
+    /// unless an experiment configures heterogeneous rates)
+    pub sample_rate: usize,
+    /// stats of the most recent local step
+    pub last: Option<StepStats>,
+    pub last_err: Option<String>,
+}
+
+impl Learner {
+    pub fn new(
+        id: usize,
+        params: Vec<f32>,
+        state_size: usize,
+        stream: Box<dyn Stream>,
+        sample_rate: usize,
+    ) -> Learner {
+        Learner {
+            id,
+            params,
+            opt_state: vec![0.0; state_size],
+            stream,
+            sample_rate,
+            last: None,
+            last_err: None,
+        }
+    }
+
+    /// Observe one mini-batch and apply the learning algorithm φ.
+    pub fn local_step(&mut self, train: &TrainStep, lr: f32) {
+        let batch = self.stream.next_batch(self.sample_rate);
+        match self.step_inner(train, &batch, lr) {
+            Ok(stats) => {
+                self.last = Some(stats);
+                self.last_err = None;
+            }
+            Err(e) => {
+                self.last = None;
+                self.last_err = Some(format!("{e:#}"));
+            }
+        }
+    }
+
+    fn step_inner(&mut self, train: &TrainStep, batch: &Batch, lr: f32) -> Result<StepStats> {
+        train.step(&mut self.params, &mut self.opt_state, batch, lr)
+    }
+}

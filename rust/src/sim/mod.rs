@@ -1,0 +1,13 @@
+//! The decentralized-training simulation engine (paper §2 setting).
+//!
+//! Round-synchronous: in round t every learner observes a mini-batch from
+//! its local stream, applies the learning algorithm φ (the AOT train-step
+//! artifact, executed via PJRT), then the synchronization operator σ runs.
+//! Local steps of one round execute concurrently on a scoped thread pool;
+//! protocol decisions are strictly sequential and deterministic.
+
+pub mod engine;
+pub mod learner;
+
+pub use engine::{Engine, RunResult, SimConfig};
+pub use learner::Learner;

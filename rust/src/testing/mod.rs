@@ -1,0 +1,7 @@
+//! Mini property-testing engine (substrate — proptest is unavailable
+//! offline). Runs a property over many seeded random cases and reports
+//! the first failing seed for reproduction.
+
+pub mod prop;
+
+pub use prop::{forall, Config};

@@ -1,0 +1,84 @@
+//! `forall`: run a generator + property over N deterministic seeds.
+//!
+//! ```
+//! use dynavg::testing::{forall, Config};
+//! use dynavg::util::rng::Rng;
+//! forall(Config::default(), |rng: &mut Rng| rng.below(100), |&n| n < 100);
+//! ```
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            cases: 100,
+            base_seed: 0xDA7A,
+        }
+    }
+}
+
+/// Generate `cases` inputs and assert the property on each; panics with
+/// the failing seed and debug representation on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    generate: impl Fn(&mut Rng) -> T,
+    property: impl Fn(&T) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = generate(&mut rng);
+        if !property(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}): input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Variant whose property returns `Result<(), String>` for rich messages.
+pub fn forall_check<T: std::fmt::Debug>(
+    cfg: Config,
+    generate: impl Fn(&mut Rng) -> T,
+    property: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}): {msg}\ninput = {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        forall(Config::default(), |rng| rng.below(10), |&n| n < 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_loudly() {
+        forall(
+            Config {
+                cases: 50,
+                base_seed: 1,
+            },
+            |rng| rng.below(10),
+            |&n| n < 5,
+        );
+    }
+}

@@ -1,0 +1,97 @@
+//! Timing harness for `cargo bench` (substrate — criterion is unavailable
+//! offline). Benches are `harness = false` binaries using this module:
+//! warmup, repeated timed runs, median/mean/min reporting.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+pub fn header() {
+    println!(
+        "bench {:<44} {:>12} {:>12} {:>12}",
+        "name", "median", "mean", "min"
+    );
+}
+
+/// Time `f` for at least `min_iters` iterations / `min_total_ms` total.
+pub fn bench(name: &str, min_iters: usize, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    f();
+    let mut samples = Vec::new();
+    let budget = std::time::Duration::from_millis(500);
+    let start = Instant::now();
+    while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 10_000) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        median_ns: samples[samples.len() / 2],
+        min_ns: samples[0],
+    };
+    result.report();
+    result
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", 5, || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min_ns <= r.median_ns);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(100.0).contains("ns"));
+        assert!(fmt_ns(1e4).contains("µs"));
+        assert!(fmt_ns(1e7).contains("ms"));
+        assert!(fmt_ns(2e9).contains("s"));
+    }
+}

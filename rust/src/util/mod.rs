@@ -1,0 +1,8 @@
+//! Hand-rolled substrates replacing unavailable crates (see DESIGN.md):
+//! JSON, RNG, CLI parsing, scoped thread pools.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod threads;

@@ -1,0 +1,71 @@
+//! Scoped data-parallel helpers (substrate — rayon is unavailable offline).
+//!
+//! `parallel_for_each_mut` runs a closure over the items of a mutable slice
+//! on up to `threads` OS threads using `std::thread::scope`; used by the
+//! simulation engine to run the per-learner local SGD steps of one round
+//! concurrently.
+
+/// Run `f(index, &mut item)` for every item, partitioned across threads.
+pub fn parallel_for_each_mut<T: Send, F>(items: &mut [T], threads: usize, f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ci, chunk_items) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, item) in chunk_items.iter_mut().enumerate() {
+                    f(ci * chunk + j, item);
+                }
+            });
+        }
+    });
+}
+
+/// Default worker count: physical parallelism minus one coordinator thread.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn visits_every_item_once() {
+        let mut xs: Vec<usize> = vec![0; 103];
+        let count = AtomicUsize::new(0);
+        parallel_for_each_mut(&mut xs, 8, |i, x| {
+            *x = i + 1;
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 103);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(*x, i + 1);
+        }
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let mut xs = vec![1, 2, 3];
+        parallel_for_each_mut(&mut xs, 1, |_, x| *x *= 10);
+        assert_eq!(xs, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn empty_slice() {
+        let mut xs: Vec<u8> = vec![];
+        parallel_for_each_mut(&mut xs, 4, |_, _| panic!("should not run"));
+    }
+}

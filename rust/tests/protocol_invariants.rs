@@ -1,0 +1,323 @@
+//! Property-based integration tests of the protocol layer (no XLA):
+//! the paper's Definition-2 invariants, communication monotonicity, and
+//! cross-protocol bounds, checked over randomized model configurations
+//! and synthetic "training" dynamics.
+
+use dynavg::coordinator::{
+    Augmentation, DynamicAveraging, DynamicConfig, FedAvg, PeriodicAveraging, Protocol,
+    ProtocolSpec, SyncCtx,
+};
+use dynavg::model::params;
+use dynavg::network::NetStats;
+use dynavg::testing::{forall, prop::forall_check, Config};
+use dynavg::util::rng::Rng;
+
+/// A random model configuration around a random reference.
+#[derive(Debug)]
+struct Case {
+    models: Vec<Vec<f32>>,
+    reference: Vec<f32>,
+    delta: f64,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let m = 2 + rng.below(8);
+    let p = 1 + rng.below(64);
+    let reference: Vec<f32> = (0..p).map(|_| rng.normal_f32()).collect();
+    let spread = rng.range(0.01, 3.0) as f32;
+    let models = (0..m)
+        .map(|_| {
+            reference
+                .iter()
+                .map(|&r| r + spread * rng.normal_f32())
+                .collect()
+        })
+        .collect();
+    Case {
+        models,
+        reference,
+        delta: rng.range(0.05, 5.0),
+    }
+}
+
+fn sync_once(case: &Case, seed: u64) -> (Vec<Vec<f32>>, NetStats, DynamicAveraging) {
+    let mut proto = DynamicAveraging::new(DynamicConfig::new(case.delta, 1));
+    proto.set_reference(case.reference.clone());
+    let mut models = case.models.clone();
+    let weights = vec![1.0; models.len()];
+    let mut net = NetStats::new();
+    let mut rng = Rng::new(seed);
+    proto.sync(&mut SyncCtx {
+        round: 1,
+        models: &mut models,
+        weights: &weights,
+        net: &mut net,
+        rng: &mut rng,
+    });
+    (models, net, proto)
+}
+
+#[test]
+fn prop_dynamic_preserves_global_mean() {
+    forall_check(Config::default(), gen_case, |case| {
+        let idx: Vec<usize> = (0..case.models.len()).collect();
+        let p = case.models[0].len();
+        let mut before = vec![0.0; p];
+        params::average_into(&case.models, &idx, &mut before);
+        let (after_models, _, _) = sync_once(case, 1);
+        let mut after = vec![0.0; p];
+        params::average_into(&after_models, &idx, &mut after);
+        let d = params::sq_dist(&before, &after);
+        // tolerance scales with magnitude (f32 accumulation)
+        let scale = params::sq_norm(&before).max(1.0);
+        if d / scale > 1e-9 {
+            return Err(format!("mean moved: sq_dist {d} (scale {scale})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dynamic_bounds_local_conditions_after_sync() {
+    forall_check(Config::default(), gen_case, |case| {
+        let (after_models, _, proto) = sync_once(case, 2);
+        let r = proto.reference().unwrap();
+        for (i, f) in after_models.iter().enumerate() {
+            let d = params::sq_dist(f, r);
+            if d > case.delta * (1.0 + 1e-4) + 1e-6 {
+                return Err(format!(
+                    "learner {i} violates after sync: {d} > delta {}",
+                    case.delta
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_divergence_bounded_by_delta_after_sync() {
+    // Def 2(ii) via [14, Thm 6]: all local conditions hold => divergence <= delta
+    forall_check(Config::default(), gen_case, |case| {
+        let (after_models, _, _) = sync_once(case, 3);
+        // divergence is 1/m sum ||f_i - fbar||^2; bound it against delta
+        // through the local conditions (allowing f32 slack)
+        let div = params::divergence(&after_models);
+        if div > case.delta * (1.0 + 1e-4) + 1e-6 {
+            return Err(format!("divergence {div} > delta {}", case.delta));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dynamic_communication_never_exceeds_periodic() {
+    // worst case: dynamic communicates as much as periodic (same b), plus
+    // query overhead headers; compare model transfers.
+    forall(
+        Config {
+            cases: 60,
+            ..Config::default()
+        },
+        gen_case,
+        |case| {
+            let (_, dyn_net, _) = sync_once(case, 4);
+            let mut per = PeriodicAveraging::new(1);
+            let mut models = case.models.clone();
+            let weights = vec![1.0; models.len()];
+            let mut per_net = NetStats::new();
+            let mut rng = Rng::new(4);
+            per.sync(&mut SyncCtx {
+                round: 1,
+                models: &mut models,
+                weights: &weights,
+                net: &mut per_net,
+                rng: &mut rng,
+            });
+            dyn_net.models_sent <= per_net.models_sent
+        },
+    );
+}
+
+#[test]
+fn prop_quiescence_zero_communication() {
+    // if every local condition holds, dynamic averaging must not talk
+    forall(Config::default(), gen_case, |case| {
+        let mut tight = Case {
+            models: case.models.clone(),
+            reference: case.reference.clone(),
+            delta: case.delta,
+        };
+        // clamp models into the safe zone around the reference
+        for f in tight.models.iter_mut() {
+            let d = params::sq_dist(f, &tight.reference);
+            if d > tight.delta {
+                let scale = ((tight.delta * 0.9) / d).sqrt() as f32;
+                for (x, &r) in f.iter_mut().zip(&tight.reference) {
+                    *x = r + (*x - r) * scale;
+                }
+            }
+        }
+        let (_, net, _) = sync_once(&tight, 5);
+        net.total_bytes() == 0
+    });
+}
+
+#[test]
+fn prop_fedavg_subset_size() {
+    forall(Config::default(), |rng| {
+        let m = 2 + rng.below(20);
+        let c = rng.range(0.05, 1.0);
+        (m, c)
+    }, |&(m, c)| {
+        let mut proto = FedAvg::new(1, c);
+        let mut models: Vec<Vec<f32>> = (0..m).map(|i| vec![i as f32]).collect();
+        let weights = vec![1.0; m];
+        let mut net = NetStats::new();
+        let mut rng = Rng::new(9);
+        let rep = proto.sync(&mut SyncCtx {
+            round: 1,
+            models: &mut models,
+            weights: &weights,
+            net: &mut net,
+            rng: &mut rng,
+        });
+        rep.updated == ((c * m as f64).ceil() as usize).clamp(1, m)
+    });
+}
+
+#[test]
+fn prop_all_augmentation_strategies_satisfy_def2() {
+    for strategy in [
+        Augmentation::Random,
+        Augmentation::RoundRobin,
+        Augmentation::FarthestFirst,
+    ] {
+        forall_check(
+            Config {
+                cases: 40,
+                ..Config::default()
+            },
+            gen_case,
+            |case| {
+                let mut cfg = DynamicConfig::new(case.delta, 1);
+                cfg.augmentation = strategy;
+                let mut proto = DynamicAveraging::new(cfg);
+                proto.set_reference(case.reference.clone());
+                let mut models = case.models.clone();
+                let weights = vec![1.0; models.len()];
+                let mut net = NetStats::new();
+                let mut rng = Rng::new(7);
+                proto.sync(&mut SyncCtx {
+                    round: 1,
+                    models: &mut models,
+                    weights: &weights,
+                    net: &mut net,
+                    rng: &mut rng,
+                });
+                let r = proto.reference().unwrap();
+                for f in &models {
+                    let d = params::sq_dist(f, r);
+                    if d > case.delta * (1.0 + 1e-4) + 1e-6 {
+                        return Err(format!("{strategy:?}: local condition {d}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Simulated drift-free "training": all learners contract toward a target
+/// with noise — dynamic averaging should reach (near-)quiescence while
+/// periodic keeps paying.
+#[test]
+fn dynamic_reaches_quiescence_on_converging_learners() {
+    let m = 8;
+    let p = 32;
+    let target: Vec<f32> = (0..p).map(|i| (i as f32 * 0.37).sin()).collect();
+    let run = |spec: &ProtocolSpec| -> (u64, u64) {
+        let mut protocol = spec.build();
+        let mut rng = Rng::new(5);
+        let mut models: Vec<Vec<f32>> = vec![vec![0.0; p]; m];
+        let weights = vec![1.0; m];
+        let mut net = NetStats::new();
+        let mut late_bytes = 0u64;
+        for t in 1..=200u64 {
+            // contract toward target + noise that decays over time
+            let noise = 0.5 / (1.0 + t as f32 / 10.0);
+            for f in models.iter_mut() {
+                for (x, &tgt) in f.iter_mut().zip(&target) {
+                    *x += 0.2 * (tgt - *x) + noise * 0.05 * rng.normal_f32();
+                }
+            }
+            let before = net.total_bytes();
+            protocol.sync(&mut SyncCtx {
+                round: t,
+                models: &mut models,
+                weights: &weights,
+                net: &mut net,
+                rng: &mut rng,
+            });
+            if t > 150 {
+                late_bytes += net.total_bytes() - before;
+            }
+        }
+        (net.total_bytes(), late_bytes)
+    };
+    let (dyn_total, dyn_late) = run(&ProtocolSpec::Dynamic {
+        delta: 0.05,
+        check_every: 1,
+    });
+    let (per_total, per_late) = run(&ProtocolSpec::Periodic { period: 1 });
+    assert!(dyn_total < per_total / 2, "dynamic {dyn_total} vs periodic {per_total}");
+    assert_eq!(dyn_late, 0, "dynamic must reach quiescence once converged");
+    assert!(per_late > 0);
+}
+
+/// With recurring "drifts" (target jumps), dynamic communication clusters
+/// right after each drift.
+#[test]
+fn dynamic_communication_clusters_after_drift() {
+    let m = 6;
+    let p = 16;
+    let mut rng = Rng::new(11);
+    let mut protocol = DynamicAveraging::new(DynamicConfig::new(0.05, 1));
+    let mut models: Vec<Vec<f32>> = vec![vec![0.0; p]; m];
+    let weights = vec![1.0; m];
+    let mut net = NetStats::new();
+    let mut target: Vec<f32> = (0..p).map(|_| rng.normal_f32()).collect();
+    let drift_rounds = [100u64, 200];
+    let mut bytes_by_round = Vec::new();
+    for t in 1..=300u64 {
+        if drift_rounds.contains(&t) {
+            target = (0..p).map(|_| rng.normal_f32()).collect();
+        }
+        for f in models.iter_mut() {
+            for (x, &tgt) in f.iter_mut().zip(&target) {
+                *x += 0.15 * (tgt - *x) + 0.01 * rng.normal_f32();
+            }
+        }
+        let before = net.total_bytes();
+        protocol.sync(&mut SyncCtx {
+            round: t,
+            models: &mut models,
+            weights: &weights,
+            net: &mut net,
+            rng: &mut rng,
+        });
+        bytes_by_round.push(net.total_bytes() - before);
+    }
+    let window = |lo: usize, hi: usize| -> u64 { bytes_by_round[lo..hi].iter().sum() };
+    // communication in the 30 rounds after each drift must dominate the
+    // 30 rounds before it
+    for &d in &drift_rounds {
+        let d = d as usize;
+        let after = window(d, d + 30);
+        let before = window(d - 30, d);
+        assert!(
+            after > 3 * before.max(1),
+            "drift at {d}: after {after} vs before {before}"
+        );
+    }
+}

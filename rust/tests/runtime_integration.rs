@@ -1,0 +1,176 @@
+//! Integration tests over the AOT runtime: every artifact loads, executes,
+//! and behaves like a training/eval step should. Requires `make artifacts`.
+
+use std::sync::OnceLock;
+
+use dynavg::data::{graphical::GraphicalStream, synth_mnist::MnistLike, Stream};
+use dynavg::runtime::{Batch, ModelRuntime, Runtime};
+
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| {
+        Runtime::new(dynavg::artifacts_dir()).expect("run `make artifacts` first")
+    })
+}
+
+fn batch_for(model: &str, b: usize, seed: u64) -> Batch {
+    match model {
+        "mnist_cnn" => MnistLike::new(1, seed).next_batch(b),
+        "drift_mlp" => GraphicalStream::new(1, seed).next_batch(b),
+        "driving_cnn" => {
+            dynavg::driving::DrivingStream::new(1, seed, false).next_batch(b)
+        }
+        "transformer_lm" => {
+            dynavg::data::corpus::CorpusStream::new(seed, 65).next_batch(b)
+        }
+        _ => panic!("unknown model"),
+    }
+}
+
+fn lr_for(opt: &str) -> f32 {
+    if opt == "sgd" {
+        0.1
+    } else {
+        0.002
+    }
+}
+
+#[test]
+fn every_train_artifact_executes_and_learns_a_fixed_batch() {
+    let rt = rt();
+    let cases = [
+        ("drift_mlp", "sgd"),
+        ("mnist_cnn", "sgd"),
+        ("mnist_cnn", "adam"),
+        ("mnist_cnn", "rmsprop"),
+        ("driving_cnn", "sgd"),
+        ("transformer_lm", "adam"),
+    ];
+    for (model, opt) in cases {
+        let mrt = ModelRuntime::load(rt, model, opt).unwrap();
+        let mut params = rt.init_params(model).unwrap();
+        let mut state = vec![0.0; mrt.train.exe.info.state_size];
+        let batch = batch_for(model, mrt.train.exe.info.batch, 7);
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..12 {
+            let stats = mrt
+                .train
+                .step(&mut params, &mut state, &batch, lr_for(opt))
+                .unwrap();
+            assert!(stats.loss.is_finite(), "{model}/{opt} loss not finite");
+            if first.is_none() {
+                first = Some(stats.loss);
+            }
+            last = stats.loss;
+        }
+        assert!(
+            last < first.unwrap(),
+            "{model}/{opt}: loss {} -> {last} did not decrease",
+            first.unwrap()
+        );
+    }
+}
+
+#[test]
+fn eval_artifacts_execute() {
+    let rt = rt();
+    for model in ["drift_mlp", "mnist_cnn", "driving_cnn", "transformer_lm"] {
+        let mrt = ModelRuntime::load(rt, model, if model == "transformer_lm" { "adam" } else { "sgd" }).unwrap();
+        let ev = mrt.eval.as_ref().expect("eval artifact");
+        let params = rt.init_params(model).unwrap();
+        let batch = batch_for(model, ev.exe.info.batch, 9);
+        let stats = ev.eval(&params, &batch).unwrap();
+        assert!(stats.loss.is_finite());
+        assert!(stats.metric.is_finite());
+    }
+}
+
+#[test]
+fn infer_artifact_steering_in_range() {
+    let rt = rt();
+    let mrt = ModelRuntime::load(rt, "driving_cnn", "sgd").unwrap();
+    let infer = mrt.infer.as_ref().unwrap();
+    let params = rt.init_params("driving_cnn").unwrap();
+    let img = vec![0.3f32; 32 * 64];
+    let out = infer.infer(&params, &img).unwrap();
+    assert_eq!(out.len(), 1);
+    assert!(out[0].abs() <= 1.0, "tanh output in range");
+}
+
+#[test]
+fn concurrent_execution_is_safe_and_deterministic() {
+    // the sim engine executes the same artifact from many threads; verify
+    // results equal the sequential ones.
+    let rt = rt();
+    let mrt = ModelRuntime::load(rt, "drift_mlp", "sgd").unwrap();
+    let init = rt.init_params("drift_mlp").unwrap();
+    let batches: Vec<Batch> = (0..8).map(|i| batch_for("drift_mlp", 10, i)).collect();
+
+    let sequential: Vec<Vec<f32>> = batches
+        .iter()
+        .map(|b| {
+            let mut p = init.clone();
+            let mut s = vec![0.0; 1];
+            mrt.train.step(&mut p, &mut s, b, 0.1).unwrap();
+            p
+        })
+        .collect();
+
+    let mut parallel: Vec<Option<Vec<f32>>> = vec![None; 8];
+    std::thread::scope(|scope| {
+        for (slot, b) in parallel.iter_mut().zip(&batches) {
+            let train = &mrt.train;
+            let init = &init;
+            scope.spawn(move || {
+                let mut p = init.clone();
+                let mut s = vec![0.0; 1];
+                train.step(&mut p, &mut s, b, 0.1).unwrap();
+                *slot = Some(p);
+            });
+        }
+    });
+    for (seq, par) in sequential.iter().zip(&parallel) {
+        assert_eq!(seq, par.as_ref().unwrap());
+    }
+}
+
+#[test]
+fn init_params_match_manifest_and_scales_positive() {
+    let rt = rt();
+    for (name, m) in &rt.manifest.models {
+        let p = rt.init_params(name).unwrap();
+        assert_eq!(p.len(), m.param_count);
+        let s = rt.init_scales(name).unwrap();
+        assert_eq!(s.len(), m.param_count);
+        assert!(s.iter().all(|&v| v > 0.0), "{name} scales positive");
+        // tensors must tile the flat vector exactly
+        let total: usize = m
+            .tensors
+            .iter()
+            .map(|(_, shape)| shape.iter().product::<usize>().max(1))
+            .sum();
+        assert_eq!(total, m.param_count, "{name} tensor shapes tile P");
+    }
+}
+
+#[test]
+fn transformer_artifact_next_byte_learning() {
+    // byte-LM: loss starts near ln(128) ~ 4.85 and drops on a fixed batch
+    let rt = rt();
+    let mrt = ModelRuntime::load(rt, "transformer_lm", "adam").unwrap();
+    let mut params = rt.init_params("transformer_lm").unwrap();
+    let mut state = vec![0.0; mrt.train.exe.info.state_size];
+    let batch = batch_for("transformer_lm", 8, 3);
+    let first = mrt.train.step(&mut params, &mut state, &batch, 0.002).unwrap();
+    assert!(
+        (3.0..6.5).contains(&first.loss),
+        "initial LM loss ~ln(V): {}",
+        first.loss
+    );
+    let mut last = first;
+    for _ in 0..10 {
+        last = mrt.train.step(&mut params, &mut state, &batch, 0.002).unwrap();
+    }
+    assert!(last.loss < first.loss * 0.8, "{} -> {}", first.loss, last.loss);
+}

@@ -1,0 +1,165 @@
+//! End-to-end simulation tests: the engine + protocols + real AOT compute,
+//! asserting the paper's qualitative shapes at tiny scale.
+
+use std::sync::OnceLock;
+
+use dynavg::coordinator::ProtocolSpec;
+use dynavg::experiments::{Dataset, Harness};
+use dynavg::model::InitPolicy;
+use dynavg::runtime::Runtime;
+use dynavg::sim::engine::{run_serial, DriftProb};
+use dynavg::sim::SimConfig;
+
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| {
+        Runtime::new(dynavg::artifacts_dir()).expect("run `make artifacts` first")
+    })
+}
+
+fn base_cfg(rounds: u64) -> SimConfig {
+    let mut cfg = SimConfig::new("drift_mlp", "sgd", 6, rounds, 0.1);
+    cfg.seed = 1234;
+    cfg.final_eval = true;
+    cfg
+}
+
+#[test]
+fn dynamic_beats_periodic_communication_at_similar_loss() {
+    let harness = Harness::new(rt(), base_cfg(120), Dataset::Graphical, "test_e2e");
+    let dynamic = harness
+        .run_protocol(&ProtocolSpec::Dynamic {
+            delta: 0.5,
+            check_every: 5,
+        })
+        .unwrap();
+    let periodic = harness
+        .run_protocol(&ProtocolSpec::Periodic { period: 5 })
+        .unwrap();
+    assert!(
+        dynamic.summary.comm_bytes < periodic.summary.comm_bytes,
+        "dynamic {} >= periodic {}",
+        dynamic.summary.comm_bytes,
+        periodic.summary.comm_bytes
+    );
+    // predictive performance within 25% (paper: "virtually unchanged")
+    assert!(
+        dynamic.summary.cumulative_loss < periodic.summary.cumulative_loss * 1.25,
+        "dynamic loss {} vs periodic {}",
+        dynamic.summary.cumulative_loss,
+        periodic.summary.cumulative_loss
+    );
+}
+
+#[test]
+fn communicating_protocols_beat_nosync() {
+    let harness = Harness::new(rt(), base_cfg(150), Dataset::Graphical, "test_e2e");
+    let periodic = harness
+        .run_protocol(&ProtocolSpec::Periodic { period: 5 })
+        .unwrap();
+    let nosync = harness.run_protocol(&ProtocolSpec::NoSync).unwrap();
+    assert_eq!(nosync.summary.comm_bytes, 0);
+    let p_acc = periodic.summary.eval_metric.unwrap();
+    let n_acc = nosync.summary.eval_metric.unwrap();
+    assert!(
+        p_acc >= n_acc - 0.05,
+        "averaging should not hurt: periodic {p_acc} vs nosync {n_acc}"
+    );
+}
+
+#[test]
+fn serial_baseline_runs_and_outperforms_isolated_learner() {
+    let cfg = base_cfg(60);
+    let factory = Dataset::Graphical.factory(cfg.seed);
+    let serial = run_serial(rt(), &cfg, &factory).unwrap();
+    assert_eq!(serial.summary.protocol, "serial");
+    assert_eq!(serial.summary.comm_bytes, 0);
+    assert!(serial.summary.tail_metric > 0.6, "{}", serial.summary.tail_metric);
+}
+
+#[test]
+fn drift_spikes_dynamic_communication() {
+    let mut cfg = base_cfg(160);
+    cfg.drift = DriftProb::Forced(vec![80]);
+    let harness = Harness::new(rt(), cfg, Dataset::Graphical, "test_e2e");
+    let r = harness
+        .run_protocol(&ProtocolSpec::Dynamic {
+            delta: 0.4,
+            check_every: 2,
+        })
+        .unwrap();
+    let bytes_at = |round: usize| r.recorder.rows[round - 1].cum_bytes;
+    let before = bytes_at(80) - bytes_at(40);
+    let after = bytes_at(120) - bytes_at(80);
+    assert!(
+        after > before,
+        "communication after drift ({after}) must exceed before ({before})"
+    );
+}
+
+#[test]
+fn weighted_protocol_handles_unbalanced_sampling() {
+    let mut cfg = base_cfg(40);
+    // heterogeneous B^i: artifact batch is 10 for everyone (the XLA input
+    // shape is fixed), but weights differ => Algorithm 2 weighting path
+    cfg.sample_rates = vec![10; 6];
+    let harness = Harness::new(rt(), cfg, Dataset::Graphical, "test_e2e");
+    let r = harness
+        .run_protocol(&ProtocolSpec::DynamicWeighted {
+            delta: 0.5,
+            check_every: 5,
+        })
+        .unwrap();
+    assert!(r.summary.protocol.contains("weighted"));
+    assert!(r.summary.cumulative_loss.is_finite());
+}
+
+#[test]
+fn heterogeneous_init_mild_converges_extreme_fails() {
+    let mk = |eps: f32| {
+        let mut cfg = base_cfg(80);
+        cfg.init = InitPolicy::Heterogeneous { eps };
+        let harness = Harness::new(rt(), cfg, Dataset::Graphical, "test_e2e");
+        harness
+            .run_protocol(&ProtocolSpec::Periodic { period: 2 })
+            .unwrap()
+            .summary
+            .eval_metric
+            .unwrap()
+    };
+    let mild = mk(1.0);
+    let extreme = mk(50.0);
+    assert!(
+        mild > extreme,
+        "mild hetero ({mild}) must beat extreme hetero ({extreme})"
+    );
+}
+
+#[test]
+fn fedavg_communicates_fraction_of_periodic() {
+    let harness = Harness::new(rt(), base_cfg(100), Dataset::Graphical, "test_e2e");
+    let fed = harness
+        .run_protocol(&ProtocolSpec::FedAvg {
+            period: 10,
+            fraction: 0.5,
+        })
+        .unwrap();
+    let per = harness
+        .run_protocol(&ProtocolSpec::Periodic { period: 10 })
+        .unwrap();
+    let ratio = fed.summary.comm_bytes as f64 / per.summary.comm_bytes as f64;
+    assert!(
+        (0.4..0.6).contains(&ratio),
+        "FedAvg C=0.5 should cost ~half of periodic: {ratio}"
+    );
+}
+
+#[test]
+fn continuous_averaging_keeps_learners_identical() {
+    let harness = Harness::new(rt(), base_cfg(20), Dataset::Graphical, "test_e2e");
+    let r = harness.run_protocol(&ProtocolSpec::Continuous).unwrap();
+    let first = &r.models[0];
+    for m in &r.models[1..] {
+        assert_eq!(first, m, "sigma_1 must keep all learners in sync");
+    }
+}
