@@ -1,0 +1,32 @@
+# Convenience targets. `make verify` is the tier-1 command from ROADMAP.md
+# and must pass hermetically (no Python, no XLA, no artifacts, default
+# features — the native backend).
+
+.PHONY: verify build test fmt clippy bench-smoke ci artifacts
+
+verify:
+	cargo build --release && cargo test -q
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --all --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+bench-smoke:
+	BENCH_JSON=$(CURDIR)/BENCH_smoke.json cargo bench -- --smoke
+
+ci: fmt clippy verify bench-smoke
+
+# XLA artifact build (requires python + jax; NOT needed for tier-1).
+# Produces artifacts/manifest.json + HLO text for the conv/attention
+# models, executed with `cargo build --features backend-xla` (which
+# additionally needs the `xla` crate — see rust/Cargo.toml).
+artifacts:
+	python3 -m python.compile.aot --out artifacts

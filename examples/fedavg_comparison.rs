@@ -21,7 +21,7 @@ fn main() -> Result<()> {
     let b = args.get_usize("b", 25) as u64;
 
     let rt = Runtime::new(dynavg::artifacts_dir())?;
-    let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+    let mut cfg = SimConfig::new(dynavg::experiments::common::image_model(&rt), "sgd", m, rounds, 0.1);
     cfg.seed = 21;
     cfg.final_eval = true;
     let harness = Harness::new(&rt, cfg, Dataset::MnistLike, "fedavg_comparison");

@@ -13,22 +13,48 @@ fn main() {
     let rt = match Runtime::new(dynavg::artifacts_dir()) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("skipping figure benches (run `make artifacts`): {e:#}");
+            eprintln!("skipping figure benches (manifest unreadable): {e:#}");
             return;
         }
     };
-    println!("-- end-to-end figure harnesses at tiny scale --");
+    println!(
+        "-- end-to-end figure harnesses at tiny scale ({} backend) --",
+        rt.backend_name()
+    );
+    // which model each figure drives, so unsupported ones are skipped by a
+    // typed capability check (not by matching error text) and every error
+    // from a supported figure is a hard failure
+    let required_model = |id: &str| -> &str {
+        match id {
+            "fig1_1a" | "fig5_4" => "drift_mlp",
+            "fig5_5" => "driving_cnn",
+            _ => experiments::image_model(&rt),
+        }
+    };
+    let mut ran = 0usize;
     for id in [
         "fig1_1a", "fig5_1", "fig5_2", "fig5_4", "fig5_5", "fig6_1", "fig6_2",
         "fig6_2d", "figA_1", "figA_6",
     ] {
+        let model = required_model(id);
+        if !rt.supports_model(model) {
+            println!(
+                ">> bench {id}: skipped ({model} not executable on the {} backend)\n",
+                rt.backend_name()
+            );
+            continue;
+        }
         let t0 = Instant::now();
         match experiments::dispatch(&rt, id, Scale::Tiny, 7) {
-            Ok(()) => println!(">> bench {id}: {:.2} s\n", t0.elapsed().as_secs_f64()),
+            Ok(()) => {
+                println!(">> bench {id}: {:.2} s\n", t0.elapsed().as_secs_f64());
+                ran += 1;
+            }
             Err(e) => {
                 eprintln!(">> bench {id} FAILED: {e:#}");
                 std::process::exit(1);
             }
         }
     }
+    assert!(ran > 0, "no figure harness ran on this backend");
 }

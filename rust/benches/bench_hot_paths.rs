@@ -68,21 +68,33 @@ fn main() {
         gbps(11.0 * 4.0 * p as f64, avg.median_ns)
     );
 
-    // train-step dispatch: XLA execute + literal packing at B=10
+    // train-step dispatch latency at B=10 on whatever backend is loaded
+    // (native interpreter hermetically; XLA execute + literal packing
+    // when built with --features backend-xla over `make artifacts`)
     println!();
     if let Ok(rt) = Runtime::new(dynavg::artifacts_dir()) {
-        for (model, opt) in [("drift_mlp", "sgd"), ("mnist_cnn", "sgd"), ("driving_cnn", "sgd")] {
-            let mrt = ModelRuntime::load(&rt, model, opt).unwrap();
+        let backend = rt.backend_name();
+        for (model, opt) in [
+            ("drift_mlp", "sgd"),
+            ("mnist_cnn", "sgd"),
+            ("mnist_logistic", "sgd"),
+            ("mnist_mlp", "sgd"),
+            ("driving_cnn", "sgd"),
+        ] {
+            let Ok(mrt) = ModelRuntime::load(&rt, model, opt) else {
+                println!("(skipping {model} — not in the {backend} manifest)");
+                continue;
+            };
             let mut params_v = rt.init_params(model).unwrap();
             let mut state = vec![0.0; mrt.train.exe.info.state_size];
             let batch = match model {
-                "mnist_cnn" => MnistLike::new(1, 2).next_batch(10),
                 "drift_mlp" => {
                     dynavg::data::graphical::GraphicalStream::new(1, 2).next_batch(10)
                 }
-                _ => dynavg::driving::DrivingStream::new(1, 2, false).next_batch(10),
+                "driving_cnn" => dynavg::driving::DrivingStream::new(1, 2, false).next_batch(10),
+                _ => MnistLike::new(1, 2).next_batch(10),
             };
-            bench(&format!("train_step_{model} (XLA execute)"), 10, || {
+            bench(&format!("train_step_{model} ({backend} execute)"), 10, || {
                 black_box(
                     mrt.train
                         .step(&mut params_v, &mut state, &batch, 0.1)
@@ -108,6 +120,6 @@ fn main() {
             });
         }
     } else {
-        println!("(skipping XLA benches — run `make artifacts`)");
+        println!("(skipping backend benches — manifest unreadable)");
     }
 }

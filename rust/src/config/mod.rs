@@ -87,7 +87,7 @@ impl ExperimentConfig {
             "driving_regional" => Dataset::Driving { regional: true },
             "corpus" => Dataset::Corpus { window: 65 },
             "auto" => match model.as_str() {
-                "mnist_cnn" => Dataset::MnistLike,
+                "mnist_cnn" | "mnist_logistic" | "mnist_mlp" => Dataset::MnistLike,
                 "drift_mlp" => Dataset::Graphical,
                 "driving_cnn" => Dataset::Driving { regional: false },
                 "transformer_lm" => Dataset::Corpus { window: 65 },

@@ -143,6 +143,22 @@ impl<'a> Harness<'a> {
     }
 }
 
+/// The image-classification model for MNIST-like experiments: the paper's
+/// CNN when the loaded *backend* can execute it (XLA artifacts +
+/// `backend-xla`), else the native MLP head. The protocol layer is
+/// model-agnostic, so the experiment shapes survive the substitution —
+/// absolute accuracies differ. If neither is runnable (native-only build
+/// over an XLA-artifact manifest, which lacks `mnist_mlp`), the CNN is
+/// returned so the resulting error carries the backend-xla guidance.
+pub fn image_model(rt: &Runtime) -> &'static str {
+    for name in ["mnist_cnn", "mnist_mlp"] {
+        if rt.supports_model(name) {
+            return name;
+        }
+    }
+    "mnist_cnn"
+}
+
 /// Paper-shape assertion helpers used by benches and tests: find a result
 /// by protocol-name prefix.
 pub fn by_prefix<'r>(results: &'r [RunResult], prefix: &str) -> Option<&'r RunResult> {

@@ -40,7 +40,7 @@ pub fn specs() -> Vec<ProtocolSpec> {
 pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
     // paper: m=100, 1400 rounds of B=10
     let (m, rounds) = scale.size(100, 1400);
-    let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+    let mut cfg = SimConfig::new(super::common::image_model(rt), "sgd", m, rounds, 0.1);
     cfg.seed = seed;
     cfg.final_eval = true;
     let harness = Harness::new(rt, cfg, Dataset::MnistLike, "fig5_1");

@@ -38,7 +38,7 @@ pub fn specs() -> Vec<ProtocolSpec> {
 
 pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
     let (m, rounds) = scale.size(30, 800);
-    let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+    let mut cfg = SimConfig::new(super::common::image_model(rt), "sgd", m, rounds, 0.1);
     cfg.seed = seed;
     cfg.final_eval = true;
     let harness = Harness::new(rt, cfg, Dataset::MnistLike, "fig5_2");

@@ -46,7 +46,7 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<ScaleOutRow>> {
     };
     let mut rows = Vec::new();
     for (m, rounds) in ms {
-        let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+        let mut cfg = SimConfig::new(super::common::image_model(rt), "sgd", m, rounds, 0.1);
         cfg.seed = seed;
         cfg.final_eval = true;
         let harness = Harness::new(rt, cfg, Dataset::MnistLike, &format!("fig6_1/m{m}"));

@@ -39,7 +39,7 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64, dynamic: bool) -> Result<Vec<H
     let mut baseline: Option<f64> = None;
     for &eps in &eps_grid {
         for &period in &periods {
-            let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+            let mut cfg = SimConfig::new(super::common::image_model(rt), "sgd", m, rounds, 0.1);
             cfg.seed = seed;
             cfg.final_eval = true;
             cfg.init = if eps == 0.0 {

@@ -14,7 +14,7 @@ use super::common::{Dataset, Harness, Scale};
 
 pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
     let (m, rounds) = scale.size(100, 2800); // paper: 40 epochs
-    let mut cfg = SimConfig::new("mnist_cnn", "sgd", m, rounds, 0.1);
+    let mut cfg = SimConfig::new(super::common::image_model(rt), "sgd", m, rounds, 0.1);
     cfg.seed = seed;
     let harness = Harness::new(rt, cfg, Dataset::MnistLike, "figA_1");
     let specs = vec![

@@ -20,7 +20,7 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<(String, Summary
         ("adam", 0.002, 30.0),
         ("rmsprop", 0.002, 30.0),
     ] {
-        let mut cfg = SimConfig::new("mnist_cnn", opt, m, rounds, lr);
+        let mut cfg = SimConfig::new(super::common::image_model(rt), opt, m, rounds, lr);
         cfg.seed = seed;
         cfg.final_eval = true;
         let harness = Harness::new(rt, cfg, Dataset::MnistLike, &format!("figA_6/{opt}"));

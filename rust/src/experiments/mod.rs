@@ -13,7 +13,7 @@ pub mod fig6_2;
 pub mod fig_a1;
 pub mod fig_a6;
 
-pub use common::{Dataset, Harness, Scale};
+pub use common::{image_model, Dataset, Harness, Scale};
 
 use anyhow::Result;
 

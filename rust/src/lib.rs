@@ -15,13 +15,17 @@
 //! - **L1 (python/compile/kernels)** — Pallas kernels for the compute
 //!   hot-spots (tiled matmul, im2col conv, fused attention).
 //!
-//! Python never runs on the training path: the rust binary executes the
-//! AOT artifacts through the PJRT CPU client (`xla` crate).
+//! Execution goes through a pluggable [`runtime::Backend`]: the default
+//! **native** backend interprets the manifest's dense-stack models in pure
+//! Rust (hermetic — no Python, no XLA, no artifacts; this is what CI and
+//! `cargo test` run), while the `backend-xla` feature compiles the PJRT
+//! CPU client for the conv/attention AOT artifacts. Python never runs on
+//! the training path either way. See README.md "Execution backends".
 //!
-//! ## Quickstart
+//! ## Quickstart (hermetic)
 //! ```text
-//! make artifacts && cargo build --release
-//! ./target/release/dynavg exp fig5_1 --scale small
+//! cargo build --release
+//! ./target/release/dynavg exp fig5_4 --scale small
 //! cargo run --release --example quickstart
 //! ```
 

@@ -67,7 +67,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         harness.run_all(&cfg.protocols, cfg.with_serial)?;
         return Ok(());
     }
-    let model = args.get_str("model", "mnist_cnn");
+    let model = args.get_str("model", "drift_mlp");
     let optimizer = args.get_str("optimizer", "sgd");
     let spec = ProtocolSpec::parse(&args.get_str("protocol", "dynamic:0.7:10"))?;
     let m = args.get_usize("m", 10);
@@ -75,7 +75,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let lr = args.get_f64("lr", 0.1) as f32;
     let seed = args.get_usize("seed", 42) as u64;
     let dataset = match model.as_str() {
-        "mnist_cnn" => experiments::Dataset::MnistLike,
+        "mnist_cnn" | "mnist_logistic" | "mnist_mlp" => experiments::Dataset::MnistLike,
         "drift_mlp" => experiments::Dataset::Graphical,
         "driving_cnn" => experiments::Dataset::Driving { regional: false },
         "transformer_lm" => experiments::Dataset::Corpus { window: 65 },
@@ -96,7 +96,7 @@ fn cmd_list() -> Result<()> {
         println!("  {id:<10} {desc}");
     }
     if let Ok(rt) = Runtime::new(dynavg::artifacts_dir()) {
-        println!("\nartifacts:");
+        println!("\nartifacts ({} backend):", rt.backend_name());
         for (name, a) in &rt.manifest.artifacts {
             println!(
                 "  {name:<28} kind={:<6} model={:<15} B={:<4} P={}",
@@ -104,13 +104,14 @@ fn cmd_list() -> Result<()> {
             );
         }
     } else {
-        println!("\n(no artifacts — run `make artifacts`)");
+        println!("\n(manifest unreadable — re-run `make artifacts`)");
     }
     Ok(())
 }
 
 fn cmd_info() -> Result<()> {
     let rt = Runtime::new(dynavg::artifacts_dir())?;
+    println!("backend: {}", rt.backend_name());
     println!("artifacts dir: {:?}", dynavg::artifacts_dir());
     println!("manifest seed: {}", rt.manifest.seed);
     println!("models:");

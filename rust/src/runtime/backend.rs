@@ -1,0 +1,114 @@
+//! Execution-backend abstraction.
+//!
+//! The protocol layer treats the learning algorithm φ as a black box that
+//! maps (params, opt_state, batch, lr) to updated flat `f32` vectors —
+//! exactly the stance the paper takes. This module pins that black box
+//! down as two object-safe traits:
+//!
+//! - [`Backend`]: an execution substrate that can compile the manifest's
+//!   artifacts and produce initial parameter vectors. Implementations:
+//!   [`crate::runtime::NativeBackend`] (pure Rust, always available) and
+//!   `XlaBackend` (PJRT/XLA, behind the `backend-xla` cargo feature).
+//! - [`Kernel`]: one compiled artifact, executable from many threads.
+//!
+//! Backends must be *safely* `Send + Sync` — the simulation engine drives
+//! per-learner train steps from a scoped thread pool. The native backend
+//! derives this structurally; the XLA backend carries the (feature-gated)
+//! `unsafe impl`s with their safety argument next to them.
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactInfo, Manifest};
+
+/// Input tensor for one execute call, backend-independent.
+pub enum Input<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// Backend-specific compiled form of one artifact.
+///
+/// `run` must be callable concurrently from many threads (the engine's
+/// per-learner workers share one `Arc<Executable>`).
+pub trait Kernel: Send + Sync {
+    /// Execute the artifact. Inputs follow the lowered signature order of
+    /// the artifact kind (see `runtime::step`); returns the flattened f32
+    /// contents of each tuple output.
+    fn run(&self, info: &ArtifactInfo, inputs: &[Input]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// An execution substrate: compiles artifacts, provides initial models.
+pub trait Backend: Send + Sync {
+    /// Short identifier, e.g. `"native"` or `"xla"`.
+    fn name(&self) -> &'static str;
+
+    /// Compile/load one artifact into an executable kernel.
+    fn compile(&self, manifest: &Manifest, info: &ArtifactInfo) -> Result<Box<dyn Kernel>>;
+
+    /// Can this backend execute the given model? Callers use this to pick
+    /// between equivalent models (e.g. CNN vs MLP head) before compiling;
+    /// the default says yes to everything in the manifest (the artifact
+    /// backend executes whatever was lowered).
+    fn supports(&self, _model: &super::manifest::ModelInfo) -> bool {
+        true
+    }
+
+    /// Initial (Glorot) flat parameter vector for a model. The default
+    /// reads the manifest's `init_bin` blob (the AOT-artifact contract);
+    /// backends with no on-disk artifacts override this.
+    fn init_params(&self, manifest: &Manifest, model: &str) -> Result<Vec<f32>> {
+        manifest_init_params(manifest, model)
+    }
+
+    /// Per-element init scales (heterogeneous initialization, Fig 6.2).
+    fn init_scales(&self, manifest: &Manifest, model: &str) -> Result<Vec<f32>> {
+        manifest_init_scales(manifest, model)
+    }
+}
+
+/// Load a model's init vector from the manifest's `init_bin` blob.
+pub fn manifest_init_params(manifest: &Manifest, model: &str) -> Result<Vec<f32>> {
+    let info = manifest.model(model)?;
+    let v = super::manifest::load_f32_bin(&info.init_bin)
+        .with_context(|| format!("loading init vector for {model}"))?;
+    anyhow::ensure!(
+        v.len() == info.param_count,
+        "init bin length {} != param_count {}",
+        v.len(),
+        info.param_count
+    );
+    Ok(v)
+}
+
+/// Load a model's init scales from the manifest's `scales_bin` blob.
+pub fn manifest_init_scales(manifest: &Manifest, model: &str) -> Result<Vec<f32>> {
+    let info = manifest.model(model)?;
+    let v = super::manifest::load_f32_bin(&info.scales_bin)
+        .with_context(|| format!("loading init scales for {model}"))?;
+    anyhow::ensure!(
+        v.len() == info.param_count,
+        "scales bin length {} != param_count {}",
+        v.len(),
+        info.param_count
+    );
+    Ok(v)
+}
+
+/// A compiled executable plus the metadata needed to drive it. This is the
+/// concrete type the rest of the crate holds (`Arc<Executable>`); the
+/// backend specifics live behind the boxed [`Kernel`].
+pub struct Executable {
+    pub info: ArtifactInfo,
+    kernel: Box<dyn Kernel>,
+}
+
+impl Executable {
+    pub fn new(info: ArtifactInfo, kernel: Box<dyn Kernel>) -> Executable {
+        Executable { info, kernel }
+    }
+
+    /// Run the artifact. Inputs must match the lowered signature order.
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        self.kernel.run(&self.info, inputs)
+    }
+}

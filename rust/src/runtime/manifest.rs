@@ -1,5 +1,10 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` (which
-//! writes `artifacts/manifest.json`) and the rust runtime (which loads it).
+//! Artifact manifest: the model/artifact catalogue the runtime executes.
+//!
+//! Two producers share this contract: `python/compile/aot.py` writes
+//! `artifacts/manifest.json` for the XLA backend, and
+//! `runtime::native::synthetic_manifest` constructs one in memory for the
+//! hermetic native backend (no files involved; its `*_bin`/`hlo` paths are
+//! placeholders that are never read).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -1,18 +1,137 @@
-//! L3 runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! and executes them on the PJRT CPU client (xla crate).
+//! L3 runtime: executes train/eval/infer steps on flat `f32` parameter
+//! vectors through a pluggable [`Backend`]:
 //!
-//! Python never runs at request time: `make artifacts` is the only python
-//! invocation; after that the rust binary is self-contained.
+//! - **native** (default, always compiled): pure-Rust interpreter for the
+//!   manifest's dense-stack models with in-crate SGD/ADAM/RMSprop — no
+//!   Python, no XLA, no artifact files. A synthetic manifest makes the
+//!   whole stack hermetic (see [`native::synthetic_manifest`]).
+//! - **xla** (cargo feature `backend-xla`): the PJRT CPU client executing
+//!   the AOT artifacts produced by `python/compile/aot.py` via
+//!   `make artifacts`. Python never runs at request time.
+//!
+//! [`Runtime::new`] picks a backend for an artifacts directory (feature
+//! and `DYNAVG_BACKEND` aware) and falls back to the hermetic synthetic
+//! manifest when no artifacts exist, so every call site works on a clean
+//! machine.
 
-pub mod client;
+pub mod backend;
 pub mod manifest;
+pub mod native;
 pub mod step;
+#[cfg(feature = "backend-xla")]
+pub mod xla;
 
-pub use client::{Executable, Input, Runtime};
+pub use backend::{Backend, Executable, Input, Kernel};
 pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo};
+pub use native::NativeBackend;
 pub use step::{Batch, EvalStep, InferStep, StepStats, TrainStep};
 
-use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+/// One manifest + one backend + a lazily-populated executable cache.
+///
+/// Shared by reference across the engine's worker threads; `Send + Sync`
+/// is structural (the `Backend` trait requires it — no `unsafe` here).
+pub struct Runtime {
+    pub manifest: Manifest,
+    backend: Box<dyn Backend>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory with the best available backend.
+    ///
+    /// - If `dir/manifest.json` exists, it is loaded and executed on the
+    ///   XLA backend when the `backend-xla` feature is enabled, else on
+    ///   the native interpreter (which supports its dense-stack models).
+    /// - If it does not exist, the hermetic synthetic manifest runs on
+    ///   the native backend — no files needed.
+    ///
+    /// `DYNAVG_BACKEND=native` forces the native interpreter even when
+    /// the XLA feature is compiled in.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref();
+        if !dir.join("manifest.json").is_file() {
+            return Ok(Runtime::native());
+        }
+        let manifest = Manifest::load(dir)?;
+        let backend = default_backend()?;
+        Ok(Runtime::with_backend(manifest, backend))
+    }
+
+    /// The hermetic runtime: synthetic in-crate manifest, native backend.
+    pub fn native() -> Runtime {
+        Runtime::with_backend(native::synthetic_manifest(), Box::new(NativeBackend))
+    }
+
+    /// Pair an explicit manifest with an explicit backend.
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Runtime {
+        Runtime {
+            manifest,
+            backend,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Which backend this runtime executes on (`"native"` / `"xla"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Is `model` both present in the manifest and executable by this
+    /// runtime's backend? (Membership alone is not enough: a native-only
+    /// build over XLA artifacts has conv/attention models it cannot run.)
+    pub fn supports_model(&self, model: &str) -> bool {
+        self.manifest
+            .models
+            .get(model)
+            .is_some_and(|info| self.backend.supports(info))
+    }
+
+    /// Load + compile an artifact (cached). The cache lock is held across
+    /// compilation, deduplicating concurrent loads of the same artifact.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let kernel = self
+            .backend
+            .compile(&self.manifest, &info)
+            .with_context(|| format!("compiling {name} on the {} backend", self.backend.name()))?;
+        let arc = Arc::new(Executable::new(info, kernel));
+        cache.insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Initial (Glorot) flat parameter vector for a model.
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        self.backend.init_params(&self.manifest, model)
+    }
+
+    /// Per-element init scales (for heterogeneous initialization, Fig 6.2).
+    pub fn init_scales(&self, model: &str) -> Result<Vec<f32>> {
+        self.backend.init_scales(&self.manifest, model)
+    }
+}
+
+#[cfg(feature = "backend-xla")]
+fn default_backend() -> Result<Box<dyn Backend>> {
+    if std::env::var("DYNAVG_BACKEND").as_deref() == Ok("native") {
+        return Ok(Box::new(NativeBackend));
+    }
+    Ok(Box::new(xla::XlaBackend::new()?))
+}
+
+#[cfg(not(feature = "backend-xla"))]
+fn default_backend() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend))
+}
 
 /// Convenience: the typed train/eval/infer wrappers for one model.
 pub struct ModelRuntime {
@@ -45,5 +164,53 @@ impl ModelRuntime {
             eval,
             infer,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hermetic_runtime_loads_and_caches_artifacts() {
+        let rt = Runtime::native();
+        assert_eq!(rt.backend_name(), "native");
+        let a = rt.load("drift_mlp_sgd_train").unwrap();
+        let b = rt.load("drift_mlp_sgd_train").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load hits the cache");
+        assert!(rt.load("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn runtime_new_falls_back_to_synthetic_manifest() {
+        let rt = Runtime::new("/definitely/not/a/real/dir").unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        assert!(rt.manifest.models.contains_key("drift_mlp"));
+    }
+
+    #[test]
+    fn supports_model_requires_backend_capability() {
+        let rt = Runtime::native();
+        assert!(rt.supports_model("drift_mlp"));
+        assert!(!rt.supports_model("mnist_cnn"), "absent from manifest");
+        // present in the manifest but not a dense stack -> unsupported
+        let mut manifest = native::synthetic_manifest();
+        let mut conv = manifest.models.get("drift_mlp").unwrap().clone();
+        conv.name = "convnet".to_string();
+        conv.tensors = vec![("conv1.w".to_string(), vec![3, 3, 1, 8])];
+        manifest.models.insert("convnet".to_string(), conv);
+        let rt = Runtime::with_backend(manifest, Box::new(NativeBackend));
+        assert!(!rt.supports_model("convnet"));
+        assert!(rt.supports_model("drift_mlp"));
+    }
+
+    #[test]
+    fn model_runtime_exposes_train_eval_infer() {
+        let rt = Runtime::native();
+        let mrt = ModelRuntime::load(&rt, "mnist_logistic", "sgd").unwrap();
+        assert_eq!(mrt.train.exe.info.batch, native::TRAIN_BATCH);
+        assert!(mrt.eval.is_some());
+        assert!(mrt.infer.is_some());
+        assert_eq!(mrt.model.param_count, 7850);
     }
 }

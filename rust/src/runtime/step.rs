@@ -1,13 +1,14 @@
 //! Typed wrappers over the artifact signatures (train / eval / infer).
 //!
-//! These own the literal packing for the three artifact kinds so the rest
-//! of L3 never touches xla types directly.
+//! These own the input packing for the three artifact kinds so the rest
+//! of L3 never touches backend types directly — the same wrappers drive
+//! the native interpreter and the PJRT executables.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::client::{Executable, Input};
+use super::backend::{Executable, Input};
 use super::manifest::Dtype;
 
 /// Mini-batch of training data in the layout the artifact expects.
@@ -86,12 +87,14 @@ impl TrainStep {
             _ => anyhow::bail!("batch dtype does not match artifact"),
         };
         anyhow::ensure!(outs.len() == 4, "train artifact must return 4 outputs");
-        *params = outs[0].clone();
-        *opt_state = outs[1].clone();
-        Ok(StepStats {
-            loss: outs[2][0],
-            metric: outs[3][0],
-        })
+        // move the new params/state out of the owned outputs — no O(P)
+        // copies on the per-learner hot path
+        let mut outs = outs.into_iter();
+        *params = outs.next().unwrap();
+        *opt_state = outs.next().unwrap();
+        let loss = outs.next().unwrap()[0];
+        let metric = outs.next().unwrap()[0];
+        Ok(StepStats { loss, metric })
     }
 }
 

@@ -1,0 +1,126 @@
+//! PJRT/XLA backend (cargo feature `backend-xla`): load AOT HLO-text
+//! artifacts, compile once, execute many.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: HLO *text* is the
+//! interchange format (jax >= 0.5 emits 64-bit instruction ids in protos
+//! which xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! This module is the only place in the crate that touches the `xla` crate
+//! and the only place with `unsafe` code; the two `unsafe impl`s below
+//! carry their safety arguments next to them. The default build never
+//! compiles any of this — see `runtime/native.rs` for the hermetic path.
+
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, Input, Kernel};
+use super::manifest::{ArtifactInfo, Manifest};
+
+/// One compiled PJRT executable.
+struct XlaKernel {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: `xla::PjRtLoadedExecutable` wraps a C++ PjRtLoadedExecutable; the
+// PJRT CPU client documents `Execute` as thread-safe (each call builds its
+// own input buffers and output streams). The crate does not mark the
+// wrapper `Send`/`Sync` only because it holds a raw pointer. The simulation
+// engine relies on concurrent `run` calls from the per-learner worker
+// threads, which is exactly the supported PJRT usage. These impls are
+// feature-gated with the backend: the default (native) build contains no
+// `unsafe` at all.
+unsafe impl Send for XlaKernel {}
+unsafe impl Sync for XlaKernel {}
+
+impl Kernel for XlaKernel {
+    fn run(&self, info: &ArtifactInfo, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let literals = literals(inputs)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", info.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+/// Pack the backend-independent inputs into XLA literals. Scalars (f32[]
+/// arguments such as the learning rate) are signalled by an empty shape.
+fn literals(inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+    inputs
+        .iter()
+        .map(|inp| match inp {
+            Input::F32(data, shape) => {
+                if shape.is_empty() {
+                    anyhow::ensure!(data.len() == 1, "scalar input must have length 1");
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                let lit = xla::Literal::vec1(data);
+                if shape.len() == 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).context("reshaping f32 input")
+                }
+            }
+            Input::I32(data, shape) => {
+                let lit = xla::Literal::vec1(data);
+                if shape.len() == 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).context("reshaping i32 input")
+                }
+            }
+        })
+        .collect()
+}
+
+/// The PJRT CPU backend: one client, compilation serialized by a mutex.
+pub struct XlaBackend {
+    client: Mutex<xla::PjRtClient>,
+}
+
+// SAFETY: `xla::PjRtClient` holds an `Rc` handle, so the compiler cannot
+// derive `Send`/`Sync`. All client access (compilation) goes through the
+// `Mutex` above — `compile` is the only method touching it — and compiled
+// executables are returned as independently thread-safe kernels (see
+// `XlaKernel` above). The `Rc` is never cloned out of the mutex, so the
+// non-atomic refcount is only ever touched by one thread at a time.
+unsafe impl Send for XlaBackend {}
+unsafe impl Sync for XlaBackend {}
+
+impl XlaBackend {
+    pub fn new() -> Result<XlaBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaBackend {
+            client: Mutex::new(client),
+        })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn compile(&self, _manifest: &Manifest, info: &ArtifactInfo) -> Result<Box<dyn Kernel>> {
+        let proto = xla::HloModuleProto::from_text_file(
+            info.hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", info.hlo_path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let client = self.client.lock().unwrap();
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", info.name))?;
+        Ok(Box::new(XlaKernel { exe }))
+    }
+}

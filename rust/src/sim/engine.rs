@@ -1,4 +1,9 @@
 //! Round-synchronous simulation engine for Π = (φ, σ).
+//!
+//! The engine is backend-agnostic: φ is whatever the runtime's
+//! [`crate::runtime::Backend`] executes (the native interpreter by
+//! default, PJRT artifacts under `backend-xla`), so the same protocol
+//! code drives both substrates.
 
 
 use anyhow::Result;
@@ -108,14 +113,14 @@ impl<'a> Engine<'a> {
     }
 
     /// Run protocol σ (spec) with learning algorithm φ (the train artifact).
+    ///
+    /// Algorithm 1 init note: the dynamic protocols adopt learner 0's
+    /// model as the reference r on their first check, which equals the
+    /// common initial model under homogeneous init (and "one random f^i"
+    /// under heterogeneous init, matching the paper's setup).
     pub fn run(&self, spec: &ProtocolSpec, streams: &StreamFactory) -> Result<RunResult> {
         let mut protocol = spec.build();
         let mut learners = self.build_learners(streams)?;
-        // Algorithm 1 init: reference vector <- the common initial model.
-        if let InitPolicy::Homogeneous = self.cfg.init {
-            // (heterogeneous runs leave r = first learner's model, set on
-            //  first check — matching "one random f" only in the hom. case)
-        }
         self.run_with(&mut *protocol, &mut learners)
     }
 

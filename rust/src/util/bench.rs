@@ -1,8 +1,22 @@
 //! Timing harness for `cargo bench` (substrate — criterion is unavailable
 //! offline). Benches are `harness = false` binaries using this module:
 //! warmup, repeated timed runs, median/mean/min reporting.
+//!
+//! CI integration: `cargo bench -- --smoke` (or `--test`, or
+//! `BENCH_SMOKE=1`) runs each bench with a minimal iteration budget as a
+//! correctness smoke; setting `BENCH_JSON=<path>` appends one JSON object
+//! per result to that file (JSON lines), which CI uploads as the
+//! `BENCH_*.json` trajectory artifact.
 
+use std::io::Write;
 use std::time::Instant;
+
+/// True when the bench binaries should run with a minimal budget
+/// (`--smoke` / `--test` argument, or `BENCH_SMOKE=1`).
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke" || a == "--test")
+        || std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
 
 pub struct BenchResult {
     pub name: String,
@@ -45,11 +59,17 @@ pub fn header() {
 }
 
 /// Time `f` for at least `min_iters` iterations / `min_total_ms` total.
+/// In smoke mode the time budget drops to zero and `min_iters` is capped,
+/// so `cargo bench -- --smoke` is a fast correctness pass.
 pub fn bench(name: &str, min_iters: usize, mut f: impl FnMut()) -> BenchResult {
     // warmup
     f();
+    let (min_iters, budget) = if smoke() {
+        (min_iters.clamp(1, 3), std::time::Duration::ZERO)
+    } else {
+        (min_iters, std::time::Duration::from_millis(500))
+    };
     let mut samples = Vec::new();
-    let budget = std::time::Duration::from_millis(500);
     let start = Instant::now();
     while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 10_000) {
         let t0 = Instant::now();
@@ -66,7 +86,23 @@ pub fn bench(name: &str, min_iters: usize, mut f: impl FnMut()) -> BenchResult {
         min_ns: samples[0],
     };
     result.report();
+    append_json(&result);
     result
+}
+
+/// Append one JSON-lines record to `$BENCH_JSON` (no-op when unset).
+fn append_json(r: &BenchResult) {
+    let Ok(path) = std::env::var("BENCH_JSON") else {
+        return;
+    };
+    let line = format!(
+        "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\"median_ns\":{:.1},\"min_ns\":{:.1}}}\n",
+        r.name, r.iters, r.mean_ns, r.median_ns, r.min_ns
+    );
+    let file = std::fs::OpenOptions::new().create(true).append(true).open(&path);
+    if let Ok(mut file) = file {
+        let _ = file.write_all(line.as_bytes());
+    }
 }
 
 /// Prevent the optimizer from discarding a value.

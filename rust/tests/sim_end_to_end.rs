@@ -1,5 +1,10 @@
-//! End-to-end simulation tests: the engine + protocols + real AOT compute,
-//! asserting the paper's qualitative shapes at tiny scale.
+//! End-to-end simulation tests: the engine + protocols + real train-step
+//! compute, asserting the paper's qualitative shapes at tiny scale.
+//!
+//! Hermetic: runs on the native backend's `drift_mlp` (the same
+//! 50-64-32-2 architecture the python side lowers) over the graphical
+//! concept-drift stream. With `--features backend-xla` and artifacts
+//! present, the identical assertions run against the AOT compute instead.
 
 use std::sync::OnceLock;
 
@@ -12,9 +17,7 @@ use dynavg::sim::SimConfig;
 
 fn rt() -> &'static Runtime {
     static RT: OnceLock<Runtime> = OnceLock::new();
-    RT.get_or_init(|| {
-        Runtime::new(dynavg::artifacts_dir()).expect("run `make artifacts` first")
-    })
+    RT.get_or_init(|| Runtime::new(dynavg::artifacts_dir()).expect("runtime"))
 }
 
 fn base_cfg(rounds: u64) -> SimConfig {

@@ -1,0 +1,228 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment for this repository is hermetic: crates.io is not
+//! reachable (see `util/rng.rs` / `util/json.rs` in the main crate, which
+//! hand-roll their substrates for the same reason). The crate's error
+//! handling was written against anyhow's interface, so this path dependency
+//! provides the slice of it that `dynavg` uses:
+//!
+//! - [`Error`]: an opaque error value carrying a chain of context messages;
+//! - [`Result<T>`] alias with `Error` as the default error type;
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! - the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Swapping in the real crate is a one-line change in `rust/Cargo.toml`
+//! (replace the `path` dependency with a registry version); nothing in the
+//! main crate would have to change.
+
+use std::fmt;
+
+/// An error chain: `chain[0]` is the most recent (outermost) context
+/// message, the rest are the messages of the causes, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context message (the anyhow `.context(..)` semantics).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages of this error and its causes, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain on one line, as anyhow renders it
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into an [`Error`], capturing its source chain.
+/// (Like anyhow, `Error` itself does not implement `std::error::Error`, so
+/// this blanket impl does not overlap the reflexive `From<Error>`.)
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait providing `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            e.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            e.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (captures like `format!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: no such file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("wat").is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening: no such file");
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too large: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too large: 101");
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+    }
+
+    #[test]
+    fn debug_renders_cause_list() {
+        let e: Error = io_err().into();
+        let e = e.context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("no such file"));
+    }
+}
