@@ -2,7 +2,7 @@
 # and must pass hermetically (no Python, no XLA, no artifacts, default
 # features — the native backend).
 
-.PHONY: verify build test fmt clippy bench-smoke ci artifacts
+.PHONY: verify build test fmt clippy xla-check bench-smoke ci artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -19,10 +19,16 @@ fmt:
 clippy:
 	cargo clippy --all-targets -- -D warnings
 
+# Typecheck the feature-gated XLA backend against the vendored API stub
+# (rust/vendor/xla-stub) so refactors cannot silently break it. `-p` is
+# required: --features is rejected at the root of a virtual workspace.
+xla-check:
+	cargo clippy -p dynavg --all-targets --features backend-xla -- -D warnings
+
 bench-smoke:
 	BENCH_JSON=$(CURDIR)/BENCH_smoke.json cargo bench -- --smoke
 
-ci: fmt clippy verify bench-smoke
+ci: fmt clippy xla-check verify bench-smoke
 
 # XLA artifact build (requires python + jax; NOT needed for tier-1).
 # Produces artifacts/manifest.json + HLO text for the conv/attention

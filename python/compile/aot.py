@@ -166,6 +166,10 @@ def main():
             "tensors": [
                 {"name": n, "shape": list(s)} for (n, s, _, _) in model.spec.entries
             ],
+            # explicit layer-op list: lets the rust *native* backend
+            # interpret this model too (runtime/tensor/graph.rs); omitted
+            # for models outside its op vocabulary (attention)
+            **({"ops": model.ops} if model.ops else {}),
         }
         print(f"model {mname}: P={model.spec.total}")
 

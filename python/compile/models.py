@@ -49,6 +49,19 @@ class Model:
         self.y_shape = tuple(y_shape)
         self.y_dtype = y_dtype
         self.metric = metric
+        # Layer-op list mirroring ``apply`` for the manifest ("ops" key):
+        # lets the rust native backend compile the model into a kernel
+        # plan (runtime/tensor/graph.rs). Empty = not expressible in the
+        # {dense, conv2d, maxpool2, flatten} vocabulary (e.g. attention).
+        self.ops: list[dict] = []
+
+    @staticmethod
+    def _dense(act=None):
+        return {"op": "dense", "act": act or "linear"}
+
+    @staticmethod
+    def _conv2d(stride, act=None):
+        return {"op": "conv2d", "stride": stride, "act": act or "linear"}
 
     def loss(self, params, x, y):  # pragma: no cover - overridden
         raise NotImplementedError
@@ -75,6 +88,7 @@ class DriftMlp(Model):
             "drift_mlp", fl.ParamSpec(entries), (self.D,), "f32",
             (self.CLASSES,), "f32", "accuracy",
         )
+        self.ops = [self._dense("relu"), self._dense("relu"), self._dense()]
 
     def apply(self, p, x):
         w0, b0, w1, b1, w2, b2 = p
@@ -105,6 +119,14 @@ class MnistCnn(Model):
             "mnist_cnn", fl.ParamSpec(entries), (28, 28, 1), "f32",
             (10,), "f32", "accuracy",
         )
+        self.ops = [
+            self._conv2d(1, "relu"),
+            self._conv2d(1, "relu"),
+            {"op": "maxpool2"},
+            {"op": "flatten"},
+            self._dense("relu"),
+            self._dense(),
+        ]
 
     def apply(self, p, x):
         cw1, cb1, cw2, cb2, fw1, fb1, fw2, fb2 = p
@@ -142,6 +164,15 @@ class DrivingCnn(Model):
             "driving_cnn", fl.ParamSpec(entries), (self.H, self.W, 1), "f32",
             (1,), "f32", "mse",
         )
+        self.ops = [
+            self._conv2d(2, "relu"),
+            self._conv2d(2, "relu"),
+            self._conv2d(1, "relu"),
+            {"op": "flatten"},
+            self._dense("relu"),
+            self._dense("relu"),
+            self._dense("tanh"),
+        ]
 
     def apply(self, p, x):
         cw1, cb1, cw2, cb2, cw3, cb3, fw1, fb1, fw2, fb2, fw3, fb3 = p

@@ -1,0 +1,622 @@
+"""Numpy mirror of the rust native backend + averaging protocols.
+
+Threshold-validation harness (no jax, numpy only): mirrors, operation for
+operation, the pieces of the rust crate that the hermetic tier-1 tests
+depend on numerically —
+
+- ``util/rng.rs``          (xoshiro256** + SplitMix64 + Box-Muller, exact
+                            integer semantics, f64 floats)
+- ``data/synth_mnist.rs``  (blob-prototype MNIST-like stream)
+- ``runtime/native.rs``    Glorot init (FNV-1a name hash, draw order)
+- ``runtime/tensor/``      layer-graph forward/backward for the dense and
+                            conv ops (im2col conv2d, maxpool2 argmax,
+                            relu/tanh, softmax-xent / mse)
+- ``coordinator/``         periodic + dynamic averaging with the exact
+                            byte accounting of ``network/mod.rs``
+
+so that the communication-reduction and accuracy thresholds asserted in
+``rust/tests/native_backend.rs`` can be validated (across seeds, with
+margin) before they are baked into the rust tests. The mirror uses f64
+where rust uses f32, so trajectories drift from the binary over hundreds
+of steps — thresholds must hold with a comfortable margin, not at 1.01x.
+
+Usage:
+    python3 -m python.tools.native_mirror cnn_protocol --seed 2024
+    python3 -m python.tools.native_mirror logistic_protocol --seed 2024
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+
+
+def _splitmix64(state: int) -> tuple[int, int]:
+    state = (state + 0x9E3779B97F4A7C15) & M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    """Exact mirror of util/rng.rs (xoshiro256**)."""
+
+    def __init__(self, seed: int):
+        sm = seed & M64
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+        self.spare: float | None = None
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range(self, lo: float, hi: float) -> float:
+        return lo + self.uniform() * (hi - lo)
+
+    def below(self, n: int) -> int:
+        return int(self.uniform() * n) % n
+
+    def normal(self) -> float:
+        if self.spare is not None:
+            v, self.spare = self.spare, None
+            return v
+        while True:
+            u1 = self.uniform()
+            if u1 <= np.finfo(np.float64).eps:
+                continue
+            u2 = self.uniform()
+            r = np.sqrt(-2.0 * np.log(u1))
+            th = 2.0 * np.pi * u2
+            self.spare = r * np.sin(th)
+            return r * np.cos(th)
+
+
+def fnv1a(name: str) -> int:
+    h = 0xCBF29CE484222325
+    for b in name.encode():
+        h = ((h ^ b) * 0x100000001B3) & M64
+    return h
+
+
+# ----------------------------------------------------------- mnist stream
+SIDE, CLASSES, BLOBS = 28, 10, 5
+
+
+class MnistLike:
+    """Mirror of data/synth_mnist.rs."""
+
+    def __init__(self, concept_seed: int, stream_seed: int):
+        self.blobs = self._prototypes(concept_seed)
+        self.noise = 0.15
+        self.rng = Rng(stream_seed ^ 0xD1A5)
+
+    @staticmethod
+    def _prototypes(concept_seed: int):
+        protos = []
+        for c in range(CLASSES):
+            rng = Rng((concept_seed * 1009 + c) & M64)
+            blobs = []
+            for _ in range(BLOBS):
+                blobs.append(
+                    (
+                        rng.range(6.0, 22.0),
+                        rng.range(6.0, 22.0),
+                        rng.range(1.5, 4.5),
+                        rng.range(1.5, 4.5),
+                        rng.range(0.6, 1.0),
+                    )
+                )
+            protos.append(blobs)
+        return protos
+
+    def render(self, c: int) -> np.ndarray:
+        dx = self.rng.range(-2.0, 2.0)
+        dy = self.rng.range(-2.0, 2.0)
+        jitter = [1.0 + 0.2 * self.rng.normal() for _ in range(BLOBS)]
+        img = np.zeros((SIDE, SIDE), np.float64)
+        ys, xs = np.mgrid[0:SIDE, 0:SIDE]
+        for (cx, cy, sx, sy, amp), j in zip(self.blobs[c], jitter):
+            ux = (xs - (cx + dx)) / sx
+            uy = (ys - (cy + dy)) / sy
+            img += amp * j * np.exp(-(ux * ux + uy * uy) / 2.0)
+        # pixel noise consumes one normal per pixel in row-major order
+        noise = np.array(
+            [self.rng.normal() for _ in range(SIDE * SIDE)], np.float64
+        ).reshape(SIDE, SIDE)
+        return np.clip(img + self.noise * noise, 0.0, 1.5)
+
+    def batch(self, b: int):
+        x = np.zeros((b, SIDE, SIDE, 1), np.float32)
+        y = np.zeros((b, CLASSES), np.float32)
+        for i in range(b):
+            c = self.rng.below(CLASSES)
+            x[i, :, :, 0] = self.render(c)
+            y[i, c] = 1.0
+        return x, y
+
+
+# -------------------------------------------------------------- layer graph
+def glorot_slots(slots, name: str, manifest_seed: int = 42):
+    """Mirror of native.rs glorot(): slots = [(w_len, b_len, fan_in, fan_out)]."""
+    rng = Rng(manifest_seed ^ fnv1a(name))
+    out = []
+    for w_len, b_len, fan_in, fan_out in slots:
+        limit = np.sqrt(6.0 / (fan_in + fan_out))
+        w = np.array([rng.range(-limit, limit) for _ in range(w_len)], np.float32)
+        out.append(w)
+        out.append(np.zeros(b_len, np.float32))
+    return np.concatenate(out)
+
+
+def im2col(x, kh, kw, stride):
+    b, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = np.empty((b, oh, ow, kh * kw * c), x.dtype)
+    for di in range(kh):
+        for dj in range(kw):
+            sl = x[:, di : di + (oh - 1) * stride + 1 : stride,
+                   dj : dj + (ow - 1) * stride + 1 : stride, :]
+            cols[:, :, :, (di * kw + dj) * c : (di * kw + dj + 1) * c] = sl
+    return cols.reshape(b * oh * ow, kh * kw * c), oh, ow
+
+
+def col2im(dp, xshape, kh, kw, stride):
+    b, h, w, c = xshape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    dx = np.zeros(xshape, dp.dtype)
+    dp = dp.reshape(b, oh, ow, kh * kw * c)
+    for di in range(kh):
+        for dj in range(kw):
+            dx[:, di : di + (oh - 1) * stride + 1 : stride,
+               dj : dj + (ow - 1) * stride + 1 : stride, :] += dp[
+                :, :, :, (di * kw + dj) * c : (di * kw + dj + 1) * c
+            ]
+    return dx
+
+
+class MnistCnn:
+    """Mirror of the synthetic-manifest mnist_cnn layer graph."""
+
+    SLOTS = [
+        (3 * 3 * 1 * 8, 8, 9, 72),
+        (3 * 3 * 8 * 16, 16, 72, 144),
+        (2304 * 64, 64, 2304, 64),
+        (64 * 10, 10, 64, 10),
+    ]
+    P = sum(w + b for w, b, _, _ in SLOTS)
+
+    def __init__(self):
+        offs, off = [], 0
+        for w_len, b_len, _, _ in self.SLOTS:
+            offs.append((off, off + w_len, off + w_len + b_len))
+            off += w_len + b_len
+        self.offs = offs
+
+    def unpack(self, p):
+        out = []
+        for w0, b0, end in self.offs:
+            out.append((p[w0:b0], p[b0:end]))
+        return out
+
+    def forward(self, p, x):
+        (w1, b1), (w2, b2), (w3, b3), (w4, b4) = self.unpack(p)
+        acts = {}
+        c1_cols, oh, ow = im2col(x, 3, 3, 1)
+        c1 = np.maximum(c1_cols @ w1.reshape(9, 8) + b1, 0.0).reshape(-1, oh, ow, 8)
+        acts["c1"] = c1
+        c2_cols, oh2, ow2 = im2col(c1, 3, 3, 1)
+        c2 = np.maximum(c2_cols @ w2.reshape(72, 16) + b2, 0.0).reshape(-1, oh2, ow2, 16)
+        acts["c2"] = c2
+        b = c2.shape[0]
+        pooled = c2.reshape(b, 12, 2, 12, 2, 16)
+        pool = pooled.max(axis=(2, 4))
+        acts["pool"] = pool
+        flat = pool.reshape(b, -1)
+        h1 = np.maximum(flat @ w3.reshape(2304, 64) + b3, 0.0)
+        acts["h1"] = h1
+        logits = h1 @ w4.reshape(64, 10) + b4
+        acts["logits"] = logits
+        return acts
+
+    def loss_grad(self, p, x, y, want_grad=True):
+        (w1, b1), (w2, b2), (w3, b3), (w4, b4) = self.unpack(p)
+        acts = self.forward(p, x)
+        logits = acts["logits"]
+        b = logits.shape[0]
+        zmax = logits.max(axis=1, keepdims=True)
+        lse = zmax + np.log(np.exp(logits - zmax).sum(axis=1, keepdims=True))
+        logp = logits - lse
+        loss = float(-(y * logp).sum() / b)
+        acc = float((logits.argmax(1) == y.argmax(1)).mean())
+        if not want_grad:
+            return loss, acc, None
+        delta = (np.exp(logp) - y) / b  # [b,10]
+        g4w = acts["h1"].T @ delta
+        g4b = delta.sum(0)
+        d_h1 = delta @ w4.reshape(64, 10).T
+        d_h1[acts["h1"] <= 0.0] = 0.0
+        flat = acts["pool"].reshape(b, -1)
+        g3w = flat.T @ d_h1
+        g3b = d_h1.sum(0)
+        d_flat = (d_h1 @ w3.reshape(2304, 64).T).reshape(b, 12, 12, 16)
+        # pool backward: route to argmax (first in row-major scan order on
+        # ties, matching the rust argmax scan). Transpose so the two
+        # window axes (dy, dx) are adjacent before flattening them.
+        c2 = acts["c2"]
+        win = c2.reshape(b, 12, 2, 12, 2, 16)
+        mx = win.max(axis=(2, 4), keepdims=True)
+        mask = win == mx
+        grouped = mask.transpose(0, 1, 3, 2, 4, 5).reshape(b, 12, 12, 4, 16)
+        first = np.cumsum(grouped, axis=3) == 1
+        grouped = grouped & first
+        routed = grouped.reshape(b, 12, 12, 2, 2, 16).transpose(0, 1, 3, 2, 4, 5)
+        d_c2 = (routed * d_flat[:, :, None, :, None, :]).reshape(b, 24, 24, 16)
+        d_c2[c2 <= 0.0] = 0.0
+        c1 = acts["c1"]
+        c2_cols, _, _ = im2col(c1, 3, 3, 1)
+        g2w = c2_cols.T @ d_c2.reshape(-1, 16)
+        g2b = d_c2.reshape(-1, 16).sum(0)
+        d_cols = d_c2.reshape(-1, 16) @ w2.reshape(72, 16).T
+        d_c1 = col2im(d_cols, c1.shape, 3, 3, 1)
+        d_c1[c1 <= 0.0] = 0.0
+        c1_cols, _, _ = im2col(x, 3, 3, 1)
+        g1w = c1_cols.T @ d_c1.reshape(-1, 8)
+        g1b = d_c1.reshape(-1, 8).sum(0)
+        grad = np.concatenate(
+            [g1w.ravel(), g1b, g2w.ravel(), g2b, g3w.ravel(), g3b, g4w.ravel(), g4b]
+        ).astype(np.float32)
+        return loss, acc, grad
+
+
+class DrivingCnn:
+    """Mirror of the synthetic-manifest driving_cnn layer graph
+    (32x64 -> conv5s2 -> conv5s2 -> conv3s1 -> fc64 -> fc16 -> fc1 tanh, MSE)."""
+
+    SLOTS = [
+        (5 * 5 * 1 * 8, 8, 25, 200),
+        (5 * 5 * 8 * 12, 12, 200, 300),
+        (3 * 3 * 12 * 16, 16, 108, 144),
+        (528 * 64, 64, 528, 64),
+        (64 * 16, 16, 64, 16),
+        (16 * 1, 1, 16, 1),
+    ]
+    P = sum(w + b for w, b, _, _ in SLOTS)
+
+    def __init__(self):
+        offs, off = [], 0
+        for w_len, b_len, _, _ in self.SLOTS:
+            offs.append((off, off + w_len, off + w_len + b_len))
+            off += w_len + b_len
+        self.offs = offs
+
+    def unpack(self, p):
+        return [(p[w0:b0], p[b0:end]) for w0, b0, end in self.offs]
+
+    def loss_grad(self, p, x, y, want_grad=True):
+        (w1, b1), (w2, b2), (w3, b3), (w4, b4), (w5, b5), (w6, b6) = self.unpack(p)
+        bsz = x.shape[0]
+        c1c, oh1, ow1 = im2col(x, 5, 5, 2)
+        c1 = np.maximum(c1c @ w1.reshape(25, 8) + b1, 0.0).reshape(bsz, oh1, ow1, 8)
+        c2c, oh2, ow2 = im2col(c1, 5, 5, 2)
+        c2 = np.maximum(c2c @ w2.reshape(200, 12) + b2, 0.0).reshape(bsz, oh2, ow2, 12)
+        c3c, oh3, ow3 = im2col(c2, 3, 3, 1)
+        c3 = np.maximum(c3c @ w3.reshape(108, 16) + b3, 0.0).reshape(bsz, oh3, ow3, 16)
+        flat = c3.reshape(bsz, -1)
+        h1 = np.maximum(flat @ w4.reshape(528, 64) + b4, 0.0)
+        h2 = np.maximum(h1 @ w5.reshape(64, 16) + b5, 0.0)
+        out = np.tanh(h2 @ w6.reshape(16, 1) + b6)
+        n = out.size
+        loss = float(((out - y) ** 2).mean())
+        if not want_grad:
+            return loss, loss, None
+        d = 2.0 * (out - y) / n  # dL/d(out)
+        d = d * (1.0 - out * out)  # tanh'
+        g6w = h2.T @ d
+        g6b = d.sum(0)
+        d_h2 = d @ w6.reshape(16, 1).T
+        d_h2[h2 <= 0.0] = 0.0
+        g5w = h1.T @ d_h2
+        g5b = d_h2.sum(0)
+        d_h1 = d_h2 @ w5.reshape(64, 16).T
+        d_h1[h1 <= 0.0] = 0.0
+        g4w = flat.T @ d_h1
+        g4b = d_h1.sum(0)
+        d_c3 = (d_h1 @ w4.reshape(528, 64).T).reshape(c3.shape)
+        d_c3[c3 <= 0.0] = 0.0
+        g3w = c3c.T @ d_c3.reshape(-1, 16)
+        g3b = d_c3.reshape(-1, 16).sum(0)
+        d_c2 = col2im(d_c3.reshape(-1, 16) @ w3.reshape(108, 16).T, c2.shape, 3, 3, 1)
+        d_c2[c2 <= 0.0] = 0.0
+        g2w = c2c.T @ d_c2.reshape(-1, 12)
+        g2b = d_c2.reshape(-1, 12).sum(0)
+        d_c1 = col2im(d_c2.reshape(-1, 12) @ w2.reshape(200, 12).T, c1.shape, 5, 5, 2)
+        d_c1[c1 <= 0.0] = 0.0
+        g1w = c1c.T @ d_c1.reshape(-1, 8)
+        g1b = d_c1.reshape(-1, 8).sum(0)
+        grad = np.concatenate(
+            [g1w.ravel(), g1b, g2w.ravel(), g2b, g3w.ravel(), g3b,
+             g4w.ravel(), g4b, g5w.ravel(), g5b, g6w.ravel(), g6b]
+        ).astype(np.float32)
+        return loss, loss, grad
+
+
+# --------------------------------------------------------------- optimizers
+def sgd_step(p, state, g, lr):
+    return p - np.float32(lr) * g, state
+
+
+def adam_step(p, state, g, lr, b1=0.9, b2=0.999, eps=1e-7):
+    m, v, t = state
+    t += 1
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1**t)
+    vhat = v / (1 - b2**t)
+    return p - lr * mhat / (np.sqrt(vhat) + eps), (m, v, t)
+
+
+def rmsprop_step(p, state, g, lr, rho=0.9, eps=1e-7):
+    v = rho * state + (1 - rho) * g * g
+    return p - lr * g / (np.sqrt(v) + eps), v
+
+
+class MnistLogistic:
+    SLOTS = [(784 * 10, 10, 784, 10)]
+    P = 7850
+
+    def loss_grad(self, p, x, y, want_grad=True):
+        w = p[:7840].reshape(784, 10)
+        bias = p[7840:]
+        flat = x.reshape(x.shape[0], -1)
+        logits = flat @ w + bias
+        b = logits.shape[0]
+        zmax = logits.max(axis=1, keepdims=True)
+        lse = zmax + np.log(np.exp(logits - zmax).sum(axis=1, keepdims=True))
+        logp = logits - lse
+        loss = float(-(y * logp).sum() / b)
+        acc = float((logits.argmax(1) == y.argmax(1)).mean())
+        if not want_grad:
+            return loss, acc, None
+        delta = (np.exp(logp) - y) / b
+        grad = np.concatenate([(flat.T @ delta).ravel(), delta.sum(0)]).astype(np.float32)
+        return loss, acc, grad
+
+
+# ---------------------------------------------------------------- protocols
+HEADER = 16
+
+
+class Net:
+    def __init__(self):
+        self.up = 0
+        self.down = 0
+
+    def send(self, kind: str, p: int):
+        mb = 4 * p
+        if kind in ("violation", "upload"):
+            self.up += HEADER + mb
+        elif kind == "download":
+            self.down += HEADER + mb
+        elif kind == "query":
+            self.down += HEADER
+        else:
+            raise ValueError(kind)
+
+    @property
+    def total(self) -> int:
+        return self.up + self.down
+
+
+def sq_dist(a, b) -> float:
+    d = a.astype(np.float64) - b.astype(np.float64)
+    return float(d @ d)
+
+
+class Dynamic:
+    def __init__(self, delta: float, check_every: int, m: int):
+        self.delta = delta
+        self.check = check_every
+        self.m = m
+        self.ref = None
+        self.v = 0
+
+    def sync(self, t, models, net, rng):
+        if t % self.check != 0:
+            return
+        m, p = len(models), models[0].shape[0]
+        if self.ref is None:
+            self.ref = models[0].copy()
+        r = self.ref
+        in_b = [False] * m
+        sel = []
+        for i in range(m):
+            if sq_dist(models[i], r) > self.delta:
+                in_b[i] = True
+                sel.append(i)
+                net.send("violation", p)
+        if not sel:
+            return
+        self.v += len(sel)
+        if self.v >= m:
+            for i in range(m):
+                if not in_b[i]:
+                    net.send("query", 0)
+                    net.send("upload", p)
+                    in_b[i] = True
+                    sel.append(i)
+            self.v = 0
+        while True:
+            avg = np.mean([models[i] for i in sel], axis=0, dtype=np.float64).astype(
+                np.float32
+            )
+            if sq_dist(avg, r) <= self.delta or len(sel) == m:
+                break
+            free = [i for i in range(m) if not in_b[i]]
+            nxt = free[rng.below(len(free))]
+            net.send("query", 0)
+            net.send("upload", p)
+            in_b[nxt] = True
+            sel.append(nxt)
+        for i in sel:
+            models[i] = avg.copy()
+            net.send("download", p)
+        if len(sel) == m:
+            self.ref = avg.copy()
+            self.v = 0
+
+
+class Periodic:
+    def __init__(self, period: int):
+        self.period = period
+
+    def sync(self, t, models, net, rng):
+        if t % self.period != 0:
+            return
+        m, p = len(models), models[0].shape[0]
+        avg = np.mean(models, axis=0, dtype=np.float64).astype(np.float32)
+        for i in range(m):
+            net.send("upload", p)
+            models[i] = avg.copy()
+            net.send("download", p)
+
+
+# ------------------------------------------------------------------ engine
+def run(model, model_name, proto, m, rounds, lr, seed, batch=10):
+    init = glorot_slots(model.SLOTS, model_name)
+    models = [init.copy() for _ in range(m)]
+    streams = [MnistLike(seed, (seed * 7919 + i + 1) & M64) for i in range(m)]
+    net = Net()
+    proto_rng = Rng(seed ^ 0xABCD)
+    cum_loss = 0.0
+    for t in range(1, rounds + 1):
+        for i in range(m):
+            x, y = streams[i].batch(batch)
+            loss, _, grad = model.loss_grad(models[i], x, y)
+            cum_loss += loss
+            models[i] = models[i] - np.float32(lr) * grad
+        proto.sync(t, models, net, proto_rng)
+    avg = np.mean(models, axis=0, dtype=np.float64).astype(np.float32)
+    accs, losses = [], []
+    for _ in range(5):
+        x, y = streams[0].batch(50)
+        loss, acc, _ = model.loss_grad(avg, x, y, want_grad=False)
+        losses.append(loss)
+        accs.append(acc)
+    return {
+        "comm": net.total,
+        "cum_loss": cum_loss,
+        "eval_loss": float(np.mean(losses)),
+        "eval_acc": float(np.mean(accs)),
+    }
+
+
+def compare(model, model_name, m, rounds, lr, delta, check, seed):
+    dyn = run(model, model_name, Dynamic(delta, check, m), m, rounds, lr, seed)
+    per = run(model, model_name, Periodic(check), m, rounds, lr, seed)
+    ratio = per["comm"] / max(dyn["comm"], 1)
+    print(
+        f"seed {seed}: comm dyn {dyn['comm']} per {per['comm']} ratio {ratio:.1f}x | "
+        f"cum_loss dyn {dyn['cum_loss']:.2f} per {per['cum_loss']:.2f} "
+        f"({dyn['cum_loss'] / per['cum_loss']:.3f}) | "
+        f"acc dyn {dyn['eval_acc']:.3f} per {per['eval_acc']:.3f}"
+    )
+    return dyn, per
+
+
+def synthetic_batch(x_shape, out_dim, metric, b, seed):
+    """Exact mirror of tests/runtime_integration.rs synthetic_batch:
+    x ~ normal*0.5, one-hot labels (accuracy) / uniform(-0.5, 0.5) (mse),
+    drawn from the crate's xoshiro Rng stream in the same order."""
+    rng = Rng(seed)
+    in_dim = int(np.prod(x_shape))
+    x = np.array([rng.normal() * 0.5 for _ in range(b * in_dim)], np.float32)
+    x = x.reshape(b, *x_shape)
+    y = np.zeros((b, out_dim), np.float32)
+    if metric == "accuracy":
+        for i in range(b):
+            y[i, rng.below(out_dim)] = 1.0
+    else:
+        for i in range(b):
+            for j in range(out_dim):
+                y[i, j] = rng.range(-0.5, 0.5)
+    return x, y
+
+
+def fixed_batch_scenario():
+    """Mirror of tests/runtime_integration.rs
+    every_f32_train_artifact_executes_and_learns_a_fixed_batch: 12
+    optimizer steps on the *exact* seed-7 batch must strictly reduce the
+    loss for every (CNN, optimizer) pair the native backend now covers."""
+    cases = [
+        (MnistCnn(), "mnist_cnn", (28, 28, 1), 10, "accuracy"),
+        (DrivingCnn(), "driving_cnn", (32, 64, 1), 1, "mse"),
+    ]
+    for model, name, x_shape, out_dim, metric in cases:
+        p0 = glorot_slots(model.SLOTS, name)
+        x, y = synthetic_batch(x_shape, out_dim, metric, 10, 7)
+        for opt in ["sgd", "adam", "rmsprop"]:
+            p = p0.copy()
+            state = (np.zeros_like(p), np.zeros_like(p), 0) if opt == "adam" else np.zeros_like(p)
+            lr = 0.1 if opt == "sgd" else 0.002  # lr_for() in the rust test
+            first = last = None
+            for _ in range(12):
+                loss, _, g = model.loss_grad(p, x, y)
+                first = loss if first is None else first
+                last = loss
+                if opt == "sgd":
+                    p, state = sgd_step(p, state, g, lr)
+                elif opt == "adam":
+                    p, state = adam_step(p, state, g, lr)
+                else:
+                    p, state = rmsprop_step(p, state, g, lr)
+            ok = "OK " if last < first else "FAIL"
+            print(f"{ok} {name}/{opt}: loss {first:.4f} -> {last:.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("scenario", choices=["cnn_protocol", "logistic_protocol", "fixed_batch"])
+    ap.add_argument("--seed", type=int, default=2024)
+    ap.add_argument("--m", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--delta", type=float, default=1.0)
+    ap.add_argument("--check", type=int, default=5)
+    args = ap.parse_args()
+    if args.scenario == "cnn_protocol":
+        compare(MnistCnn(), "mnist_cnn", args.m, args.rounds, args.lr,
+                args.delta, args.check, args.seed)
+    elif args.scenario == "fixed_batch":
+        fixed_batch_scenario()
+    else:
+        compare(MnistLogistic(), "mnist_logistic", 8, 150, 0.05,
+                args.delta, args.check, args.seed)
+
+
+if __name__ == "__main__":
+    main()

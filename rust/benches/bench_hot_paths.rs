@@ -4,6 +4,7 @@
 
 use dynavg::data::{synth_mnist::MnistLike, Stream};
 use dynavg::model::params;
+use dynavg::runtime::tensor::{conv, matmul};
 use dynavg::runtime::{ModelRuntime, Runtime};
 use dynavg::util::bench::{bench, black_box, header};
 use dynavg::util::rng::Rng;
@@ -67,6 +68,56 @@ fn main() {
         "average m=10 bandwidth  : {:>7.2} GB/s",
         gbps(11.0 * 4.0 * p as f64, avg.median_ns)
     );
+
+    // tensor-kernel throughput (runtime/tensor): the blocked matmul at the
+    // mnist_cnn fc1 shape and the im2col conv2d at its conv2 shape — these
+    // two dominate the native CNN train step, and their JSON records seed
+    // the BENCH_* throughput trajectory
+    println!();
+    {
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (256, 2304, 64); // fc1 forward at B=256
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let mut mm_out = vec![0.0f32; m * n];
+        let mm = bench("matmul_bias_m256_k2304_n64 (blocked)", 20, || {
+            matmul::matmul_bias(black_box(&a), black_box(&w), &bias, &mut mm_out, m, k, n);
+        });
+        let mm_flops = 2.0 * (m * k * n) as f64;
+
+        // mnist_cnn conv2: 26x26x8 -> 24x24x16, 3x3, stride 1, B=10
+        let (b, h, wd, c, kk, cout) = (10, 26, 26, 8, 3, 16);
+        let x: Vec<f32> = (0..b * h * wd * c).map(|_| rng.normal_f32()).collect();
+        let cw: Vec<f32> = (0..kk * kk * c * cout).map(|_| rng.normal_f32()).collect();
+        let cbias: Vec<f32> = (0..cout).map(|_| rng.normal_f32()).collect();
+        let cv = bench("conv2d_fwd_b10_26x26x8_k3_c16 (im2col)", 20, || {
+            black_box(conv::conv2d_forward(
+                black_box(&x),
+                &cw,
+                &cbias,
+                b,
+                (h, wd, c),
+                (kk, kk),
+                cout,
+                1,
+            ));
+        });
+        let (oh, ow) = (conv::out_dim(h, kk, 1), conv::out_dim(wd, kk, 1));
+        let cv_flops = 2.0 * (b * oh * ow * kk * kk * c * cout) as f64;
+
+        println!();
+        println!(
+            "matmul throughput       : {:>7.2} GFLOP/s ({:.1} MFLOP/iter)",
+            mm_flops / mm.median_ns,
+            mm_flops / 1e6
+        );
+        println!(
+            "conv2d throughput       : {:>7.2} GFLOP/s ({:.1} MFLOP/iter)",
+            cv_flops / cv.median_ns,
+            cv_flops / 1e6
+        );
+    }
 
     // train-step dispatch latency at B=10 on whatever backend is loaded
     // (native interpreter hermetically; XLA execute + literal packing

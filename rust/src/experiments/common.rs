@@ -144,15 +144,27 @@ impl<'a> Harness<'a> {
 }
 
 /// The image-classification model for MNIST-like experiments: the paper's
-/// CNN when the loaded *backend* can execute it (XLA artifacts +
-/// `backend-xla`), else the native MLP head. The protocol layer is
-/// model-agnostic, so the experiment shapes survive the substitution —
-/// absolute accuracies differ. If neither is runnable (native-only build
-/// over an XLA-artifact manifest, which lacks `mnist_mlp`), the CNN is
-/// returned so the resulting error carries the backend-xla guidance.
+/// CNN when the loaded backend can execute it (the hermetic native
+/// backend now interprets it via `runtime::tensor::LayerGraph`, so this
+/// is the common case), else the `mnist_mlp` head — and the substitution
+/// is *announced*, once per process, so a run over an artifact manifest
+/// that lacks the CNN can't silently report MLP numbers as CNN numbers.
+/// If neither is runnable, the CNN is returned so the resulting error
+/// carries the capability guidance (`dynavg models` shows the dump).
 pub fn image_model(rt: &Runtime) -> &'static str {
     for name in ["mnist_cnn", "mnist_mlp"] {
         if rt.supports_model(name) {
+            if name != "mnist_cnn" {
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "warning: mnist_cnn is not executable on the {} backend over \
+                         this manifest; substituting {name} (protocol shapes hold, \
+                         absolute accuracies differ — see `dynavg models`)",
+                        rt.backend_name()
+                    );
+                });
+            }
             return name;
         }
     }

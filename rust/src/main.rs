@@ -7,6 +7,8 @@
 //!       one custom protocol run; SPEC like dynamic:0.7:10, periodic:20,
 //!       fedavg:50:0.3, continuous, nosync
 //!   list       available experiments and artifacts
+//!   models     per-backend capability dump: which manifest models the
+//!              loaded backend can execute (also: `--list-models`)
 //!   info       manifest / runtime info
 
 use anyhow::Result;
@@ -30,7 +32,9 @@ fn run() -> Result<()> {
         Some("exp") => cmd_exp(&args),
         Some("run") => cmd_run(&args),
         Some("list") => cmd_list(),
+        Some("models") => cmd_models(),
         Some("info") => cmd_info(),
+        _ if args.has("list-models") => cmd_models(),
         _ => {
             print_usage();
             Ok(())
@@ -43,7 +47,7 @@ fn print_usage() {
     println!("usage:");
     println!("  dynavg exp <id> [--scale tiny|small|medium|paper] [--seed N]");
     println!("  dynavg run --model M --protocol SPEC [--optimizer O] [--m N] [--rounds T] [--lr F]");
-    println!("  dynavg list | info");
+    println!("  dynavg list | models | info");
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
@@ -105,6 +109,38 @@ fn cmd_list() -> Result<()> {
         }
     } else {
         println!("\n(manifest unreadable — re-run `make artifacts`)");
+    }
+    Ok(())
+}
+
+/// Capability dump: which manifest models the loaded backend can actually
+/// execute (membership in the manifest is not enough — e.g. a native-only
+/// build over XLA artifacts cannot run `transformer_lm`).
+fn cmd_models() -> Result<()> {
+    let rt = Runtime::new(dynavg::artifacts_dir())?;
+    println!("backend: {}", rt.backend_name());
+    println!(
+        "{:<16} {:>9}  {:<14} {:<8} {:<6} executable",
+        "model", "P", "x_shape", "metric", "ops"
+    );
+    for (name, m) in &rt.manifest.models {
+        let executable = if rt.supports_model(name) {
+            "yes"
+        } else if cfg!(feature = "backend-xla") {
+            "no"
+        } else {
+            "no (needs backend-xla)"
+        };
+        let x_shape = format!("{:?}", m.x_shape);
+        let ops = if m.ops.is_empty() {
+            "dense".to_string()
+        } else {
+            m.ops.len().to_string()
+        };
+        println!(
+            "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {executable}",
+            name, m.param_count, m.metric,
+        );
     }
     Ok(())
 }

@@ -30,6 +30,62 @@ impl Dtype {
     }
 }
 
+/// One layer operation in a model's forward graph. The op list is the
+/// *semantic* complement to the tensor list: tensor shapes alone cannot
+/// disambiguate a conv net (e.g. a stride-2 3x3 conv on 26x26 and a
+/// stride-1 conv followed by 2x2 max-pooling both produce 12x12), so
+/// manifests carry the ops explicitly and the native interpreter compiles
+/// them into a forward/backward plan (`runtime::tensor::LayerGraph`).
+/// Dense-only stacks may omit the list; it is inferred from the shapes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OpSpec {
+    /// Fully-connected layer; consumes one (w \[fan_in, fan_out\], b) pair.
+    Dense { act: String },
+    /// Valid-padding conv; consumes one (w \[kh, kw, cin, cout\], b) pair.
+    Conv2d { stride: usize, act: String },
+    /// 2x2 max pooling, stride 2 (odd trailing row/column dropped).
+    MaxPool2,
+    /// NHWC image -> flat feature vector (layout no-op).
+    Flatten,
+}
+
+impl OpSpec {
+    /// Absent `act`/`stride` default (linear / 1); *present but
+    /// wrong-typed* values are errors — silently defaulting would make
+    /// the native backend train a different function than the manifest's
+    /// producer lowered, which is exactly what the op list exists to
+    /// prevent (activations change no tensor shapes, so no later
+    /// dimension check would catch it).
+    fn parse(j: &Json) -> Result<OpSpec> {
+        let op = j.req("op")?.as_str().context("op name")?;
+        let act = || -> Result<String> {
+            match j.get("act") {
+                None => Ok("linear".to_string()),
+                Some(a) => Ok(a
+                    .as_str()
+                    .context("layer op `act` must be a string")?
+                    .to_string()),
+            }
+        };
+        let stride = || -> Result<usize> {
+            match j.get("stride") {
+                None => Ok(1),
+                Some(s) => s.as_usize().context("layer op `stride` must be an integer"),
+            }
+        };
+        match op {
+            "dense" => Ok(OpSpec::Dense { act: act()? }),
+            "conv2d" => Ok(OpSpec::Conv2d {
+                stride: stride()?,
+                act: act()?,
+            }),
+            "maxpool2" => Ok(OpSpec::MaxPool2),
+            "flatten" => Ok(OpSpec::Flatten),
+            other => anyhow::bail!("unknown layer op {other:?}"),
+        }
+    }
+}
+
 /// Static description of one model (shared across its artifacts).
 #[derive(Clone, Debug)]
 pub struct ModelInfo {
@@ -43,6 +99,8 @@ pub struct ModelInfo {
     pub scales_bin: PathBuf,
     /// (tensor name, shape) in flat packing order — for introspection.
     pub tensors: Vec<(String, Vec<usize>)>,
+    /// Forward-graph op list; empty means "dense stack, infer from shapes".
+    pub ops: Vec<OpSpec>,
 }
 
 /// One compiled HLO artifact.
@@ -94,6 +152,15 @@ impl Manifest {
                     Ok((tname, shape))
                 })
                 .collect::<Result<Vec<_>>>()?;
+            let ops = match m.get("ops") {
+                Some(arr) => arr
+                    .as_arr()
+                    .context("ops not an array")?
+                    .iter()
+                    .map(OpSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
+            };
             models.insert(
                 name.clone(),
                 ModelInfo {
@@ -118,6 +185,7 @@ impl Manifest {
                     init_bin: dir.join(m.req("init_bin")?.as_str().context("init_bin")?),
                     scales_bin: dir.join(m.req("scales_bin")?.as_str().context("scales_bin")?),
                     tensors,
+                    ops,
                 },
             );
         }
@@ -196,7 +264,9 @@ mod tests {
           "models": {"toy": {"param_count": 4, "x_shape": [2], "x_dtype": "f32",
             "y_shape": [2], "y_dtype": "f32", "metric": "accuracy",
             "init_bin": "toy_init.bin", "scales_bin": "toy_scales.bin",
-            "tensors": [{"name": "w", "shape": [2, 2]}]}},
+            "tensors": [{"name": "w", "shape": [2, 2]}],
+            "ops": [{"op": "conv2d", "stride": 2, "act": "relu"},
+                    {"op": "maxpool2"}, {"op": "flatten"}, {"op": "dense"}]}},
           "artifacts": [{"name": "toy_sgd_train", "kind": "train", "model": "toy",
             "optimizer": "sgd", "batch": 10, "param_count": 4, "state_size": 1,
             "outputs": ["params", "opt_state", "loss", "metric"],
@@ -208,11 +278,49 @@ mod tests {
         let model = m.model("toy").unwrap();
         assert_eq!(model.param_count, 4);
         assert_eq!(model.x_dtype, Dtype::F32);
+        assert_eq!(
+            model.ops,
+            vec![
+                OpSpec::Conv2d {
+                    stride: 2,
+                    act: "relu".to_string()
+                },
+                OpSpec::MaxPool2,
+                OpSpec::Flatten,
+                OpSpec::Dense {
+                    act: "linear".to_string()
+                },
+            ],
+            "op list round-trips (stride/act defaults applied)"
+        );
         let a = m.artifact("toy_sgd_train").unwrap();
         assert_eq!(a.state_size, 1);
         assert_eq!(a.outputs.len(), 4);
         assert_eq!(Manifest::train_name("toy", "sgd"), "toy_sgd_train");
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_op_values_are_rejected_not_defaulted() {
+        // wrong-typed `act`/`stride` must error: silently defaulting would
+        // train a different function than the manifest producer lowered
+        let j = Json::parse(r#"{"op": "conv2d", "act": ["relu"]}"#).unwrap();
+        let msg = format!("{:#}", OpSpec::parse(&j).unwrap_err());
+        assert!(msg.contains("act"), "{msg}");
+        let j = Json::parse(r#"{"op": "conv2d", "stride": "2"}"#).unwrap();
+        let msg = format!("{:#}", OpSpec::parse(&j).unwrap_err());
+        assert!(msg.contains("stride"), "{msg}");
+        let j = Json::parse(r#"{"op": "warp"}"#).unwrap();
+        assert!(OpSpec::parse(&j).is_err());
+        // absent fields still default (linear / stride 1)
+        let j = Json::parse(r#"{"op": "conv2d"}"#).unwrap();
+        assert_eq!(
+            OpSpec::parse(&j).unwrap(),
+            OpSpec::Conv2d {
+                stride: 1,
+                act: "linear".to_string()
+            }
+        );
     }
 
     #[test]

@@ -2,9 +2,11 @@
 //! vectors through a pluggable [`Backend`]:
 //!
 //! - **native** (default, always compiled): pure-Rust interpreter for the
-//!   manifest's dense-stack models with in-crate SGD/ADAM/RMSprop — no
-//!   Python, no XLA, no artifact files. A synthetic manifest makes the
-//!   whole stack hermetic (see [`native::synthetic_manifest`]).
+//!   manifest's {dense, conv2d, maxpool2, flatten} layer graphs (see
+//!   [`tensor::LayerGraph`]) with in-crate SGD/ADAM/RMSprop — no Python,
+//!   no XLA, no artifact files. A synthetic manifest covering the paper's
+//!   MLP *and* CNN architectures makes the whole stack hermetic (see
+//!   [`native::synthetic_manifest`]).
 //! - **xla** (cargo feature `backend-xla`): the PJRT CPU client executing
 //!   the AOT artifacts produced by `python/compile/aot.py` via
 //!   `make artifacts`. Python never runs at request time.
@@ -18,13 +20,15 @@ pub mod backend;
 pub mod manifest;
 pub mod native;
 pub mod step;
+pub mod tensor;
 #[cfg(feature = "backend-xla")]
 pub mod xla;
 
 pub use backend::{Backend, Executable, Input, Kernel};
-pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo};
+pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo, OpSpec};
 pub use native::NativeBackend;
 pub use step::{Batch, EvalStep, InferStep, StepStats, TrainStep};
+pub use tensor::LayerGraph;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -192,15 +196,19 @@ mod tests {
     fn supports_model_requires_backend_capability() {
         let rt = Runtime::native();
         assert!(rt.supports_model("drift_mlp"));
-        assert!(!rt.supports_model("mnist_cnn"), "absent from manifest");
-        // present in the manifest but not a dense stack -> unsupported
+        assert!(rt.supports_model("mnist_cnn"), "conv graphs run natively");
+        assert!(rt.supports_model("driving_cnn"), "strided conv + tanh too");
+        assert!(!rt.supports_model("transformer_lm"), "absent from manifest");
+        // present in the manifest but not an interpretable layer graph
+        // (attention-style tensors, no op list) -> unsupported
         let mut manifest = native::synthetic_manifest();
-        let mut conv = manifest.models.get("drift_mlp").unwrap().clone();
-        conv.name = "convnet".to_string();
-        conv.tensors = vec![("conv1.w".to_string(), vec![3, 3, 1, 8])];
-        manifest.models.insert("convnet".to_string(), conv);
+        let mut attn = manifest.models.get("drift_mlp").unwrap().clone();
+        attn.name = "attn_net".to_string();
+        attn.tensors = vec![("l0.qkv.w".to_string(), vec![4, 3, 12])];
+        attn.ops.clear();
+        manifest.models.insert("attn_net".to_string(), attn);
         let rt = Runtime::with_backend(manifest, Box::new(NativeBackend));
-        assert!(!rt.supports_model("convnet"));
+        assert!(!rt.supports_model("attn_net"));
         assert!(rt.supports_model("drift_mlp"));
     }
 

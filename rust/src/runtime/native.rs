@@ -1,19 +1,24 @@
 //! Pure-Rust execution backend: no Python, no XLA, no artifact files.
 //!
 //! The backend interprets the *manifest itself* as the model description:
-//! any model whose tensor list is a dense stack — alternating rank-2
-//! weight and rank-1 bias tensors, as emitted by
-//! `python/compile/flatten.dense_entries` — is executed directly on flat
-//! `f32` parameter vectors, mirroring the reference semantics of
-//! `python/compile/kernels/ref.py` (dense + relu, softmax cross-entropy /
-//! MSE) and `python/compile/optimizers.py` (SGD / ADAM / RMSprop with the
-//! Keras-default hyperparameters). Conv/attention models (`mnist_cnn`,
-//! `driving_cnn`, `transformer_lm`) still need the `backend-xla` feature.
+//! any model built from {dense, conv2d, maxpool2, flatten} layer ops is
+//! compiled by [`tensor::LayerGraph`](super::tensor::LayerGraph) into a
+//! forward/backward plan over the cache-tiled kernels in
+//! `runtime/tensor/` and executed directly on flat `f32` parameter
+//! vectors, mirroring the reference semantics of the python L1/L2 stack
+//! (`kernels/ref.py`, `kernels/conv2d.py`, `models.py`) and
+//! `python/compile/optimizers.py` (SGD / ADAM / RMSprop with the
+//! Keras-default hyperparameters). Dense stacks need no op list (inferred
+//! from tensor shapes); `mnist_cnn` and `driving_cnn` carry explicit op
+//! lists and run natively. Only attention models (`transformer_lm`) still
+//! need the `backend-xla` feature.
 //!
 //! [`synthetic_manifest`] provides an in-crate manifest (linear, logistic
-//! and MLP heads over the synthetic data streams) so the whole simulation
-//! stack runs hermetically — this is what makes tier-1
-//! (`cargo build --release && cargo test -q`) pass on a clean machine.
+//! and MLP heads plus the paper's two CNNs over the synthetic data
+//! streams) so the whole simulation stack — including every MNIST-like
+//! figure and the deep-driving case study — runs hermetically; this is
+//! what makes tier-1 (`cargo build --release && cargo test -q`) pass on a
+//! clean machine.
 //!
 //! Unlike the fixed XLA input shapes, the interpreter accepts any batch
 //! size per call (the batch dimension is inferred from the input length),
@@ -31,10 +36,11 @@ use anyhow::{Context, Result};
 use crate::util::rng::Rng;
 
 use super::backend::{self, Backend, Input, Kernel};
-use super::manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo};
+use super::manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo, OpSpec};
+use super::tensor::LayerGraph;
 
 /// The pure-Rust backend. Stateless: each compiled [`Kernel`] owns its
-/// interpreted model spec.
+/// interpreted model plan.
 pub struct NativeBackend;
 
 impl Backend for NativeBackend {
@@ -43,12 +49,12 @@ impl Backend for NativeBackend {
     }
 
     fn supports(&self, model: &ModelInfo) -> bool {
-        DenseStack::from_model(model).is_ok()
+        LayerGraph::from_model(model).is_ok()
     }
 
     fn compile(&self, manifest: &Manifest, info: &ArtifactInfo) -> Result<Box<dyn Kernel>> {
         let model = manifest.model(&info.model)?;
-        let stack = DenseStack::from_model(model)?;
+        let graph = LayerGraph::from_model(model)?;
         let optim = match info.kind.as_str() {
             "train" => {
                 let name = info
@@ -59,7 +65,7 @@ impl Backend for NativeBackend {
             }
             _ => None,
         };
-        Ok(Box::new(NativeKernel { stack, optim }))
+        Ok(Box::new(NativeKernel { graph, optim }))
     }
 
     /// Prefer the on-disk init blob when it exists (so a native run over
@@ -155,286 +161,15 @@ impl Optim {
     }
 }
 
-// ------------------------------------------------------------- dense stack
-
-#[derive(Clone, Copy, Debug)]
-struct Layer {
-    fan_in: usize,
-    fan_out: usize,
-    w_off: usize,
-    b_off: usize,
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum LossKind {
-    /// softmax cross-entropy; metric = accuracy (manifest metric "accuracy")
-    Xent,
-    /// mean squared error; metric = mse (manifest metric "mse")
-    Mse,
-}
-
-/// An interpreted dense-stack model: x -> dense/relu ... -> dense -> loss.
-/// Hidden layers use relu; the output layer is linear (logits for Xent,
-/// raw predictions for Mse) — matching `DriftMlp`/logistic heads in
-/// `python/compile/models.py`.
-pub(crate) struct DenseStack {
-    layers: Vec<Layer>,
-    loss: LossKind,
-    in_dim: usize,
-    out_dim: usize,
-    param_count: usize,
-}
-
-impl DenseStack {
-    pub(crate) fn from_model(info: &ModelInfo) -> Result<DenseStack> {
-        anyhow::ensure!(
-            info.x_dtype == Dtype::F32,
-            "model {:?} has i32 inputs; the native backend supports f32 models only \
-             (enable the backend-xla feature for token models)",
-            info.name
-        );
-        let unsupported = || {
-            anyhow::anyhow!(
-                "model {:?} is not a dense stack; the native backend supports \
-                 linear/MLP/logistic models only (enable the backend-xla feature \
-                 for conv/attention models)",
-                info.name
-            )
-        };
-        if info.tensors.is_empty() || info.tensors.len() % 2 != 0 {
-            return Err(unsupported());
-        }
-        let mut layers = Vec::with_capacity(info.tensors.len() / 2);
-        let mut off = 0;
-        for pair in info.tensors.chunks(2) {
-            let (_, w_shape) = &pair[0];
-            let (_, b_shape) = &pair[1];
-            if w_shape.len() != 2 || b_shape.len() != 1 || b_shape[0] != w_shape[1] {
-                return Err(unsupported());
-            }
-            let (fan_in, fan_out) = (w_shape[0], w_shape[1]);
-            let w_off = off;
-            let b_off = off + fan_in * fan_out;
-            off = b_off + fan_out;
-            layers.push(Layer {
-                fan_in,
-                fan_out,
-                w_off,
-                b_off,
-            });
-        }
-        anyhow::ensure!(
-            off == info.param_count,
-            "model {:?}: tensors tile {off} params, manifest says {}",
-            info.name,
-            info.param_count
-        );
-        let in_dim: usize = info.x_shape.iter().product::<usize>().max(1);
-        anyhow::ensure!(
-            layers[0].fan_in == in_dim,
-            "model {:?}: first layer fan_in {} != x size {in_dim}",
-            info.name,
-            layers[0].fan_in
-        );
-        for w in layers.windows(2) {
-            anyhow::ensure!(
-                w[0].fan_out == w[1].fan_in,
-                "model {:?}: layer dims do not chain",
-                info.name
-            );
-        }
-        let out_dim = layers.last().unwrap().fan_out;
-        let y_dim: usize = info.y_shape.iter().product::<usize>().max(1);
-        anyhow::ensure!(
-            out_dim == y_dim,
-            "model {:?}: output dim {out_dim} != y size {y_dim}",
-            info.name
-        );
-        let loss = match info.metric.as_str() {
-            "accuracy" => LossKind::Xent,
-            "mse" => LossKind::Mse,
-            other => anyhow::bail!("model {:?}: unknown metric {other:?}", info.name),
-        };
-        Ok(DenseStack {
-            layers,
-            loss,
-            in_dim,
-            out_dim,
-            param_count: info.param_count,
-        })
-    }
-
-    /// Post-activation outputs of every layer; the last entry is the
-    /// (linear) model output.
-    fn forward(&self, params: &[f32], x: &[f32], b: usize) -> Vec<Vec<f32>> {
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len());
-        for (li, layer) in self.layers.iter().enumerate() {
-            let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
-            let w = &params[layer.w_off..layer.w_off + layer.fan_in * layer.fan_out];
-            let bias = &params[layer.b_off..layer.b_off + layer.fan_out];
-            let mut out = vec![0.0f32; b * layer.fan_out];
-            dense_forward(input, w, bias, &mut out, b, layer.fan_in, layer.fan_out);
-            if li + 1 < self.layers.len() {
-                for v in out.iter_mut() {
-                    *v = v.max(0.0);
-                }
-            }
-            acts.push(out);
-        }
-        acts
-    }
-
-    /// (loss, metric, dLoss/dOutput) at the model output.
-    fn output_loss(&self, out: &[f32], y: &[f32], b: usize) -> (f32, f32, Vec<f32>) {
-        let c = self.out_dim;
-        let mut delta = vec![0.0f32; b * c];
-        match self.loss {
-            LossKind::Xent => {
-                let mut loss = 0.0f64;
-                let mut correct = 0usize;
-                for i in 0..b {
-                    let row = &out[i * c..(i + 1) * c];
-                    let yrow = &y[i * c..(i + 1) * c];
-                    let max = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
-                    let mut sum = 0.0f32;
-                    for &v in row {
-                        sum += (v - max).exp();
-                    }
-                    let lse = max + sum.ln();
-                    let drow = &mut delta[i * c..(i + 1) * c];
-                    for j in 0..c {
-                        let logp = row[j] - lse;
-                        loss -= f64::from(yrow[j]) * f64::from(logp);
-                        drow[j] = (logp.exp() - yrow[j]) / b as f32;
-                    }
-                    let amax = |r: &[f32]| {
-                        r.iter()
-                            .enumerate()
-                            .fold((0usize, f32::NEG_INFINITY), |best, (j, &v)| {
-                                if v > best.1 {
-                                    (j, v)
-                                } else {
-                                    best
-                                }
-                            })
-                            .0
-                    };
-                    if amax(row) == amax(yrow) {
-                        correct += 1;
-                    }
-                }
-                (
-                    (loss / b as f64) as f32,
-                    correct as f32 / b as f32,
-                    delta,
-                )
-            }
-            LossKind::Mse => {
-                let n = (b * c) as f32;
-                let mut loss = 0.0f64;
-                for (j, (&o, &t)) in out.iter().zip(y).enumerate() {
-                    let d = o - t;
-                    loss += f64::from(d) * f64::from(d);
-                    delta[j] = 2.0 * d / n;
-                }
-                let mse = (loss / f64::from(n)) as f32;
-                (mse, mse, delta)
-            }
-        }
-    }
-
-    /// Loss + metric only (the eval path).
-    pub(crate) fn eval(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32) {
-        let acts = self.forward(params, x, b);
-        let (loss, metric, _) = self.output_loss(acts.last().unwrap(), y, b);
-        (loss, metric)
-    }
-
-    /// Loss, metric and the full flat gradient (reverse-mode by hand).
-    pub(crate) fn loss_grad(
-        &self,
-        params: &[f32],
-        x: &[f32],
-        y: &[f32],
-        b: usize,
-    ) -> (f32, f32, Vec<f32>) {
-        let acts = self.forward(params, x, b);
-        let (loss, metric, mut delta) = self.output_loss(acts.last().unwrap(), y, b);
-        let mut grad = vec![0.0f32; self.param_count];
-        for li in (0..self.layers.len()).rev() {
-            let layer = self.layers[li];
-            let (fin, fout) = (layer.fan_in, layer.fan_out);
-            let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
-            // dW += input^T · delta ; db += column sums of delta
-            {
-                let (left, right) = grad.split_at_mut(layer.b_off);
-                let gw = &mut left[layer.w_off..];
-                let gb = &mut right[..fout];
-                for i in 0..b {
-                    let xi = &input[i * fin..(i + 1) * fin];
-                    let dr = &delta[i * fout..(i + 1) * fout];
-                    for (k, &xv) in xi.iter().enumerate() {
-                        let gwr = &mut gw[k * fout..(k + 1) * fout];
-                        for (g, &dv) in gwr.iter_mut().zip(dr) {
-                            *g = xv.mul_add(dv, *g);
-                        }
-                    }
-                    for (g, &dv) in gb.iter_mut().zip(dr) {
-                        *g += dv;
-                    }
-                }
-            }
-            if li > 0 {
-                // delta_prev = (delta · W^T) ⊙ relu'(h_prev)
-                let w = &params[layer.w_off..layer.w_off + fin * fout];
-                let prev = &acts[li - 1];
-                let mut nd = vec![0.0f32; b * fin];
-                for i in 0..b {
-                    let dr = &delta[i * fout..(i + 1) * fout];
-                    let ndr = &mut nd[i * fin..(i + 1) * fin];
-                    for (k, nv) in ndr.iter_mut().enumerate() {
-                        let wrow = &w[k * fout..(k + 1) * fout];
-                        let mut acc = 0.0f32;
-                        for (&dv, &wv) in dr.iter().zip(wrow) {
-                            acc = dv.mul_add(wv, acc);
-                        }
-                        *nv = acc;
-                    }
-                    let pr = &prev[i * fin..(i + 1) * fin];
-                    for (nv, &pv) in ndr.iter_mut().zip(pr) {
-                        if pv <= 0.0 {
-                            *nv = 0.0;
-                        }
-                    }
-                }
-                delta = nd;
-            }
-        }
-        (loss, metric, grad)
-    }
-}
-
-/// out[i,j] = bias[j] + Σ_k x[i,k] · w[k,j] — k-outer loop so the inner
-/// loop streams one weight row against one accumulator row (the same
-/// autovectorized idiom as `model/params.rs`).
-fn dense_forward(x: &[f32], w: &[f32], bias: &[f32], out: &mut [f32], b: usize, fin: usize, fout: usize) {
-    for i in 0..b {
-        let row = &mut out[i * fout..(i + 1) * fout];
-        row.copy_from_slice(bias);
-        let xi = &x[i * fin..(i + 1) * fin];
-        for (k, &xv) in xi.iter().enumerate() {
-            let wrow = &w[k * fout..(k + 1) * fout];
-            for (o, &wv) in row.iter_mut().zip(wrow) {
-                *o = xv.mul_add(wv, *o);
-            }
-        }
-    }
-}
-
 // ----------------------------------------------------------------- kernel
+//
+// Model interpretation lives in `runtime/tensor/graph.rs` ([`LayerGraph`]
+// — the general {dense, conv2d, maxpool2, flatten} plan compiler that
+// replaced PR 1's dense-only `DenseStack`); this kernel owns a compiled
+// plan plus the optimizer and adapts it to the artifact signatures.
 
 struct NativeKernel {
-    stack: DenseStack,
+    graph: LayerGraph,
     /// Some for train artifacts, None for eval/infer.
     optim: Option<Optim>,
 }
@@ -451,7 +186,7 @@ fn f32_input<'a>(input: &Input<'a>, what: &str) -> Result<&'a [f32]> {
 impl NativeKernel {
     /// Infer the batch dimension from the flattened input length.
     fn batch_of(&self, x: &[f32], y: Option<&[f32]>) -> Result<usize> {
-        let in_dim = self.stack.in_dim;
+        let in_dim = self.graph.in_dim;
         anyhow::ensure!(
             !x.is_empty() && x.len() % in_dim == 0,
             "x length {} is not a multiple of the input size {in_dim}",
@@ -460,10 +195,10 @@ impl NativeKernel {
         let b = x.len() / in_dim;
         if let Some(y) = y {
             anyhow::ensure!(
-                y.len() == b * self.stack.out_dim,
+                y.len() == b * self.graph.out_dim,
                 "y length {} != batch {b} x out dim {}",
                 y.len(),
-                self.stack.out_dim
+                self.graph.out_dim
             );
         }
         Ok(b)
@@ -471,10 +206,10 @@ impl NativeKernel {
 
     fn check_params(&self, params: &[f32]) -> Result<()> {
         anyhow::ensure!(
-            params.len() == self.stack.param_count,
+            params.len() == self.graph.param_count,
             "params length {} != model param_count {}",
             params.len(),
-            self.stack.param_count
+            self.graph.param_count
         );
         Ok(())
     }
@@ -494,13 +229,13 @@ impl Kernel for NativeKernel {
                 self.check_params(params)?;
                 let optim = self.optim.context("train kernel without optimizer")?;
                 anyhow::ensure!(
-                    state.len() == optim.state_size(self.stack.param_count),
+                    state.len() == optim.state_size(self.graph.param_count),
                     "opt_state length {} != expected {}",
                     state.len(),
-                    optim.state_size(self.stack.param_count)
+                    optim.state_size(self.graph.param_count)
                 );
                 let b = self.batch_of(x, Some(y))?;
-                let (loss, metric, grad) = self.stack.loss_grad(params, x, y, b);
+                let (loss, metric, grad) = self.graph.loss_grad(params, x, y, b);
                 let mut new_p = params.to_vec();
                 let mut new_s = state.to_vec();
                 optim.apply(&mut new_p, &mut new_s, &grad, lr[0]);
@@ -513,7 +248,7 @@ impl Kernel for NativeKernel {
                 let y = f32_input(&inputs[2], "y")?;
                 self.check_params(params)?;
                 let b = self.batch_of(x, Some(y))?;
-                let (loss, metric) = self.stack.eval(params, x, y, b);
+                let (loss, metric) = self.graph.eval(params, x, y, b);
                 Ok(vec![vec![loss], vec![metric]])
             }
             "infer" => {
@@ -522,8 +257,7 @@ impl Kernel for NativeKernel {
                 let x = f32_input(&inputs[1], "x")?;
                 self.check_params(params)?;
                 let b = self.batch_of(x, None)?;
-                let mut acts = self.stack.forward(params, x, b);
-                Ok(vec![acts.pop().unwrap()])
+                Ok(vec![self.graph.forward(params, x, b).into_output()])
             }
             other => anyhow::bail!("unknown artifact kind {other:?}"),
         }
@@ -542,23 +276,26 @@ fn hash_name(s: &str) -> u64 {
     h
 }
 
-/// Deterministic Glorot init for a dense-stack model: weights uniform in
-/// ±sqrt(6/(fan_in+fan_out)), biases zero. The per-element scales vector
-/// (heterogeneous-init noise, Fig 6.2) is the layer's Glorot std
-/// sqrt(2/(fan_in+fan_out)) — strictly positive everywhere.
+/// Deterministic Glorot init for any layer-graph model: weights uniform in
+/// ±sqrt(6/(fan_in+fan_out)), biases zero. Conv fans follow
+/// `python/compile/flatten.conv_entries` (kh·kw·cin / kh·kw·cout). The
+/// per-element scales vector (heterogeneous-init noise, Fig 6.2) is the
+/// layer's Glorot std sqrt(2/(fan_in+fan_out)) — strictly positive
+/// everywhere. Weight draw order matches PR 1 exactly for dense stacks,
+/// so existing numeric test thresholds stay valid.
 fn glorot(info: &ModelInfo, seed: u64) -> Result<(Vec<f32>, Vec<f32>)> {
-    let stack = DenseStack::from_model(info)?;
+    let graph = LayerGraph::from_model(info)?;
     let mut rng = Rng::new(seed ^ hash_name(&info.name));
     let mut init = vec![0.0f32; info.param_count];
     let mut scales = vec![0.0f32; info.param_count];
-    for layer in &stack.layers {
-        let fan = (layer.fan_in + layer.fan_out) as f64;
+    for slot in graph.slots() {
+        let fan = (slot.fan_in + slot.fan_out) as f64;
         let limit = (6.0 / fan).sqrt();
         let std = (2.0 / fan).sqrt() as f32;
-        for w in init[layer.w_off..layer.b_off].iter_mut() {
+        for w in init[slot.w_off..slot.w_off + slot.w_len].iter_mut() {
             *w = rng.range(-limit, limit) as f32;
         }
-        for s in scales[layer.w_off..layer.b_off + layer.fan_out].iter_mut() {
+        for s in scales[slot.w_off..slot.b_off + slot.b_len].iter_mut() {
             *s = std;
         }
     }
@@ -572,38 +309,142 @@ fn glorot(info: &ModelInfo, seed: u64) -> Result<(Vec<f32>, Vec<f32>)> {
 pub const TRAIN_BATCH: usize = 10;
 pub const EVAL_BATCH: usize = 50;
 
+/// Layer-spec builder for [`synthetic_manifest`]: accumulates tensors,
+/// ops and the running parameter count in manifest packing order.
+struct SynthModel {
+    tensors: Vec<(String, Vec<usize>)>,
+    ops: Vec<OpSpec>,
+    param_count: usize,
+}
+
+impl SynthModel {
+    fn new() -> SynthModel {
+        SynthModel {
+            tensors: Vec::new(),
+            ops: Vec::new(),
+            param_count: 0,
+        }
+    }
+
+    fn dense(mut self, name: &str, d_in: usize, d_out: usize, act: &str) -> SynthModel {
+        self.tensors.push((format!("{name}.w"), vec![d_in, d_out]));
+        self.tensors.push((format!("{name}.b"), vec![d_out]));
+        self.param_count += d_in * d_out + d_out;
+        self.ops.push(OpSpec::Dense {
+            act: act.to_string(),
+        });
+        self
+    }
+
+    fn conv(mut self, name: &str, k: usize, cin: usize, cout: usize, stride: usize) -> SynthModel {
+        self.tensors.push((format!("{name}.w"), vec![k, k, cin, cout]));
+        self.tensors.push((format!("{name}.b"), vec![cout]));
+        self.param_count += k * k * cin * cout + cout;
+        self.ops.push(OpSpec::Conv2d {
+            stride,
+            act: "relu".to_string(),
+        });
+        self
+    }
+
+    fn maxpool2(mut self) -> SynthModel {
+        self.ops.push(OpSpec::MaxPool2);
+        self
+    }
+
+    fn flatten(mut self) -> SynthModel {
+        self.ops.push(OpSpec::Flatten);
+        self
+    }
+
+    /// Plain dense stack (op list elided — inferred from shapes, which
+    /// keeps the PR 1 inference path exercised by every test run).
+    fn dense_stack(dims: &[usize]) -> SynthModel {
+        let mut m = SynthModel::new();
+        for (l, pair) in dims.windows(2).enumerate() {
+            m = m.dense(&format!("fc{l}"), pair[0], pair[1], "linear");
+        }
+        m.ops.clear();
+        m
+    }
+}
+
 /// In-crate manifest for the native backend: no Python, no files. Models
-/// are dense heads over the existing synthetic data streams:
+/// cover the synthetic data streams *and* the paper's two CNNs:
 ///
-/// | model            | dims              | stream           | loss |
-/// |------------------|-------------------|------------------|------|
-/// | `synth_linear`   | 8 -> 1            | (unit tests)     | mse  |
-/// | `drift_mlp`      | 50 -> 64 -> 32 -> 2 | `GraphicalStream` | xent |
-/// | `mnist_logistic` | 784 -> 10         | `MnistLike`      | xent |
-/// | `mnist_mlp`      | 784 -> 64 -> 10   | `MnistLike`      | xent |
+/// | model            | architecture                        | stream            | loss |
+/// |------------------|-------------------------------------|-------------------|------|
+/// | `synth_linear`   | 8 -> 1                              | (unit tests)      | mse  |
+/// | `drift_mlp`      | 50 -> 64 -> 32 -> 2                 | `GraphicalStream` | xent |
+/// | `mnist_logistic` | 784 -> 10                           | `MnistLike`       | xent |
+/// | `mnist_mlp`      | 784 -> 64 -> 10                     | `MnistLike`       | xent |
+/// | `mnist_cnn`      | c3x8-c3x16-pool-fc64-fc10           | `MnistLike`       | xent |
+/// | `driving_cnn`    | c5x8s2-c5x12s2-c3x16-fc64-fc16-fc1t | `DrivingStream`   | mse  |
 ///
-/// `drift_mlp` matches the architecture the python side lowers for the
-/// paper's concept-drift experiments, so those experiment drivers run
-/// unchanged on either backend.
+/// `drift_mlp`, `mnist_cnn` and `driving_cnn` match the architectures the
+/// python side lowers (`python/compile/models.py`) tensor-for-tensor, so
+/// the experiment drivers — including every MNIST-like figure and the
+/// fig5_5 deep-driving case study — run unchanged on either backend.
 pub fn synthetic_manifest() -> Manifest {
     let dir = PathBuf::from("<synthetic>");
-    let specs: &[(&str, &[usize], &[usize], &str)] = &[
-        ("synth_linear", &[8], &[8, 1], "mse"),
-        ("drift_mlp", &[50], &[50, 64, 32, 2], "accuracy"),
-        ("mnist_logistic", &[28, 28, 1], &[784, 10], "accuracy"),
-        ("mnist_mlp", &[28, 28, 1], &[784, 64, 10], "accuracy"),
+    let specs: &[(&str, &[usize], usize, &str, SynthModel)] = &[
+        ("synth_linear", &[8], 1, "mse", SynthModel::dense_stack(&[8, 1])),
+        (
+            "drift_mlp",
+            &[50],
+            2,
+            "accuracy",
+            SynthModel::dense_stack(&[50, 64, 32, 2]),
+        ),
+        (
+            "mnist_logistic",
+            &[28, 28, 1],
+            10,
+            "accuracy",
+            SynthModel::dense_stack(&[784, 10]),
+        ),
+        (
+            "mnist_mlp",
+            &[28, 28, 1],
+            10,
+            "accuracy",
+            SynthModel::dense_stack(&[784, 64, 10]),
+        ),
+        // the paper's Table 1 CNN at the python lowering's widths
+        (
+            "mnist_cnn",
+            &[28, 28, 1],
+            10,
+            "accuracy",
+            SynthModel::new()
+                .conv("conv1", 3, 1, 8, 1) // 26x26x8
+                .conv("conv2", 3, 8, 16, 1) // 24x24x16
+                .maxpool2() // 12x12x16
+                .flatten()
+                .dense("fc1", 12 * 12 * 16, 64, "relu")
+                .dense("fc2", 64, 10, "linear"),
+        ),
+        // the Bojarski-style steering regressor (python DrivingCnn)
+        (
+            "driving_cnn",
+            &[32, 64, 1],
+            1,
+            "mse",
+            SynthModel::new()
+                .conv("conv1", 5, 1, 8, 2) // 14x30x8
+                .conv("conv2", 5, 8, 12, 2) // 5x13x12
+                .conv("conv3", 3, 12, 16, 1) // 3x11x16
+                .flatten()
+                .dense("fc1", 3 * 11 * 16, 64, "relu")
+                .dense("fc2", 64, 16, "relu")
+                .dense("fc3", 16, 1, "tanh"),
+        ),
     ];
     let mut models = std::collections::BTreeMap::new();
     let mut artifacts = std::collections::BTreeMap::new();
-    for &(name, x_shape, dims, metric) in specs {
-        let mut tensors = Vec::new();
-        let mut param_count = 0;
-        for (l, pair) in dims.windows(2).enumerate() {
-            tensors.push((format!("fc{l}.w"), vec![pair[0], pair[1]]));
-            tensors.push((format!("fc{l}.b"), vec![pair[1]]));
-            param_count += pair[0] * pair[1] + pair[1];
-        }
-        let y_dim = *dims.last().unwrap();
+    for (name, x_shape, y_dim, metric, spec) in specs {
+        let (name, y_dim) = (*name, *y_dim);
+        let param_count = spec.param_count;
         models.insert(
             name.to_string(),
             ModelInfo {
@@ -615,7 +456,8 @@ pub fn synthetic_manifest() -> Manifest {
                 metric: metric.to_string(),
                 init_bin: dir.join(format!("{name}_init.bin")),
                 scales_bin: dir.join(format!("{name}_scales.bin")),
-                tensors,
+                tensors: spec.tensors.clone(),
+                ops: spec.ops.clone(),
             },
         );
         for opt in ["sgd", "adam", "rmsprop"] {
@@ -724,7 +566,7 @@ mod tests {
                 .sum();
             assert_eq!(tiled, info.param_count, "{name} tensors tile P");
             // every model must be interpretable by the native backend
-            DenseStack::from_model(info).unwrap();
+            LayerGraph::from_model(info).unwrap();
         }
         for (name, a) in &m.artifacts {
             assert!(m.models.contains_key(&a.model), "{name} references model");
@@ -733,8 +575,11 @@ mod tests {
                 assert_eq!(a.state_size, opt.state_size(a.param_count), "{name}");
             }
         }
-        // the paper's drift model matches the python lowering exactly
+        // the paper's models match the python lowering exactly
+        // (drift_mlp: fl.dense_entries; CNNs: models.MnistCnn/DrivingCnn)
         assert_eq!(m.model("drift_mlp").unwrap().param_count, 5410);
+        assert_eq!(m.model("mnist_cnn").unwrap().param_count, 149_418);
+        assert_eq!(m.model("driving_cnn").unwrap().param_count, 39_277);
     }
 
     #[test]
@@ -743,7 +588,7 @@ mod tests {
         let backend = NativeBackend;
         for model in ["synth_linear", "drift_mlp"] {
             let info = manifest.model(model).unwrap();
-            let stack = DenseStack::from_model(info).unwrap();
+            let stack = LayerGraph::from_model(info).unwrap();
             let params = backend.init_params(&manifest, model).unwrap();
             let mut rng = Rng::new(7);
             let b = 4;
@@ -778,7 +623,7 @@ mod tests {
         let manifest = synthetic_manifest();
         let backend = NativeBackend;
         let info = manifest.model("drift_mlp").unwrap();
-        let stack = DenseStack::from_model(info).unwrap();
+        let stack = LayerGraph::from_model(info).unwrap();
         let mut rng = Rng::new(3);
         let (x, y) = batch_for(info, &mut rng, 10);
         for (opt, lr) in [(Optim::Sgd, 0.1f32), (Optim::Adam, 0.002), (Optim::RmsProp, 0.002)] {
@@ -873,18 +718,62 @@ mod tests {
         // first-layer weights bounded by the Glorot limit
         let limit = (6.0f64 / (50.0 + 64.0)).sqrt() as f32;
         assert!(a[..50 * 64].iter().all(|v| v.abs() <= limit));
+        // conv layers use the python conv fans: kh·kw·cin / kh·kw·cout
+        let cnn = backend.init_params(&manifest, "mnist_cnn").unwrap();
+        let climit = (6.0f64 / (9.0 + 72.0)).sqrt() as f32;
+        assert!(cnn[..72].iter().all(|v| v.abs() <= climit), "conv1 bounded");
+        assert!(cnn[..72].iter().any(|v| v.abs() > 0.0), "conv1 nonzero");
+        assert_eq!(cnn[72..80], [0.0; 8], "conv1 bias zero");
     }
 
     #[test]
-    fn non_dense_models_are_rejected_with_guidance() {
+    fn unsupported_models_are_rejected_with_guidance() {
+        // conv tensors without an explicit op list: shape inference is
+        // ambiguous (stride vs pooling), so the graph compiler refuses
         let mut info = synthetic_manifest().model("synth_linear").unwrap().clone();
         info.tensors = vec![
             ("conv1.w".to_string(), vec![3, 3, 1, 8]),
             ("conv1.b".to_string(), vec![8]),
         ];
-        let err = DenseStack::from_model(&info).unwrap_err();
+        info.ops.clear();
+        let err = LayerGraph::from_model(&info).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("backend-xla"), "error guides to xla: {msg}");
+        // attention-style tensors (rank 3, no op vocabulary) stay rejected
+        let mut info = synthetic_manifest().model("synth_linear").unwrap().clone();
+        info.tensors = vec![("l0.qkv.w".to_string(), vec![4, 3, 12])];
+        info.ops.clear();
+        let msg = format!("{:#}", LayerGraph::from_model(&info).unwrap_err());
+        assert!(msg.contains("backend-xla"), "error guides to xla: {msg}");
+    }
+
+    #[test]
+    fn cnn_models_interpret_and_train_natively() {
+        // the headline of this subsystem: a real conv/pool graph runs a
+        // full train step on the native backend with no artifacts
+        let rt = crate::runtime::Runtime::native();
+        for (model, dataset_dim) in [("mnist_cnn", 28 * 28), ("driving_cnn", 32 * 64)] {
+            let exe = rt.load(&Manifest::train_name(model, "sgd")).unwrap();
+            let params = rt.init_params(model).unwrap();
+            let info = rt.manifest.model(model).unwrap().clone();
+            let state = vec![0.0f32; 1];
+            let mut rng = Rng::new(31);
+            let b = 3;
+            let (x, y) = batch_for(&info, &mut rng, b);
+            assert_eq!(x.len(), b * dataset_dim);
+            let outs = exe
+                .run(&[
+                    Input::F32(&params, &[params.len()]),
+                    Input::F32(&state, &[1]),
+                    Input::F32(&x, &[b, dataset_dim]),
+                    Input::F32(&y, &[b, info.y_shape[0]]),
+                    Input::F32(&[0.05], &[]),
+                ])
+                .unwrap();
+            assert_eq!(outs[0].len(), params.len());
+            assert!(outs[2][0].is_finite(), "{model} loss finite");
+            assert_ne!(outs[0], params, "{model} params moved");
+        }
     }
 
     #[test]

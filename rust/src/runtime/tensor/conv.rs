@@ -1,0 +1,213 @@
+//! conv2d (valid padding, any stride) as im2col + blocked matmul, the CPU
+//! mirror of `python/compile/kernels/conv2d.py`.
+//!
+//! Layout contract (identical to the python side): activations are NHWC
+//! row-major; a conv weight tensor is `[kh, kw, cin, cout]`, which *is*
+//! the `[kh·kw·cin, cout]` matmul operand when read flat; the im2col
+//! patch matrix orders its K axis `(di, dj, ci)` to match. Because NHWC
+//! rows are channel-contiguous, one patch row is filled with `kh` copies
+//! of `kw·cin` consecutive floats — im2col is `kh` memcpys per output
+//! pixel, no gather.
+//!
+//! Backward follows the python custom VJP: `dW = patchesᵀ · dOut` with
+//! patches *rematerialized* (recomputing im2col is cheaper than holding
+//! every layer's patch matrix across the backward pass), `db` = column
+//! sums, and `dX` = col2im scatter-add of `dOut · Wᵀ` (the transposed
+//! convolution, expressed through the same two primitives).
+
+use super::matmul;
+
+/// Output spatial dims of a valid-padding conv/pool window.
+#[inline]
+pub fn out_dim(input: usize, kernel: usize, stride: usize) -> usize {
+    debug_assert!(stride > 0 && input >= kernel);
+    (input - kernel) / stride + 1
+}
+
+/// Extract valid-padding patches: `x: [b,h,w,c]` (NHWC flat) into
+/// `patches: [b·oh·ow, kh·kw·c]` with K ordered `(di, dj, ci)`.
+pub fn im2col(
+    x: &[f32],
+    patches: &mut [f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+) {
+    let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+    let k = kh * kw * c;
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(patches.len(), b * oh * ow * k);
+    let span = kw * c; // one (dj, ci) block is contiguous in NHWC
+    let mut row = 0;
+    for i in 0..b {
+        let img = &x[i * h * w * c..(i + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut patches[row * k..(row + 1) * k];
+                let (y0, x0) = (oy * stride, ox * stride);
+                for di in 0..kh {
+                    let src = ((y0 + di) * w + x0) * c;
+                    dst[di * span..(di + 1) * span].copy_from_slice(&img[src..src + span]);
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Scatter-add patch-space gradients back to input space (im2col
+/// transpose): `dpatches: [b·oh·ow, kh·kw·c]` accumulated into
+/// `dx: [b,h,w,c]` (caller zeroes). Overlapping windows sum — this is the
+/// transposed convolution.
+pub fn col2im_acc(
+    dpatches: &[f32],
+    dx: &mut [f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+) {
+    let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+    let k = kh * kw * c;
+    debug_assert_eq!(dx.len(), b * h * w * c);
+    debug_assert_eq!(dpatches.len(), b * oh * ow * k);
+    let span = kw * c;
+    let mut row = 0;
+    for i in 0..b {
+        let img = &mut dx[i * h * w * c..(i + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src_row = &dpatches[row * k..(row + 1) * k];
+                let (y0, x0) = (oy * stride, ox * stride);
+                for di in 0..kh {
+                    let dst = ((y0 + di) * w + x0) * c;
+                    for (o, &v) in img[dst..dst + span].iter_mut().zip(&src_row[di * span..]) {
+                        *o += v;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Convenience forward: `x: [b,h,w,c]`, `wt: [kh·kw·c, cout]` flat,
+/// `bias: [cout]` -> `[b,oh,ow,cout]`. The layer-graph interpreter drives
+/// im2col/matmul itself (it needs the intermediate activations for the
+/// backward pass); this entry point serves tests and benches. Note both
+/// paths currently allocate the patch matrix per call — pooling those
+/// scratch buffers is a known follow-up (see ROADMAP), not yet done.
+pub fn conv2d_forward(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    cout: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+    let (m, k) = (b * oh * ow, kh * kw * c);
+    let mut patches = vec![0.0f32; m * k];
+    im2col(x, &mut patches, b, (h, w, c), (kh, kw), stride);
+    let mut out = vec![0.0f32; m * cout];
+    matmul::matmul_bias(&patches, wt, bias, &mut out, m, k, cout);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Direct 6-loop convolution as the reference semantics.
+    fn conv_naive(
+        x: &[f32],
+        wt: &[f32], // [kh, kw, c, cout] flat
+        bias: &[f32],
+        b: usize,
+        (h, w, c): (usize, usize, usize),
+        (kh, kw): (usize, usize),
+        cout: usize,
+        stride: usize,
+    ) -> Vec<f32> {
+        let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+        let mut out = vec![0.0f32; b * oh * ow * cout];
+        for i in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for co in 0..cout {
+                        let mut acc = f64::from(bias[co]);
+                        for di in 0..kh {
+                            for dj in 0..kw {
+                                for ci in 0..c {
+                                    let xv = x[((i * h + oy * stride + di) * w + ox * stride + dj) * c + ci];
+                                    let wv = wt[((di * kw + dj) * c + ci) * cout + co];
+                                    acc += f64::from(xv) * f64::from(wv);
+                                }
+                            }
+                        }
+                        out[((i * oh + oy) * ow + ox) * cout + co] = acc as f32;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn im2col_matmul_equals_direct_convolution() {
+        let mut rng = Rng::new(11);
+        for (b, h, w, c, kh, kw, cout, stride) in [
+            (2, 6, 6, 1, 3, 3, 4, 1),
+            (1, 7, 9, 3, 3, 3, 2, 2),
+            (3, 8, 5, 2, 5, 3, 3, 1),
+            (2, 9, 9, 1, 5, 5, 2, 2),
+        ] {
+            let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal_f32()).collect();
+            let wt: Vec<f32> = (0..kh * kw * c * cout).map(|_| rng.normal_f32()).collect();
+            let bias: Vec<f32> = (0..cout).map(|_| rng.normal_f32()).collect();
+            let got = conv2d_forward(&x, &wt, &bias, b, (h, w, c), (kh, kw), cout, stride);
+            let want = conv_naive(&x, &wt, &bias, b, (h, w, c), (kh, kw), cout, stride);
+            for (i, (&g, &e)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - e).abs() < 1e-4 * (1.0 + e.abs()),
+                    "b{b} h{h} w{w} c{c} k{kh}x{kw} s{stride} out[{i}]: {g} vs {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn col2im_is_the_transpose_of_im2col() {
+        // <im2col(x), p> == <x, col2im(p)> for all x, p — the defining
+        // adjoint property that makes the conv input-gradient correct.
+        let mut rng = Rng::new(12);
+        let (b, h, w, c, kh, kw, stride) = (2, 7, 6, 2, 3, 3, 2);
+        let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+        let k = kh * kw * c;
+        let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal_f32()).collect();
+        let p: Vec<f32> = (0..b * oh * ow * k).map(|_| rng.normal_f32()).collect();
+        let mut fx = vec![0.0; b * oh * ow * k];
+        im2col(&x, &mut fx, b, (h, w, c), (kh, kw), stride);
+        let mut ftp = vec![0.0; b * h * w * c];
+        col2im_acc(&p, &mut ftp, b, (h, w, c), (kh, kw), stride);
+        let lhs: f64 = fx.iter().zip(&p).map(|(&a, &b)| f64::from(a) * f64::from(b)).sum();
+        let rhs: f64 = x.iter().zip(&ftp).map(|(&a, &b)| f64::from(a) * f64::from(b)).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn out_dim_matches_paper_architectures() {
+        assert_eq!(out_dim(28, 3, 1), 26); // mnist conv1
+        assert_eq!(out_dim(26, 3, 1), 24); // mnist conv2
+        assert_eq!(out_dim(32, 5, 2), 14); // driving conv1 (h)
+        assert_eq!(out_dim(64, 5, 2), 30); // driving conv1 (w)
+        assert_eq!(out_dim(14, 5, 2), 5); // driving conv2 (h)
+        assert_eq!(out_dim(30, 5, 2), 13); // driving conv2 (w)
+        assert_eq!(out_dim(5, 3, 1), 3); // driving conv3 (h)
+        assert_eq!(out_dim(13, 3, 1), 11); // driving conv3 (w)
+    }
+}

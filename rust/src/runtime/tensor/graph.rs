@@ -1,0 +1,901 @@
+//! [`LayerGraph`]: compile a manifest model into a forward/backward plan
+//! over the tensor kernels, then interpret it on flat `f32` parameter
+//! vectors.
+//!
+//! This generalizes PR 1's dense-only `DenseStack`: a model is a sequence
+//! of [`OpSpec`] layer ops ({dense, conv2d, maxpool2, flatten}) whose
+//! parameter tensors are consumed in manifest packing order. Plan
+//! compilation walks the ops once, threading the activation shape through
+//! and resolving every parameter offset, so interpretation does no shape
+//! arithmetic on the hot path.
+//!
+//! Models *without* an op list are inferred as dense stacks from their
+//! tensor shapes — exactly the PR 1 contract, so dense manifests (and the
+//! XLA artifact manifests that predate op lists) keep working unchanged.
+//! Conv models **require** the explicit list: tensor shapes cannot
+//! disambiguate a conv net (a stride-2 3x3 conv on 26x26 and a stride-1
+//! conv followed by 2x2 pooling both flatten to 12·12·C), and silently
+//! guessing would train a different function than the one lowered to XLA.
+//!
+//! Flatten (and the implicit image->dense boundary) is a layout no-op:
+//! activations are NHWC row-major, so the flat feature order already
+//! matches `h.reshape(b, -1)` on the python side. The plan therefore only
+//! materializes dense / conv2d / maxpool2 nodes.
+
+use anyhow::{Context, Result};
+
+use super::super::manifest::{Dtype, ModelInfo, OpSpec};
+use super::{conv, matmul, pool};
+
+/// Elementwise activation of a dense/conv node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Linear,
+    Relu,
+    Tanh,
+}
+
+impl Act {
+    fn parse(s: &str) -> Result<Act> {
+        match s {
+            "linear" | "none" => Ok(Act::Linear),
+            "relu" => Ok(Act::Relu),
+            "tanh" => Ok(Act::Tanh),
+            other => anyhow::bail!("unknown activation {other:?}"),
+        }
+    }
+
+    fn apply(self, v: &mut [f32]) {
+        match self {
+            Act::Linear => {}
+            Act::Relu => {
+                for x in v.iter_mut() {
+                    *x = x.max(0.0);
+                }
+            }
+            Act::Tanh => {
+                for x in v.iter_mut() {
+                    *x = x.tanh();
+                }
+            }
+        }
+    }
+
+    /// `delta *= act'(z)` expressed through the *post-activation* output
+    /// (relu': out > 0; tanh': 1 - out²) — the same association the
+    /// python custom VJPs use.
+    fn backprop(self, delta: &mut [f32], out: &[f32]) {
+        match self {
+            Act::Linear => {}
+            Act::Relu => {
+                for (d, &o) in delta.iter_mut().zip(out) {
+                    if o <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            Act::Tanh => {
+                for (d, &o) in delta.iter_mut().zip(out) {
+                    *d *= 1.0 - o * o;
+                }
+            }
+        }
+    }
+}
+
+/// Activation shape while threading the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Shape {
+    Img { h: usize, w: usize, c: usize },
+    Flat(usize),
+}
+
+impl Shape {
+    fn len(self) -> usize {
+        match self {
+            Shape::Img { h, w, c } => h * w * c,
+            Shape::Flat(d) => d,
+        }
+    }
+}
+
+/// One resolved node of the plan (flatten is elided — layout no-op).
+#[derive(Clone, Copy, Debug)]
+enum Node {
+    Dense {
+        fan_in: usize,
+        fan_out: usize,
+        w_off: usize,
+        b_off: usize,
+        act: Act,
+    },
+    Conv2d {
+        h: usize,
+        w: usize,
+        c: usize,
+        kh: usize,
+        kw: usize,
+        cout: usize,
+        oh: usize,
+        ow: usize,
+        stride: usize,
+        w_off: usize,
+        b_off: usize,
+        act: Act,
+    },
+    MaxPool2 {
+        h: usize,
+        w: usize,
+        c: usize,
+    },
+}
+
+/// One (weight, bias) parameter pair with the fan values Glorot init needs
+/// (conv fans follow `python/compile/flatten.conv_entries`:
+/// `kh·kw·cin` / `kh·kw·cout`).
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSlot {
+    pub w_off: usize,
+    pub w_len: usize,
+    pub b_off: usize,
+    pub b_len: usize,
+    pub fan_in: usize,
+    pub fan_out: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum LossKind {
+    /// softmax cross-entropy; metric = accuracy (manifest metric "accuracy")
+    Xent,
+    /// mean squared error; metric = mse (manifest metric "mse")
+    Mse,
+}
+
+/// A compiled, interpretable model: plan + loss + parameter layout.
+pub struct LayerGraph {
+    nodes: Vec<Node>,
+    slots: Vec<ParamSlot>,
+    loss: LossKind,
+    pub(crate) in_dim: usize,
+    pub(crate) out_dim: usize,
+    pub(crate) param_count: usize,
+}
+
+/// Everything the backward pass needs from the forward pass: per-node
+/// post-activation outputs plus pooling argmax indices.
+pub struct ForwardPass {
+    acts: Vec<Vec<f32>>,
+    pool_idx: Vec<Option<Vec<u32>>>,
+}
+
+impl ForwardPass {
+    /// The model output (post-activation of the last node).
+    pub fn output(&self) -> &[f32] {
+        self.acts.last().expect("plan has at least one node")
+    }
+
+    pub fn into_output(mut self) -> Vec<f32> {
+        self.acts.pop().expect("plan has at least one node")
+    }
+}
+
+impl LayerGraph {
+    pub fn from_model(info: &ModelInfo) -> Result<LayerGraph> {
+        anyhow::ensure!(
+            info.x_dtype == Dtype::F32,
+            "model {:?} has i32 inputs; the native backend supports f32 models only \
+             (enable the backend-xla feature for token models)",
+            info.name
+        );
+        let inferred;
+        let ops: &[OpSpec] = if info.ops.is_empty() {
+            inferred = infer_dense_ops(info)?;
+            &inferred
+        } else {
+            &info.ops
+        };
+
+        let mut shape = match info.x_shape[..] {
+            [h, w, c] => Shape::Img { h, w, c },
+            _ => Shape::Flat(info.x_shape.iter().product::<usize>().max(1)),
+        };
+        let in_dim = shape.len();
+        let mut nodes = Vec::new();
+        let mut slots = Vec::new();
+        let mut tensors = info.tensors.iter();
+        let mut off = 0;
+        for op in ops {
+            match op {
+                OpSpec::Dense { act } => {
+                    let ((wname, wshape), (_, bshape)) = next_pair(&mut tensors, &info.name, "dense")?;
+                    anyhow::ensure!(
+                        wshape.len() == 2 && bshape.len() == 1 && bshape[0] == wshape[1],
+                        "model {:?}: dense tensor {wname:?} must be [in,out] + [out], got {wshape:?} + {bshape:?}",
+                        info.name
+                    );
+                    let (fan_in, fan_out) = (wshape[0], wshape[1]);
+                    // image -> dense boundary: implicit flatten (layout no-op)
+                    anyhow::ensure!(
+                        fan_in == shape.len(),
+                        "model {:?}: dense layer {wname:?} fan_in {fan_in} != incoming features {}",
+                        info.name,
+                        shape.len()
+                    );
+                    let (w_off, b_off) = (off, off + fan_in * fan_out);
+                    off = b_off + fan_out;
+                    slots.push(ParamSlot {
+                        w_off,
+                        w_len: fan_in * fan_out,
+                        b_off,
+                        b_len: fan_out,
+                        fan_in,
+                        fan_out,
+                    });
+                    nodes.push(Node::Dense {
+                        fan_in,
+                        fan_out,
+                        w_off,
+                        b_off,
+                        act: Act::parse(act)?,
+                    });
+                    shape = Shape::Flat(fan_out);
+                }
+                OpSpec::Conv2d { stride, act } => {
+                    let Shape::Img { h, w, c } = shape else {
+                        anyhow::bail!(
+                            "model {:?}: conv2d needs an image input, have {shape:?}",
+                            info.name
+                        );
+                    };
+                    let ((wname, wshape), (_, bshape)) = next_pair(&mut tensors, &info.name, "conv2d")?;
+                    anyhow::ensure!(
+                        wshape.len() == 4 && bshape.len() == 1 && bshape[0] == wshape[3],
+                        "model {:?}: conv tensor {wname:?} must be [kh,kw,cin,cout] + [cout], got {wshape:?} + {bshape:?}",
+                        info.name
+                    );
+                    let (kh, kw, cin, cout) = (wshape[0], wshape[1], wshape[2], wshape[3]);
+                    anyhow::ensure!(
+                        cin == c,
+                        "model {:?}: conv {wname:?} expects {cin} input channels, have {c}",
+                        info.name
+                    );
+                    anyhow::ensure!(
+                        *stride > 0 && h >= kh && w >= kw,
+                        "model {:?}: conv {wname:?} {kh}x{kw} stride {stride} does not fit {h}x{w}",
+                        info.name
+                    );
+                    let (oh, ow) = (conv::out_dim(h, kh, *stride), conv::out_dim(w, kw, *stride));
+                    let (w_off, b_off) = (off, off + kh * kw * cin * cout);
+                    off = b_off + cout;
+                    slots.push(ParamSlot {
+                        w_off,
+                        w_len: kh * kw * cin * cout,
+                        b_off,
+                        b_len: cout,
+                        fan_in: kh * kw * cin,
+                        fan_out: kh * kw * cout,
+                    });
+                    nodes.push(Node::Conv2d {
+                        h,
+                        w,
+                        c,
+                        kh,
+                        kw,
+                        cout,
+                        oh,
+                        ow,
+                        stride: *stride,
+                        w_off,
+                        b_off,
+                        act: Act::parse(act)?,
+                    });
+                    shape = Shape::Img {
+                        h: oh,
+                        w: ow,
+                        c: cout,
+                    };
+                }
+                OpSpec::MaxPool2 => {
+                    let Shape::Img { h, w, c } = shape else {
+                        anyhow::bail!(
+                            "model {:?}: maxpool2 needs an image input, have {shape:?}",
+                            info.name
+                        );
+                    };
+                    anyhow::ensure!(
+                        h >= 2 && w >= 2,
+                        "model {:?}: maxpool2 on a {h}x{w} image",
+                        info.name
+                    );
+                    nodes.push(Node::MaxPool2 { h, w, c });
+                    shape = Shape::Img {
+                        h: h / 2,
+                        w: w / 2,
+                        c,
+                    };
+                }
+                OpSpec::Flatten => {
+                    shape = Shape::Flat(shape.len());
+                }
+            }
+        }
+        anyhow::ensure!(
+            tensors.next().is_none(),
+            "model {:?}: op list consumed fewer tensors than the manifest declares",
+            info.name
+        );
+        anyhow::ensure!(!nodes.is_empty(), "model {:?}: empty op list", info.name);
+        anyhow::ensure!(
+            off == info.param_count,
+            "model {:?}: ops tile {off} params, manifest says {}",
+            info.name,
+            info.param_count
+        );
+        let out_dim = shape.len();
+        let y_dim: usize = info.y_shape.iter().product::<usize>().max(1);
+        anyhow::ensure!(
+            out_dim == y_dim,
+            "model {:?}: output dim {out_dim} != y size {y_dim}",
+            info.name
+        );
+        let loss = match info.metric.as_str() {
+            "accuracy" => LossKind::Xent,
+            "mse" => LossKind::Mse,
+            other => anyhow::bail!("model {:?}: unknown metric {other:?}", info.name),
+        };
+        Ok(LayerGraph {
+            nodes,
+            slots,
+            loss,
+            in_dim,
+            out_dim,
+            param_count: info.param_count,
+        })
+    }
+
+    /// Parameter layout for initialization/introspection.
+    pub fn slots(&self) -> &[ParamSlot] {
+        &self.slots
+    }
+
+    /// Run the plan forward; activations are kept for a backward pass.
+    pub fn forward(&self, params: &[f32], x: &[f32], b: usize) -> ForwardPass {
+        debug_assert_eq!(params.len(), self.param_count);
+        debug_assert_eq!(x.len(), b * self.in_dim);
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.nodes.len());
+        let mut pool_idx: Vec<Option<Vec<u32>>> = vec![None; self.nodes.len()];
+        for (ni, node) in self.nodes.iter().enumerate() {
+            let input: &[f32] = if ni == 0 { x } else { &acts[ni - 1] };
+            let out = match *node {
+                Node::Dense {
+                    fan_in,
+                    fan_out,
+                    w_off,
+                    b_off,
+                    act,
+                } => {
+                    let mut out = vec![0.0f32; b * fan_out];
+                    matmul::matmul_bias(
+                        input,
+                        &params[w_off..w_off + fan_in * fan_out],
+                        &params[b_off..b_off + fan_out],
+                        &mut out,
+                        b,
+                        fan_in,
+                        fan_out,
+                    );
+                    act.apply(&mut out);
+                    out
+                }
+                Node::Conv2d {
+                    h,
+                    w,
+                    c,
+                    kh,
+                    kw,
+                    cout,
+                    oh,
+                    ow,
+                    stride,
+                    w_off,
+                    b_off,
+                    act,
+                } => {
+                    let (m, k) = (b * oh * ow, kh * kw * c);
+                    let mut patches = vec![0.0f32; m * k];
+                    conv::im2col(input, &mut patches, b, (h, w, c), (kh, kw), stride);
+                    let mut out = vec![0.0f32; m * cout];
+                    matmul::matmul_bias(
+                        &patches,
+                        &params[w_off..w_off + k * cout],
+                        &params[b_off..b_off + cout],
+                        &mut out,
+                        m,
+                        k,
+                        cout,
+                    );
+                    act.apply(&mut out);
+                    out
+                }
+                Node::MaxPool2 { h, w, c } => {
+                    let mut out = vec![0.0f32; b * (h / 2) * (w / 2) * c];
+                    let mut idx = vec![0u32; out.len()];
+                    pool::maxpool2_forward(input, &mut out, &mut idx, b, (h, w, c));
+                    pool_idx[ni] = Some(idx);
+                    out
+                }
+            };
+            acts.push(out);
+        }
+        ForwardPass { acts, pool_idx }
+    }
+
+    /// (loss, metric, dLoss/dOutput) at the model output.
+    fn output_loss(&self, out: &[f32], y: &[f32], b: usize) -> (f32, f32, Vec<f32>) {
+        let c = self.out_dim;
+        let mut delta = vec![0.0f32; b * c];
+        match self.loss {
+            LossKind::Xent => {
+                let mut loss = 0.0f64;
+                let mut correct = 0usize;
+                for i in 0..b {
+                    let row = &out[i * c..(i + 1) * c];
+                    let yrow = &y[i * c..(i + 1) * c];
+                    let max = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                    let mut sum = 0.0f32;
+                    for &v in row {
+                        sum += (v - max).exp();
+                    }
+                    let lse = max + sum.ln();
+                    let drow = &mut delta[i * c..(i + 1) * c];
+                    for j in 0..c {
+                        let logp = row[j] - lse;
+                        loss -= f64::from(yrow[j]) * f64::from(logp);
+                        drow[j] = (logp.exp() - yrow[j]) / b as f32;
+                    }
+                    let amax = |r: &[f32]| {
+                        r.iter()
+                            .enumerate()
+                            .fold((0usize, f32::NEG_INFINITY), |best, (j, &v)| {
+                                if v > best.1 {
+                                    (j, v)
+                                } else {
+                                    best
+                                }
+                            })
+                            .0
+                    };
+                    if amax(row) == amax(yrow) {
+                        correct += 1;
+                    }
+                }
+                ((loss / b as f64) as f32, correct as f32 / b as f32, delta)
+            }
+            LossKind::Mse => {
+                let n = (b * c) as f32;
+                let mut loss = 0.0f64;
+                for (j, (&o, &t)) in out.iter().zip(y).enumerate() {
+                    let d = o - t;
+                    loss += f64::from(d) * f64::from(d);
+                    delta[j] = 2.0 * d / n;
+                }
+                let mse = (loss / f64::from(n)) as f32;
+                (mse, mse, delta)
+            }
+        }
+    }
+
+    /// Loss + metric only (the eval path).
+    pub fn eval(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32) {
+        let pass = self.forward(params, x, b);
+        let (loss, metric, _) = self.output_loss(pass.output(), y, b);
+        (loss, metric)
+    }
+
+    /// Loss, metric and the full flat gradient (reverse-mode by hand).
+    pub fn loss_grad(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32, Vec<f32>) {
+        let pass = self.forward(params, x, b);
+        let (loss, metric, mut delta) = self.output_loss(pass.output(), y, b);
+        let mut grad = vec![0.0f32; self.param_count];
+        for ni in (0..self.nodes.len()).rev() {
+            let input: &[f32] = if ni == 0 { x } else { &pass.acts[ni - 1] };
+            match self.nodes[ni] {
+                Node::Dense {
+                    fan_in,
+                    fan_out,
+                    w_off,
+                    b_off,
+                    act,
+                } => {
+                    act.backprop(&mut delta, &pass.acts[ni]);
+                    matmul::matmul_at_b_acc(
+                        input,
+                        &delta,
+                        &mut grad[w_off..w_off + fan_in * fan_out],
+                        b,
+                        fan_in,
+                        fan_out,
+                    );
+                    matmul::add_col_sums(&delta, &mut grad[b_off..b_off + fan_out], b, fan_out);
+                    if ni > 0 {
+                        let mut nd = vec![0.0f32; b * fan_in];
+                        matmul::matmul_a_bt(
+                            &delta,
+                            &params[w_off..w_off + fan_in * fan_out],
+                            &mut nd,
+                            b,
+                            fan_out,
+                            fan_in,
+                        );
+                        delta = nd;
+                    }
+                }
+                Node::Conv2d {
+                    h,
+                    w,
+                    c,
+                    kh,
+                    kw,
+                    cout,
+                    oh,
+                    ow,
+                    stride,
+                    w_off,
+                    b_off,
+                    act,
+                } => {
+                    act.backprop(&mut delta, &pass.acts[ni]);
+                    let (m, k) = (b * oh * ow, kh * kw * c);
+                    // rematerialize patches (cheaper than holding them)
+                    let mut patches = vec![0.0f32; m * k];
+                    conv::im2col(input, &mut patches, b, (h, w, c), (kh, kw), stride);
+                    matmul::matmul_at_b_acc(&patches, &delta, &mut grad[w_off..w_off + k * cout], m, k, cout);
+                    matmul::add_col_sums(&delta, &mut grad[b_off..b_off + cout], m, cout);
+                    if ni > 0 {
+                        let mut dpatches = vec![0.0f32; m * k];
+                        matmul::matmul_a_bt(&delta, &params[w_off..w_off + k * cout], &mut dpatches, m, cout, k);
+                        let mut nd = vec![0.0f32; b * h * w * c];
+                        conv::col2im_acc(&dpatches, &mut nd, b, (h, w, c), (kh, kw), stride);
+                        delta = nd;
+                    }
+                }
+                Node::MaxPool2 { h, w, c } => {
+                    let idx = pass.pool_idx[ni].as_ref().expect("pool recorded argmax");
+                    let mut nd = vec![0.0f32; b * h * w * c];
+                    pool::maxpool2_backward(&delta, idx, &mut nd);
+                    delta = nd;
+                }
+            }
+        }
+        (loss, metric, grad)
+    }
+}
+
+type TensorEntry = (String, Vec<usize>);
+
+/// Pull the next (weight, bias) tensor pair for a parameterized op.
+fn next_pair<'a>(
+    it: &mut std::slice::Iter<'a, TensorEntry>,
+    model: &str,
+    what: &str,
+) -> Result<(&'a TensorEntry, &'a TensorEntry)> {
+    let w = it
+        .next()
+        .with_context(|| format!("model {model:?}: {what} needs a weight tensor"))?;
+    let b = it
+        .next()
+        .with_context(|| format!("model {model:?}: {what} needs a bias tensor"))?;
+    Ok((w, b))
+}
+
+/// Infer the PR 1 dense-stack semantics from tensor shapes alone:
+/// alternating rank-2/rank-1 pairs, relu on hidden layers, linear output.
+fn infer_dense_ops(info: &ModelInfo) -> Result<Vec<OpSpec>> {
+    let conv_like = info.tensors.iter().any(|(_, s)| s.len() == 4);
+    anyhow::ensure!(
+        !conv_like,
+        "model {:?} has conv tensors but no layer-op list; conv manifests must \
+         declare ops explicitly (regenerate artifacts with `make artifacts`) or \
+         run on the backend-xla feature",
+        info.name
+    );
+    let dense_like = !info.tensors.is_empty()
+        && info.tensors.len() % 2 == 0
+        && info
+            .tensors
+            .chunks(2)
+            .all(|pair| pair[0].1.len() == 2 && pair[1].1.len() == 1);
+    anyhow::ensure!(
+        dense_like,
+        "model {:?} is not a dense stack and declares no layer-op list; the \
+         native backend supports {{dense, conv2d, maxpool2, flatten}} graphs \
+         only (enable the backend-xla feature for attention models)",
+        info.name
+    );
+    let layers = info.tensors.len() / 2;
+    Ok((0..layers)
+        .map(|l| OpSpec::Dense {
+            act: if l + 1 < layers { "relu" } else { "linear" }.to_string(),
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Build an in-memory ModelInfo from (tensors, ops, shapes, metric).
+    fn model(
+        name: &str,
+        x_shape: &[usize],
+        y_dim: usize,
+        metric: &str,
+        tensors: &[(&str, &[usize])],
+        ops: Vec<OpSpec>,
+    ) -> ModelInfo {
+        let tensors: Vec<(String, Vec<usize>)> = tensors
+            .iter()
+            .map(|(n, s)| (n.to_string(), s.to_vec()))
+            .collect();
+        let param_count = tensors
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        ModelInfo {
+            name: name.to_string(),
+            param_count,
+            x_shape: x_shape.to_vec(),
+            x_dtype: Dtype::F32,
+            y_shape: vec![y_dim],
+            metric: metric.to_string(),
+            init_bin: PathBuf::from("<none>"),
+            scales_bin: PathBuf::from("<none>"),
+            tensors,
+            ops,
+        }
+    }
+
+    fn conv_op(stride: usize) -> OpSpec {
+        OpSpec::Conv2d {
+            stride,
+            act: "relu".to_string(),
+        }
+    }
+
+    fn dense_op(act: &str) -> OpSpec {
+        OpSpec::Dense {
+            act: act.to_string(),
+        }
+    }
+
+    /// A tiny conv net exercising every op: 6x6 image -> conv3x3x1x2 ->
+    /// maxpool2 -> flatten(8) -> dense 8->3 softmax-xent.
+    fn tiny_cnn() -> ModelInfo {
+        model(
+            "tiny_cnn",
+            &[6, 6, 1],
+            3,
+            "accuracy",
+            &[
+                ("conv1.w", &[3, 3, 1, 2]),
+                ("conv1.b", &[2]),
+                ("fc.w", &[8, 3]),
+                ("fc.b", &[3]),
+            ],
+            vec![
+                conv_op(1),
+                OpSpec::MaxPool2,
+                OpSpec::Flatten,
+                dense_op("linear"),
+            ],
+        )
+    }
+
+    /// Driving-style: strided conv chain + tanh head + MSE.
+    /// 7x9 -> conv3x3 s2 (3x4x2) -> conv3x3 s1 (1x2x3) -> flatten(6) -> 1.
+    fn tiny_driver() -> ModelInfo {
+        model(
+            "tiny_driver",
+            &[7, 9, 1],
+            1,
+            "mse",
+            &[
+                ("conv1.w", &[3, 3, 1, 2]),
+                ("conv1.b", &[2]),
+                ("conv2.w", &[3, 3, 2, 3]),
+                ("conv2.b", &[3]),
+                ("fc.w", &[6, 1]),
+                ("fc.b", &[1]),
+            ],
+            vec![
+                conv_op(2),
+                conv_op(1),
+                OpSpec::Flatten,
+                dense_op("tanh"),
+            ],
+        )
+    }
+
+    fn init_params(info: &ModelInfo, seed: u64) -> Vec<f32> {
+        let graph = LayerGraph::from_model(info).unwrap();
+        let mut rng = Rng::new(seed);
+        let mut p = vec![0.0f32; info.param_count];
+        for slot in graph.slots() {
+            let limit = (6.0 / (slot.fan_in + slot.fan_out) as f64).sqrt();
+            for v in p[slot.w_off..slot.w_off + slot.w_len].iter_mut() {
+                *v = rng.range(-limit, limit) as f32;
+            }
+            // biases nonzero so their gradients are exercised off-origin
+            for v in p[slot.b_off..slot.b_off + slot.b_len].iter_mut() {
+                *v = rng.range(-0.1, 0.1) as f32;
+            }
+        }
+        p
+    }
+
+    fn batch(info: &ModelInfo, seed: u64, b: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let in_dim: usize = info.x_shape.iter().product();
+        let out_dim: usize = info.y_shape.iter().product();
+        let x: Vec<f32> = (0..b * in_dim).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0f32; b * out_dim];
+        if info.metric == "accuracy" {
+            for i in 0..b {
+                y[i * out_dim + rng.below(out_dim)] = 1.0;
+            }
+        } else {
+            for v in y.iter_mut() {
+                *v = rng.range(-0.9, 0.9) as f32;
+            }
+        }
+        (x, y)
+    }
+
+    /// The satellite contract: conv2d and maxpool gradients pinned to
+    /// central finite differences, mirroring the dense-path test in
+    /// `runtime/native.rs`. Every parameter coordinate is probed (the
+    /// models are tiny), so conv weight, conv bias, pooled-path and
+    /// post-tanh gradients are all covered.
+    #[test]
+    fn conv_and_pool_gradients_match_finite_differences() {
+        for info in [tiny_cnn(), tiny_driver()] {
+            let graph = LayerGraph::from_model(&info).unwrap();
+            let params = init_params(&info, 7);
+            let (x, y) = batch(&info, 8, 3);
+            let (_, _, grad) = graph.loss_grad(&params, &x, &y, 3);
+            let h = 4e-3f32;
+            for idx in 0..params.len() {
+                let mut pp = params.clone();
+                pp[idx] += h;
+                let (lp, _) = graph.eval(&pp, &x, &y, 3);
+                pp[idx] = params[idx] - h;
+                let (lm, _) = graph.eval(&pp, &x, &y, 3);
+                let fd = (lp - lm) / (2.0 * h);
+                let g = grad[idx];
+                assert!(
+                    (fd - g).abs() <= 2e-3 + 0.02 * g.abs(),
+                    "{}[{idx}]: finite diff {fd} vs grad {g}",
+                    info.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_matches_hand_computed_pipeline() {
+        // identity-ish check: conv with a one-hot kernel == shifted input
+        let info = model(
+            "probe",
+            &[4, 4, 1],
+            4,
+            "accuracy",
+            &[
+                ("conv.w", &[2, 2, 1, 1]),
+                ("conv.b", &[1]),
+                ("fc.w", &[1, 4]),
+                ("fc.b", &[4]),
+            ],
+            vec![
+                conv_op(1),
+                OpSpec::MaxPool2,
+                OpSpec::Flatten,
+                dense_op("linear"),
+            ],
+        );
+        let graph = LayerGraph::from_model(&info).unwrap();
+        // kernel = top-left picker, bias 0; fc = identity-ish broadcast
+        let mut params = vec![0.0f32; info.param_count];
+        params[0] = 1.0; // w[0,0,0,0]
+        params[5] = 1.0; // fc.w[0,0] (after conv.b at offset 4)
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let pass = graph.forward(&params, &x, 1);
+        // conv output = x[0..3, 0..3] (top-left 3x3), pooled max = x[1*4+1]=5
+        assert_eq!(pass.output()[0], 5.0);
+        assert_eq!(pass.output()[1..], [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_only_models_need_no_op_list() {
+        let info = model(
+            "plain",
+            &[5],
+            2,
+            "accuracy",
+            &[("fc0.w", &[5, 4]), ("fc0.b", &[4]), ("fc1.w", &[4, 2]), ("fc1.b", &[2])],
+            Vec::new(),
+        );
+        let graph = LayerGraph::from_model(&info).unwrap();
+        assert_eq!(graph.slots().len(), 2);
+        assert_eq!(graph.in_dim, 5);
+        assert_eq!(graph.out_dim, 2);
+    }
+
+    #[test]
+    fn conv_tensors_without_ops_are_rejected_with_guidance() {
+        let info = model(
+            "mystery_conv",
+            &[6, 6, 1],
+            3,
+            "accuracy",
+            &[
+                ("conv1.w", &[3, 3, 1, 2]),
+                ("conv1.b", &[2]),
+                ("fc.w", &[8, 3]),
+                ("fc.b", &[3]),
+            ],
+            Vec::new(), // shapes alone are ambiguous — must be rejected
+        );
+        let err = LayerGraph::from_model(&info).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("ops"), "asks for an op list: {msg}");
+        assert!(msg.contains("backend-xla"), "offers the xla path: {msg}");
+    }
+
+    #[test]
+    fn malformed_graphs_are_rejected() {
+        // maxpool on flat features
+        let info = model(
+            "bad_pool",
+            &[8],
+            2,
+            "accuracy",
+            &[("fc.w", &[8, 2]), ("fc.b", &[2])],
+            vec![OpSpec::MaxPool2, dense_op("linear")],
+        );
+        assert!(LayerGraph::from_model(&info).is_err());
+        // dense fan_in mismatch after conv
+        let info = model(
+            "bad_fan",
+            &[6, 6, 1],
+            3,
+            "accuracy",
+            &[("conv.w", &[3, 3, 1, 2]), ("conv.b", &[2]), ("fc.w", &[7, 3]), ("fc.b", &[3])],
+            vec![conv_op(1), OpSpec::Flatten, dense_op("linear")],
+        );
+        assert!(LayerGraph::from_model(&info).is_err());
+        // leftover tensors
+        let info = model(
+            "leftover",
+            &[8],
+            2,
+            "accuracy",
+            &[("fc.w", &[8, 2]), ("fc.b", &[2]), ("extra.w", &[2, 2]), ("extra.b", &[2])],
+            vec![dense_op("linear")],
+        );
+        let msg = format!("{:#}", LayerGraph::from_model(&info).unwrap_err());
+        assert!(msg.contains("fewer tensors"), "{msg}");
+    }
+
+    #[test]
+    fn tanh_head_bounds_outputs() {
+        let info = tiny_driver();
+        let graph = LayerGraph::from_model(&info).unwrap();
+        let params = init_params(&info, 3);
+        let (x, _) = batch(&info, 4, 5);
+        let pass = graph.forward(&params, &x, 5);
+        assert!(pass.output().iter().all(|v| v.abs() <= 1.0));
+    }
+}

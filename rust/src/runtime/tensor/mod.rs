@@ -1,0 +1,33 @@
+//! Shape-aware tensor-op subsystem for the native backend.
+//!
+//! Pure-Rust, cache-conscious CPU kernels covering everything the paper's
+//! CNN architectures need, plus the [`LayerGraph`] interpreter that
+//! compiles a manifest model built from {dense, conv2d, maxpool2,
+//! flatten} into a forward/backward plan over those kernels:
+//!
+//! - [`matmul`] — blocked matmul family: K-panel tiling keeps the
+//!   streamed weight panel L1/L2-resident while the accumulator row stays
+//!   in registers (the idiom the whole crate's hot loops autovectorize
+//!   with). Used by the dense layers *and* by conv via im2col.
+//! - [`conv`] — conv2d (valid padding, any stride) as im2col patch
+//!   extraction + matmul, mirroring `python/compile/kernels/conv2d.py`:
+//!   forward, weight/bias backward (patches^T · dOut, rematerializing
+//!   patches), and input backward (dOut · W^T scattered by col2im).
+//! - [`pool`] — 2x2/stride-2 max pooling with recorded argmax for the
+//!   backward scatter.
+//! - [`graph`] — [`LayerGraph`]: the model compiler/interpreter that
+//!   replaced the dense-only `DenseStack` of PR 1. It executes any
+//!   manifest model whose `ops` list uses the ops above (dense stacks
+//!   need no list — they are inferred from tensor shapes), which is what
+//!   lets `mnist_cnn` and `driving_cnn` run hermetically.
+//!
+//! Everything here is plain data + `&self`-free functions: trivially
+//! `Send + Sync`, no `unsafe`, callable concurrently from the engine's
+//! per-learner worker threads.
+
+pub mod conv;
+pub mod graph;
+pub mod matmul;
+pub mod pool;
+
+pub use graph::{Act, LayerGraph};

@@ -1,0 +1,105 @@
+//! 2x2 stride-2 max pooling with argmax recording (the paper's
+//! `MaxPooling2D`), mirroring `python/compile/kernels/conv2d.max_pool2`:
+//! odd trailing rows/columns are dropped, and the backward pass routes
+//! each output gradient to the single input element that attained the max
+//! (ties resolve to the first in scan order — measure-zero on real
+//! activations).
+
+/// Forward: `x: [b,h,w,c]` NHWC -> `out: [b,h/2,w/2,c]`; `argmax[j]` is
+/// the flat index into `x` of the element `out[j]` came from.
+pub fn maxpool2_forward(x: &[f32], out: &mut [f32], argmax: &mut [u32], b: usize, (h, w, c): (usize, usize, usize)) {
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(out.len(), b * oh * ow * c);
+    debug_assert_eq!(argmax.len(), out.len());
+    debug_assert!(x.len() <= u32::MAX as usize, "argmax index fits u32");
+    let mut j = 0;
+    for i in 0..b {
+        let base = i * h * w * c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let p00 = base + ((2 * oy) * w + 2 * ox) * c;
+                for ci in 0..c {
+                    let cands = [p00 + ci, p00 + c + ci, p00 + w * c + ci, p00 + (w + 1) * c + ci];
+                    let mut best = cands[0];
+                    let mut bv = x[best];
+                    for &cand in &cands[1..] {
+                        if x[cand] > bv {
+                            best = cand;
+                            bv = x[cand];
+                        }
+                    }
+                    out[j] = bv;
+                    argmax[j] = best as u32;
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Backward: scatter `dout` into `dx` (caller zeroes) at the recorded
+/// argmax positions.
+pub fn maxpool2_backward(dout: &[f32], argmax: &[u32], dx: &mut [f32]) {
+    debug_assert_eq!(dout.len(), argmax.len());
+    for (&g, &idx) in dout.iter().zip(argmax) {
+        dx[idx as usize] += g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_max_per_window_per_channel() {
+        // 1 image, 4x4, 2 channels: channel 0 counts up, channel 1 down
+        let (h, w, c) = (4, 4, 2);
+        let mut x = vec![0.0f32; h * w * c];
+        for y in 0..h {
+            for xx in 0..w {
+                x[(y * w + xx) * c] = (y * w + xx) as f32;
+                x[(y * w + xx) * c + 1] = -((y * w + xx) as f32);
+            }
+        }
+        let mut out = vec![0.0; 2 * 2 * c];
+        let mut idx = vec![0u32; out.len()];
+        maxpool2_forward(&x, &mut out, &mut idx, 1, (h, w, c));
+        // channel 0 max of window (0..2,0..2) is element (1,1)=5; channel 1
+        // max is element (0,0)=0
+        assert_eq!(out[0], 5.0);
+        assert_eq!(out[1], 0.0);
+        assert_eq!(idx[0], ((w + 1) * c) as u32);
+        assert_eq!(idx[1], 1);
+        // last window: channel 0 max is (3,3)=15
+        assert_eq!(out[3 * c], 15.0);
+    }
+
+    #[test]
+    fn odd_dims_drop_trailing_row_and_column() {
+        let (h, w, c) = (5, 3, 1);
+        let x: Vec<f32> = (0..h * w).map(|v| v as f32).collect();
+        let mut out = vec![0.0; 2 * 1];
+        let mut idx = vec![0u32; 2];
+        maxpool2_forward(&x, &mut out, &mut idx, 1, (h, w, c));
+        assert_eq!(out, vec![4.0, 10.0]); // max of rows {0,1}x{0,1}, {2,3}x{0,1}
+    }
+
+    #[test]
+    fn backward_routes_gradient_to_argmax_only() {
+        let (h, w, c) = (4, 4, 1);
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut out = vec![0.0; 4];
+        let mut idx = vec![0u32; 4];
+        maxpool2_forward(&x, &mut out, &mut idx, 1, (h, w, c));
+        let dout = [1.0, 2.0, 3.0, 4.0];
+        let mut dx = vec![0.0; 16];
+        maxpool2_backward(&dout, &idx, &mut dx);
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
+        assert_eq!(dx[5], 1.0); // window maxes: 5, 7, 13, 15
+        assert_eq!(dx[7], 2.0);
+        assert_eq!(dx[13], 3.0);
+        assert_eq!(dx[15], 4.0);
+        assert_eq!(dx.iter().sum::<f32>(), 10.0, "gradient mass preserved");
+    }
+}

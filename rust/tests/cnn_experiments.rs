@@ -1,0 +1,74 @@
+//! The paper's CNN figures run hermetically on the native backend:
+//! `fig5_1` (MNIST-like CNN, real conv2d kernels — no more `mnist_mlp`
+//! substitution) and `fig5_5` (deep-driving case study: `driving_cnn`
+//! trained over the simulator stream, then evaluated *closed-loop* with
+//! the custom loss L_dd). Before the tensor subsystem these drivers
+//! needed XLA artifacts + `backend-xla`; now they are part of tier-1.
+//!
+//! Tiny scale keeps this a smoke of the full pipeline (data gen -> conv
+//! train steps -> protocol -> metrics -> closed-loop eval), not a
+//! reproduction run — `dynavg exp fig5_1` / `fig5_5` do the real thing.
+
+use dynavg::experiments::{self, Scale};
+use dynavg::runtime::Runtime;
+
+fn results_to_temp() {
+    // Once-guarded: the env write happens exactly once, before any test
+    // thread reads `results_dir()` (call this first in every test).
+    static SET: std::sync::Once = std::sync::Once::new();
+    SET.call_once(|| {
+        let dir = std::env::temp_dir().join("dynavg_cnn_experiments_test");
+        std::env::set_var("DYNAVG_RESULTS", &dir);
+    });
+}
+
+#[test]
+fn image_model_is_the_real_cnn_on_the_native_backend() {
+    let rt = Runtime::native();
+    assert_eq!(
+        experiments::image_model(&rt),
+        "mnist_cnn",
+        "MNIST-like figures must get the paper's CNN, not the MLP fallback"
+    );
+}
+
+#[test]
+fn fig5_1_runs_on_native_conv_kernels() {
+    results_to_temp();
+    let rt = Runtime::native();
+    let results = dynavg::experiments::fig5_1::run(&rt, Scale::Tiny, 7).unwrap();
+    assert!(!results.is_empty());
+    for r in &results {
+        assert!(
+            r.summary.cumulative_loss.is_finite() && r.summary.cumulative_loss > 0.0,
+            "{}: finite loss",
+            r.summary.protocol
+        );
+        assert_eq!(r.averaged.len(), 149_418, "{}: CNN-sized model", r.summary.protocol);
+    }
+    // the periodic baselines must have communicated
+    let periodic = experiments::common::by_prefix(&results, "sigma_b=10").unwrap();
+    assert!(periodic.summary.comm_bytes > 0);
+}
+
+#[test]
+fn fig5_5_driving_case_study_runs_closed_loop() {
+    results_to_temp();
+    let rt = Runtime::native();
+    let outcomes = dynavg::experiments::fig5_5::run(&rt, Scale::Tiny, 7).unwrap();
+    assert!(!outcomes.is_empty());
+    for o in &outcomes {
+        assert!(
+            o.custom_loss.is_finite(),
+            "{}: L_dd must be finite",
+            o.protocol
+        );
+        assert!(
+            o.stats.time_on_road >= 0.0,
+            "{}: closed-loop stats populated",
+            o.protocol
+        );
+    }
+    // at least one protocol actually synchronized models
+    assert!(outcomes.iter().any(|o| o.comm_bytes > 0));
+}
