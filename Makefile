@@ -2,7 +2,7 @@
 # and must pass hermetically (no Python, no XLA, no artifacts, default
 # features — the native backend).
 
-.PHONY: verify build test fmt clippy xla-check bench-smoke ci artifacts
+.PHONY: verify build test fmt clippy xla-check bench-smoke bench-report ci artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -27,6 +27,11 @@ xla-check:
 
 bench-smoke:
 	BENCH_JSON=$(CURDIR)/BENCH_smoke.json cargo bench -- --smoke
+	python3 python/tools/bench_report.py --diff-latest BENCH_smoke.json
+
+# Trajectory table across committed BENCH_*.json records (stdlib python).
+bench-report:
+	python3 python/tools/bench_report.py
 
 ci: fmt clippy xla-check verify bench-smoke
 

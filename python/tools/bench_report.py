@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Bench-trajectory and regression report over BENCH_*.json records.
+
+The rust benches (`cargo bench`, see rust/src/util/bench.rs) append one
+JSON object per result to $BENCH_JSON — raw timings ({name, iters,
+mean_ns, median_ns, min_ns}) plus derived-metric records such as the
+end-to-end mnist_cnn train-step throughput ({name, steps_per_s, gflops,
+...}). CI uploads each run's file; committed snapshots live at the repo
+root as BENCH_<tag>.json.
+
+Modes (stdlib only, no dependencies):
+
+  bench_report.py [FILES...]
+      Trajectory table across the given files (default: BENCH_*.json in
+      the repo root, sorted by name): one row per bench name, one column
+      per file, median time or throughput per cell.
+
+  bench_report.py --diff OLD NEW [--threshold 0.20]
+      Compare two records; print a warning for every bench whose
+      median_ns regressed by more than the threshold (or whose
+      steps_per_s/gflops dropped by more than it). Non-fatal by design —
+      exit code is always 0 unless --strict is given (CI uses the
+      default: a wall-clock smoke on shared runners is a tripwire, not a
+      gate).
+
+  bench_report.py --diff-latest NEW
+      Like --diff, with OLD = the lexicographically last committed
+      BENCH_*.json that is not NEW itself; a no-op (exit 0, note printed)
+      when no committed record exists yet.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def load_records(path):
+    """Parse one JSON-lines bench file -> {name: record}; later lines win."""
+    records = {}
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(rec, dict) and "name" in rec:
+                records[rec["name"]] = rec
+    return records
+
+
+def fmt_ns(ns):
+    if ns < 1e3:
+        return f"{ns:.0f} ns"
+    if ns < 1e6:
+        return f"{ns / 1e3:.2f} us"
+    if ns < 1e9:
+        return f"{ns / 1e6:.2f} ms"
+    return f"{ns / 1e9:.2f} s"
+
+
+def cell(rec):
+    if rec is None:
+        return "-"
+    if "median_ns" in rec:
+        return fmt_ns(rec["median_ns"])
+    if "steps_per_s" in rec:
+        return f"{rec['steps_per_s']:.2f} steps/s"
+    if "gflops" in rec:
+        return f"{rec['gflops']:.2f} GF/s"
+    return "?"
+
+
+def trajectory(paths):
+    if not paths:
+        print("no BENCH_*.json records found (run `make bench-smoke` to create one)")
+        return
+    tables = [(os.path.basename(p), load_records(p)) for p in paths]
+    names = []
+    for _, recs in tables:
+        for name in recs:
+            if name not in names:
+                names.append(name)
+    if not names:
+        print(f"no bench records in {', '.join(t for t, _ in tables)}")
+        return
+    width = max(5, max(len(n) for n in names)) + 2
+    colw = max(max(len(t) for t, _ in tables) + 2, 16)
+    header = "bench".ljust(width) + "".join(t.ljust(colw) for t, _ in tables)
+    print(header)
+    print("-" * len(header))
+    for name in names:
+        row = name.ljust(width)
+        for _, recs in tables:
+            row += cell(recs.get(name)).ljust(colw)
+        print(row)
+
+
+def diff(old_path, new_path, threshold, strict):
+    old = load_records(old_path)
+    new = load_records(new_path)
+    regressions = []
+    for name, new_rec in new.items():
+        old_rec = old.get(name)
+        if old_rec is None:
+            continue
+        # lower-is-better timing, higher-is-better throughput
+        checks = []
+        if "median_ns" in new_rec and "median_ns" in old_rec and old_rec["median_ns"] > 0:
+            checks.append(("median", new_rec["median_ns"] / old_rec["median_ns"] - 1.0))
+        for key in ("steps_per_s", "gflops"):
+            if key in new_rec and key in old_rec and new_rec[key] > 0:
+                checks.append((key, old_rec[key] / new_rec[key] - 1.0))
+        for what, slowdown in checks:
+            if slowdown > threshold:
+                regressions.append((name, what, slowdown))
+    base = os.path.basename
+    print(f"bench diff: {base(old_path)} -> {base(new_path)} "
+          f"({len(new)} benches, threshold {threshold:.0%})")
+    for name, what, slowdown in regressions:
+        # ::warning:: renders as a GitHub Actions annotation; plain text
+        # elsewhere — non-fatal either way unless --strict
+        print(f"::warning::bench regression: {name} [{what}] {slowdown:+.1%} "
+              f"vs {base(old_path)}")
+    if not regressions:
+        print("no regressions beyond threshold")
+    return 1 if (strict and regressions) else 0
+
+
+def main(argv):
+    mode = None
+    strict = False
+    threshold = 0.20
+    args = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--threshold":
+            threshold = float(argv[i + 1])
+            i += 2
+        elif a in ("--diff", "--diff-latest"):
+            mode = a
+            i += 1
+        elif a == "--strict":
+            strict = True
+            i += 1
+        elif a in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        else:
+            args.append(a)
+            i += 1
+
+    if mode == "--diff":
+        if len(args) != 2:
+            sys.exit("usage: bench_report.py --diff OLD NEW [--threshold T] [--strict]")
+        return diff(args[0], args[1], threshold, strict)
+
+    if mode == "--diff-latest":
+        if len(args) != 1:
+            sys.exit("usage: bench_report.py --diff-latest NEW [--threshold T] [--strict]")
+        new_path = os.path.abspath(args[0])
+        committed = sorted(
+            p for p in glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json"))
+            if os.path.abspath(p) != new_path
+        )
+        if not committed:
+            print("no committed BENCH_*.json baseline yet — skipping diff "
+                  "(commit one to start the trajectory)")
+            return 0
+        return diff(committed[-1], args[0], threshold, strict)
+
+    paths = args or sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
+    trajectory(paths)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -5,9 +5,10 @@
 use dynavg::data::{synth_mnist::MnistLike, Stream};
 use dynavg::model::params;
 use dynavg::runtime::tensor::{conv, matmul};
-use dynavg::runtime::{ModelRuntime, Runtime};
-use dynavg::util::bench::{bench, black_box, header};
+use dynavg::runtime::{LayerGraph, ModelRuntime, Runtime};
+use dynavg::util::bench::{bench, black_box, header, record_json};
 use dynavg::util::rng::Rng;
+use dynavg::util::threads;
 
 fn vecs(m: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
@@ -145,13 +146,59 @@ fn main() {
                 "driving_cnn" => dynavg::driving::DrivingStream::new(1, 2, false).next_batch(10),
                 _ => MnistLike::new(1, 2).next_batch(10),
             };
+            // serial workspace: this row tracks single-core dispatch
+            // latency across PRs (the tiled end-to-end record is below)
+            let mut ws = mrt.train.workspace();
             bench(&format!("train_step_{model} ({backend} execute)"), 10, || {
                 black_box(
                     mrt.train
-                        .step(&mut params_v, &mut state, &batch, 0.1)
+                        .step(&mut params_v, &mut state, &batch, 0.1, &mut ws)
                         .unwrap(),
                 );
             });
+        }
+
+        // end-to-end mnist_cnn train-step throughput record: steps/s and
+        // effective GFLOP/s (plan FLOPs / wall time) with the workspace's
+        // intra-step tiling at the machine's thread budget — the number
+        // the bench-smoke CI job tracks across BENCH_*.json records
+        if let Ok(mrt) = ModelRuntime::load(&rt, "mnist_cnn", "sgd") {
+            let info = rt.manifest.model("mnist_cnn").unwrap();
+            let flops = LayerGraph::from_model(info).unwrap().train_flops(10);
+            let mut params_v = rt.init_params("mnist_cnn").unwrap();
+            let mut state = vec![0.0; mrt.train.exe.info.state_size];
+            let batch = MnistLike::new(1, 3).next_batch(10);
+            let mut ws = mrt.train.workspace();
+            ws.threads = threads::default_threads();
+            let res = bench(
+                &format!("train_step_mnist_cnn_tiled (t={})", ws.threads),
+                20,
+                || {
+                    black_box(
+                        mrt.train
+                            .step(&mut params_v, &mut state, &batch, 0.1, &mut ws)
+                            .unwrap(),
+                    );
+                },
+            );
+            let steps_per_s = 1e9 / res.median_ns;
+            let gflops = flops / res.median_ns;
+            println!();
+            println!(
+                "mnist_cnn train-step    : {steps_per_s:>7.2} steps/s, {gflops:.2} GFLOP/s effective \
+                 ({:.1} MFLOP/step, intra-threads {})",
+                flops / 1e6,
+                ws.threads
+            );
+            record_json(
+                "train_step_mnist_cnn_throughput",
+                &[
+                    ("steps_per_s", steps_per_s),
+                    ("gflops", gflops),
+                    ("median_ns", res.median_ns),
+                    ("threads", ws.threads as f64),
+                ],
+            );
         }
 
         // ablation: XLA-side sync statistics (L1 reduce kernels) vs the

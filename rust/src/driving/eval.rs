@@ -51,6 +51,9 @@ pub fn drive(infer: &InferStep, params: &[f32], track: &Track, seed_theta: f64) 
     // sideline band: |offset| in [half_width - line_band, half_width]
     let line_band = 0.5;
     let mut img = vec![0.0f32; CAM_H * CAM_W];
+    // one warm workspace for the whole closed loop: per-frame inference
+    // reuses the arena instead of allocating activations every tick
+    let mut ws = infer.workspace();
     let mut stats = DriveStats {
         time_on_road: 0.0,
         crossings: 0,
@@ -62,7 +65,7 @@ pub fn drive(infer: &InferStep, params: &[f32], track: &Track, seed_theta: f64) 
     let max_ticks = 40_000;
     for _ in 0..max_ticks {
         render(&car, track, &mut img);
-        let out = infer.infer(params, &img)?;
+        let out = infer.infer(params, &img, &mut ws)?;
         let steer = out[0].clamp(-1.0, 1.0) as f64;
         car.step(steer, track);
         let off = car.lateral_offset(track).abs();

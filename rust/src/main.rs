@@ -115,13 +115,15 @@ fn cmd_list() -> Result<()> {
 
 /// Capability dump: which manifest models the loaded backend can actually
 /// execute (membership in the manifest is not enough — e.g. a native-only
-/// build over XLA artifacts cannot run `transformer_lm`).
+/// build over XLA artifacts cannot run `transformer_lm`), plus the
+/// steady-state `Workspace` arena footprint of one train step at the
+/// train-artifact batch size (native layer-graph models only).
 fn cmd_models() -> Result<()> {
     let rt = Runtime::new(dynavg::artifacts_dir())?;
     println!("backend: {}", rt.backend_name());
     println!(
-        "{:<16} {:>9}  {:<14} {:<8} {:<6} executable",
-        "model", "P", "x_shape", "metric", "ops"
+        "{:<16} {:>9}  {:<14} {:<8} {:<6} {:>12} executable",
+        "model", "P", "x_shape", "metric", "ops", "workspace"
     );
     for (name, m) in &rt.manifest.models {
         let executable = if rt.supports_model(name) {
@@ -137,8 +139,22 @@ fn cmd_models() -> Result<()> {
         } else {
             m.ops.len().to_string()
         };
+        // per-learner arena of one train step (interpretable models only;
+        // batch = the train artifact's nominal size): interpreter scratch
+        // plus the four output slots (params' + opt_state' + 2 scalars)
+        let train = rt
+            .manifest
+            .artifacts
+            .values()
+            .find(|a| a.kind == "train" && a.model == *name);
+        let train_batch = train.map(|a| a.batch).unwrap_or(1);
+        let out_slots = train.map(|a| a.param_count + a.state_size + 2).unwrap_or(0);
+        let workspace = match dynavg::runtime::LayerGraph::from_model(m) {
+            Ok(g) => format!("{} B", g.workspace_bytes(train_batch) + 4 * out_slots),
+            Err(_) => "-".to_string(),
+        };
         println!(
-            "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {executable}",
+            "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {workspace:>12} {executable}",
             name, m.param_count, m.metric,
         );
     }

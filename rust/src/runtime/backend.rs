@@ -19,6 +19,7 @@
 use anyhow::{Context, Result};
 
 use super::manifest::{ArtifactInfo, Manifest};
+use super::workspace::Workspace;
 
 /// Input tensor for one execute call, backend-independent.
 pub enum Input<'a> {
@@ -28,13 +29,25 @@ pub enum Input<'a> {
 
 /// Backend-specific compiled form of one artifact.
 ///
-/// `run` must be callable concurrently from many threads (the engine's
-/// per-learner workers share one `Arc<Executable>`).
+/// `run_into` must be callable concurrently from many threads (the
+/// engine's per-learner workers share one `Arc<Executable>`) — all
+/// per-call mutable state lives in the caller's [`Workspace`], which is
+/// owned by exactly one caller at a time.
 pub trait Kernel: Send + Sync {
     /// Execute the artifact. Inputs follow the lowered signature order of
-    /// the artifact kind (see `runtime::step`); returns the flattened f32
-    /// contents of each tuple output.
-    fn run(&self, info: &ArtifactInfo, inputs: &[Input]) -> Result<Vec<Vec<f32>>>;
+    /// the artifact kind (see `runtime::step`); the flattened f32 contents
+    /// of each tuple output are written into `ws.outputs` (slots reused
+    /// across calls). The native backend also runs all interpretation
+    /// scratch out of `ws`, making steady-state calls allocation-free.
+    fn run_into(&self, info: &ArtifactInfo, inputs: &[Input], ws: &mut Workspace) -> Result<()>;
+
+    /// A workspace pre-sized for this artifact's nominal batch. The
+    /// default is an empty arena that grows on first use — backends whose
+    /// buffer sizes are known at compile time (the native layer-graph
+    /// plan) override this so the first call already runs warm.
+    fn workspace(&self, _info: &ArtifactInfo) -> Workspace {
+        Workspace::new()
+    }
 }
 
 /// An execution substrate: compiles artifacts, provides initial models.
@@ -107,8 +120,26 @@ impl Executable {
         Executable { info, kernel }
     }
 
-    /// Run the artifact. Inputs must match the lowered signature order.
+    /// Run the artifact into the caller's workspace (the hot path: output
+    /// slots and interpreter scratch are reused, so steady-state calls
+    /// allocate nothing). Inputs must match the lowered signature order.
+    pub fn run_into(&self, inputs: &[Input], ws: &mut Workspace) -> Result<()> {
+        self.kernel.run_into(&self.info, inputs, ws)
+    }
+
+    /// A workspace sized for this artifact (see [`Kernel::workspace`]).
+    pub fn workspace(&self) -> Workspace {
+        self.kernel.workspace(&self.info)
+    }
+
+    /// One-shot convenience over [`Executable::run_into`]: runs in a fresh
+    /// throwaway workspace and returns the owned outputs. For repeated
+    /// calls, hold a [`Workspace`] and use `run_into`. The empty arena is
+    /// deliberate — it grows to the *actual* batch of this one call
+    /// instead of pre-sizing the nominal-batch buffers just to drop them.
     pub fn run(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
-        self.kernel.run(&self.info, inputs)
+        let mut ws = Workspace::new();
+        self.run_into(inputs, &mut ws)?;
+        Ok(std::mem::take(&mut ws.outputs))
     }
 }

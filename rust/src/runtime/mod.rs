@@ -15,12 +15,19 @@
 //! and `DYNAVG_BACKEND` aware) and falls back to the hermetic synthetic
 //! manifest when no artifacts exist, so every call site works on a clean
 //! machine.
+//!
+//! Execution is arena-backed: kernels run *into* a caller-owned
+//! [`Workspace`] (`Kernel::run_into`), whose buffer slots the native
+//! layer-graph plan sizes at compile time — steady-state training
+//! performs zero heap allocations and the conv hot loop can tile across
+//! threads with bitwise-identical results (see `workspace.rs`).
 
 pub mod backend;
 pub mod manifest;
 pub mod native;
 pub mod step;
 pub mod tensor;
+pub mod workspace;
 #[cfg(feature = "backend-xla")]
 pub mod xla;
 
@@ -29,6 +36,7 @@ pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo, OpSpec};
 pub use native::NativeBackend;
 pub use step::{Batch, EvalStep, InferStep, StepStats, TrainStep};
 pub use tensor::LayerGraph;
+pub use workspace::Workspace;
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -38,6 +38,7 @@ use crate::util::rng::Rng;
 use super::backend::{self, Backend, Input, Kernel};
 use super::manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo, OpSpec};
 use super::tensor::LayerGraph;
+use super::workspace::{sized, Workspace};
 
 /// The pure-Rust backend. Stateless: each compiled [`Kernel`] owns its
 /// interpreted model plan.
@@ -215,8 +216,22 @@ impl NativeKernel {
     }
 }
 
+/// Size `outs` to exactly `n` reusable slots (steady state: no-op).
+fn ensure_outputs(outs: &mut Vec<Vec<f32>>, n: usize) {
+    if outs.len() != n {
+        outs.resize_with(n, Vec::new);
+    }
+}
+
+/// Write a scalar into output slot `slot`.
+fn set_scalar(slot: &mut Vec<f32>, v: f32) {
+    sized(slot, 1);
+    slot[0] = v;
+}
+
 impl Kernel for NativeKernel {
-    fn run(&self, info: &ArtifactInfo, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+    fn run_into(&self, info: &ArtifactInfo, inputs: &[Input], ws: &mut Workspace) -> Result<()> {
+        let threads = ws.threads.max(1);
         match info.kind.as_str() {
             "train" => {
                 anyhow::ensure!(inputs.len() == 5, "train takes (params, opt_state, x, y, lr)");
@@ -235,11 +250,20 @@ impl Kernel for NativeKernel {
                     optim.state_size(self.graph.param_count)
                 );
                 let b = self.batch_of(x, Some(y))?;
-                let (loss, metric, grad) = self.graph.loss_grad(params, x, y, b);
-                let mut new_p = params.to_vec();
-                let mut new_s = state.to_vec();
-                optim.apply(&mut new_p, &mut new_s, &grad, lr[0]);
-                Ok(vec![new_p, new_s, vec![loss], vec![metric]])
+                let (loss, metric) = self.graph.loss_grad_into(params, x, y, b, &mut ws.scratch, threads);
+                // updated params/state are built in the reusable output
+                // slots: copy-in, then the optimizer updates in place —
+                // no allocation, and the caller can swap the slots out
+                ensure_outputs(&mut ws.outputs, 4);
+                sized(&mut ws.outputs[0], params.len());
+                ws.outputs[0].copy_from_slice(params);
+                sized(&mut ws.outputs[1], state.len());
+                ws.outputs[1].copy_from_slice(state);
+                let (new_p, rest) = ws.outputs.split_at_mut(1);
+                optim.apply(&mut new_p[0], &mut rest[0], &ws.scratch.grad, lr[0]);
+                set_scalar(&mut ws.outputs[2], loss);
+                set_scalar(&mut ws.outputs[3], metric);
+                Ok(())
             }
             "eval" => {
                 anyhow::ensure!(inputs.len() == 3, "eval takes (params, x, y)");
@@ -248,8 +272,11 @@ impl Kernel for NativeKernel {
                 let y = f32_input(&inputs[2], "y")?;
                 self.check_params(params)?;
                 let b = self.batch_of(x, Some(y))?;
-                let (loss, metric) = self.graph.eval(params, x, y, b);
-                Ok(vec![vec![loss], vec![metric]])
+                let (loss, metric) = self.graph.eval_into(params, x, y, b, &mut ws.scratch, threads);
+                ensure_outputs(&mut ws.outputs, 2);
+                set_scalar(&mut ws.outputs[0], loss);
+                set_scalar(&mut ws.outputs[1], metric);
+                Ok(())
             }
             "infer" => {
                 anyhow::ensure!(inputs.len() == 2, "infer takes (params, x)");
@@ -257,10 +284,24 @@ impl Kernel for NativeKernel {
                 let x = f32_input(&inputs[1], "x")?;
                 self.check_params(params)?;
                 let b = self.batch_of(x, None)?;
-                Ok(vec![self.graph.forward(params, x, b).into_output()])
+                self.graph.forward_into(params, x, b, &mut ws.scratch, threads);
+                ensure_outputs(&mut ws.outputs, 1);
+                let out = ws.scratch.acts.last().expect("plan has at least one node");
+                sized(&mut ws.outputs[0], out.len());
+                ws.outputs[0].copy_from_slice(out);
+                Ok(())
             }
             other => anyhow::bail!("unknown artifact kind {other:?}"),
         }
+    }
+
+    /// The plan knows every buffer size, so the workspace is sized at
+    /// compile time for the artifact's nominal batch — the first call
+    /// already runs warm.
+    fn workspace(&self, info: &ArtifactInfo) -> Workspace {
+        let mut ws = Workspace::new();
+        self.graph.prepare_scratch(info.batch.max(1), &mut ws.scratch);
+        ws
     }
 }
 

@@ -3,6 +3,13 @@
 //! These own the input packing for the three artifact kinds so the rest
 //! of L3 never touches backend types directly — the same wrappers drive
 //! the native interpreter and the PJRT executables.
+//!
+//! Every wrapper executes into a caller-owned [`Workspace`] (get one from
+//! `workspace()`): outputs land in reusable slots, and on the native
+//! backend all interpreter scratch lives there too, so steady-state
+//! stepping performs zero heap allocations (`tests/zero_alloc.rs`). The
+//! train step *swaps* the updated params/opt-state vectors with the
+//! workspace slots instead of copying them out.
 
 use std::sync::Arc;
 
@@ -10,6 +17,7 @@ use anyhow::Result;
 
 use super::backend::{Executable, Input};
 use super::manifest::Dtype;
+use super::workspace::Workspace;
 
 /// Mini-batch of training data in the layout the artifact expects.
 #[derive(Clone, Debug)]
@@ -55,46 +63,64 @@ impl TrainStep {
         }
     }
 
-    /// Run one step in place: params and opt_state are updated.
+    /// A workspace sized for this artifact's nominal batch.
+    pub fn workspace(&self) -> Workspace {
+        self.exe.workspace()
+    }
+
+    /// Run one step in place: params and opt_state are updated (by
+    /// swapping with the workspace output slots — no O(P) copy beyond the
+    /// kernel's own write, and no allocation once `ws` is warm).
     pub fn step(
         &self,
         params: &mut Vec<f32>,
         opt_state: &mut Vec<f32>,
         batch: &Batch,
         lr: f32,
+        ws: &mut Workspace,
     ) -> Result<StepStats> {
         let lr_slice = [lr];
         let pshape = [params.len()];
         let sshape = [opt_state.len()];
-        let outs = match (batch, self.x_dtype) {
-            (Batch::F32 { x, y }, Dtype::F32) => self.exe.run(&[
-                Input::F32(params, &pshape),
-                Input::F32(opt_state, &sshape),
-                Input::F32(x, &self.x_shape),
-                Input::F32(y, &self.y_shape),
-                Input::F32(&lr_slice, &[]),
-            ])?,
-            (Batch::I32 { x }, Dtype::I32) => {
-                let dummy_y = vec![0i32; self.y_shape.iter().product()];
-                self.exe.run(&[
+        match (batch, self.x_dtype) {
+            (Batch::F32 { x, y }, Dtype::F32) => self.exe.run_into(
+                &[
                     Input::F32(params, &pshape),
                     Input::F32(opt_state, &sshape),
-                    Input::I32(x, &self.x_shape),
-                    Input::I32(&dummy_y, &self.y_shape),
+                    Input::F32(x, &self.x_shape),
+                    Input::F32(y, &self.y_shape),
                     Input::F32(&lr_slice, &[]),
-                ])?
+                ],
+                ws,
+            )?,
+            (Batch::I32 { x }, Dtype::I32) => {
+                let dummy_y = vec![0i32; self.y_shape.iter().product()];
+                self.exe.run_into(
+                    &[
+                        Input::F32(params, &pshape),
+                        Input::F32(opt_state, &sshape),
+                        Input::I32(x, &self.x_shape),
+                        Input::I32(&dummy_y, &self.y_shape),
+                        Input::F32(&lr_slice, &[]),
+                    ],
+                    ws,
+                )?
             }
             _ => anyhow::bail!("batch dtype does not match artifact"),
         };
-        anyhow::ensure!(outs.len() == 4, "train artifact must return 4 outputs");
-        // move the new params/state out of the owned outputs — no O(P)
-        // copies on the per-learner hot path
-        let mut outs = outs.into_iter();
-        *params = outs.next().unwrap();
-        *opt_state = outs.next().unwrap();
-        let loss = outs.next().unwrap()[0];
-        let metric = outs.next().unwrap()[0];
-        Ok(StepStats { loss, metric })
+        anyhow::ensure!(ws.outputs.len() == 4, "train artifact must return 4 outputs");
+        anyhow::ensure!(
+            ws.outputs[0].len() == params.len() && ws.outputs[1].len() == opt_state.len(),
+            "train artifact output sizes do not match params/opt_state"
+        );
+        // adopt the updated vectors by swapping with the output slots (the
+        // kernel overwrites its slots on the next call anyway)
+        std::mem::swap(params, &mut ws.outputs[0]);
+        std::mem::swap(opt_state, &mut ws.outputs[1]);
+        Ok(StepStats {
+            loss: ws.outputs[2][0],
+            metric: ws.outputs[3][0],
+        })
     }
 }
 
@@ -125,28 +151,39 @@ impl EvalStep {
         }
     }
 
-    pub fn eval(&self, params: &[f32], batch: &Batch) -> Result<StepStats> {
+    /// A workspace sized for this artifact's nominal batch.
+    pub fn workspace(&self) -> Workspace {
+        self.exe.workspace()
+    }
+
+    pub fn eval(&self, params: &[f32], batch: &Batch, ws: &mut Workspace) -> Result<StepStats> {
         let pshape = [params.len()];
-        let outs = match (batch, self.x_dtype) {
-            (Batch::F32 { x, y }, Dtype::F32) => self.exe.run(&[
-                Input::F32(params, &pshape),
-                Input::F32(x, &self.x_shape),
-                Input::F32(y, &self.y_shape),
-            ])?,
+        match (batch, self.x_dtype) {
+            (Batch::F32 { x, y }, Dtype::F32) => self.exe.run_into(
+                &[
+                    Input::F32(params, &pshape),
+                    Input::F32(x, &self.x_shape),
+                    Input::F32(y, &self.y_shape),
+                ],
+                ws,
+            )?,
             (Batch::I32 { x }, Dtype::I32) => {
                 let dummy_y = vec![0i32; self.y_shape.iter().product()];
-                self.exe.run(&[
-                    Input::F32(params, &pshape),
-                    Input::I32(x, &self.x_shape),
-                    Input::I32(&dummy_y, &self.y_shape),
-                ])?
+                self.exe.run_into(
+                    &[
+                        Input::F32(params, &pshape),
+                        Input::I32(x, &self.x_shape),
+                        Input::I32(&dummy_y, &self.y_shape),
+                    ],
+                    ws,
+                )?
             }
             _ => anyhow::bail!("batch dtype does not match artifact"),
         };
-        anyhow::ensure!(outs.len() == 2, "eval artifact must return 2 outputs");
+        anyhow::ensure!(ws.outputs.len() == 2, "eval artifact must return 2 outputs");
         Ok(StepStats {
-            loss: outs[0][0],
-            metric: outs[1][0],
+            loss: ws.outputs[0][0],
+            metric: ws.outputs[1][0],
         })
     }
 }
@@ -165,11 +202,19 @@ impl InferStep {
         InferStep { exe, x_shape }
     }
 
-    pub fn infer(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+    /// A workspace sized for this artifact's nominal batch.
+    pub fn workspace(&self) -> Workspace {
+        self.exe.workspace()
+    }
+
+    /// Run inference; the returned slice borrows the workspace output
+    /// slot (valid until the next call), so a closed loop — the driving
+    /// controller calls this per frame — allocates nothing.
+    pub fn infer<'w>(&self, params: &[f32], x: &[f32], ws: &'w mut Workspace) -> Result<&'w [f32]> {
         let pshape = [params.len()];
-        let outs = self
-            .exe
-            .run(&[Input::F32(params, &pshape), Input::F32(x, &self.x_shape)])?;
-        Ok(outs.into_iter().next().unwrap())
+        self.exe
+            .run_into(&[Input::F32(params, &pshape), Input::F32(x, &self.x_shape)], ws)?;
+        anyhow::ensure!(ws.outputs.len() == 1, "infer artifact must return 1 output");
+        Ok(&ws.outputs[0])
     }
 }

@@ -16,6 +16,23 @@
 //! convolution, expressed through the same two primitives).
 
 use super::matmul;
+use crate::util::threads::parallel_for_each_mut;
+
+/// Minimum element traffic (patch-matrix elements) before the
+/// bandwidth-bound im2col/col2im sweeps tile across scoped threads — the
+/// spawn-amortization floor, mirroring `matmul::TILE_MIN_MACS` for the
+/// compute-bound products. Like there, the floor never changes results
+/// (tiled == serial bitwise); the `_impl` variants skip it for tests.
+const TILE_MIN_ELEMS: usize = 1 << 18;
+
+#[inline]
+fn sweep_tile_threads(elems: usize, threads: usize) -> usize {
+    if elems < TILE_MIN_ELEMS {
+        1
+    } else {
+        threads
+    }
+}
 
 /// Output spatial dims of a valid-padding conv/pool window.
 #[inline]
@@ -34,26 +51,87 @@ pub fn im2col(
     (kh, kw): (usize, usize),
     stride: usize,
 ) {
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(
+        patches.len(),
+        b * out_dim(h, kh, stride) * out_dim(w, kw, stride) * kh * kw * c
+    );
+    im2col_rows(x, patches, (h, w, c), (kh, kw), stride, 0);
+}
+
+/// [`im2col`] restricted to the global patch-row range
+/// `[row0, row0 + patches.len()/(kh·kw·c))` — the resumable form the
+/// thread-tiled conv path partitions over (each patch row is written
+/// independently, so any partition is bitwise identical to the serial
+/// sweep).
+pub fn im2col_rows(
+    x: &[f32],
+    patches: &mut [f32],
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+    row0: usize,
+) {
     let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
     let k = kh * kw * c;
-    debug_assert_eq!(x.len(), b * h * w * c);
-    debug_assert_eq!(patches.len(), b * oh * ow * k);
+    let rows = patches.len() / k;
+    debug_assert_eq!(patches.len(), rows * k);
+    debug_assert!(row0 + rows <= (x.len() / (h * w * c)) * oh * ow);
     let span = kw * c; // one (dj, ci) block is contiguous in NHWC
-    let mut row = 0;
-    for i in 0..b {
+    for (r, dst) in patches.chunks_exact_mut(k).enumerate() {
+        let row = row0 + r;
+        let i = row / (oh * ow);
+        let rem = row % (oh * ow);
+        let (oy, ox) = (rem / ow, rem % ow);
         let img = &x[i * h * w * c..(i + 1) * h * w * c];
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let dst = &mut patches[row * k..(row + 1) * k];
-                let (y0, x0) = (oy * stride, ox * stride);
-                for di in 0..kh {
-                    let src = ((y0 + di) * w + x0) * c;
-                    dst[di * span..(di + 1) * span].copy_from_slice(&img[src..src + span]);
-                }
-                row += 1;
-            }
+        let (y0, x0) = (oy * stride, ox * stride);
+        for di in 0..kh {
+            let src = ((y0 + di) * w + x0) * c;
+            dst[di * span..(di + 1) * span].copy_from_slice(&img[src..src + span]);
         }
     }
+}
+
+/// Thread-tiled [`im2col`]: partitions the patch rows over `threads`
+/// scoped workers. Bitwise identical to the serial call (disjoint rows).
+pub fn im2col_tiled(
+    x: &[f32],
+    patches: &mut [f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+    threads: usize,
+) {
+    let threads = sweep_tile_threads(patches.len(), threads);
+    im2col_tiled_impl(x, patches, b, (h, w, c), (kh, kw), stride, threads);
+}
+
+fn im2col_tiled_impl(
+    x: &[f32],
+    patches: &mut [f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+    threads: usize,
+) {
+    let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+    let (m, k) = (b * oh * ow, kh * kw * c);
+    let t = threads.min(m).max(1);
+    if t <= 1 {
+        im2col(x, patches, b, (h, w, c), (kh, kw), stride);
+        return;
+    }
+    let chunk = m.div_ceil(t);
+    let mut tiles: Vec<_> = patches
+        .chunks_mut(chunk * k)
+        .enumerate()
+        .map(|(ti, p)| (ti * chunk, p))
+        .collect();
+    parallel_for_each_mut(&mut tiles, t, |_, tile| {
+        im2col_rows(x, &mut *tile.1, (h, w, c), (kh, kw), stride, tile.0);
+    });
 }
 
 /// Scatter-add patch-space gradients back to input space (im2col
@@ -92,12 +170,118 @@ pub fn col2im_acc(
     }
 }
 
-/// Convenience forward: `x: [b,h,w,c]`, `wt: [kh·kw·c, cout]` flat,
-/// `bias: [cout]` -> `[b,oh,ow,cout]`. The layer-graph interpreter drives
-/// im2col/matmul itself (it needs the intermediate activations for the
-/// backward pass); this entry point serves tests and benches. Note both
-/// paths currently allocate the patch matrix per call — pooling those
-/// scratch buffers is a known follow-up (see ROADMAP), not yet done.
+/// Thread-tiled [`col2im_acc`]: partitions over batch images (each
+/// image's `dx` block receives scatter-adds only from its own patch rows,
+/// so images are independent and results are bitwise identical to the
+/// serial sweep at any thread count).
+pub fn col2im_acc_tiled(
+    dpatches: &[f32],
+    dx: &mut [f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+    threads: usize,
+) {
+    let threads = sweep_tile_threads(dpatches.len(), threads);
+    col2im_acc_tiled_impl(dpatches, dx, b, (h, w, c), (kh, kw), stride, threads);
+}
+
+fn col2im_acc_tiled_impl(
+    dpatches: &[f32],
+    dx: &mut [f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    stride: usize,
+    threads: usize,
+) {
+    let t = threads.min(b).max(1);
+    if t <= 1 {
+        col2im_acc(dpatches, dx, b, (h, w, c), (kh, kw), stride);
+        return;
+    }
+    let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+    let per_img_patch = oh * ow * kh * kw * c;
+    let per_img_x = h * w * c;
+    let chunk = b.div_ceil(t);
+    let mut tiles: Vec<_> = dpatches
+        .chunks(chunk * per_img_patch)
+        .zip(dx.chunks_mut(chunk * per_img_x))
+        .collect();
+    parallel_for_each_mut(&mut tiles, t, |_, tile| {
+        let imgs = tile.0.len() / per_img_patch;
+        col2im_acc(tile.0, &mut *tile.1, imgs, (h, w, c), (kh, kw), stride);
+    });
+}
+
+/// Forward conv into caller-owned slices: `x: [b,h,w,c]`,
+/// `wt: [kh·kw·c, cout]` flat, `bias: [cout]` -> `out: [b,oh,ow,cout]`,
+/// with the im2col patch matrix written into the caller's `patches` slice
+/// (a `Workspace` arena slot on the hot path — nothing is allocated here).
+/// `threads > 1` fuses im2col+matmul per output-row tile on scoped
+/// workers; results are bitwise identical to `threads == 1` because tiles
+/// own disjoint patch/output rows and each row's arithmetic is unchanged.
+pub fn forward_into(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    patches: &mut [f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    cout: usize,
+    stride: usize,
+    threads: usize,
+) {
+    // floor on the fused GEMM volume, as in matmul::gemm tile entry points
+    let threads = sweep_tile_threads(patches.len().saturating_mul(cout), threads);
+    forward_into_impl(x, wt, bias, out, patches, b, (h, w, c), (kh, kw), cout, stride, threads);
+}
+
+fn forward_into_impl(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    patches: &mut [f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    cout: usize,
+    stride: usize,
+    threads: usize,
+) {
+    let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+    let (m, k) = (b * oh * ow, kh * kw * c);
+    debug_assert_eq!(out.len(), m * cout);
+    debug_assert_eq!(patches.len(), m * k);
+    let t = threads.min(m).max(1);
+    if t <= 1 {
+        im2col(x, patches, b, (h, w, c), (kh, kw), stride);
+        matmul::matmul_bias(patches, wt, bias, out, m, k, cout);
+        return;
+    }
+    let chunk = m.div_ceil(t);
+    let mut tiles: Vec<_> = patches
+        .chunks_mut(chunk * k)
+        .zip(out.chunks_mut(chunk * cout))
+        .enumerate()
+        .map(|(ti, (p, o))| (ti * chunk, p, o))
+        .collect();
+    parallel_for_each_mut(&mut tiles, t, |_, tile| {
+        let rows = tile.1.len() / k;
+        im2col_rows(x, &mut *tile.1, (h, w, c), (kh, kw), stride, tile.0);
+        matmul::matmul_bias(&*tile.1, wt, bias, &mut *tile.2, rows, k, cout);
+    });
+}
+
+/// Convenience forward: allocate the output (and a temporary patch
+/// buffer) and run [`forward_into`] serially. The layer-graph interpreter
+/// does **not** use this — its conv nodes write into `Workspace` arena
+/// slots sized once at plan-compile time and reused every step (see
+/// `runtime/workspace.rs`); this entry point serves tests and benches.
 pub fn conv2d_forward(
     x: &[f32],
     wt: &[f32],
@@ -111,9 +295,20 @@ pub fn conv2d_forward(
     let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
     let (m, k) = (b * oh * ow, kh * kw * c);
     let mut patches = vec![0.0f32; m * k];
-    im2col(x, &mut patches, b, (h, w, c), (kh, kw), stride);
     let mut out = vec![0.0f32; m * cout];
-    matmul::matmul_bias(&patches, wt, bias, &mut out, m, k, cout);
+    forward_into(
+        x,
+        wt,
+        bias,
+        &mut out,
+        &mut patches,
+        b,
+        (h, w, c),
+        (kh, kw),
+        cout,
+        stride,
+        1,
+    );
     out
 }
 
@@ -197,6 +392,51 @@ mod tests {
         let lhs: f64 = fx.iter().zip(&p).map(|(&a, &b)| f64::from(a) * f64::from(b)).sum();
         let rhs: f64 = x.iter().zip(&ftp).map(|(&a, &b)| f64::from(a) * f64::from(b)).sum();
         assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn tiled_conv_paths_are_bitwise_identical_to_serial() {
+        let mut rng = Rng::new(13);
+        for (b, h, w, c, kh, kw, cout, stride) in [
+            (3, 8, 7, 2, 3, 3, 4, 1),
+            (2, 9, 9, 1, 5, 5, 2, 2),
+            (5, 6, 6, 3, 3, 3, 2, 1),
+        ] {
+            let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+            let (m, k) = (b * oh * ow, kh * kw * c);
+            let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal_f32()).collect();
+            let wt: Vec<f32> = (0..k * cout).map(|_| rng.normal_f32()).collect();
+            let bias: Vec<f32> = (0..cout).map(|_| rng.normal_f32()).collect();
+            let p: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            for threads in [2usize, 3, 7] {
+                // the _impl variants bypass the spawn-amortization floor
+                // so real tiles run at these toy sizes.
+                // fused forward (im2col + matmul per row tile):
+                let mut serial_out = vec![0.0f32; m * cout];
+                let mut serial_pat = vec![0.0f32; m * k];
+                let mut tiled_out = vec![f32::NAN; m * cout];
+                let mut tiled_pat = vec![f32::NAN; m * k];
+                let run = |o: &mut [f32], p: &mut [f32], t: usize| {
+                    forward_into_impl(&x, &wt, &bias, o, p, b, (h, w, c), (kh, kw), cout, stride, t);
+                };
+                run(&mut serial_out, &mut serial_pat, 1);
+                run(&mut tiled_out, &mut tiled_pat, threads);
+                assert_eq!(serial_out, tiled_out, "forward b{b} t{threads}");
+                assert_eq!(serial_pat, tiled_pat, "patches b{b} t{threads}");
+
+                // standalone tiled im2col
+                let mut tiled_pat2 = vec![f32::NAN; m * k];
+                im2col_tiled_impl(&x, &mut tiled_pat2, b, (h, w, c), (kh, kw), stride, threads);
+                assert_eq!(serial_pat, tiled_pat2, "im2col b{b} t{threads}");
+
+                // per-image tiled col2im scatter-add
+                let mut serial_dx = vec![0.0f32; b * h * w * c];
+                col2im_acc(&p, &mut serial_dx, b, (h, w, c), (kh, kw), stride);
+                let mut tiled_dx = vec![0.0f32; b * h * w * c];
+                col2im_acc_tiled_impl(&p, &mut tiled_dx, b, (h, w, c), (kh, kw), stride, threads);
+                assert_eq!(serial_dx, tiled_dx, "col2im b{b} t{threads}");
+            }
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@
 use anyhow::{Context, Result};
 
 use super::super::manifest::{Dtype, ModelInfo, OpSpec};
+use super::super::workspace::{sized, sized_u32, zeroed, Scratch};
 use super::{conv, matmul, pool};
 
 /// Elementwise activation of a dense/conv node.
@@ -151,7 +152,12 @@ pub(crate) enum LossKind {
     Mse,
 }
 
-/// A compiled, interpretable model: plan + loss + parameter layout.
+/// A compiled, interpretable model: plan + loss + parameter layout, plus
+/// the buffer-slot plan that sizes a [`Scratch`] arena — per-node
+/// activation lengths, the shared im2col patch slot, and the ping-pong
+/// delta width, all per batch element and resolved here at compile time
+/// so the interpreter never computes (or allocates) buffer sizes on the
+/// hot path.
 pub struct LayerGraph {
     nodes: Vec<Node>,
     slots: Vec<ParamSlot>,
@@ -159,13 +165,20 @@ pub struct LayerGraph {
     pub(crate) in_dim: usize,
     pub(crate) out_dim: usize,
     pub(crate) param_count: usize,
+    /// Activation length per batch element of each node (slot = node idx).
+    act_units: Vec<usize>,
+    /// im2col patch elements per batch element, max over conv nodes (the
+    /// one shared patch slot also holds the backward `dOut·Wᵀ` product).
+    patch_unit: usize,
+    /// Widest layer-gradient per batch element (ping-pong delta buffers).
+    delta_unit: usize,
 }
 
-/// Everything the backward pass needs from the forward pass: per-node
-/// post-activation outputs plus pooling argmax indices.
+/// Owned per-node post-activation outputs of one forward sweep (the
+/// allocating-convenience return of [`LayerGraph::forward`]; the hot path
+/// keeps activations — and the pooling argmax — inside [`Scratch`]).
 pub struct ForwardPass {
     acts: Vec<Vec<f32>>,
-    pool_idx: Vec<Option<Vec<u32>>>,
 }
 
 impl ForwardPass {
@@ -343,6 +356,25 @@ impl LayerGraph {
             "mse" => LossKind::Mse,
             other => anyhow::bail!("model {:?}: unknown metric {other:?}", info.name),
         };
+        // buffer-slot plan: every per-batch-element buffer length the
+        // interpreter will ever need, resolved once here
+        let act_units: Vec<usize> = nodes
+            .iter()
+            .map(|n| match *n {
+                Node::Dense { fan_out, .. } => fan_out,
+                Node::Conv2d { oh, ow, cout, .. } => oh * ow * cout,
+                Node::MaxPool2 { h, w, c } => (h / 2) * (w / 2) * c,
+            })
+            .collect();
+        let patch_unit = nodes
+            .iter()
+            .map(|n| match *n {
+                Node::Conv2d { oh, ow, kh, kw, c, .. } => oh * ow * kh * kw * c,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0);
+        let delta_unit = act_units.iter().copied().chain([in_dim]).max().unwrap_or(0);
         Ok(LayerGraph {
             nodes,
             slots,
@@ -350,6 +382,9 @@ impl LayerGraph {
             in_dim,
             out_dim,
             param_count: info.param_count,
+            act_units,
+            patch_unit,
+            delta_unit,
         })
     }
 
@@ -358,15 +393,80 @@ impl LayerGraph {
         &self.slots
     }
 
-    /// Run the plan forward; activations are kept for a backward pass.
-    pub fn forward(&self, params: &[f32], x: &[f32], b: usize) -> ForwardPass {
+    /// Size every [`Scratch`] slot for batch `b` per the compile-time
+    /// buffer plan. Idempotent; capacities only grow, so in steady state
+    /// (same `b`) this is a no-op and interpretation allocates nothing.
+    pub(crate) fn prepare_scratch(&self, b: usize, s: &mut Scratch) {
+        let n = self.nodes.len();
+        if s.acts.len() != n {
+            s.acts.resize_with(n, Vec::new);
+            s.pool_idx.resize_with(n, Vec::new);
+        }
+        for (a, &u) in s.acts.iter_mut().zip(&self.act_units) {
+            sized(a, b * u);
+        }
+        for (ni, node) in self.nodes.iter().enumerate() {
+            if matches!(node, Node::MaxPool2 { .. }) {
+                sized_u32(&mut s.pool_idx[ni], b * self.act_units[ni]);
+            }
+        }
+        sized(&mut s.patches, b * self.patch_unit);
+        sized(&mut s.delta, b * self.delta_unit);
+        sized(&mut s.delta2, b * self.delta_unit);
+        sized(&mut s.grad, self.param_count);
+    }
+
+    /// Steady-state scratch footprint of one train/eval step at batch `b`,
+    /// in bytes — the arena a per-learner `Workspace` holds (surfaced by
+    /// `dynavg models`).
+    pub fn workspace_bytes(&self, b: usize) -> usize {
+        let acts: usize = self.act_units.iter().sum::<usize>() * b;
+        let pool: usize = self
+            .nodes
+            .iter()
+            .zip(&self.act_units)
+            .filter(|(n, _)| matches!(n, Node::MaxPool2 { .. }))
+            .map(|(_, &u)| u)
+            .sum::<usize>()
+            * b;
+        4 * (acts + pool + b * self.patch_unit + 2 * b * self.delta_unit + self.param_count)
+    }
+
+    /// Approximate FLOPs of one train step at batch `b`: 2·M·K·N per GEMM,
+    /// counting forward, weight-gradient and (except for the first node)
+    /// input-gradient products. im2col/pool traffic is not counted —
+    /// this is the numerator of the "effective GFLOP/s" bench metric.
+    pub fn train_flops(&self, b: usize) -> f64 {
+        let gemm = |m: usize, k: usize, n: usize| 2.0 * (m as f64) * (k as f64) * (n as f64);
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(ni, node)| {
+                let passes = if ni > 0 { 3.0 } else { 2.0 };
+                match *node {
+                    Node::Dense { fan_in, fan_out, .. } => passes * gemm(b, fan_in, fan_out),
+                    Node::Conv2d { c, kh, kw, cout, oh, ow, .. } => {
+                        passes * gemm(b * oh * ow, kh * kw * c, cout)
+                    }
+                    Node::MaxPool2 { .. } => 0.0,
+                }
+            })
+            .sum()
+    }
+
+    /// Run the plan forward into the scratch arena: post-activations land
+    /// in `s.acts` (slot = node index), pooling argmax in `s.pool_idx`.
+    /// `threads > 1` tiles the conv/dense products (bitwise identical to
+    /// serial — see `runtime/tensor/matmul.rs`).
+    pub(crate) fn forward_into(&self, params: &[f32], x: &[f32], b: usize, s: &mut Scratch, threads: usize) {
         debug_assert_eq!(params.len(), self.param_count);
         debug_assert_eq!(x.len(), b * self.in_dim);
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.nodes.len());
-        let mut pool_idx: Vec<Option<Vec<u32>>> = vec![None; self.nodes.len()];
+        self.prepare_scratch(b, s);
         for (ni, node) in self.nodes.iter().enumerate() {
-            let input: &[f32] = if ni == 0 { x } else { &acts[ni - 1] };
-            let out = match *node {
+            let (prev, rest) = s.acts.split_at_mut(ni);
+            let input: &[f32] = if ni == 0 { x } else { &prev[ni - 1] };
+            let out = &mut rest[0];
+            match *node {
                 Node::Dense {
                     fan_in,
                     fan_out,
@@ -374,18 +474,17 @@ impl LayerGraph {
                     b_off,
                     act,
                 } => {
-                    let mut out = vec![0.0f32; b * fan_out];
-                    matmul::matmul_bias(
+                    matmul::matmul_bias_tiled(
                         input,
                         &params[w_off..w_off + fan_in * fan_out],
                         &params[b_off..b_off + fan_out],
-                        &mut out,
+                        out,
                         b,
                         fan_in,
                         fan_out,
+                        threads,
                     );
-                    act.apply(&mut out);
-                    out
+                    act.apply(out);
                 }
                 Node::Conv2d {
                     h,
@@ -402,38 +501,43 @@ impl LayerGraph {
                     act,
                 } => {
                     let (m, k) = (b * oh * ow, kh * kw * c);
-                    let mut patches = vec![0.0f32; m * k];
-                    conv::im2col(input, &mut patches, b, (h, w, c), (kh, kw), stride);
-                    let mut out = vec![0.0f32; m * cout];
-                    matmul::matmul_bias(
-                        &patches,
+                    conv::forward_into(
+                        input,
                         &params[w_off..w_off + k * cout],
                         &params[b_off..b_off + cout],
-                        &mut out,
-                        m,
-                        k,
+                        out,
+                        &mut s.patches[..m * k],
+                        b,
+                        (h, w, c),
+                        (kh, kw),
                         cout,
+                        stride,
+                        threads,
                     );
-                    act.apply(&mut out);
-                    out
+                    act.apply(out);
                 }
                 Node::MaxPool2 { h, w, c } => {
-                    let mut out = vec![0.0f32; b * (h / 2) * (w / 2) * c];
-                    let mut idx = vec![0u32; out.len()];
-                    pool::maxpool2_forward(input, &mut out, &mut idx, b, (h, w, c));
-                    pool_idx[ni] = Some(idx);
-                    out
+                    pool::maxpool2_forward(input, out, &mut s.pool_idx[ni], b, (h, w, c));
                 }
-            };
-            acts.push(out);
+            }
         }
-        ForwardPass { acts, pool_idx }
     }
 
-    /// (loss, metric, dLoss/dOutput) at the model output.
-    fn output_loss(&self, out: &[f32], y: &[f32], b: usize) -> (f32, f32, Vec<f32>) {
+    /// Allocating convenience over [`LayerGraph::forward_into`] for tests,
+    /// benches and one-shot callers; the hot path holds a `Workspace`.
+    pub fn forward(&self, params: &[f32], x: &[f32], b: usize) -> ForwardPass {
+        let mut s = Scratch::new();
+        self.forward_into(params, x, b, &mut s, 1);
+        ForwardPass {
+            acts: std::mem::take(&mut s.acts),
+        }
+    }
+
+    /// (loss, metric) at the model output; dLoss/dOutput is written into
+    /// `delta` (resized to `b·out_dim`, every element overwritten).
+    fn output_loss_into(&self, out: &[f32], y: &[f32], b: usize, delta: &mut Vec<f32>) -> (f32, f32) {
         let c = self.out_dim;
-        let mut delta = vec![0.0f32; b * c];
+        sized(delta, b * c);
         match self.loss {
             LossKind::Xent => {
                 let mut loss = 0.0f64;
@@ -469,7 +573,7 @@ impl LayerGraph {
                         correct += 1;
                     }
                 }
-                ((loss / b as f64) as f32, correct as f32 / b as f32, delta)
+                ((loss / b as f64) as f32, correct as f32 / b as f32)
             }
             LossKind::Mse => {
                 let n = (b * c) as f32;
@@ -480,25 +584,63 @@ impl LayerGraph {
                     delta[j] = 2.0 * d / n;
                 }
                 let mse = (loss / f64::from(n)) as f32;
-                (mse, mse, delta)
+                (mse, mse)
             }
         }
     }
 
-    /// Loss + metric only (the eval path).
-    pub fn eval(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32) {
-        let pass = self.forward(params, x, b);
-        let (loss, metric, _) = self.output_loss(pass.output(), y, b);
-        (loss, metric)
+    /// Loss + metric into the scratch arena (the allocation-free eval
+    /// path; `delta` is clobbered as a side effect).
+    pub(crate) fn eval_into(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        b: usize,
+        s: &mut Scratch,
+        threads: usize,
+    ) -> (f32, f32) {
+        self.forward_into(params, x, b, s, threads);
+        let Scratch { acts, delta, .. } = s;
+        self.output_loss_into(acts.last().expect("plan has at least one node"), y, b, delta)
     }
 
-    /// Loss, metric and the full flat gradient (reverse-mode by hand).
-    pub fn loss_grad(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32, Vec<f32>) {
-        let pass = self.forward(params, x, b);
-        let (loss, metric, mut delta) = self.output_loss(pass.output(), y, b);
-        let mut grad = vec![0.0f32; self.param_count];
+    /// Loss + metric only (allocating convenience over [`LayerGraph::eval_into`]).
+    pub fn eval(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32) {
+        let mut s = Scratch::new();
+        self.eval_into(params, x, y, b, &mut s, 1)
+    }
+
+    /// Loss, metric and the full flat gradient (reverse-mode by hand),
+    /// entirely inside the scratch arena: the gradient lands in `s.grad`,
+    /// layer gradients ping-pong between `s.delta`/`s.delta2`, and the
+    /// rematerialized im2col patches share one slot with the patch-space
+    /// gradient `dOut·Wᵀ` (the forward patches are consumed by dW first).
+    /// Zero heap allocations once the arena is warm.
+    pub(crate) fn loss_grad_into(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        b: usize,
+        s: &mut Scratch,
+        threads: usize,
+    ) -> (f32, f32) {
+        self.forward_into(params, x, b, s, threads);
+        let Scratch {
+            acts,
+            pool_idx,
+            patches,
+            delta,
+            delta2,
+            grad,
+        } = s;
+        let (loss, metric) =
+            self.output_loss_into(acts.last().expect("plan has at least one node"), y, b, delta);
+        zeroed(grad, self.param_count);
         for ni in (0..self.nodes.len()).rev() {
-            let input: &[f32] = if ni == 0 { x } else { &pass.acts[ni - 1] };
+            let input: &[f32] = if ni == 0 { x } else { &acts[ni - 1] };
+            debug_assert_eq!(delta.len(), acts[ni].len());
             match self.nodes[ni] {
                 Node::Dense {
                     fan_in,
@@ -507,27 +649,29 @@ impl LayerGraph {
                     b_off,
                     act,
                 } => {
-                    act.backprop(&mut delta, &pass.acts[ni]);
-                    matmul::matmul_at_b_acc(
+                    act.backprop(delta, &acts[ni]);
+                    matmul::matmul_at_b_acc_tiled(
                         input,
-                        &delta,
+                        delta,
                         &mut grad[w_off..w_off + fan_in * fan_out],
                         b,
                         fan_in,
                         fan_out,
+                        threads,
                     );
-                    matmul::add_col_sums(&delta, &mut grad[b_off..b_off + fan_out], b, fan_out);
+                    matmul::add_col_sums(delta, &mut grad[b_off..b_off + fan_out], b, fan_out);
                     if ni > 0 {
-                        let mut nd = vec![0.0f32; b * fan_in];
-                        matmul::matmul_a_bt(
-                            &delta,
+                        sized(delta2, b * fan_in);
+                        matmul::matmul_a_bt_tiled(
+                            delta,
                             &params[w_off..w_off + fan_in * fan_out],
-                            &mut nd,
+                            delta2,
                             b,
                             fan_out,
                             fan_in,
+                            threads,
                         );
-                        delta = nd;
+                        std::mem::swap(delta, delta2);
                     }
                 }
                 Node::Conv2d {
@@ -544,30 +688,39 @@ impl LayerGraph {
                     b_off,
                     act,
                 } => {
-                    act.backprop(&mut delta, &pass.acts[ni]);
+                    act.backprop(delta, &acts[ni]);
                     let (m, k) = (b * oh * ow, kh * kw * c);
-                    // rematerialize patches (cheaper than holding them)
-                    let mut patches = vec![0.0f32; m * k];
-                    conv::im2col(input, &mut patches, b, (h, w, c), (kh, kw), stride);
-                    matmul::matmul_at_b_acc(&patches, &delta, &mut grad[w_off..w_off + k * cout], m, k, cout);
-                    matmul::add_col_sums(&delta, &mut grad[b_off..b_off + cout], m, cout);
+                    // rematerialize patches (cheaper than holding every
+                    // layer's patch matrix across the backward pass)
+                    let pat = &mut patches[..m * k];
+                    conv::im2col_tiled(input, pat, b, (h, w, c), (kh, kw), stride, threads);
+                    matmul::matmul_at_b_acc_tiled(pat, delta, &mut grad[w_off..w_off + k * cout], m, k, cout, threads);
+                    matmul::add_col_sums(delta, &mut grad[b_off..b_off + cout], m, cout);
                     if ni > 0 {
-                        let mut dpatches = vec![0.0f32; m * k];
-                        matmul::matmul_a_bt(&delta, &params[w_off..w_off + k * cout], &mut dpatches, m, cout, k);
-                        let mut nd = vec![0.0f32; b * h * w * c];
-                        conv::col2im_acc(&dpatches, &mut nd, b, (h, w, c), (kh, kw), stride);
-                        delta = nd;
+                        // the forward patches are consumed — reuse the
+                        // slot for the patch-space gradient dOut·Wᵀ
+                        matmul::matmul_a_bt_tiled(delta, &params[w_off..w_off + k * cout], pat, m, cout, k, threads);
+                        zeroed(delta2, b * h * w * c);
+                        conv::col2im_acc_tiled(pat, delta2, b, (h, w, c), (kh, kw), stride, threads);
+                        std::mem::swap(delta, delta2);
                     }
                 }
                 Node::MaxPool2 { h, w, c } => {
-                    let idx = pass.pool_idx[ni].as_ref().expect("pool recorded argmax");
-                    let mut nd = vec![0.0f32; b * h * w * c];
-                    pool::maxpool2_backward(&delta, idx, &mut nd);
-                    delta = nd;
+                    zeroed(delta2, b * h * w * c);
+                    pool::maxpool2_backward(delta, &pool_idx[ni], delta2);
+                    std::mem::swap(delta, delta2);
                 }
             }
         }
-        (loss, metric, grad)
+        (loss, metric)
+    }
+
+    /// Allocating convenience over [`LayerGraph::loss_grad_into`] for
+    /// tests and one-shot callers; the hot path holds a `Workspace`.
+    pub fn loss_grad(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32, Vec<f32>) {
+        let mut s = Scratch::new();
+        let (loss, metric) = self.loss_grad_into(params, x, y, b, &mut s, 1);
+        (loss, metric, std::mem::take(&mut s.grad))
     }
 }
 
@@ -782,6 +935,48 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The arena contract: a reused `Scratch` (warm buffers, shrink/grow
+    /// across calls) and any intra-step thread count produce gradients
+    /// bitwise identical to the one-shot serial path.
+    #[test]
+    fn reused_scratch_and_tiling_keep_gradients_bitwise_identical() {
+        for info in [tiny_cnn(), tiny_driver()] {
+            let graph = LayerGraph::from_model(&info).unwrap();
+            let params = init_params(&info, 21);
+            let (x, y) = batch(&info, 22, 4);
+            let (l0, m0, g0) = graph.loss_grad(&params, &x, &y, 4);
+            let mut s = crate::runtime::workspace::Scratch::new();
+            for threads in [1usize, 2, 5] {
+                let (l, m) = graph.loss_grad_into(&params, &x, &y, 4, &mut s, threads);
+                assert_eq!((l, m), (l0, m0), "{} t{threads}", info.name);
+                assert_eq!(s.grad, g0, "{} t{threads} gradient", info.name);
+            }
+            // batch-size change in the same arena (shrink, then regrow)
+            let (x1, y1) = batch(&info, 23, 1);
+            let (l1, m1, g1) = graph.loss_grad(&params, &x1, &y1, 1);
+            let (l, m) = graph.loss_grad_into(&params, &x1, &y1, 1, &mut s, 2);
+            assert_eq!((l, m), (l1, m1), "{} b=1", info.name);
+            assert_eq!(s.grad, g1, "{} b=1 gradient", info.name);
+            let (l, m) = graph.loss_grad_into(&params, &x, &y, 4, &mut s, 3);
+            assert_eq!((l, m), (l0, m0), "{} regrown", info.name);
+            assert_eq!(s.grad, g0, "{} regrown gradient", info.name);
+        }
+    }
+
+    #[test]
+    fn buffer_plan_reports_footprint_and_flops() {
+        let graph = LayerGraph::from_model(&tiny_cnn()).unwrap();
+        // tiny_cnn at b=1: acts 32+8+3=43, pool argmax 8, patches 16·9=144,
+        // delta 2·36 (widest layer is the 6x6 input), grad P — 4 bytes each
+        let p = tiny_cnn().param_count;
+        assert_eq!(graph.workspace_bytes(1), 4 * (43 + 8 + 144 + 72 + p));
+        // flops: conv (first node) fwd+dW = 2·(2·16·9·2), dense fwd+dW+dX
+        // = 3·(2·8·3)
+        assert_eq!(graph.train_flops(1), (2 * (2 * 16 * 9 * 2) + 3 * (2 * 8 * 3)) as f64);
+        // footprint scales linearly in b for the per-batch slots
+        assert!(graph.workspace_bytes(10) > 9 * graph.workspace_bytes(1) / 2);
     }
 
     #[test]

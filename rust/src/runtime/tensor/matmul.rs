@@ -125,6 +125,175 @@ pub fn matmul_a_bt(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k:
     }
 }
 
+// ---------------------------------------------------------- tiled variants
+//
+// Thread-tiled versions of the three big products, used by the conv/dense
+// hot loops when the caller's `Workspace.threads > 1`. The partitioning is
+// by *output-element ownership* — every output element is computed by
+// exactly one tile, with the same per-element accumulation order as the
+// serial kernel — so results are **bitwise identical** to the serial call
+// at any thread count (the determinism contract `tests/native_backend.rs`
+// asserts end-to-end). Work is dispatched over the scoped-thread helper
+// `util::threads::parallel_for_each_mut`; `threads <= 1` falls through to
+// the serial kernel with no tile table built.
+//
+// Each tiled call stands up (and joins) its scoped workers, so tiling only
+// pays off once a kernel carries enough work to amortize the spawns: the
+// public entry points apply a minimum-volume floor ([`TILE_MIN_MACS`] /
+// `conv::TILE_MIN_ELEMS`) below which they take the serial path. The floor
+// never changes results — tiled and serial are bitwise equal — it only
+// picks the cheaper schedule (a persistent per-workspace worker pool that
+// pays the spawn cost once is a ROADMAP candidate). The `_impl` variants
+// skip the floor so the unit tests exercise real tiles at toy sizes.
+
+use crate::util::threads::parallel_for_each_mut;
+
+/// Minimum GEMM volume (m·k·n multiply-accumulates) before tiling beats
+/// the cost of standing up scoped threads (~1M MACs ≈ a few hundred µs
+/// serial — an order of magnitude above per-call spawn+join overhead).
+const TILE_MIN_MACS: usize = 1 << 20;
+
+#[inline]
+fn gemm_tile_threads(m: usize, k: usize, n: usize, threads: usize) -> usize {
+    if m.saturating_mul(k).saturating_mul(n) < TILE_MIN_MACS {
+        1
+    } else {
+        threads
+    }
+}
+
+/// Row-partitioned [`matmul_bias`]: tiles own disjoint row ranges of `a`
+/// and `out`.
+pub fn matmul_bias_tiled(
+    a: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    matmul_bias_tiled_impl(a, w, bias, out, m, k, n, gemm_tile_threads(m, k, n, threads));
+}
+
+fn matmul_bias_tiled_impl(
+    a: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    let t = threads.min(m).max(1);
+    if t <= 1 {
+        matmul_bias(a, w, bias, out, m, k, n);
+        return;
+    }
+    let chunk = m.div_ceil(t);
+    let mut tiles: Vec<_> = a.chunks(chunk * k).zip(out.chunks_mut(chunk * n)).collect();
+    parallel_for_each_mut(&mut tiles, t, |_, tile| {
+        let rows = tile.0.len() / k;
+        matmul_bias(tile.0, w, bias, &mut *tile.1, rows, k, n);
+    });
+}
+
+/// K-partitioned [`matmul_at_b_acc`]: tiles own disjoint row ranges of the
+/// `[k,n]` output (dW), each reducing over the full M dimension in the
+/// serial order.
+pub fn matmul_at_b_acc_tiled(
+    a: &[f32],
+    g: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    matmul_at_b_acc_tiled_impl(a, g, out, m, k, n, gemm_tile_threads(m, k, n, threads));
+}
+
+fn matmul_at_b_acc_tiled_impl(
+    a: &[f32],
+    g: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    let t = threads.min(k).max(1);
+    if t <= 1 {
+        matmul_at_b_acc(a, g, out, m, k, n);
+        return;
+    }
+    let chunk = k.div_ceil(t);
+    let mut tiles: Vec<_> = out
+        .chunks_mut(chunk * n)
+        .enumerate()
+        .map(|(ti, o)| (ti * chunk, o))
+        .collect();
+    parallel_for_each_mut(&mut tiles, t, |_, tile| {
+        matmul_at_b_acc_rows(a, g, &mut *tile.1, m, k, n, tile.0);
+    });
+}
+
+/// `out[kk - k_lo, :] += Σ_i a[i, kk] · g[i, :]` for the dW row range
+/// `[k_lo, k_lo + out.len()/n)`. Accumulation over `i` is ascending — the
+/// same per-element order as [`matmul_at_b_acc`], hence bitwise equal.
+fn matmul_at_b_acc_rows(a: &[f32], g: &[f32], out: &mut [f32], m: usize, k: usize, n: usize, k_lo: usize) {
+    let kr = out.len() / n;
+    debug_assert!(k_lo + kr <= k);
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        let arow = &a[i * k + k_lo..i * k + k_lo + kr];
+        for (dk, &av) in arow.iter().enumerate() {
+            let orow = &mut out[dk * n..(dk + 1) * n];
+            for (o, &gv) in orow.iter_mut().zip(grow) {
+                *o += av * gv;
+            }
+        }
+    }
+}
+
+/// Row-partitioned [`matmul_a_bt`]: tiles own disjoint row ranges of `g`
+/// and `out` (each output row is an independent set of dot products).
+pub fn matmul_a_bt_tiled(
+    g: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    matmul_a_bt_tiled_impl(g, w, out, m, n, k, gemm_tile_threads(m, n, k, threads));
+}
+
+fn matmul_a_bt_tiled_impl(
+    g: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    let t = threads.min(m).max(1);
+    if t <= 1 {
+        matmul_a_bt(g, w, out, m, n, k);
+        return;
+    }
+    let chunk = m.div_ceil(t);
+    let mut tiles: Vec<_> = g.chunks(chunk * n).zip(out.chunks_mut(chunk * k)).collect();
+    parallel_for_each_mut(&mut tiles, t, |_, tile| {
+        let rows = tile.0.len() / n;
+        matmul_a_bt(tile.0, w, &mut *tile.1, rows, n, k);
+    });
+}
+
 /// `out[j] += Σ_i g[i,j]` — the bias gradient (column sums of delta).
 pub fn add_col_sums(g: &[f32], out: &mut [f32], m: usize, n: usize) {
     debug_assert_eq!(g.len(), m * n, "G is [m,n]");
@@ -232,6 +401,41 @@ mod tests {
         let mut out = vec![f32::NAN; m * k];
         matmul_a_bt(&g, &w, &mut out, m, n, k);
         assert_close(&out, &naive(&g, &wt, m, n, k), 1e-4, "matmul_a_bt");
+    }
+
+    #[test]
+    fn tiled_variants_are_bitwise_identical_to_serial() {
+        // the determinism contract: element-ownership partitioning with
+        // unchanged per-element accumulation order ⇒ *exact* equality at
+        // any thread count, not just numerical closeness
+        let mut rng = Rng::new(4);
+        for (m, k, n) in [(1, 8, 3), (7, 300, 9), (16, 257, 5), (3, 64, 64)] {
+            let a = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, k * n);
+            let g = rand_vec(&mut rng, m * n);
+            let bias = rand_vec(&mut rng, n);
+            for threads in [2usize, 3, 8] {
+                // the _impl variants bypass the spawn-amortization floor
+                // so real tiles run at these toy sizes
+                let mut serial = vec![0.0; m * n];
+                matmul_bias(&a, &w, &bias, &mut serial, m, k, n);
+                let mut tiled = vec![f32::NAN; m * n];
+                matmul_bias_tiled_impl(&a, &w, &bias, &mut tiled, m, k, n, threads);
+                assert_eq!(serial, tiled, "matmul_bias m{m} k{k} n{n} t{threads}");
+
+                let mut serial = vec![0.25; k * n];
+                matmul_at_b_acc(&a, &g, &mut serial, m, k, n);
+                let mut tiled = vec![0.25; k * n];
+                matmul_at_b_acc_tiled_impl(&a, &g, &mut tiled, m, k, n, threads);
+                assert_eq!(serial, tiled, "matmul_at_b_acc m{m} k{k} n{n} t{threads}");
+
+                let mut serial = vec![0.0; m * k];
+                matmul_a_bt(&g, &w, &mut serial, m, n, k);
+                let mut tiled = vec![f32::NAN; m * k];
+                matmul_a_bt_tiled_impl(&g, &w, &mut tiled, m, n, k, threads);
+                assert_eq!(serial, tiled, "matmul_a_bt m{m} k{k} n{n} t{threads}");
+            }
+        }
     }
 
     #[test]

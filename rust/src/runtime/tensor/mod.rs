@@ -21,6 +21,15 @@
 //!   need no list — they are inferred from tensor shapes), which is what
 //!   lets `mnist_cnn` and `driving_cnn` run hermetically.
 //!
+//! All kernels are write-into-caller-slice: the `LayerGraph` interpreter
+//! routes every buffer through the per-learner `Workspace` arena
+//! (`runtime/workspace.rs`), whose slots the plan sizes at compile time —
+//! steady-state training performs **zero heap allocations**. The conv and
+//! dense hot loops additionally take a `threads` tile count; tiles own
+//! disjoint output elements with unchanged per-element accumulation
+//! order, so tiled results are bitwise identical to serial at any thread
+//! count.
+//!
 //! Everything here is plain data + `&self`-free functions: trivially
 //! `Send + Sync`, no `unsafe`, callable concurrently from the engine's
 //! per-learner worker threads.

@@ -1,0 +1,157 @@
+//! [`Workspace`]: the per-learner scratch arena that makes steady-state
+//! training allocation-free.
+//!
+//! PR 2 left the conv path allocating the ~1.6 MB im2col patch matrix
+//! twice per `mnist_cnn` train step (ROADMAP named it verbatim), plus a
+//! fresh activation/gradient/output vector per layer per call. This module
+//! replaces all of that with one arena owned by each caller of
+//! [`Kernel::run_into`](super::backend::Kernel::run_into): the
+//! [`LayerGraph`](super::tensor::LayerGraph) plan assigns every buffer a
+//! slot at compile time, the first call sizes the slots (warm-up), and
+//! every call after that reuses them — zero heap allocations in steady
+//! state (asserted by `tests/zero_alloc.rs` with a counting allocator).
+//!
+//! Ownership contract: a `Workspace` belongs to exactly one caller thread
+//! at a time (each simulation learner owns its own), so the engine's
+//! per-learner parallel rounds compose with the intra-step conv tiling
+//! (`threads` below) without any buffer aliasing.
+//!
+//! Buffers only ever grow: `sized`/`zeroed` adjust the logical length per
+//! call (the native interpreter accepts any batch size), but capacity is
+//! retained, so after warm-up at the largest batch a caller uses, no
+//! further allocation happens.
+
+/// Per-caller execution arena: output slots (all backends) plus the native
+/// interpreter's scratch tensors.
+pub struct Workspace {
+    /// One reusable slot per artifact output, filled by `run_into` in the
+    /// artifact's declared output order (train: params', opt_state', loss,
+    /// metric; eval: loss, metric; infer: out).
+    pub outputs: Vec<Vec<f32>>,
+    /// Intra-step tiling threads for the conv/matmul hot loops. `1` (the
+    /// default) is the strictly serial, strictly allocation-free path;
+    /// `> 1` runs thread-tiled im2col+matmul with results **bitwise
+    /// identical** to the serial path (tiles own disjoint output elements,
+    /// and every element's accumulation order is unchanged), trading a few
+    /// small per-call tile-table allocations for parallelism.
+    pub threads: usize,
+    /// Native-interpreter scratch: per-layer activations, pooling argmax,
+    /// the shared im2col patch buffer, ping-pong deltas, flat gradient.
+    pub(crate) scratch: Scratch,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace {
+            outputs: Vec::new(),
+            threads: 1,
+            scratch: Scratch::new(),
+        }
+    }
+
+    /// Current arena footprint in bytes (capacities, all buffers).
+    pub fn bytes(&self) -> usize {
+        let out: usize = self.outputs.iter().map(|v| 4 * v.capacity()).sum();
+        out + self.scratch.bytes()
+    }
+}
+
+/// The native interpreter's scratch tensors. Slot assignment (which node
+/// writes where, and the shared-buffer sizes) is decided by
+/// [`LayerGraph`](super::tensor::LayerGraph) at plan-compile time; see
+/// `LayerGraph::prepare_scratch`.
+pub struct Scratch {
+    /// Post-activation output of every plan node (slot = node index).
+    pub(crate) acts: Vec<Vec<f32>>,
+    /// Recorded argmax of every maxpool node (empty for other nodes).
+    pub(crate) pool_idx: Vec<Vec<u32>>,
+    /// Shared im2col patch matrix, sized for the largest conv node; the
+    /// backward pass reuses it for the patch-space gradient `dOut · Wᵀ`
+    /// (the forward patches are no longer needed by then).
+    pub(crate) patches: Vec<f32>,
+    /// Ping-pong layer-gradient buffers for the backward sweep.
+    pub(crate) delta: Vec<f32>,
+    pub(crate) delta2: Vec<f32>,
+    /// Flat parameter gradient (`param_count`).
+    pub(crate) grad: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch {
+            acts: Vec::new(),
+            pool_idx: Vec::new(),
+            patches: Vec::new(),
+            delta: Vec::new(),
+            delta2: Vec::new(),
+            grad: Vec::new(),
+        }
+    }
+
+    /// Current footprint in bytes (capacities).
+    pub fn bytes(&self) -> usize {
+        let acts: usize = self.acts.iter().map(|v| 4 * v.capacity()).sum();
+        let pool: usize = self.pool_idx.iter().map(|v| 4 * v.capacity()).sum();
+        acts + pool
+            + 4 * (self.patches.capacity()
+                + self.delta.capacity()
+                + self.delta2.capacity()
+                + self.grad.capacity())
+    }
+}
+
+/// Set `v` to exactly `n` elements with arbitrary contents (the caller
+/// overwrites every element). Never shrinks capacity — steady state is a
+/// no-op or a fill of the grown tail.
+pub(crate) fn sized(v: &mut Vec<f32>, n: usize) {
+    if v.len() != n {
+        v.resize(n, 0.0);
+    }
+}
+
+/// Set `v` to exactly `n` zeros (for accumulation targets).
+pub(crate) fn zeroed(v: &mut Vec<f32>, n: usize) {
+    if v.len() != n {
+        v.clear();
+        v.resize(n, 0.0);
+    } else {
+        v.fill(0.0);
+    }
+}
+
+/// `sized` for index buffers (pooling argmax).
+pub(crate) fn sized_u32(v: &mut Vec<u32>, n: usize) {
+    if v.len() != n {
+        v.resize(n, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sized_and_zeroed_reuse_capacity() {
+        let mut v = Vec::new();
+        sized(&mut v, 100);
+        assert_eq!(v.len(), 100);
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        sized(&mut v, 40); // shrink keeps capacity
+        assert_eq!(v.len(), 40);
+        v[0] = 7.0;
+        zeroed(&mut v, 100); // regrow within capacity, all zero
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| x == 0.0));
+        assert_eq!(v.capacity(), cap);
+        assert_eq!(v.as_ptr(), ptr, "no reallocation within capacity");
+    }
+
+    #[test]
+    fn workspace_reports_footprint() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.bytes(), 0);
+        sized(&mut ws.scratch.patches, 1000);
+        assert!(ws.bytes() >= 4000);
+    }
+}

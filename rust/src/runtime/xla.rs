@@ -16,6 +16,7 @@ use anyhow::{Context, Result};
 
 use super::backend::{Backend, Input, Kernel};
 use super::manifest::{ArtifactInfo, Manifest};
+use super::workspace::Workspace;
 
 /// One compiled PJRT executable.
 struct XlaKernel {
@@ -34,7 +35,10 @@ unsafe impl Send for XlaKernel {}
 unsafe impl Sync for XlaKernel {}
 
 impl Kernel for XlaKernel {
-    fn run(&self, info: &ArtifactInfo, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+    /// PJRT owns its buffers, so this backend fills the workspace output
+    /// slots by copy — the zero-allocation steady state is a native-
+    /// backend property; here `run_into` is just the common interface.
+    fn run_into(&self, info: &ArtifactInfo, inputs: &[Input], ws: &mut Workspace) -> Result<()> {
         let literals = literals(inputs)?;
         let result = self
             .exe
@@ -44,10 +48,11 @@ impl Kernel for XlaKernel {
             .to_literal_sync()
             .context("fetching result literal")?;
         let parts = out.to_tuple().context("untupling result")?;
-        parts
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
-            .collect()
+        ws.outputs.clear();
+        for l in parts {
+            ws.outputs.push(l.to_vec::<f32>().context("reading f32 output")?);
+        }
+        Ok(())
     }
 }
 

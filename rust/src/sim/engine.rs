@@ -33,6 +33,12 @@ pub struct SimConfig {
     pub init: InitPolicy,
     /// worker threads for the per-round local steps
     pub threads: usize,
+    /// intra-step tile threads for each learner's conv hot loop; 0 (the
+    /// default) auto-divides `threads` by the learner-worker count so
+    /// per-learner parallelism and intra-step tiling compose to roughly
+    /// one core each. Any value yields bitwise-identical results (tiling
+    /// is deterministic — see `runtime/workspace.rs`).
+    pub intra_threads: usize,
     /// per-learner sampling rates; empty = all equal to artifact batch
     pub sample_rates: Vec<usize>,
     /// concept-drift schedule
@@ -59,6 +65,7 @@ impl SimConfig {
             seed: 42,
             init: InitPolicy::Homogeneous,
             threads: threads::default_threads(),
+            intra_threads: 0,
             sample_rates: Vec::new(),
             drift: DriftProb::None,
             final_eval: false,
@@ -92,6 +99,16 @@ impl<'a> Engine<'a> {
         Ok(Engine { rt, mrt, cfg })
     }
 
+    /// Intra-step tile threads per learner: the explicit config value, or
+    /// the leftover parallelism once `threads` workers cover the learners.
+    fn intra_threads(&self) -> usize {
+        if self.cfg.intra_threads > 0 {
+            return self.cfg.intra_threads;
+        }
+        let workers = self.cfg.threads.max(1).min(self.cfg.m.max(1));
+        (self.cfg.threads.max(1) / workers).max(1)
+    }
+
     fn build_learners(&self, streams: &StreamFactory) -> Result<Vec<Learner>> {
         let init = self.rt.init_params(&self.cfg.model)?;
         let scales = self.rt.init_scales(&self.cfg.model)?;
@@ -102,12 +119,17 @@ impl<'a> Engine<'a> {
             .build(&init, &scales, self.cfg.m, &mut rng);
         let state_size = self.mrt.train.exe.info.state_size;
         let batch = self.mrt.train.exe.info.batch;
+        let intra = self.intra_threads();
         Ok(models
             .into_iter()
             .enumerate()
             .map(|(i, params)| {
                 let rate = self.cfg.sample_rates.get(i).copied().unwrap_or(batch);
-                Learner::new(i, params, state_size, streams(i), rate)
+                // every learner owns its workspace: per-learner rounds and
+                // intra-step tiling compose without buffer aliasing
+                let mut ws = self.mrt.train.workspace();
+                ws.threads = intra;
+                Learner::new(i, params, state_size, streams(i), rate, ws)
             })
             .collect())
     }
@@ -240,14 +262,17 @@ impl<'a> Engine<'a> {
         learners: &mut [Learner],
     ) -> Result<(f64, f64)> {
         // evaluate the averaged model on fresh batches from learner 0's
-        // stream (same distribution, unseen samples)
+        // stream (same distribution, unseen samples); eval runs alone on
+        // the coordinator thread, so it gets the full tile budget
         let eval_batch = ev.exe.info.batch;
+        let mut ws = ev.workspace();
+        ws.threads = self.cfg.threads.max(1);
         let mut loss = 0.0;
         let mut metric = 0.0;
         let reps = 5;
         for _ in 0..reps {
             let batch = learners[0].stream.next_batch(eval_batch);
-            let s = ev.eval(averaged, &batch)?;
+            let s = ev.eval(averaged, &batch, &mut ws)?;
             loss += s.loss as f64;
             metric += s.metric as f64;
         }

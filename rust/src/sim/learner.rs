@@ -1,9 +1,13 @@
-//! One local learner: flat model + optimizer state + its data stream.
-
-use anyhow::Result;
+//! One local learner: flat model + optimizer state + its data stream +
+//! its private execution [`Workspace`].
+//!
+//! Each learner owns its workspace, so the engine's per-learner parallel
+//! rounds and the workspace's intra-step conv tiling compose without any
+//! buffer aliasing — and after the first (warm-up) round, a learner's
+//! local steps allocate nothing.
 
 use crate::data::Stream;
-use crate::runtime::{Batch, StepStats, TrainStep};
+use crate::runtime::{StepStats, TrainStep, Workspace};
 
 pub struct Learner {
     pub id: usize,
@@ -13,6 +17,8 @@ pub struct Learner {
     /// per-round sampling rate B^i (Algorithm 2 weights; constant here
     /// unless an experiment configures heterogeneous rates)
     pub sample_rate: usize,
+    /// private execution arena (scratch + output slots, reused per round)
+    pub ws: Workspace,
     /// stats of the most recent local step
     pub last: Option<StepStats>,
     pub last_err: Option<String>,
@@ -25,6 +31,7 @@ impl Learner {
         state_size: usize,
         stream: Box<dyn Stream>,
         sample_rate: usize,
+        ws: Workspace,
     ) -> Learner {
         Learner {
             id,
@@ -32,6 +39,7 @@ impl Learner {
             opt_state: vec![0.0; state_size],
             stream,
             sample_rate,
+            ws,
             last: None,
             last_err: None,
         }
@@ -40,7 +48,7 @@ impl Learner {
     /// Observe one mini-batch and apply the learning algorithm φ.
     pub fn local_step(&mut self, train: &TrainStep, lr: f32) {
         let batch = self.stream.next_batch(self.sample_rate);
-        match self.step_inner(train, &batch, lr) {
+        match train.step(&mut self.params, &mut self.opt_state, &batch, lr, &mut self.ws) {
             Ok(stats) => {
                 self.last = Some(stats);
                 self.last_err = None;
@@ -50,9 +58,5 @@ impl Learner {
                 self.last_err = Some(format!("{e:#}"));
             }
         }
-    }
-
-    fn step_inner(&mut self, train: &TrainStep, batch: &Batch, lr: f32) -> Result<StepStats> {
-        train.step(&mut self.params, &mut self.opt_state, batch, lr)
     }
 }

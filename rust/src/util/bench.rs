@@ -92,13 +92,30 @@ pub fn bench(name: &str, min_iters: usize, mut f: impl FnMut()) -> BenchResult {
 
 /// Append one JSON-lines record to `$BENCH_JSON` (no-op when unset).
 fn append_json(r: &BenchResult) {
-    let Ok(path) = std::env::var("BENCH_JSON") else {
-        return;
-    };
     let line = format!(
         "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\"median_ns\":{:.1},\"min_ns\":{:.1}}}\n",
         r.name, r.iters, r.mean_ns, r.median_ns, r.min_ns
     );
+    append_line(&line);
+}
+
+/// Append a free-form derived-metric record (JSON lines) to `$BENCH_JSON`
+/// — e.g. steps/s and effective GFLOP/s of an end-to-end train step, so
+/// `python/tools/bench_report.py` can track them across committed
+/// `BENCH_*.json` files alongside the raw timings.
+pub fn record_json(name: &str, fields: &[(&str, f64)]) {
+    let mut line = format!("{{\"name\":\"{name}\"");
+    for (key, value) in fields {
+        line.push_str(&format!(",\"{key}\":{value:.3}"));
+    }
+    line.push_str("}\n");
+    append_line(&line);
+}
+
+fn append_line(line: &str) {
+    let Ok(path) = std::env::var("BENCH_JSON") else {
+        return;
+    };
     let file = std::fs::OpenOptions::new().create(true).append(true).open(&path);
     if let Ok(mut file) = file {
         let _ = file.write_all(line.as_bytes());

@@ -137,11 +137,12 @@ fn sync_preserves_global_mean_under_real_training() {
     let mut rng = Rng::new(5);
     let idx: Vec<usize> = (0..m).collect();
     let mut synced_rounds = 0;
+    let mut ws = mrt.train.workspace();
     for t in 1..=40u64 {
         for i in 0..m {
             let batch = dynavg::data::Stream::next_batch(&mut streams[i], 10);
             mrt.train
-                .step(&mut models[i], &mut states[i], &batch, 0.05)
+                .step(&mut models[i], &mut states[i], &batch, 0.05, &mut ws)
                 .unwrap();
         }
         let mut before = vec![0.0f32; p];
@@ -167,6 +168,58 @@ fn sync_preserves_global_mean_under_real_training() {
     }
     assert!(synced_rounds > 0, "protocol never communicated in 40 rounds");
     assert!(net.total_bytes() > 0);
+}
+
+/// The workspace/tiling determinism contract, end-to-end: an engine run
+/// is **bitwise** reproducible across (a) serial vs parallel per-learner
+/// rounds and (b) untiled vs thread-tiled conv kernels, because every
+/// tile owns disjoint output elements with unchanged per-element
+/// accumulation order. Asserted on `mnist_cnn` (real conv2d/maxpool) with
+/// exact equality of final models and identical `NetStats`.
+#[test]
+fn thread_count_and_conv_tiling_do_not_change_results() {
+    let run = |threads: usize, intra: usize| -> RunResult {
+        let rt = Runtime::native();
+        let mut cfg = SimConfig::new("mnist_cnn", "sgd", 3, 8, 0.05);
+        cfg.seed = 7;
+        cfg.threads = threads;
+        cfg.intra_threads = intra;
+        let engine = Engine::new(&rt, cfg).unwrap();
+        let factory = dynavg::experiments::Dataset::MnistLike.factory(7);
+        engine
+            .run(
+                &ProtocolSpec::Dynamic {
+                    delta: 1.0,
+                    check_every: 2,
+                },
+                &factory,
+            )
+            .unwrap()
+    };
+    let base = run(1, 1); // serial rounds, untiled conv
+    let parallel = run(4, 0); // parallel learner rounds, auto intra tiling
+    let tiled = run(1, 3); // serial rounds, 3-way tiled conv kernels
+    for (what, other) in [("parallel rounds", &parallel), ("tiled conv", &tiled)] {
+        assert_eq!(base.models, other.models, "{what}: final models differ");
+        assert_eq!(base.averaged, other.averaged, "{what}: averaged model differs");
+        assert_eq!(
+            base.net.total_bytes(),
+            other.net.total_bytes(),
+            "{what}: NetStats bytes differ"
+        );
+        assert_eq!(
+            base.net.sync_events, other.net.sync_events,
+            "{what}: NetStats sync events differ"
+        );
+        assert_eq!(
+            base.net.full_syncs, other.net.full_syncs,
+            "{what}: NetStats full syncs differ"
+        );
+        assert_eq!(
+            base.recorder.cumulative_loss, other.recorder.cumulative_loss,
+            "{what}: loss trajectory differs"
+        );
+    }
 }
 
 #[test]

@@ -75,12 +75,13 @@ fn every_f32_train_artifact_executes_and_learns_a_fixed_batch() {
         let mut params = rt.init_params(&model).unwrap();
         let mut state = vec![0.0; mrt.train.exe.info.state_size];
         let batch = synthetic_batch(&mrt.model, mrt.train.exe.info.batch, 7);
+        let mut ws = mrt.train.workspace();
         let mut first = None;
         let mut last = 0.0f32;
         for _ in 0..12 {
             let stats = mrt
                 .train
-                .step(&mut params, &mut state, &batch, lr_for(&opt))
+                .step(&mut params, &mut state, &batch, lr_for(&opt), &mut ws)
                 .unwrap();
             assert!(stats.loss.is_finite(), "{model}/{opt} loss not finite");
             if first.is_none() {
@@ -110,7 +111,8 @@ fn eval_artifacts_execute() {
         };
         let params = rt.init_params(&model).unwrap();
         let batch = synthetic_batch(&mrt.model, ev.exe.info.batch, 9);
-        let stats = ev.eval(&params, &batch).unwrap();
+        let mut ws = ev.workspace();
+        let stats = ev.eval(&params, &batch, &mut ws).unwrap();
         assert!(stats.loss.is_finite());
         assert!(stats.metric.is_finite());
         checked += 1;
@@ -134,7 +136,8 @@ fn infer_artifacts_execute_with_finite_outputs() {
         let in_dim: usize = mrt.model.x_shape.iter().product::<usize>().max(1);
         let b = infer.exe.info.batch;
         let x = vec![0.3f32; b * in_dim];
-        let out = infer.infer(&params, &x).unwrap();
+        let mut ws = infer.workspace();
+        let out = infer.infer(&params, &x, &mut ws).unwrap();
         let out_dim: usize = mrt.model.y_shape.iter().product::<usize>().max(1);
         assert_eq!(out.len(), b * out_dim, "{model} infer output size");
         assert!(out.iter().all(|v| v.is_finite()), "{model} infer finite");
@@ -158,7 +161,8 @@ fn concurrent_execution_is_safe_and_deterministic() {
         .map(|b| {
             let mut p = init.clone();
             let mut s = vec![0.0; state_size];
-            mrt.train.step(&mut p, &mut s, b, 0.1).unwrap();
+            let mut ws = mrt.train.workspace();
+            mrt.train.step(&mut p, &mut s, b, 0.1, &mut ws).unwrap();
             p
         })
         .collect();
@@ -171,7 +175,8 @@ fn concurrent_execution_is_safe_and_deterministic() {
             scope.spawn(move || {
                 let mut p = init.clone();
                 let mut s = vec![0.0; state_size];
-                train.step(&mut p, &mut s, b, 0.1).unwrap();
+                let mut ws = train.workspace();
+                train.step(&mut p, &mut s, b, 0.1, &mut ws).unwrap();
                 *slot = Some(p);
             });
         }
@@ -240,7 +245,8 @@ fn infer_artifact_steering_in_range() {
     let infer = mrt.infer.as_ref().unwrap();
     let params = rt.init_params("driving_cnn").unwrap();
     let img = vec![0.3f32; 32 * 64];
-    let out = infer.infer(&params, &img).unwrap();
+    let mut ws = infer.workspace();
+    let out = infer.infer(&params, &img, &mut ws).unwrap();
     assert_eq!(out.len(), 1);
     assert!(out[0].abs() <= 1.0, "tanh output in range");
 }
@@ -257,7 +263,8 @@ fn transformer_artifact_next_byte_learning() {
         &mut dynavg::data::corpus::CorpusStream::new(3, 65),
         8,
     );
-    let first = mrt.train.step(&mut params, &mut state, &batch, 0.002).unwrap();
+    let mut ws = mrt.train.workspace();
+    let first = mrt.train.step(&mut params, &mut state, &batch, 0.002, &mut ws).unwrap();
     assert!(
         (3.0..6.5).contains(&first.loss),
         "initial LM loss ~ln(V): {}",
@@ -265,7 +272,7 @@ fn transformer_artifact_next_byte_learning() {
     );
     let mut last = first;
     for _ in 0..10 {
-        last = mrt.train.step(&mut params, &mut state, &batch, 0.002).unwrap();
+        last = mrt.train.step(&mut params, &mut state, &batch, 0.002, &mut ws).unwrap();
     }
     assert!(last.loss < first.loss * 0.8, "{} -> {}", first.loss, last.loss);
 }

@@ -1,0 +1,111 @@
+//! The zero-allocation contract of the arena-backed hot path: after the
+//! first (warm-up) step sized every `Workspace` slot, a steady-state
+//! `mnist_cnn` train step performs **0 heap allocations** — the property
+//! that removed the ~1.6 MB-twice-per-step im2col churn the ROADMAP
+//! called out after PR 2.
+//!
+//! Measured with a counting `#[global_allocator]` that forwards to the
+//! system allocator. Everything lives in one `#[test]` in its own
+//! integration-test binary, so no sibling test thread can touch the
+//! counter between the markers.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use dynavg::data::synth_mnist::MnistLike;
+use dynavg::data::Stream;
+use dynavg::driving::DrivingStream;
+use dynavg::runtime::{Batch, ModelRuntime, Runtime};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: pure pass-through to the system allocator; the counter is a
+// relaxed atomic with no other side effects.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by `f` on this thread's watch (no other test
+/// runs in this binary, so the global counter is ours alone).
+fn allocs_during(mut f: impl FnMut()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    ALLOCS.load(Ordering::Relaxed) - before
+}
+
+#[test]
+fn steady_state_steps_allocate_nothing() {
+    let rt = Runtime::native();
+
+    // train: the paper's CNN (the step the ROADMAP flagged), the driving
+    // CNN (strided convs, no pool) and a dense stack for the general claim
+    let cases: [(&str, fn() -> Batch); 3] = [
+        ("mnist_cnn", || MnistLike::new(5, 1).next_batch(10)),
+        ("driving_cnn", || DrivingStream::new(5, 1, false).next_batch(10)),
+        ("mnist_mlp", || MnistLike::new(5, 2).next_batch(10)),
+    ];
+    for (model, make_batch) in cases {
+        let mrt = ModelRuntime::load(&rt, model, "sgd").unwrap();
+        let mut params = rt.init_params(model).unwrap();
+        let mut state = vec![0.0f32; mrt.train.exe.info.state_size];
+        let batch = make_batch();
+        // ws.threads stays 1: the intra-step tiled path trades a few
+        // small per-call tile tables for parallelism (documented in
+        // runtime/workspace.rs); the zero-alloc contract is the serial
+        // configuration the large-m engine rounds run in
+        let mut ws = mrt.train.workspace();
+        // warm-up: the first steps size every arena slot
+        for _ in 0..2 {
+            mrt.train.step(&mut params, &mut state, &batch, 0.05, &mut ws).unwrap();
+        }
+        let n = allocs_during(|| {
+            for _ in 0..5 {
+                mrt.train.step(&mut params, &mut state, &batch, 0.05, &mut ws).unwrap();
+            }
+        });
+        assert_eq!(n, 0, "{model}: {n} heap allocations in 5 steady-state train steps");
+    }
+
+    // eval + infer on the CNN, each with its own warm workspace
+    let mrt = ModelRuntime::load(&rt, "mnist_cnn", "sgd").unwrap();
+    let params = rt.init_params("mnist_cnn").unwrap();
+    let ev = mrt.eval.as_ref().unwrap();
+    let inf = mrt.infer.as_ref().unwrap();
+    let batch = MnistLike::new(5, 3).next_batch(ev.exe.info.batch);
+    let x = vec![0.3f32; 28 * 28];
+    let mut ews = ev.workspace();
+    let mut iws = inf.workspace();
+    for _ in 0..2 {
+        ev.eval(&params, &batch, &mut ews).unwrap();
+        inf.infer(&params, &x, &mut iws).unwrap();
+    }
+    let n = allocs_during(|| {
+        for _ in 0..3 {
+            ev.eval(&params, &batch, &mut ews).unwrap();
+            inf.infer(&params, &x, &mut iws).unwrap();
+        }
+    });
+    assert_eq!(n, 0, "eval/infer: {n} heap allocations in steady state");
+}
