@@ -2,7 +2,7 @@
 # and must pass hermetically (no Python, no XLA, no artifacts, default
 # features — the native backend).
 
-.PHONY: verify build test fmt clippy xla-check bench-smoke bench-report ci artifacts
+.PHONY: verify build test fmt clippy xla-check bench-smoke bench-baseline bench-report ci artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -28,6 +28,19 @@ xla-check:
 bench-smoke:
 	BENCH_JSON=$(CURDIR)/BENCH_smoke.json cargo bench -- --smoke
 	python3 python/tools/bench_report.py --diff-latest BENCH_smoke.json
+
+# Promote a full (non-smoke) bench run to a committed baseline record,
+# durably arming the CI regression tripwire. The default tag is
+# date-prefixed so `bench_report.py --diff-latest` (which picks the
+# lexicographically last BENCH_*.json) always diffs against the newest
+# baseline; custom TAGs should preserve that ordering.
+#   make bench-baseline               # -> BENCH_<yyyymmdd>-<sha>.json
+#   make bench-baseline TAG=20260731  # -> BENCH_20260731.json
+TAG ?= $(shell date +%Y%m%d)-$(shell git rev-parse --short HEAD)
+bench-baseline:
+	rm -f $(CURDIR)/BENCH_$(TAG).json
+	BENCH_JSON=$(CURDIR)/BENCH_$(TAG).json cargo bench
+	@echo "wrote BENCH_$(TAG).json — commit it to arm --diff-latest durably"
 
 # Trajectory table across committed BENCH_*.json records (stdlib python).
 bench-report:

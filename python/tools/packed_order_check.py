@@ -1,0 +1,134 @@
+"""Bitwise check of the packed-microkernel accumulation order.
+
+Mirrors rust/src/runtime/tensor/matmul.rs in float32: the scalar
+reference kernels (acc_panels / matmul_at_b_acc) vs the packed
+microkernel order (pack_b + [MR x LANES] register block). The claim
+under test — the determinism contract of the worker-pool/microkernel
+hot path — is that identical per-output-element accumulation order
+implies bitwise-equal results, including K-panel edges (KC=256),
+M-panel edges of the A^T.B stream (m > KC), lane padding (n % 8 != 0,
+n < 8) and row-block tails (m % MR != 0).
+
+numpy float32 elementwise ops are IEEE-754 per element, and every loop
+that matters (the reduction order) is kept as an explicit Python loop,
+so equality here is the same bitwise argument the Rust code makes.
+Re-run this (stdlib + numpy) whenever the microkernel loop structure
+changes:  python3 python/tools/packed_order_check.py
+"""
+import numpy as np
+
+KC, LANES, MR = 256, 8, 4
+f32 = np.float32
+
+
+def scalar_bias(a, w, bias, m, k, n):
+    out = np.empty((m, n), f32)
+    out[:] = bias
+    k0 = 0
+    while k0 < k:
+        kc = min(KC, k - k0)
+        for i in range(m):
+            for dk in range(kc):
+                out[i] += a[i, k0 + dk] * w[k0 + dk]  # f32 vector op over j
+        k0 += kc
+    return out
+
+
+def pack_b(b, k, n):
+    nb = -(-n // LANES)
+    pack = np.zeros((k, nb, LANES), f32)  # [row][jb][lane], zero-padded
+    for jb in range(nb):
+        j0 = jb * LANES
+        wdt = min(LANES, n - j0)
+        pack[:, jb, :wdt] = b[:, j0:j0 + wdt]
+    return pack
+
+
+def packed_bias(a, w, bias, m, k, n):
+    pack = pack_b(w, k, n)
+    out = np.empty((m, n), f32)
+    out[:] = bias
+    nb = -(-n // LANES)
+    k0 = 0
+    while k0 < k:
+        kc = min(KC, k - k0)
+        for jb in range(nb):
+            j0 = jb * LANES
+            wdt = min(LANES, n - j0)
+            i = 0
+            while i < m:
+                r = MR if i + MR <= m else 1
+                acc = np.zeros((r, LANES), f32)
+                acc[:, :wdt] = out[i:i + r, j0:j0 + wdt]
+                for dk in range(kc):
+                    bv = pack[k0 + dk, jb]
+                    for rr in range(r):
+                        acc[rr] += a[i + rr, k0 + dk] * bv  # f32, dk ascending
+                out[i:i + r, j0:j0 + wdt] = acc[:, :wdt]
+                i += r
+        k0 += kc
+    return out
+
+
+def scalar_at_b(a, g, out0, m, k, n):
+    out = out0.copy()
+    k0 = 0
+    while k0 < k:
+        kc = min(KC, k - k0)
+        for i in range(m):
+            for dk in range(kc):
+                out[k0 + dk] += a[i, k0 + dk] * g[i]
+        k0 += kc
+    return out
+
+
+def packed_at_b(a, g, out0, m, k, n):
+    pack = pack_b(g, m, n)
+    out = out0.copy()
+    nb = -(-n // LANES)
+    m0 = 0
+    while m0 < m:
+        mc = min(KC, m - m0)
+        for jb in range(nb):
+            j0 = jb * LANES
+            wdt = min(LANES, n - j0)
+            r = 0
+            while r < k:
+                rr = MR if r + MR <= k else 1
+                acc = np.zeros((rr, LANES), f32)
+                acc[:, :wdt] = out[r:r + rr, j0:j0 + wdt]
+                for dk in range(mc):  # dk = stream row = i - m0, ascending
+                    bv = pack[m0 + dk, jb]
+                    for q in range(rr):
+                        acc[q] += a[m0 + dk, r + q] * bv
+                out[r:r + rr, j0:j0 + wdt] = acc[:, :wdt]
+                r += rr
+        m0 += mc
+    return out
+
+
+rng = np.random.default_rng(42)
+fails = 0
+for (m, k, n) in [(1, 8, 3), (4, 257, 8), (7, 300, 9), (10, 512, 64),
+                  (3, 40, 1), (9, 513, 20), (6, 256, 7), (5, 2304, 64),
+                  (300, 20, 9), (513, 8, 16)]:
+    a = rng.standard_normal((m, k)).astype(f32)
+    w = rng.standard_normal((k, n)).astype(f32)
+    g = rng.standard_normal((m, n)).astype(f32)
+    bias = rng.standard_normal(n).astype(f32)
+    out0 = rng.standard_normal((k, n)).astype(f32)
+
+    s = scalar_bias(a, w, bias, m, k, n)
+    p = packed_bias(a, w, bias, m, k, n)
+    ok1 = np.array_equal(s, p)
+
+    s2 = scalar_at_b(a, g, out0, m, k, n)
+    p2 = packed_at_b(a, g, out0, m, k, n)
+    ok2 = np.array_equal(s2, p2)
+
+    print(f"m{m} k{k} n{n}: A*B bitwise={'OK' if ok1 else 'FAIL'}  "
+          f"At*B bitwise={'OK' if ok2 else 'FAIL'}")
+    fails += (not ok1) + (not ok2)
+
+print("ALL BITWISE-EQUAL" if fails == 0 else f"{fails} FAILURES")
+raise SystemExit(1 if fails else 0)

@@ -1,11 +1,12 @@
 //! Hot-path microbenchmarks (L3): the protocol vector algebra at the real
-//! model sizes, train-step dispatch latency, and memory-bandwidth
+//! model sizes, packed-vs-scalar GEMM, pool-vs-scoped tile dispatch
+//! overhead, train-step dispatch latency, and a memory-bandwidth
 //! reference (memcpy) for the roofline comparison in EXPERIMENTS.md §Perf.
 
 use dynavg::data::{synth_mnist::MnistLike, Stream};
 use dynavg::model::params;
 use dynavg::runtime::tensor::{conv, matmul};
-use dynavg::runtime::{LayerGraph, ModelRuntime, Runtime};
+use dynavg::runtime::{LayerGraph, ModelRuntime, Par, Runtime, WorkerPool};
 use dynavg::util::bench::{bench, black_box, header, record_json};
 use dynavg::util::rng::Rng;
 use dynavg::util::threads;
@@ -86,6 +87,26 @@ fn main() {
             matmul::matmul_bias(black_box(&a), black_box(&w), &bias, &mut mm_out, m, k, n);
         });
         let mm_flops = 2.0 * (m * k * n) as f64;
+        // the packed 8-lane microkernel over the same shape (serial, pack
+        // included in the timing — bitwise-identical output)
+        let mut pack = vec![0.0f32; matmul::packed_len(k, n)];
+        let mmp = bench("matmul_bias_packed_m256_k2304_n64 (8-lane)", 20, || {
+            matmul::matmul_bias_tiled(
+                black_box(&a),
+                black_box(&w),
+                &bias,
+                &mut mm_out,
+                m,
+                k,
+                n,
+                &mut pack,
+                Par::Serial,
+            );
+        });
+        record_json(
+            "matmul_packed_vs_scalar",
+            &[("packed_ns", mmp.median_ns), ("scalar_ns", mm.median_ns)],
+        );
 
         // mnist_cnn conv2: 26x26x8 -> 24x24x16, 3x3, stride 1, B=10
         let (b, h, wd, c, kk, cout) = (10, 26, 26, 8, 3, 16);
@@ -117,6 +138,41 @@ fn main() {
             "conv2d throughput       : {:>7.2} GFLOP/s ({:.1} MFLOP/iter)",
             cv_flops / cv.median_ns,
             cv_flops / 1e6
+        );
+    }
+
+    // spawn-overhead microbench: ns per no-op tile dispatch, persistent
+    // pool (latch round-trip) vs per-call scoped spawn+join — the cost
+    // the worker pool amortizes and the reason its tiling floor is 8x
+    // lower (matmul::POOL_MIN_MACS vs TILE_MIN_MACS)
+    println!();
+    {
+        let t = threads::default_threads().max(2);
+        let pool = WorkerPool::new(t - 1);
+        let pool_d = bench(&format!("tile_dispatch_pool (t={t}, noop)"), 50, || {
+            Par::Pool(&pool).run(t, |tile| {
+                black_box(tile);
+            });
+        });
+        let scoped_d = bench(&format!("tile_dispatch_scoped (t={t}, noop)"), 20, || {
+            Par::Scoped(t).run(t, |tile| {
+                black_box(tile);
+            });
+        });
+        println!();
+        println!(
+            "tile dispatch overhead  : pool {} vs scoped {} per dispatch ({:.0}x)",
+            dynavg::util::bench::fmt_ns(pool_d.median_ns),
+            dynavg::util::bench::fmt_ns(scoped_d.median_ns),
+            scoped_d.median_ns / pool_d.median_ns.max(1.0)
+        );
+        record_json(
+            "tile_dispatch_overhead",
+            &[
+                ("pool_ns", pool_d.median_ns),
+                ("scoped_ns", scoped_d.median_ns),
+                ("threads", t as f64),
+            ],
         );
     }
 
@@ -160,8 +216,10 @@ fn main() {
 
         // end-to-end mnist_cnn train-step throughput record: steps/s and
         // effective GFLOP/s (plan FLOPs / wall time) with the workspace's
-        // intra-step tiling at the machine's thread budget — the number
-        // the bench-smoke CI job tracks across BENCH_*.json records
+        // persistent worker pool at the machine's thread budget — the
+        // number the bench-smoke CI job tracks across BENCH_*.json
+        // records (the 1.5x acceptance bar of the pool+microkernel PR is
+        // read off this record vs the PR 3 scoped-spawn baseline)
         if let Ok(mrt) = ModelRuntime::load(&rt, "mnist_cnn", "sgd") {
             let info = rt.manifest.model("mnist_cnn").unwrap();
             let flops = LayerGraph::from_model(info).unwrap().train_flops(10);
@@ -170,8 +228,9 @@ fn main() {
             let batch = MnistLike::new(1, 3).next_batch(10);
             let mut ws = mrt.train.workspace();
             ws.threads = threads::default_threads();
+            ws.enable_pool();
             let res = bench(
-                &format!("train_step_mnist_cnn_tiled (t={})", ws.threads),
+                &format!("train_step_mnist_cnn_tiled (t={}, pool)", ws.threads),
                 20,
                 || {
                     black_box(
@@ -186,9 +245,10 @@ fn main() {
             println!();
             println!(
                 "mnist_cnn train-step    : {steps_per_s:>7.2} steps/s, {gflops:.2} GFLOP/s effective \
-                 ({:.1} MFLOP/step, intra-threads {})",
+                 ({:.1} MFLOP/step, intra-threads {}, pool workers {})",
                 flops / 1e6,
-                ws.threads
+                ws.threads,
+                ws.pool_workers()
             );
             record_json(
                 "train_step_mnist_cnn_throughput",
@@ -197,6 +257,7 @@ fn main() {
                     ("gflops", gflops),
                     ("median_ns", res.median_ns),
                     ("threads", ws.threads as f64),
+                    ("pool_workers", ws.pool_workers() as f64),
                 ],
             );
         }

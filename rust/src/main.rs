@@ -117,13 +117,22 @@ fn cmd_list() -> Result<()> {
 /// execute (membership in the manifest is not enough — e.g. a native-only
 /// build over XLA artifacts cannot run `transformer_lm`), plus the
 /// steady-state `Workspace` arena footprint of one train step at the
-/// train-artifact batch size (native layer-graph models only).
+/// train-artifact batch size and the packed-operand (microkernel pack)
+/// slot inside it (native layer-graph models only).
 fn cmd_models() -> Result<()> {
     let rt = Runtime::new(dynavg::artifacts_dir())?;
     println!("backend: {}", rt.backend_name());
+    // the intra-step tile pool a solo workspace would stand up at this
+    // machine's budget (the engine divides this across learners; each
+    // learner's pool is its workspace's threads - 1)
+    let t = dynavg::util::threads::default_threads();
     println!(
-        "{:<16} {:>9}  {:<14} {:<8} {:<6} {:>12} executable",
-        "model", "P", "x_shape", "metric", "ops", "workspace"
+        "tile pool: {} worker(s) + dispatching thread at default_threads={t}",
+        t.saturating_sub(1)
+    );
+    println!(
+        "{:<16} {:>9}  {:<14} {:<8} {:<6} {:>12} {:>10} executable",
+        "model", "P", "x_shape", "metric", "ops", "workspace", "pack"
     );
     for (name, m) in &rt.manifest.models {
         let executable = if rt.supports_model(name) {
@@ -141,7 +150,9 @@ fn cmd_models() -> Result<()> {
         };
         // per-learner arena of one train step (interpretable models only;
         // batch = the train artifact's nominal size): interpreter scratch
-        // plus the four output slots (params' + opt_state' + 2 scalars)
+        // plus the four output slots (params' + opt_state' + 2 scalars);
+        // `pack` breaks out the packed-operand slot the microkernel GEMMs
+        // stream (already included in the workspace total)
         let train = rt
             .manifest
             .artifacts
@@ -149,12 +160,15 @@ fn cmd_models() -> Result<()> {
             .find(|a| a.kind == "train" && a.model == *name);
         let train_batch = train.map(|a| a.batch).unwrap_or(1);
         let out_slots = train.map(|a| a.param_count + a.state_size + 2).unwrap_or(0);
-        let workspace = match dynavg::runtime::LayerGraph::from_model(m) {
-            Ok(g) => format!("{} B", g.workspace_bytes(train_batch) + 4 * out_slots),
-            Err(_) => "-".to_string(),
+        let (workspace, pack) = match dynavg::runtime::LayerGraph::from_model(m) {
+            Ok(g) => (
+                format!("{} B", g.workspace_bytes(train_batch) + 4 * out_slots),
+                format!("{} B", g.pack_bytes(train_batch)),
+            ),
+            Err(_) => ("-".to_string(), "-".to_string()),
         };
         println!(
-            "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {workspace:>12} {executable}",
+            "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {workspace:>12} {pack:>10} {executable}",
             name, m.param_count, m.metric,
         );
     }

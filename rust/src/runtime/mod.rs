@@ -20,11 +20,15 @@
 //! [`Workspace`] (`Kernel::run_into`), whose buffer slots the native
 //! layer-graph plan sizes at compile time — steady-state training
 //! performs zero heap allocations and the conv hot loop can tile across
-//! threads with bitwise-identical results (see `workspace.rs`).
+//! threads with bitwise-identical results (see `workspace.rs`). Tiles
+//! are dispatched to the workspace's persistent [`WorkerPool`] when one
+//! is enabled (spawn cost paid once per run — see `pool.rs`), falling
+//! back to per-call scoped spawns otherwise.
 
 pub mod backend;
 pub mod manifest;
 pub mod native;
+pub mod pool;
 pub mod step;
 pub mod tensor;
 pub mod workspace;
@@ -34,6 +38,7 @@ pub mod xla;
 pub use backend::{Backend, Executable, Input, Kernel};
 pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo, OpSpec};
 pub use native::NativeBackend;
+pub use pool::{Par, WorkerPool};
 pub use step::{Batch, EvalStep, InferStep, StepStats, TrainStep};
 pub use tensor::LayerGraph;
 pub use workspace::Workspace;

@@ -37,6 +37,7 @@ use crate::util::rng::Rng;
 
 use super::backend::{self, Backend, Input, Kernel};
 use super::manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo, OpSpec};
+use super::pool::Par;
 use super::tensor::LayerGraph;
 use super::workspace::{sized, Workspace};
 
@@ -231,7 +232,15 @@ fn set_scalar(slot: &mut Vec<f32>, v: f32) {
 
 impl Kernel for NativeKernel {
     fn run_into(&self, info: &ArtifactInfo, inputs: &[Input], ws: &mut Workspace) -> Result<()> {
-        let threads = ws.threads.max(1);
+        // split the workspace into its disjoint parts: the scheduling
+        // mode borrows the pool while the interpreter borrows the scratch
+        let Workspace {
+            outputs,
+            threads,
+            pool,
+            scratch,
+        } = ws;
+        let par = Par::new((*threads).max(1), pool.as_ref());
         match info.kind.as_str() {
             "train" => {
                 anyhow::ensure!(inputs.len() == 5, "train takes (params, opt_state, x, y, lr)");
@@ -250,19 +259,19 @@ impl Kernel for NativeKernel {
                     optim.state_size(self.graph.param_count)
                 );
                 let b = self.batch_of(x, Some(y))?;
-                let (loss, metric) = self.graph.loss_grad_into(params, x, y, b, &mut ws.scratch, threads);
+                let (loss, metric) = self.graph.loss_grad_into(params, x, y, b, scratch, par);
                 // updated params/state are built in the reusable output
                 // slots: copy-in, then the optimizer updates in place —
                 // no allocation, and the caller can swap the slots out
-                ensure_outputs(&mut ws.outputs, 4);
-                sized(&mut ws.outputs[0], params.len());
-                ws.outputs[0].copy_from_slice(params);
-                sized(&mut ws.outputs[1], state.len());
-                ws.outputs[1].copy_from_slice(state);
-                let (new_p, rest) = ws.outputs.split_at_mut(1);
-                optim.apply(&mut new_p[0], &mut rest[0], &ws.scratch.grad, lr[0]);
-                set_scalar(&mut ws.outputs[2], loss);
-                set_scalar(&mut ws.outputs[3], metric);
+                ensure_outputs(outputs, 4);
+                sized(&mut outputs[0], params.len());
+                outputs[0].copy_from_slice(params);
+                sized(&mut outputs[1], state.len());
+                outputs[1].copy_from_slice(state);
+                let (new_p, rest) = outputs.split_at_mut(1);
+                optim.apply(&mut new_p[0], &mut rest[0], &scratch.grad, lr[0]);
+                set_scalar(&mut outputs[2], loss);
+                set_scalar(&mut outputs[3], metric);
                 Ok(())
             }
             "eval" => {
@@ -272,10 +281,10 @@ impl Kernel for NativeKernel {
                 let y = f32_input(&inputs[2], "y")?;
                 self.check_params(params)?;
                 let b = self.batch_of(x, Some(y))?;
-                let (loss, metric) = self.graph.eval_into(params, x, y, b, &mut ws.scratch, threads);
-                ensure_outputs(&mut ws.outputs, 2);
-                set_scalar(&mut ws.outputs[0], loss);
-                set_scalar(&mut ws.outputs[1], metric);
+                let (loss, metric) = self.graph.eval_into(params, x, y, b, scratch, par);
+                ensure_outputs(outputs, 2);
+                set_scalar(&mut outputs[0], loss);
+                set_scalar(&mut outputs[1], metric);
                 Ok(())
             }
             "infer" => {
@@ -284,11 +293,11 @@ impl Kernel for NativeKernel {
                 let x = f32_input(&inputs[1], "x")?;
                 self.check_params(params)?;
                 let b = self.batch_of(x, None)?;
-                self.graph.forward_into(params, x, b, &mut ws.scratch, threads);
-                ensure_outputs(&mut ws.outputs, 1);
-                let out = ws.scratch.acts.last().expect("plan has at least one node");
-                sized(&mut ws.outputs[0], out.len());
-                ws.outputs[0].copy_from_slice(out);
+                self.graph.forward_into(params, x, b, scratch, par);
+                ensure_outputs(outputs, 1);
+                let out = scratch.acts.last().expect("plan has at least one node");
+                sized(&mut outputs[0], out.len());
+                outputs[0].copy_from_slice(out);
                 Ok(())
             }
             other => anyhow::bail!("unknown artifact kind {other:?}"),

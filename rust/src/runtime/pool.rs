@@ -1,0 +1,456 @@
+//! Persistent per-[`Workspace`](super::workspace::Workspace) worker pool
+//! for the tiled conv/matmul kernels.
+//!
+//! PR 3 thread-tiled the tensor hot loops with `std::thread::scope`: every
+//! tiled kernel call stood up (and joined) its own OS threads, so a
+//! spawn-amortization floor kept small kernels serial and each train step
+//! paid the spawn cost several times per layer. This module replaces that
+//! with a pool of long-lived workers owned by the `Workspace`: the spawn
+//! cost is paid **once per run**, a dispatch is a mutex+condvar latch
+//! round-trip (microseconds, measured by `bench_hot_paths` as
+//! `tile_dispatch_overhead`), and the floors can drop low enough that the
+//! smaller conv layers (`driving_cnn`, `mnist_cnn` conv1) parallelize too.
+//!
+//! Dispatch contract ([`WorkerPool::run`]): the calling thread executes
+//! tile 0 (and every `threads`-th tile after it) itself while worker `w`
+//! executes the strided set starting at tile `w + 1`; the call returns
+//! only after every tile completed (a completion latch the caller waits
+//! on), which is what makes lending stack-borrowed closures to the
+//! workers sound — the same argument `std::thread::scope` makes, paid per
+//! dispatch instead of per spawn. A dispatch performs **zero heap
+//! allocations** (the closure is passed as a type-erased borrow, the
+//! latch is a counter under the mutex), preserving the zero-alloc
+//! steady-state contract of `tests/zero_alloc.rs` with the pool active.
+//!
+//! [`Par`] is the scheduling mode the kernels take: `Serial` (the strict
+//! reference path), `Scoped` (the PR 3 per-call spawn behavior, kept so
+//! the determinism suite can pin pool == scoped == serial bitwise), and
+//! `Pool`. All three run the *same* tile closures over the same tile
+//! decomposition, and every tile owns disjoint output elements with
+//! unchanged per-element accumulation order — so results are bitwise
+//! identical across modes and thread counts.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased borrow of a dispatch closure: a data pointer plus a
+/// monomorphized trampoline that downcasts and calls it.
+///
+/// Safety contract (upheld by [`WorkerPool::run`]): `data` points at a
+/// live `F: Fn(usize) + Sync` for the whole time the task is visible to
+/// workers — `run` does not return (and does not drop the closure) until
+/// the completion latch reports every tile finished.
+#[derive(Clone, Copy)]
+struct Task {
+    data: *const (),
+    call: fn(*const (), usize),
+    /// tiles in this dispatch; tile 0 runs on the dispatching caller
+    tiles: usize,
+    /// tile stride = worker count + 1: thread `i` (caller = slot 0,
+    /// worker `w` = slot `w + 1`) runs tiles `i, i + step, i + 2·step, …`
+    /// so dispatches with more tiles than threads still run every tile
+    step: usize,
+}
+
+// SAFETY: `Task` crosses threads inside the pool mutex. The pointer it
+// carries is only dereferenced through `call` while the dispatching
+// caller keeps the closure alive (see the struct docs), and the closure
+// is `Sync`, so shared calls from many workers are allowed.
+unsafe impl Send for Task {}
+
+fn trampoline<F: Fn(usize) + Sync>(data: *const (), tile: usize) {
+    // SAFETY: `data` was created from `&F` in `WorkerPool::run`, which
+    // keeps the closure alive until every worker finished its tile.
+    let f = unsafe { &*data.cast::<F>() };
+    f(tile);
+}
+
+struct PoolState {
+    /// bumped once per dispatch; a worker runs at most one tile per epoch
+    epoch: u64,
+    task: Option<Task>,
+    /// worker-owned tiles (everything but tile 0) not yet finished
+    pending: usize,
+    shutdown: bool,
+    /// first worker panic of the epoch, resumed on the dispatching caller
+    panicked: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// workers park here until a new dispatch epoch (or shutdown)
+    work: Condvar,
+    /// the dispatching caller parks here until `pending` drains to 0
+    done: Condvar,
+}
+
+/// A pool of long-lived worker threads executing tile closures. Owned by
+/// a [`Workspace`](super::workspace::Workspace) (one pool per owning
+/// caller thread — dispatches never overlap); workers shut down on drop.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` long-lived threads. Total tile slots per dispatch
+    /// is `workers + 1`: the dispatching caller always runs tile 0.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                task: None,
+                pending: 0,
+                shutdown: false,
+                panicked: None,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("dynavg-pool-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Tile slots per dispatch: the workers plus the calling thread.
+    pub fn threads(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Execute `f(0), f(1), ..., f(tiles - 1)` across the pool and return
+    /// after every tile completed. Thread `i` of the dispatch (the caller
+    /// is thread 0, worker `w` is thread `w + 1`) runs the strided tile
+    /// set `{i, i + threads, i + 2·threads, …}`, so `tiles` may exceed
+    /// [`Self::threads`] — the excess tiles are simply run in rounds (the
+    /// tensor kernels size their tile count to the thread budget, so one
+    /// tile per thread is the steady-state shape). A worker panic is
+    /// re-raised here after all tiles finished.
+    ///
+    /// Steady state performs no heap allocation: the closure is lent to
+    /// the workers as a type-erased borrow and the completion latch is a
+    /// counter + condvar.
+    pub fn run<F: Fn(usize) + Sync>(&self, tiles: usize, f: F) {
+        let tiles = tiles.max(1);
+        let step = self.threads();
+        if tiles <= 1 || step <= 1 {
+            for t in 0..tiles {
+                f(t);
+            }
+            return;
+        }
+        {
+            let mut s = self.shared.state.lock().unwrap();
+            // hard assert, not debug: WorkerPool is Sync, so overlapping
+            // dispatches are reachable from safe code — and an overlap
+            // would corrupt the latch and let `run` return while a worker
+            // still holds the lent closure borrow. One comparison per
+            // dispatch, under the already-held lock.
+            assert_eq!(s.pending, 0, "overlapping dispatch on one WorkerPool");
+            s.task = Some(Task {
+                data: (&f as *const F).cast::<()>(),
+                call: trampoline::<F>,
+                tiles,
+                step,
+            });
+            // workers that own at least one tile (worker w's first tile
+            // is w + 1); each decrements the latch once, after its last
+            s.pending = (tiles - 1).min(self.handles.len());
+            s.epoch += 1;
+            s.panicked = None;
+        }
+        self.shared.work.notify_all();
+        // Run the caller's tile set here. The guard drains the latch even
+        // if a caller tile unwinds, so the workers' borrow of `f` cannot
+        // outlive this frame (the scope-soundness argument, per dispatch).
+        let guard = DispatchGuard { shared: &self.shared };
+        let mut t = 0;
+        while t < tiles {
+            f(t);
+            t += step;
+        }
+        drop(guard);
+        let panicked = self.shared.state.lock().unwrap().panicked.take();
+        if let Some(payload) = panicked {
+            panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Waits for every worker-owned tile of the current epoch, then clears
+/// the task. Runs on drop so an unwinding tile 0 still drains the latch.
+struct DispatchGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for DispatchGuard<'_> {
+    fn drop(&mut self) {
+        let mut s = self.shared.state.lock().unwrap();
+        while s.pending > 0 {
+            s = self.shared.done.wait(s).unwrap();
+        }
+        s.task = None;
+    }
+}
+
+fn worker_loop(shared: &Shared, worker: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut s = shared.state.lock().unwrap();
+            loop {
+                if s.shutdown {
+                    return;
+                }
+                if s.epoch != seen {
+                    break;
+                }
+                s = shared.work.wait(s).unwrap();
+            }
+            seen = s.epoch;
+            s.task
+        };
+        // `None`: this worker woke after the epoch already drained — only
+        // possible when it had no tile in it (the dispatcher cannot
+        // finish an epoch while a tile-owning worker has not run). Either
+        // way, a worker without a tile just parks again.
+        let Some(task) = task else { continue };
+        if worker + 1 >= task.tiles {
+            continue;
+        }
+        // Catch tile panics so the latch always drains (a stuck `pending`
+        // would deadlock the caller); the payload is re-raised there.
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            // this worker's strided tile set (see `Task::step`)
+            let mut tile = worker + 1;
+            while tile < task.tiles {
+                (task.call)(task.data, tile);
+                tile += task.step;
+            }
+        }));
+        let mut s = shared.state.lock().unwrap();
+        if let Err(payload) = result {
+            s.panicked.get_or_insert(payload);
+        }
+        s.pending -= 1;
+        if s.pending == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// Scheduling mode of one tiled-kernel call. All modes execute the same
+/// tile decomposition with bitwise-identical results (tiles own disjoint
+/// output elements; per-element accumulation order never changes); they
+/// differ only in who runs the tiles and what a dispatch costs.
+#[derive(Clone, Copy)]
+pub enum Par<'a> {
+    /// One tile after another on the calling thread (the reference path).
+    Serial,
+    /// PR 3 behavior: per-call `std::thread::scope` spawn + join of
+    /// `tiles - 1` extra threads. Kept for the determinism contract and
+    /// for one-shot callers that never warm a pool.
+    Scoped(usize),
+    /// Persistent workers owned by the caller's `Workspace`; dispatch is
+    /// a latch round-trip instead of a spawn.
+    Pool(&'a WorkerPool),
+}
+
+impl<'a> Par<'a> {
+    /// The mode a [`Workspace`](super::workspace::Workspace) configuration
+    /// implies: pooled when a pool sized for exactly this thread budget
+    /// exists, scoped when only a thread count does, serial otherwise.
+    /// The size check matters: a stale pool from a *larger* budget must
+    /// not widen the tiling beyond `threads` (the engine divides cores
+    /// across learners), so a mismatched pool is ignored until
+    /// `Workspace::enable_pool` rebuilds it for the current budget.
+    pub fn new(threads: usize, pool: Option<&'a WorkerPool>) -> Par<'a> {
+        match pool {
+            Some(p) if threads > 1 && p.threads() == threads => Par::Pool(p),
+            _ if threads > 1 => Par::Scoped(threads),
+            _ => Par::Serial,
+        }
+    }
+
+    /// Tile slots a dispatch can use.
+    pub fn threads(self) -> usize {
+        match self {
+            Par::Serial => 1,
+            Par::Scoped(n) => n.max(1),
+            Par::Pool(p) => p.threads(),
+        }
+    }
+
+    /// Tile count for a kernel of the given work volume: `1` (serial)
+    /// below the mode's amortization floor, the full thread budget above
+    /// it. The floors are per-mode because a pool dispatch costs ~2
+    /// orders of magnitude less than a scoped spawn+join — callers pass
+    /// their volume unit's floor pair (MACs for the GEMMs, element
+    /// traffic for the im2col/col2im sweeps). Centralized here so the
+    /// schedule-selection logic cannot diverge between kernels.
+    pub fn tile_count(self, volume: usize, scoped_floor: usize, pool_floor: usize) -> usize {
+        let floor = match self {
+            Par::Pool(_) => pool_floor,
+            _ => scoped_floor,
+        };
+        if volume < floor {
+            1
+        } else {
+            self.threads()
+        }
+    }
+
+    /// Run `f(0..tiles)`, tile 0 always on the calling thread.
+    pub fn run(self, tiles: usize, f: impl Fn(usize) + Sync) {
+        let tiles = tiles.max(1);
+        match self {
+            _ if tiles == 1 => f(0),
+            Par::Serial => {
+                for t in 0..tiles {
+                    f(t);
+                }
+            }
+            Par::Scoped(_) => std::thread::scope(|scope| {
+                for t in 1..tiles {
+                    let f = &f;
+                    scope.spawn(move || f(t));
+                }
+                f(0);
+            }),
+            Par::Pool(p) => p.run(tiles, f),
+        }
+    }
+}
+
+/// A raw `*mut f32` the tile closures may share across workers.
+///
+/// The tiled kernels partition one output slice by *element ownership*:
+/// each tile reconstructs a subslice over a range no other tile touches,
+/// and the dispatch ([`Par::run`]) returns before the original `&mut`
+/// borrow ends — so the reconstructed slices never alias and never
+/// dangle. Every `unsafe` reconstruction site carries that argument.
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+
+// SAFETY: see the struct docs — disjoint tile ranges, dispatch-bounded
+// lifetime. The pointer itself is just an address; sharing it is safe,
+// dereferencing it is the per-site obligation.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_every_tile_exactly_once() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.threads(), 4);
+        // covers under-, exactly- and over-subscribed dispatches (tiles
+        // beyond the thread count run strided, in rounds)
+        for tiles in [1usize, 2, 4, 7, 11] {
+            let hits: Vec<AtomicUsize> = (0..tiles).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tiles, |t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "tiles={tiles} tile={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_dispatches_reuse_the_same_workers() {
+        // many dispatches on one pool, mutating disjoint slice tiles via
+        // the same mechanism the kernels use
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0.0f32; 300];
+        for round in 1..=50 {
+            let chunk = data.len().div_ceil(3);
+            let ptr = SendPtr(data.as_mut_ptr());
+            let n = data.len();
+            pool.run(3, |t| {
+                let lo = t * chunk;
+                let hi = n.min(lo + chunk);
+                // SAFETY: tiles own disjoint ranges [lo, hi); the dispatch
+                // completes before `data` is borrowed again.
+                let tile = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+                for v in tile {
+                    *v += round as f32;
+                }
+            });
+        }
+        let want = (1..=50).sum::<i32>() as f32;
+        assert!(data.iter().all(|&v| v == want), "every element hit once per dispatch");
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_caller() {
+        let pool = WorkerPool::new(2);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(3, |t| {
+                if t == 2 {
+                    panic!("tile 2 exploded");
+                }
+            });
+        }));
+        assert!(result.is_err(), "worker panic must reach the caller");
+        // the pool stays usable after a panicked dispatch
+        let count = AtomicUsize::new(0);
+        pool.run(3, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn par_modes_agree_on_tile_coverage() {
+        let pool = WorkerPool::new(3);
+        for par in [Par::Serial, Par::Scoped(4), Par::Pool(&pool)] {
+            let sum = AtomicUsize::new(0);
+            par.run(4, |t| {
+                sum.fetch_add(t + 1, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 10);
+        }
+        assert_eq!(Par::Serial.threads(), 1);
+        assert_eq!(Par::Scoped(4).threads(), 4);
+        assert_eq!(Par::Pool(&pool).threads(), 4);
+        // Par::new picks the pool only when it matches the thread budget
+        assert!(matches!(Par::new(1, Some(&pool)), Par::Serial));
+        assert!(matches!(Par::new(3, None), Par::Scoped(3)));
+        assert!(matches!(Par::new(4, Some(&pool)), Par::Pool(_)));
+        // a pool sized for a different budget must not widen the tiling:
+        // the requested width wins, on scoped spawns, until the workspace
+        // rebuilds the pool
+        assert!(matches!(Par::new(3, Some(&pool)), Par::Scoped(3)));
+    }
+
+    #[test]
+    fn zero_worker_pool_degrades_to_serial() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let count = AtomicUsize::new(0);
+        pool.run(5, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5, "all tiles run on the caller");
+    }
+}

@@ -14,24 +14,42 @@
 //! every layer's patch matrix across the backward pass), `db` = column
 //! sums, and `dX` = col2im scatter-add of `dOut · Wᵀ` (the transposed
 //! convolution, expressed through the same two primitives).
+//!
+//! The forward product runs the packed microkernel (`matmul::pack_b` +
+//! register tiling — bitwise identical to the scalar reference, see
+//! `matmul.rs`): the weight operand is packed once per call into the
+//! caller's `pack` slice, then each row tile fuses im2col with the packed
+//! product. Tiling is dispatched through a [`Par`] mode — serial, scoped
+//! spawns, or the persistent per-`Workspace` `WorkerPool`.
+
+use crate::runtime::pool::{Par, SendPtr};
 
 use super::matmul;
-use crate::util::threads::parallel_for_each_mut;
 
 /// Minimum element traffic (patch-matrix elements) before the
 /// bandwidth-bound im2col/col2im sweeps tile across scoped threads — the
 /// spawn-amortization floor, mirroring `matmul::TILE_MIN_MACS` for the
 /// compute-bound products. Like there, the floor never changes results
-/// (tiled == serial bitwise); the `_impl` variants skip it for tests.
+/// (tiled == serial bitwise); the `_t` variants take the tile count
+/// directly for tests.
 const TILE_MIN_ELEMS: usize = 1 << 18;
 
+/// The same floor under a persistent-pool dispatch (a latch round-trip,
+/// ~2 orders of magnitude cheaper than a spawn+join).
+const POOL_MIN_ELEMS: usize = 1 << 15;
+
 #[inline]
-fn sweep_tile_threads(elems: usize, threads: usize) -> usize {
-    if elems < TILE_MIN_ELEMS {
-        1
-    } else {
-        threads
-    }
+fn sweep_tile_threads(elems: usize, par: Par) -> usize {
+    par.tile_count(elems, TILE_MIN_ELEMS, POOL_MIN_ELEMS)
+}
+
+/// The compute-bound floor for the fused im2col+GEMM forward, in MACs —
+/// the same constants as `matmul::gemm_tile_threads` (the sweep floors
+/// above are element-traffic scale and would tile the fused GEMM 4-8x
+/// below its spawn-amortization point).
+#[inline]
+fn fused_gemm_tile_threads(macs: usize, par: Par) -> usize {
+    par.tile_count(macs, matmul::TILE_MIN_MACS, matmul::POOL_MIN_MACS)
 }
 
 /// Output spatial dims of a valid-padding conv/pool window.
@@ -92,8 +110,8 @@ pub fn im2col_rows(
     }
 }
 
-/// Thread-tiled [`im2col`]: partitions the patch rows over `threads`
-/// scoped workers. Bitwise identical to the serial call (disjoint rows).
+/// Thread-tiled [`im2col`]: partitions the patch rows over the [`Par`]
+/// tiles. Bitwise identical to the serial call (disjoint rows).
 pub fn im2col_tiled(
     x: &[f32],
     patches: &mut [f32],
@@ -101,36 +119,41 @@ pub fn im2col_tiled(
     (h, w, c): (usize, usize, usize),
     (kh, kw): (usize, usize),
     stride: usize,
-    threads: usize,
+    par: Par,
 ) {
-    let threads = sweep_tile_threads(patches.len(), threads);
-    im2col_tiled_impl(x, patches, b, (h, w, c), (kh, kw), stride, threads);
+    let t = sweep_tile_threads(patches.len(), par);
+    im2col_tiled_t(x, patches, b, (h, w, c), (kh, kw), stride, par, t);
 }
 
-fn im2col_tiled_impl(
+fn im2col_tiled_t(
     x: &[f32],
     patches: &mut [f32],
     b: usize,
     (h, w, c): (usize, usize, usize),
     (kh, kw): (usize, usize),
     stride: usize,
-    threads: usize,
+    par: Par,
+    t: usize,
 ) {
     let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
     let (m, k) = (b * oh * ow, kh * kw * c);
-    let t = threads.min(m).max(1);
+    let t = t.min(m).max(1);
     if t <= 1 {
         im2col(x, patches, b, (h, w, c), (kh, kw), stride);
         return;
     }
     let chunk = m.div_ceil(t);
-    let mut tiles: Vec<_> = patches
-        .chunks_mut(chunk * k)
-        .enumerate()
-        .map(|(ti, p)| (ti * chunk, p))
-        .collect();
-    parallel_for_each_mut(&mut tiles, t, |_, tile| {
-        im2col_rows(x, &mut *tile.1, (h, w, c), (kh, kw), stride, tile.0);
+    let pat_ptr = SendPtr(patches.as_mut_ptr());
+    par.run(t, |ti| {
+        let r0 = ti * chunk;
+        let r1 = m.min(r0 + chunk);
+        if r0 >= r1 {
+            return;
+        }
+        // SAFETY: tiles own the disjoint patch-row ranges [r0, r1), and
+        // `par.run` returns before the `patches` borrow ends.
+        let tile = unsafe { std::slice::from_raw_parts_mut(pat_ptr.0.add(r0 * k), (r1 - r0) * k) };
+        im2col_rows(x, tile, (h, w, c), (kh, kw), stride, r0);
     });
 }
 
@@ -181,22 +204,23 @@ pub fn col2im_acc_tiled(
     (h, w, c): (usize, usize, usize),
     (kh, kw): (usize, usize),
     stride: usize,
-    threads: usize,
+    par: Par,
 ) {
-    let threads = sweep_tile_threads(dpatches.len(), threads);
-    col2im_acc_tiled_impl(dpatches, dx, b, (h, w, c), (kh, kw), stride, threads);
+    let t = sweep_tile_threads(dpatches.len(), par);
+    col2im_acc_tiled_t(dpatches, dx, b, (h, w, c), (kh, kw), stride, par, t);
 }
 
-fn col2im_acc_tiled_impl(
+fn col2im_acc_tiled_t(
     dpatches: &[f32],
     dx: &mut [f32],
     b: usize,
     (h, w, c): (usize, usize, usize),
     (kh, kw): (usize, usize),
     stride: usize,
-    threads: usize,
+    par: Par,
+    t: usize,
 ) {
-    let t = threads.min(b).max(1);
+    let t = t.min(b).max(1);
     if t <= 1 {
         col2im_acc(dpatches, dx, b, (h, w, c), (kh, kw), stride);
         return;
@@ -205,23 +229,38 @@ fn col2im_acc_tiled_impl(
     let per_img_patch = oh * ow * kh * kw * c;
     let per_img_x = h * w * c;
     let chunk = b.div_ceil(t);
-    let mut tiles: Vec<_> = dpatches
-        .chunks(chunk * per_img_patch)
-        .zip(dx.chunks_mut(chunk * per_img_x))
-        .collect();
-    parallel_for_each_mut(&mut tiles, t, |_, tile| {
-        let imgs = tile.0.len() / per_img_patch;
-        col2im_acc(tile.0, &mut *tile.1, imgs, (h, w, c), (kh, kw), stride);
+    let dx_ptr = SendPtr(dx.as_mut_ptr());
+    par.run(t, |ti| {
+        let i0 = ti * chunk;
+        let i1 = b.min(i0 + chunk);
+        if i0 >= i1 {
+            return;
+        }
+        // SAFETY: tiles own the disjoint image ranges [i0, i1) of `dx`
+        // (scatter-adds never cross images), and `par.run` returns before
+        // the `dx` borrow ends.
+        let tile = unsafe { std::slice::from_raw_parts_mut(dx_ptr.0.add(i0 * per_img_x), (i1 - i0) * per_img_x) };
+        col2im_acc(
+            &dpatches[i0 * per_img_patch..i1 * per_img_patch],
+            tile,
+            i1 - i0,
+            (h, w, c),
+            (kh, kw),
+            stride,
+        );
     });
 }
 
 /// Forward conv into caller-owned slices: `x: [b,h,w,c]`,
 /// `wt: [kh·kw·c, cout]` flat, `bias: [cout]` -> `out: [b,oh,ow,cout]`,
 /// with the im2col patch matrix written into the caller's `patches` slice
-/// (a `Workspace` arena slot on the hot path — nothing is allocated here).
-/// `threads > 1` fuses im2col+matmul per output-row tile on scoped
-/// workers; results are bitwise identical to `threads == 1` because tiles
-/// own disjoint patch/output rows and each row's arithmetic is unchanged.
+/// and the packed weight operand into `pack` (both `Workspace` arena
+/// slots on the hot path — nothing is allocated here; `pack` needs
+/// `matmul::packed_len(kh·kw·c, cout)` elements). The weight is packed
+/// once by the dispatching caller; each tile then fuses im2col with the
+/// packed matmul over its own patch/output rows. Results are bitwise
+/// identical across [`Par`] modes and thread counts (disjoint rows,
+/// unchanged per-element arithmetic).
 pub fn forward_into(
     x: &[f32],
     wt: &[f32],
@@ -233,14 +272,16 @@ pub fn forward_into(
     (kh, kw): (usize, usize),
     cout: usize,
     stride: usize,
-    threads: usize,
+    pack: &mut [f32],
+    par: Par,
 ) {
-    // floor on the fused GEMM volume, as in matmul::gemm tile entry points
-    let threads = sweep_tile_threads(patches.len().saturating_mul(cout), threads);
-    forward_into_impl(x, wt, bias, out, patches, b, (h, w, c), (kh, kw), cout, stride, threads);
+    // floor on the fused GEMM volume (patch elements · cout = m·k·cout MACs)
+    let t = fused_gemm_tile_threads(patches.len().saturating_mul(cout), par);
+    forward_into_t(x, wt, bias, out, patches, b, (h, w, c), (kh, kw), cout, stride, pack, par, t);
 }
 
-fn forward_into_impl(
+#[allow(clippy::too_many_arguments)]
+fn forward_into_t(
     x: &[f32],
     wt: &[f32],
     bias: &[f32],
@@ -251,37 +292,56 @@ fn forward_into_impl(
     (kh, kw): (usize, usize),
     cout: usize,
     stride: usize,
-    threads: usize,
+    pack: &mut [f32],
+    par: Par,
+    t: usize,
 ) {
     let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
     let (m, k) = (b * oh * ow, kh * kw * c);
     debug_assert_eq!(out.len(), m * cout);
     debug_assert_eq!(patches.len(), m * k);
-    let t = threads.min(m).max(1);
+    let t = t.min(m).max(1);
     if t <= 1 {
         im2col(x, patches, b, (h, w, c), (kh, kw), stride);
-        matmul::matmul_bias(patches, wt, bias, out, m, k, cout);
+        // a conv with fewer patch rows than one register block cannot
+        // amortize the weight pack — scalar kernel, bitwise identical
+        if m < matmul::MR {
+            matmul::matmul_bias(patches, wt, bias, out, m, k, cout);
+        } else {
+            let pack = &mut pack[..matmul::packed_len(k, cout)];
+            matmul::pack_b(wt, pack, k, cout);
+            matmul::bias_acc_packed(patches, pack, bias, out, m, k, cout);
+        }
         return;
     }
+    let pack = &mut pack[..matmul::packed_len(k, cout)];
+    matmul::pack_b(wt, pack, k, cout);
     let chunk = m.div_ceil(t);
-    let mut tiles: Vec<_> = patches
-        .chunks_mut(chunk * k)
-        .zip(out.chunks_mut(chunk * cout))
-        .enumerate()
-        .map(|(ti, (p, o))| (ti * chunk, p, o))
-        .collect();
-    parallel_for_each_mut(&mut tiles, t, |_, tile| {
-        let rows = tile.1.len() / k;
-        im2col_rows(x, &mut *tile.1, (h, w, c), (kh, kw), stride, tile.0);
-        matmul::matmul_bias(&*tile.1, wt, bias, &mut *tile.2, rows, k, cout);
+    let pat_ptr = SendPtr(patches.as_mut_ptr());
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let pack = &*pack;
+    par.run(t, |ti| {
+        let r0 = ti * chunk;
+        let r1 = m.min(r0 + chunk);
+        if r0 >= r1 {
+            return;
+        }
+        let rows = r1 - r0;
+        // SAFETY: tiles own the disjoint patch/output row ranges
+        // [r0, r1), and `par.run` returns before either borrow ends.
+        let pat = unsafe { std::slice::from_raw_parts_mut(pat_ptr.0.add(r0 * k), rows * k) };
+        let tile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r0 * cout), rows * cout) };
+        im2col_rows(x, pat, (h, w, c), (kh, kw), stride, r0);
+        matmul::bias_acc_packed(pat, pack, bias, tile, rows, k, cout);
     });
 }
 
-/// Convenience forward: allocate the output (and a temporary patch
-/// buffer) and run [`forward_into`] serially. The layer-graph interpreter
-/// does **not** use this — its conv nodes write into `Workspace` arena
-/// slots sized once at plan-compile time and reused every step (see
-/// `runtime/workspace.rs`); this entry point serves tests and benches.
+/// Convenience forward: allocate the output (and temporary patch/pack
+/// buffers) and run [`forward_into`] serially. The layer-graph
+/// interpreter does **not** use this — its conv nodes write into
+/// `Workspace` arena slots sized once at plan-compile time and reused
+/// every step (see `runtime/workspace.rs`); this entry point serves tests
+/// and benches.
 pub fn conv2d_forward(
     x: &[f32],
     wt: &[f32],
@@ -295,6 +355,7 @@ pub fn conv2d_forward(
     let (oh, ow) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
     let (m, k) = (b * oh * ow, kh * kw * c);
     let mut patches = vec![0.0f32; m * k];
+    let mut pack = vec![0.0f32; matmul::packed_len(k, cout)];
     let mut out = vec![0.0f32; m * cout];
     forward_into(
         x,
@@ -307,7 +368,8 @@ pub fn conv2d_forward(
         (kh, kw),
         cout,
         stride,
-        1,
+        &mut pack,
+        Par::Serial,
     );
     out
 }
@@ -315,6 +377,7 @@ pub fn conv2d_forward(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::pool::WorkerPool;
     use crate::util::rng::Rng;
 
     /// Direct 6-loop convolution as the reference semantics.
@@ -397,6 +460,7 @@ mod tests {
     #[test]
     fn tiled_conv_paths_are_bitwise_identical_to_serial() {
         let mut rng = Rng::new(13);
+        let pool = WorkerPool::new(2);
         for (b, h, w, c, kh, kw, cout, stride) in [
             (3, 8, 7, 2, 3, 3, 4, 1),
             (2, 9, 9, 1, 5, 5, 2, 2),
@@ -409,32 +473,37 @@ mod tests {
             let bias: Vec<f32> = (0..cout).map(|_| rng.normal_f32()).collect();
             let p: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
             for threads in [2usize, 3, 7] {
-                // the _impl variants bypass the spawn-amortization floor
-                // so real tiles run at these toy sizes.
-                // fused forward (im2col + matmul per row tile):
-                let mut serial_out = vec![0.0f32; m * cout];
-                let mut serial_pat = vec![0.0f32; m * k];
-                let mut tiled_out = vec![f32::NAN; m * cout];
-                let mut tiled_pat = vec![f32::NAN; m * k];
-                let run = |o: &mut [f32], p: &mut [f32], t: usize| {
-                    forward_into_impl(&x, &wt, &bias, o, p, b, (h, w, c), (kh, kw), cout, stride, t);
-                };
-                run(&mut serial_out, &mut serial_pat, 1);
-                run(&mut tiled_out, &mut tiled_pat, threads);
-                assert_eq!(serial_out, tiled_out, "forward b{b} t{threads}");
-                assert_eq!(serial_pat, tiled_pat, "patches b{b} t{threads}");
+                let modes: [(&str, Par); 2] = [("scoped", Par::Scoped(threads)), ("pool", Par::Pool(&pool))];
+                for (mode, par) in modes {
+                    // the _t variants take the tile count directly,
+                    // bypassing the volume floor so real tiles run at
+                    // these toy sizes.
+                    // fused forward (im2col + packed matmul per row tile):
+                    let mut serial_out = vec![0.0f32; m * cout];
+                    let mut serial_pat = vec![0.0f32; m * k];
+                    let mut tiled_out = vec![f32::NAN; m * cout];
+                    let mut tiled_pat = vec![f32::NAN; m * k];
+                    let run = |o: &mut [f32], pt: &mut [f32], pr: Par, t: usize| {
+                        let mut pack = vec![f32::NAN; matmul::packed_len(k, cout)];
+                        forward_into_t(&x, &wt, &bias, o, pt, b, (h, w, c), (kh, kw), cout, stride, &mut pack, pr, t);
+                    };
+                    run(&mut serial_out, &mut serial_pat, Par::Serial, 1);
+                    run(&mut tiled_out, &mut tiled_pat, par, threads);
+                    assert_eq!(serial_out, tiled_out, "forward {mode} b{b} t{threads}");
+                    assert_eq!(serial_pat, tiled_pat, "patches {mode} b{b} t{threads}");
 
-                // standalone tiled im2col
-                let mut tiled_pat2 = vec![f32::NAN; m * k];
-                im2col_tiled_impl(&x, &mut tiled_pat2, b, (h, w, c), (kh, kw), stride, threads);
-                assert_eq!(serial_pat, tiled_pat2, "im2col b{b} t{threads}");
+                    // standalone tiled im2col
+                    let mut tiled_pat2 = vec![f32::NAN; m * k];
+                    im2col_tiled_t(&x, &mut tiled_pat2, b, (h, w, c), (kh, kw), stride, par, threads);
+                    assert_eq!(serial_pat, tiled_pat2, "im2col {mode} b{b} t{threads}");
 
-                // per-image tiled col2im scatter-add
-                let mut serial_dx = vec![0.0f32; b * h * w * c];
-                col2im_acc(&p, &mut serial_dx, b, (h, w, c), (kh, kw), stride);
-                let mut tiled_dx = vec![0.0f32; b * h * w * c];
-                col2im_acc_tiled_impl(&p, &mut tiled_dx, b, (h, w, c), (kh, kw), stride, threads);
-                assert_eq!(serial_dx, tiled_dx, "col2im b{b} t{threads}");
+                    // per-image tiled col2im scatter-add
+                    let mut serial_dx = vec![0.0f32; b * h * w * c];
+                    col2im_acc(&p, &mut serial_dx, b, (h, w, c), (kh, kw), stride);
+                    let mut tiled_dx = vec![0.0f32; b * h * w * c];
+                    col2im_acc_tiled_t(&p, &mut tiled_dx, b, (h, w, c), (kh, kw), stride, par, threads);
+                    assert_eq!(serial_dx, tiled_dx, "col2im {mode} b{b} t{threads}");
+                }
             }
         }
     }

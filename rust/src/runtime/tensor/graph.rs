@@ -25,6 +25,7 @@
 use anyhow::{Context, Result};
 
 use super::super::manifest::{Dtype, ModelInfo, OpSpec};
+use super::super::pool::Par;
 use super::super::workspace::{sized, sized_u32, zeroed, Scratch};
 use super::{conv, matmul, pool};
 
@@ -154,10 +155,10 @@ pub(crate) enum LossKind {
 
 /// A compiled, interpretable model: plan + loss + parameter layout, plus
 /// the buffer-slot plan that sizes a [`Scratch`] arena — per-node
-/// activation lengths, the shared im2col patch slot, and the ping-pong
-/// delta width, all per batch element and resolved here at compile time
-/// so the interpreter never computes (or allocates) buffer sizes on the
-/// hot path.
+/// activation lengths, the shared im2col patch slot, the packed-operand
+/// slot for the microkernel GEMMs, and the ping-pong delta width, all
+/// resolved here at compile time so the interpreter never computes (or
+/// allocates) buffer sizes on the hot path.
 pub struct LayerGraph {
     nodes: Vec<Node>,
     slots: Vec<ParamSlot>,
@@ -172,6 +173,15 @@ pub struct LayerGraph {
     patch_unit: usize,
     /// Widest layer-gradient per batch element (ping-pong delta buffers).
     delta_unit: usize,
+    /// Packed-operand slot, batch-independent part: the widest forward
+    /// weight pack (`matmul::packed_len(k, n)` over dense/conv nodes).
+    pack_fixed: usize,
+    /// Packed-operand slot, per-batch-element part: the widest backward
+    /// delta pack (dW streams `[m, n]` with `m = b` for dense nodes and
+    /// `m = b·oh·ow` for conv nodes, so the unit is `pad(n)` resp.
+    /// `oh·ow·pad(n)`). One shared slot covers both parts — forward and
+    /// backward packs are live at different times.
+    pack_unit: usize,
 }
 
 /// Owned per-node post-activation outputs of one forward sweep (the
@@ -375,6 +385,21 @@ impl LayerGraph {
             .max()
             .unwrap_or(0);
         let delta_unit = act_units.iter().copied().chain([in_dim]).max().unwrap_or(0);
+        let mut pack_fixed = 0usize;
+        let mut pack_unit = 0usize;
+        for node in &nodes {
+            match *node {
+                Node::Dense { fan_in, fan_out, .. } => {
+                    pack_fixed = pack_fixed.max(matmul::packed_len(fan_in, fan_out));
+                    pack_unit = pack_unit.max(matmul::packed_len(1, fan_out));
+                }
+                Node::Conv2d { kh, kw, c, cout, oh, ow, .. } => {
+                    pack_fixed = pack_fixed.max(matmul::packed_len(kh * kw * c, cout));
+                    pack_unit = pack_unit.max(matmul::packed_len(oh * ow, cout));
+                }
+                Node::MaxPool2 { .. } => {}
+            }
+        }
         Ok(LayerGraph {
             nodes,
             slots,
@@ -385,6 +410,8 @@ impl LayerGraph {
             act_units,
             patch_unit,
             delta_unit,
+            pack_fixed,
+            pack_unit,
         })
     }
 
@@ -411,9 +438,22 @@ impl LayerGraph {
             }
         }
         sized(&mut s.patches, b * self.patch_unit);
+        sized(&mut s.pack, self.pack_len(b));
         sized(&mut s.delta, b * self.delta_unit);
         sized(&mut s.delta2, b * self.delta_unit);
         sized(&mut s.grad, self.param_count);
+    }
+
+    /// Packed-operand slot length at batch `b` (see the `pack_fixed` /
+    /// `pack_unit` field docs — one slot serves forward and backward).
+    fn pack_len(&self, b: usize) -> usize {
+        self.pack_fixed.max(b * self.pack_unit)
+    }
+
+    /// Bytes of the packed-operand arena slot at batch `b` (surfaced by
+    /// `dynavg models` next to the workspace footprint).
+    pub fn pack_bytes(&self, b: usize) -> usize {
+        4 * self.pack_len(b)
     }
 
     /// Steady-state scratch footprint of one train/eval step at batch `b`,
@@ -429,7 +469,7 @@ impl LayerGraph {
             .map(|(_, &u)| u)
             .sum::<usize>()
             * b;
-        4 * (acts + pool + b * self.patch_unit + 2 * b * self.delta_unit + self.param_count)
+        4 * (acts + pool + b * self.patch_unit + self.pack_len(b) + 2 * b * self.delta_unit + self.param_count)
     }
 
     /// Approximate FLOPs of one train step at batch `b`: 2·M·K·N per GEMM,
@@ -456,9 +496,10 @@ impl LayerGraph {
 
     /// Run the plan forward into the scratch arena: post-activations land
     /// in `s.acts` (slot = node index), pooling argmax in `s.pool_idx`.
-    /// `threads > 1` tiles the conv/dense products (bitwise identical to
-    /// serial — see `runtime/tensor/matmul.rs`).
-    pub(crate) fn forward_into(&self, params: &[f32], x: &[f32], b: usize, s: &mut Scratch, threads: usize) {
+    /// `par` schedules the conv/dense products — serial, scoped spawns,
+    /// or the workspace's persistent pool; every mode is bitwise
+    /// identical (see `runtime/tensor/matmul.rs`).
+    pub(crate) fn forward_into(&self, params: &[f32], x: &[f32], b: usize, s: &mut Scratch, par: Par) {
         debug_assert_eq!(params.len(), self.param_count);
         debug_assert_eq!(x.len(), b * self.in_dim);
         self.prepare_scratch(b, s);
@@ -482,7 +523,8 @@ impl LayerGraph {
                         b,
                         fan_in,
                         fan_out,
-                        threads,
+                        &mut s.pack,
+                        par,
                     );
                     act.apply(out);
                 }
@@ -512,7 +554,8 @@ impl LayerGraph {
                         (kh, kw),
                         cout,
                         stride,
-                        threads,
+                        &mut s.pack,
+                        par,
                     );
                     act.apply(out);
                 }
@@ -527,7 +570,7 @@ impl LayerGraph {
     /// benches and one-shot callers; the hot path holds a `Workspace`.
     pub fn forward(&self, params: &[f32], x: &[f32], b: usize) -> ForwardPass {
         let mut s = Scratch::new();
-        self.forward_into(params, x, b, &mut s, 1);
+        self.forward_into(params, x, b, &mut s, Par::Serial);
         ForwardPass {
             acts: std::mem::take(&mut s.acts),
         }
@@ -598,9 +641,9 @@ impl LayerGraph {
         y: &[f32],
         b: usize,
         s: &mut Scratch,
-        threads: usize,
+        par: Par,
     ) -> (f32, f32) {
-        self.forward_into(params, x, b, s, threads);
+        self.forward_into(params, x, b, s, par);
         let Scratch { acts, delta, .. } = s;
         self.output_loss_into(acts.last().expect("plan has at least one node"), y, b, delta)
     }
@@ -608,7 +651,7 @@ impl LayerGraph {
     /// Loss + metric only (allocating convenience over [`LayerGraph::eval_into`]).
     pub fn eval(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32) {
         let mut s = Scratch::new();
-        self.eval_into(params, x, y, b, &mut s, 1)
+        self.eval_into(params, x, y, b, &mut s, Par::Serial)
     }
 
     /// Loss, metric and the full flat gradient (reverse-mode by hand),
@@ -624,13 +667,14 @@ impl LayerGraph {
         y: &[f32],
         b: usize,
         s: &mut Scratch,
-        threads: usize,
+        par: Par,
     ) -> (f32, f32) {
-        self.forward_into(params, x, b, s, threads);
+        self.forward_into(params, x, b, s, par);
         let Scratch {
             acts,
             pool_idx,
             patches,
+            pack,
             delta,
             delta2,
             grad,
@@ -657,7 +701,8 @@ impl LayerGraph {
                         b,
                         fan_in,
                         fan_out,
-                        threads,
+                        pack,
+                        par,
                     );
                     matmul::add_col_sums(delta, &mut grad[b_off..b_off + fan_out], b, fan_out);
                     if ni > 0 {
@@ -669,7 +714,7 @@ impl LayerGraph {
                             b,
                             fan_out,
                             fan_in,
-                            threads,
+                            par,
                         );
                         std::mem::swap(delta, delta2);
                     }
@@ -693,15 +738,16 @@ impl LayerGraph {
                     // rematerialize patches (cheaper than holding every
                     // layer's patch matrix across the backward pass)
                     let pat = &mut patches[..m * k];
-                    conv::im2col_tiled(input, pat, b, (h, w, c), (kh, kw), stride, threads);
-                    matmul::matmul_at_b_acc_tiled(pat, delta, &mut grad[w_off..w_off + k * cout], m, k, cout, threads);
+                    conv::im2col_tiled(input, pat, b, (h, w, c), (kh, kw), stride, par);
+                    let gw = &mut grad[w_off..w_off + k * cout];
+                    matmul::matmul_at_b_acc_tiled(pat, delta, gw, m, k, cout, pack, par);
                     matmul::add_col_sums(delta, &mut grad[b_off..b_off + cout], m, cout);
                     if ni > 0 {
                         // the forward patches are consumed — reuse the
                         // slot for the patch-space gradient dOut·Wᵀ
-                        matmul::matmul_a_bt_tiled(delta, &params[w_off..w_off + k * cout], pat, m, cout, k, threads);
+                        matmul::matmul_a_bt_tiled(delta, &params[w_off..w_off + k * cout], pat, m, cout, k, par);
                         zeroed(delta2, b * h * w * c);
-                        conv::col2im_acc_tiled(pat, delta2, b, (h, w, c), (kh, kw), stride, threads);
+                        conv::col2im_acc_tiled(pat, delta2, b, (h, w, c), (kh, kw), stride, par);
                         std::mem::swap(delta, delta2);
                     }
                 }
@@ -719,7 +765,7 @@ impl LayerGraph {
     /// tests and one-shot callers; the hot path holds a `Workspace`.
     pub fn loss_grad(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32, Vec<f32>) {
         let mut s = Scratch::new();
-        let (loss, metric) = self.loss_grad_into(params, x, y, b, &mut s, 1);
+        let (loss, metric) = self.loss_grad_into(params, x, y, b, &mut s, Par::Serial);
         (loss, metric, std::mem::take(&mut s.grad))
     }
 }
@@ -938,28 +984,36 @@ mod tests {
     }
 
     /// The arena contract: a reused `Scratch` (warm buffers, shrink/grow
-    /// across calls) and any intra-step thread count produce gradients
+    /// across calls) and any scheduling mode — serial, scoped spawns, or
+    /// a persistent worker pool, at any thread count — produce gradients
     /// bitwise identical to the one-shot serial path.
     #[test]
     fn reused_scratch_and_tiling_keep_gradients_bitwise_identical() {
+        let wp = crate::runtime::pool::WorkerPool::new(2);
         for info in [tiny_cnn(), tiny_driver()] {
             let graph = LayerGraph::from_model(&info).unwrap();
             let params = init_params(&info, 21);
             let (x, y) = batch(&info, 22, 4);
             let (l0, m0, g0) = graph.loss_grad(&params, &x, &y, 4);
             let mut s = crate::runtime::workspace::Scratch::new();
-            for threads in [1usize, 2, 5] {
-                let (l, m) = graph.loss_grad_into(&params, &x, &y, 4, &mut s, threads);
-                assert_eq!((l, m), (l0, m0), "{} t{threads}", info.name);
-                assert_eq!(s.grad, g0, "{} t{threads} gradient", info.name);
+            let modes: [(&str, Par); 4] = [
+                ("serial", Par::Serial),
+                ("scoped2", Par::Scoped(2)),
+                ("scoped5", Par::Scoped(5)),
+                ("pool", Par::Pool(&wp)),
+            ];
+            for (mode, par) in modes {
+                let (l, m) = graph.loss_grad_into(&params, &x, &y, 4, &mut s, par);
+                assert_eq!((l, m), (l0, m0), "{} {mode}", info.name);
+                assert_eq!(s.grad, g0, "{} {mode} gradient", info.name);
             }
             // batch-size change in the same arena (shrink, then regrow)
             let (x1, y1) = batch(&info, 23, 1);
             let (l1, m1, g1) = graph.loss_grad(&params, &x1, &y1, 1);
-            let (l, m) = graph.loss_grad_into(&params, &x1, &y1, 1, &mut s, 2);
+            let (l, m) = graph.loss_grad_into(&params, &x1, &y1, 1, &mut s, Par::Scoped(2));
             assert_eq!((l, m), (l1, m1), "{} b=1", info.name);
             assert_eq!(s.grad, g1, "{} b=1 gradient", info.name);
-            let (l, m) = graph.loss_grad_into(&params, &x, &y, 4, &mut s, 3);
+            let (l, m) = graph.loss_grad_into(&params, &x, &y, 4, &mut s, Par::Pool(&wp));
             assert_eq!((l, m), (l0, m0), "{} regrown", info.name);
             assert_eq!(s.grad, g0, "{} regrown gradient", info.name);
         }
@@ -969,9 +1023,12 @@ mod tests {
     fn buffer_plan_reports_footprint_and_flops() {
         let graph = LayerGraph::from_model(&tiny_cnn()).unwrap();
         // tiny_cnn at b=1: acts 32+8+3=43, pool argmax 8, patches 16·9=144,
-        // delta 2·36 (widest layer is the 6x6 input), grad P — 4 bytes each
+        // pack max(fwd: conv 9·pad8(2)=72 vs fc 8·pad8(3)=64; bwd unit:
+        // conv 16·pad8(2)=128 vs fc pad8(3)=8) = 128, delta 2·36 (widest
+        // layer is the 6x6 input), grad P — 4 bytes each
         let p = tiny_cnn().param_count;
-        assert_eq!(graph.workspace_bytes(1), 4 * (43 + 8 + 144 + 72 + p));
+        assert_eq!(graph.pack_bytes(1), 4 * 128);
+        assert_eq!(graph.workspace_bytes(1), 4 * (43 + 8 + 144 + 128 + 72 + p));
         // flops: conv (first node) fwd+dW = 2·(2·16·9·2), dense fwd+dW+dX
         // = 3·(2·8·3)
         assert_eq!(graph.train_flops(1), (2 * (2 * 16 * 9 * 2) + 3 * (2 * 8 * 3)) as f64);

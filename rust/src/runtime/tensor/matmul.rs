@@ -15,15 +15,38 @@
 //! matrix per output row. Inner loops use plain `a * b + c` (separate
 //! rounding), NOT `mul_add`: on the baseline x86-64 target `f32::mul_add`
 //! lowers to a libm `fmaf` *call* per element, which blocks
-//! autovectorization, while the j-contiguous multiply-accumulate
-//! vectorizes lane-wise (each output element is an independent
-//! accumulator — no float reassociation needed). This is both the conv
-//! hot loop and the reason the dense path is no slower than the PR 1
-//! hand-rolled loops; numerically it matches the (non-fused) numpy/jax
-//! reference the tests were validated against.
+//! autovectorization, while the lane-wise multiply-accumulate vectorizes
+//! (each output element is an independent accumulator — no float
+//! reassociation needed). Numerically this matches the (non-fused)
+//! numpy/jax reference the tests were validated against.
+//!
+//! On top of the scalar reference kernels, the hot path runs **packed
+//! microkernels**: [`pack_b`] copies the streamed operand into a
+//! lane-blocked panel layout once per call, and a `[MR × LANES]`
+//! register-tiled microkernel accumulates `MR` output rows against one
+//! contiguous 8-wide column block, keeping the accumulators in registers
+//! across the whole K panel instead of re-reading the output row every k
+//! step. Packing is pure data movement and the per-output-element
+//! accumulation order (k ascending, panels ascending) is exactly the
+//! scalar kernels' — so packed results are **bitwise identical** to the
+//! scalar reference, and the one shared `Scratch.pack` arena slot (sized
+//! at plan-compile time, see `graph.rs`) keeps the packing zero-alloc.
+
+use super::super::pool::{Par, SendPtr};
 
 /// K-panel height: `KC · N · 4` bytes of B per panel (≤ 64 KiB at N=64).
 const KC: usize = 256;
+
+/// SIMD register width the packed microkernel blocks on: 8 f32 lanes
+/// (one AVX2 `ymm` / two NEON `q` registers).
+pub(crate) const LANES: usize = 8;
+
+/// Output rows per microkernel register block (`MR · LANES` accumulators
+/// stay in registers — 4×8 f32 = 4 `ymm`, leaving room for the B block
+/// and broadcasts on a 16-register machine). Also the packing-amortization
+/// bound: below `MR` output rows the tiled entry points keep the scalar
+/// kernel (bitwise identical either way).
+pub(crate) const MR: usize = 4;
 
 #[inline]
 fn check_dims(a: &[f32], b: &[f32], c: &[f32], m: usize, k: usize, n: usize) {
@@ -40,7 +63,9 @@ pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usiz
 }
 
 /// `out[i,:] = bias + Σ_k a[i,k] · w[k,:]` — the forward product of dense
-/// layers and of conv2d over im2col patch matrices.
+/// layers and of conv2d over im2col patch matrices (scalar reference; the
+/// hot path goes through [`matmul_bias_tiled`] and the packed microkernel,
+/// which is bitwise identical).
 pub fn matmul_bias(a: &[f32], w: &[f32], bias: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     check_dims(a, w, out, m, k, n);
     debug_assert_eq!(bias.len(), n, "bias is [n]");
@@ -70,9 +95,10 @@ fn acc_panels(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usiz
 }
 
 /// `out += aᵀ · g` with `a: [m,k]`, `g: [m,n]`, `out: [k,n]` — the weight
-/// gradient (`dW += inputᵀ · delta`). K-panel tiling keeps the updated
-/// `out` panel cached across the M loop (it can be large: 590 KiB for the
-/// `mnist_cnn` fc1 weight block).
+/// gradient (`dW += inputᵀ · delta`), scalar reference. K-panel tiling
+/// keeps the updated `out` panel cached across the M loop (it can be
+/// large: 590 KiB for the `mnist_cnn` fc1 weight block). The hot path
+/// goes through [`matmul_at_b_acc_tiled`] (packed, bitwise identical).
 pub fn matmul_at_b_acc(a: &[f32], g: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k, "A is [m,k]");
     debug_assert_eq!(g.len(), m * n, "G is [m,n]");
@@ -94,10 +120,38 @@ pub fn matmul_at_b_acc(a: &[f32], g: &[f32], out: &mut [f32], m: usize, k: usize
     }
 }
 
+/// Dot product with [`LANES`] independent accumulator lanes so the
+/// contraction does not serialize on one floating-point dependency chain.
+/// The reduction order is part of the determinism contract shared by the
+/// serial and row-tiled `A·Bᵀ` paths: lane `l` accumulates elements
+/// `j ≡ l (mod LANES)` of the lane-aligned prefix in ascending `j`, the
+/// lanes combine as `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, and the
+/// remainder elements are appended scalar-wise. Plain `a * b + c`
+/// (separate rounding), no `mul_add` — see the module docs.
+#[inline]
+fn dot8(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut lanes = [0.0f32; LANES];
+    let xq = x.chunks_exact(LANES);
+    let yq = y.chunks_exact(LANES);
+    let (xr, yr) = (xq.remainder(), yq.remainder());
+    for (xc, yc) in xq.zip(yq) {
+        for l in 0..LANES {
+            lanes[l] += xc[l] * yc[l];
+        }
+    }
+    let mut acc = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3])) + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    for (&xv, &yv) in xr.iter().zip(yr) {
+        acc += xv * yv;
+    }
+    acc
+}
+
 /// `out = g · wᵀ` with `g: [m,n]`, `w: [k,n]`, `out: [m,k]` — the input
-/// gradient (`delta_prev = delta · Wᵀ`). Row-dot reduction with 4
-/// accumulator lanes so the contraction does not serialize on one
-/// floating-point dependency chain.
+/// gradient (`delta_prev = delta · Wᵀ`). Row-dot reduction through the
+/// shared 8-lane [`dot8`] kernel (the same microkernel style — and lane
+/// count — as the packed `A·B`/`Aᵀ·B` paths, so serial and tiled never
+/// diverge in accumulation order).
 pub fn matmul_a_bt(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
     debug_assert_eq!(g.len(), m * n, "G is [m,n]");
     debug_assert_eq!(w.len(), k * n, "W is [k,n]");
@@ -106,64 +160,202 @@ pub fn matmul_a_bt(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k:
         let grow = &g[i * n..(i + 1) * n];
         let orow = &mut out[i * k..(i + 1) * k];
         for (kk, o) in orow.iter_mut().enumerate() {
-            let wrow = &w[kk * n..(kk + 1) * n];
-            let mut lanes = [0.0f32; 4];
-            let gq = grow.chunks_exact(4);
-            let wq = wrow.chunks_exact(4);
-            let (grem, wrem) = (gq.remainder(), wq.remainder());
-            for (gc, wc) in gq.zip(wq) {
-                for l in 0..4 {
-                    lanes[l] += gc[l] * wc[l];
-                }
-            }
-            let mut acc = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
-            for (&gv, &wv) in grem.iter().zip(wrem) {
-                acc += gv * wv;
-            }
-            *o = acc;
+            *o = dot8(grow, &w[kk * n..(kk + 1) * n]);
         }
+    }
+}
+
+// ----------------------------------------------------- packed microkernel
+//
+// The register-tiled inner kernel behind the tiled entry points. The
+// streamed operand is first packed ([`pack_b`]) into K panels of
+// LANES-wide column blocks, so the microkernel reads one contiguous
+// 32-byte line per k step and keeps an [MR x LANES] accumulator block in
+// registers across the panel. Per-output-element accumulation order is
+// the scalar kernels' (k ascending within a panel, panels ascending), so
+// every packed path is bitwise identical to its scalar reference — the
+// packing/tiling choice is a pure scheduling decision.
+
+/// Elements [`pack_b`] needs for a `[k, n]` streamed operand: columns
+/// padded up to the lane width.
+pub fn packed_len(k: usize, n: usize) -> usize {
+    k * n.div_ceil(LANES) * LANES
+}
+
+/// Pack `b: [k, n]` row-major into the panel layout the microkernel
+/// streams: for each K panel (`KC` rows), each LANES-wide column block is
+/// stored as `kc` contiguous rows of `LANES` floats (columns past `n`
+/// zero-filled — the zero lanes accumulate exact zeros and are never
+/// stored back). Offsets: panel starting at row `k0` lives at
+/// `k0 · pad_n`, block `jb` within it at `jb · kc · LANES`.
+pub fn pack_b(b: &[f32], pack: &mut [f32], k: usize, n: usize) {
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(pack.len(), packed_len(k, n));
+    let pad_n = n.div_ceil(LANES) * LANES;
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        let panel = &mut pack[k0 * pad_n..(k0 + kc) * pad_n];
+        for (jb, block) in panel.chunks_exact_mut(kc * LANES).enumerate() {
+            let j0 = jb * LANES;
+            let w = LANES.min(n - j0);
+            for (dk, dst) in block.chunks_exact_mut(LANES).enumerate() {
+                let src = &b[(k0 + dk) * n + j0..(k0 + dk) * n + j0 + w];
+                dst[..w].copy_from_slice(src);
+                dst[w..].fill(0.0);
+            }
+        }
+        k0 += kc;
+    }
+}
+
+/// The register block: `acc[r][l] += Σ_dk coeff[r·rstride + dk·dstride] ·
+/// block[dk·LANES + l]` for `R` output rows against one packed column
+/// block, seeded from (and stored back to) the first `w` lanes of each
+/// `out` row. `dk` runs ascending over `block.len() / LANES` steps — the
+/// scalar accumulation order — with separate-rounding `a * b + c`.
+#[inline(always)]
+fn microkernel<const R: usize>(
+    coeff: &[f32],
+    rstride: usize,
+    dstride: usize,
+    block: &[f32],
+    out: &mut [f32],
+    ostride: usize,
+    w: usize,
+) {
+    let mut acc = [[0.0f32; LANES]; R];
+    for r in 0..R {
+        acc[r][..w].copy_from_slice(&out[r * ostride..r * ostride + w]);
+    }
+    for (dk, bv) in block.chunks_exact(LANES).enumerate() {
+        for r in 0..R {
+            let av = coeff[r * rstride + dk * dstride];
+            for l in 0..LANES {
+                acc[r][l] += av * bv[l];
+            }
+        }
+    }
+    for r in 0..R {
+        out[r * ostride..r * ostride + w].copy_from_slice(&acc[r][..w]);
+    }
+}
+
+/// `out += a · b` with `b` pre-packed ([`pack_b`]) — bitwise identical to
+/// [`acc_panels`] (same per-element k order), register-tiled.
+fn acc_panels_packed(a: &[f32], bpack: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    let pad_n = n.div_ceil(LANES) * LANES;
+    let nb = n.div_ceil(LANES);
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        let panel = &bpack[k0 * pad_n..(k0 + kc) * pad_n];
+        for jb in 0..nb {
+            let block = &panel[jb * kc * LANES..(jb + 1) * kc * LANES];
+            let j0 = jb * LANES;
+            let w = LANES.min(n - j0);
+            let mut i = 0;
+            while i + MR <= m {
+                microkernel::<MR>(&a[i * k + k0..], k, 1, block, &mut out[i * n + j0..], n, w);
+                i += MR;
+            }
+            while i < m {
+                microkernel::<1>(&a[i * k + k0..], k, 1, block, &mut out[i * n + j0..], n, w);
+                i += 1;
+            }
+        }
+        k0 += kc;
+    }
+}
+
+/// Bias-seeded packed forward product: `out[i,:] = bias + a[i,:] · B`
+/// with `B` pre-packed. Shared by the dense forward and the fused
+/// im2col+matmul conv tiles (`conv::forward_into`).
+pub(crate) fn bias_acc_packed(a: &[f32], bpack: &[f32], bias: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    for row in out.chunks_exact_mut(n) {
+        row.copy_from_slice(bias);
+    }
+    acc_panels_packed(a, bpack, out, m, k, n);
+}
+
+/// `out[kk - k_lo, :] += Σ_i a[i, kk] · g[i, :]` for the dW row range
+/// `[k_lo, k_lo + out.len()/n)`, with `g` pre-packed over M panels.
+/// Accumulation over `i` is ascending (panels ascending, rows within a
+/// panel ascending) — the same per-element order as [`matmul_at_b_acc`],
+/// hence bitwise equal. The coefficient walk `a[i·k + kk]` is strided;
+/// the packed `g` panel it multiplies is the contiguous stream.
+fn at_b_acc_packed_rows(a: &[f32], gpack: &[f32], out: &mut [f32], m: usize, k: usize, n: usize, k_lo: usize) {
+    let kr = out.len() / n;
+    debug_assert_eq!(out.len(), kr * n);
+    debug_assert!(k_lo + kr <= k);
+    let pad_n = n.div_ceil(LANES) * LANES;
+    let nb = n.div_ceil(LANES);
+    let mut m0 = 0;
+    while m0 < m {
+        let mc = KC.min(m - m0);
+        let panel = &gpack[m0 * pad_n..(m0 + mc) * pad_n];
+        for jb in 0..nb {
+            let block = &panel[jb * mc * LANES..(jb + 1) * mc * LANES];
+            let j0 = jb * LANES;
+            let w = LANES.min(n - j0);
+            let mut r = 0;
+            while r + MR <= kr {
+                microkernel::<MR>(&a[m0 * k + k_lo + r..], 1, k, block, &mut out[r * n + j0..], n, w);
+                r += MR;
+            }
+            while r < kr {
+                microkernel::<1>(&a[m0 * k + k_lo + r..], 1, k, block, &mut out[r * n + j0..], n, w);
+                r += 1;
+            }
+        }
+        m0 += mc;
     }
 }
 
 // ---------------------------------------------------------- tiled variants
 //
-// Thread-tiled versions of the three big products, used by the conv/dense
-// hot loops when the caller's `Workspace.threads > 1`. The partitioning is
-// by *output-element ownership* — every output element is computed by
-// exactly one tile, with the same per-element accumulation order as the
-// serial kernel — so results are **bitwise identical** to the serial call
-// at any thread count (the determinism contract `tests/native_backend.rs`
-// asserts end-to-end). Work is dispatched over the scoped-thread helper
-// `util::threads::parallel_for_each_mut`; `threads <= 1` falls through to
-// the serial kernel with no tile table built.
+// Thread-tiled + packed versions of the three big products — the actual
+// hot path of the conv/dense layers. The partitioning is by
+// *output-element ownership*: every output element is computed by exactly
+// one tile, with the same per-element accumulation order as the serial
+// kernel, so results are **bitwise identical** to the serial call at any
+// thread count and under any [`Par`] mode (the determinism contract
+// `tests/native_backend.rs` asserts end-to-end). The streamed operand is
+// packed once by the dispatching caller into the caller-provided `pack`
+// slice (a `Scratch` arena slot on the hot path — zero allocations), and
+// the tiles read it shared.
 //
-// Each tiled call stands up (and joins) its scoped workers, so tiling only
-// pays off once a kernel carries enough work to amortize the spawns: the
-// public entry points apply a minimum-volume floor ([`TILE_MIN_MACS`] /
-// `conv::TILE_MIN_ELEMS`) below which they take the serial path. The floor
-// never changes results — tiled and serial are bitwise equal — it only
-// picks the cheaper schedule (a persistent per-workspace worker pool that
-// pays the spawn cost once is a ROADMAP candidate). The `_impl` variants
-// skip the floor so the unit tests exercise real tiles at toy sizes.
-
-use crate::util::threads::parallel_for_each_mut;
+// Tiling only pays off once a kernel carries enough work to amortize the
+// dispatch: the public entry points apply a minimum-volume floor below
+// which they take the (packed) serial path. With the PR 3 scoped-spawn
+// mode the floor is [`TILE_MIN_MACS`]; a persistent `WorkerPool` dispatch
+// costs ~2 orders of magnitude less than a spawn+join, so the pool floor
+// [`POOL_MIN_MACS`] is 8x lower — small conv layers (`driving_cnn`,
+// `mnist_cnn` conv1) parallelize under the pool that stayed serial under
+// scoped spawns. The floor never changes results — tiled and serial are
+// bitwise equal — it only picks the cheaper schedule. The `_t` variants
+// take the tile count directly so unit tests exercise real tiles at toy
+// sizes.
 
 /// Minimum GEMM volume (m·k·n multiply-accumulates) before tiling beats
-/// the cost of standing up scoped threads (~1M MACs ≈ a few hundred µs
-/// serial — an order of magnitude above per-call spawn+join overhead).
-const TILE_MIN_MACS: usize = 1 << 20;
+/// standing up scoped threads (~1M MACs ≈ a few hundred µs serial — an
+/// order of magnitude above per-call spawn+join overhead). `pub(crate)`:
+/// the fused conv forward applies the same floors to its GEMM volume.
+pub(crate) const TILE_MIN_MACS: usize = 1 << 20;
+
+/// Minimum GEMM volume before tiling beats a persistent-pool dispatch
+/// (a latch round-trip of a few µs — see `bench_hot_paths`'s
+/// `tile_dispatch_overhead` record).
+pub(crate) const POOL_MIN_MACS: usize = 1 << 17;
 
 #[inline]
-fn gemm_tile_threads(m: usize, k: usize, n: usize, threads: usize) -> usize {
-    if m.saturating_mul(k).saturating_mul(n) < TILE_MIN_MACS {
-        1
-    } else {
-        threads
-    }
+fn gemm_tile_threads(m: usize, k: usize, n: usize, par: Par) -> usize {
+    par.tile_count(m.saturating_mul(k).saturating_mul(n), TILE_MIN_MACS, POOL_MIN_MACS)
 }
 
-/// Row-partitioned [`matmul_bias`]: tiles own disjoint row ranges of `a`
-/// and `out`.
+/// Row-partitioned packed [`matmul_bias`]: tiles own disjoint row ranges
+/// of `a` and `out`; `pack` receives the packed `w` (needs
+/// [`packed_len`]`(k, n)` elements).
 pub fn matmul_bias_tiled(
     a: &[f32],
     w: &[f32],
@@ -172,12 +364,13 @@ pub fn matmul_bias_tiled(
     m: usize,
     k: usize,
     n: usize,
-    threads: usize,
+    pack: &mut [f32],
+    par: Par,
 ) {
-    matmul_bias_tiled_impl(a, w, bias, out, m, k, n, gemm_tile_threads(m, k, n, threads));
+    matmul_bias_tiled_t(a, w, bias, out, m, k, n, pack, par, gemm_tile_threads(m, k, n, par));
 }
 
-fn matmul_bias_tiled_impl(
+fn matmul_bias_tiled_t(
     a: &[f32],
     w: &[f32],
     bias: &[f32],
@@ -185,24 +378,48 @@ fn matmul_bias_tiled_impl(
     m: usize,
     k: usize,
     n: usize,
-    threads: usize,
+    pack: &mut [f32],
+    par: Par,
+    t: usize,
 ) {
-    let t = threads.min(m).max(1);
+    check_dims(a, w, out, m, k, n);
+    debug_assert_eq!(bias.len(), n, "bias is [n]");
+    let t = t.min(m).max(1);
     if t <= 1 {
-        matmul_bias(a, w, bias, out, m, k, n);
+        // below MR rows the O(k·n) packing pass cannot amortize (e.g. the
+        // batch-1 dense inference of the driving closed loop) — take the
+        // scalar kernel, which is bitwise identical anyway
+        if m < MR {
+            matmul_bias(a, w, bias, out, m, k, n);
+        } else {
+            let pack = &mut pack[..packed_len(k, n)];
+            pack_b(w, pack, k, n);
+            bias_acc_packed(a, pack, bias, out, m, k, n);
+        }
         return;
     }
+    let pack = &mut pack[..packed_len(k, n)];
+    pack_b(w, pack, k, n);
     let chunk = m.div_ceil(t);
-    let mut tiles: Vec<_> = a.chunks(chunk * k).zip(out.chunks_mut(chunk * n)).collect();
-    parallel_for_each_mut(&mut tiles, t, |_, tile| {
-        let rows = tile.0.len() / k;
-        matmul_bias(tile.0, w, bias, &mut *tile.1, rows, k, n);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let pack = &*pack;
+    par.run(t, |ti| {
+        let i0 = ti * chunk;
+        let i1 = m.min(i0 + chunk);
+        if i0 >= i1 {
+            return;
+        }
+        // SAFETY: tiles own the disjoint row ranges [i0, i1) of `out`,
+        // and `par.run` returns before the `out` borrow ends.
+        let tile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * n), (i1 - i0) * n) };
+        bias_acc_packed(&a[i0 * k..i1 * k], pack, bias, tile, i1 - i0, k, n);
     });
 }
 
-/// K-partitioned [`matmul_at_b_acc`]: tiles own disjoint row ranges of the
-/// `[k,n]` output (dW), each reducing over the full M dimension in the
-/// serial order.
+/// K-partitioned packed [`matmul_at_b_acc`]: tiles own disjoint row
+/// ranges of the `[k,n]` output (dW), each reducing over the full M
+/// dimension in the serial order; `pack` receives the packed `g` (needs
+/// [`packed_len`]`(m, n)` elements).
 pub fn matmul_at_b_acc_tiled(
     a: &[f32],
     g: &[f32],
@@ -210,87 +427,85 @@ pub fn matmul_at_b_acc_tiled(
     m: usize,
     k: usize,
     n: usize,
-    threads: usize,
+    pack: &mut [f32],
+    par: Par,
 ) {
-    matmul_at_b_acc_tiled_impl(a, g, out, m, k, n, gemm_tile_threads(m, k, n, threads));
+    matmul_at_b_acc_tiled_t(a, g, out, m, k, n, pack, par, gemm_tile_threads(m, k, n, par));
 }
 
-fn matmul_at_b_acc_tiled_impl(
+fn matmul_at_b_acc_tiled_t(
     a: &[f32],
     g: &[f32],
     out: &mut [f32],
     m: usize,
     k: usize,
     n: usize,
-    threads: usize,
+    pack: &mut [f32],
+    par: Par,
+    t: usize,
 ) {
-    let t = threads.min(k).max(1);
+    debug_assert_eq!(a.len(), m * k, "A is [m,k]");
+    debug_assert_eq!(g.len(), m * n, "G is [m,n]");
+    debug_assert_eq!(out.len(), k * n, "out is [k,n]");
+    let t = t.min(k).max(1);
     if t <= 1 {
-        matmul_at_b_acc(a, g, out, m, k, n);
+        // the O(m·n) packing pass amortizes over the k output rows; below
+        // MR of them take the (bitwise identical) scalar kernel
+        if k < MR {
+            matmul_at_b_acc(a, g, out, m, k, n);
+        } else {
+            let pack = &mut pack[..packed_len(m, n)];
+            pack_b(g, pack, m, n);
+            at_b_acc_packed_rows(a, pack, out, m, k, n, 0);
+        }
         return;
     }
+    let pack = &mut pack[..packed_len(m, n)];
+    pack_b(g, pack, m, n);
     let chunk = k.div_ceil(t);
-    let mut tiles: Vec<_> = out
-        .chunks_mut(chunk * n)
-        .enumerate()
-        .map(|(ti, o)| (ti * chunk, o))
-        .collect();
-    parallel_for_each_mut(&mut tiles, t, |_, tile| {
-        matmul_at_b_acc_rows(a, g, &mut *tile.1, m, k, n, tile.0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let pack = &*pack;
+    par.run(t, |ti| {
+        let lo = ti * chunk;
+        let hi = k.min(lo + chunk);
+        if lo >= hi {
+            return;
+        }
+        // SAFETY: tiles own the disjoint dW row ranges [lo, hi) of `out`,
+        // and `par.run` returns before the `out` borrow ends.
+        let tile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo * n), (hi - lo) * n) };
+        at_b_acc_packed_rows(a, pack, tile, m, k, n, lo);
     });
 }
 
-/// `out[kk - k_lo, :] += Σ_i a[i, kk] · g[i, :]` for the dW row range
-/// `[k_lo, k_lo + out.len()/n)`. Accumulation over `i` is ascending — the
-/// same per-element order as [`matmul_at_b_acc`], hence bitwise equal.
-fn matmul_at_b_acc_rows(a: &[f32], g: &[f32], out: &mut [f32], m: usize, k: usize, n: usize, k_lo: usize) {
-    let kr = out.len() / n;
-    debug_assert!(k_lo + kr <= k);
-    for i in 0..m {
-        let grow = &g[i * n..(i + 1) * n];
-        let arow = &a[i * k + k_lo..i * k + k_lo + kr];
-        for (dk, &av) in arow.iter().enumerate() {
-            let orow = &mut out[dk * n..(dk + 1) * n];
-            for (o, &gv) in orow.iter_mut().zip(grow) {
-                *o += av * gv;
-            }
-        }
-    }
-}
-
 /// Row-partitioned [`matmul_a_bt`]: tiles own disjoint row ranges of `g`
-/// and `out` (each output row is an independent set of dot products).
-pub fn matmul_a_bt_tiled(
-    g: &[f32],
-    w: &[f32],
-    out: &mut [f32],
-    m: usize,
-    n: usize,
-    k: usize,
-    threads: usize,
-) {
-    matmul_a_bt_tiled_impl(g, w, out, m, n, k, gemm_tile_threads(m, n, k, threads));
+/// and `out` (each output row is an independent set of [`dot8`] products,
+/// so no packing is needed — both operand rows are already contiguous).
+pub fn matmul_a_bt_tiled(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize, par: Par) {
+    matmul_a_bt_tiled_t(g, w, out, m, n, k, par, gemm_tile_threads(m, n, k, par));
 }
 
-fn matmul_a_bt_tiled_impl(
-    g: &[f32],
-    w: &[f32],
-    out: &mut [f32],
-    m: usize,
-    n: usize,
-    k: usize,
-    threads: usize,
-) {
-    let t = threads.min(m).max(1);
+fn matmul_a_bt_tiled_t(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize, par: Par, t: usize) {
+    debug_assert_eq!(g.len(), m * n, "G is [m,n]");
+    debug_assert_eq!(w.len(), k * n, "W is [k,n]");
+    debug_assert_eq!(out.len(), m * k, "out is [m,k]");
+    let t = t.min(m).max(1);
     if t <= 1 {
         matmul_a_bt(g, w, out, m, n, k);
         return;
     }
     let chunk = m.div_ceil(t);
-    let mut tiles: Vec<_> = g.chunks(chunk * n).zip(out.chunks_mut(chunk * k)).collect();
-    parallel_for_each_mut(&mut tiles, t, |_, tile| {
-        let rows = tile.0.len() / n;
-        matmul_a_bt(tile.0, w, &mut *tile.1, rows, n, k);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    par.run(t, |ti| {
+        let i0 = ti * chunk;
+        let i1 = m.min(i0 + chunk);
+        if i0 >= i1 {
+            return;
+        }
+        // SAFETY: tiles own the disjoint row ranges [i0, i1) of `out`,
+        // and `par.run` returns before the `out` borrow ends.
+        let tile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * k), (i1 - i0) * k) };
+        matmul_a_bt(&g[i0 * n..i1 * n], w, tile, i1 - i0, n, k);
     });
 }
 
@@ -308,6 +523,7 @@ pub fn add_col_sums(g: &[f32], out: &mut [f32], m: usize, n: usize) {
 
 #[cfg(test)]
 mod tests {
+    use super::super::super::pool::WorkerPool;
     use super::*;
     use crate::util::rng::Rng;
 
@@ -403,38 +619,119 @@ mod tests {
         assert_close(&out, &naive(&g, &wt, m, n, k), 1e-4, "matmul_a_bt");
     }
 
+    /// The packed-microkernel contract: packing + register tiling is a
+    /// pure scheduling change, so the packed kernels must be **bitwise**
+    /// equal to the scalar reference — across K-panel edges (k > KC) and
+    /// M-panel edges of the Aᵀ·B stream (m > KC), lane-remainder widths
+    /// (n % 8 != 0, n < 8) and row-block tails (m % MR != 0). Calls the
+    /// packed internals directly so the check is independent of the
+    /// small-kernel scalar-fallback policy in the tiled entry points.
+    #[test]
+    fn packed_kernels_are_bitwise_identical_to_scalar() {
+        let mut rng = Rng::new(5);
+        for (m, k, n) in [
+            (1, 8, 3),
+            (4, 257, 8),
+            (7, 300, 9),
+            (10, 512, 64),
+            (3, 40, 1),
+            (9, 513, 20),
+            (300, 20, 9), // m > KC: multi-M-panel Aᵀ·B stream
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, k * n);
+            let g = rand_vec(&mut rng, m * n);
+            let bias = rand_vec(&mut rng, n);
+
+            let mut scalar = vec![0.0; m * n];
+            matmul_bias(&a, &w, &bias, &mut scalar, m, k, n);
+            let mut packed = vec![f32::NAN; m * n];
+            let mut pack = vec![f32::NAN; packed_len(k, n)];
+            pack_b(&w, &mut pack, k, n);
+            bias_acc_packed(&a, &pack, &bias, &mut packed, m, k, n);
+            assert_eq!(scalar, packed, "matmul_bias m{m} k{k} n{n}");
+
+            let mut scalar = vec![0.25; k * n];
+            matmul_at_b_acc(&a, &g, &mut scalar, m, k, n);
+            let mut packed = vec![0.25; k * n];
+            let mut pack = vec![f32::NAN; packed_len(m, n)];
+            pack_b(&g, &mut pack, m, n);
+            at_b_acc_packed_rows(&a, &pack, &mut packed, m, k, n, 0);
+            assert_eq!(scalar, packed, "matmul_at_b_acc m{m} k{k} n{n}");
+        }
+    }
+
     #[test]
     fn tiled_variants_are_bitwise_identical_to_serial() {
         // the determinism contract: element-ownership partitioning with
         // unchanged per-element accumulation order ⇒ *exact* equality at
-        // any thread count, not just numerical closeness
+        // any thread count and under any Par mode, not just closeness
         let mut rng = Rng::new(4);
+        let pool = WorkerPool::new(2);
         for (m, k, n) in [(1, 8, 3), (7, 300, 9), (16, 257, 5), (3, 64, 64)] {
             let a = rand_vec(&mut rng, m * k);
             let w = rand_vec(&mut rng, k * n);
             let g = rand_vec(&mut rng, m * n);
             let bias = rand_vec(&mut rng, n);
             for threads in [2usize, 3, 8] {
-                // the _impl variants bypass the spawn-amortization floor
-                // so real tiles run at these toy sizes
-                let mut serial = vec![0.0; m * n];
-                matmul_bias(&a, &w, &bias, &mut serial, m, k, n);
-                let mut tiled = vec![f32::NAN; m * n];
-                matmul_bias_tiled_impl(&a, &w, &bias, &mut tiled, m, k, n, threads);
-                assert_eq!(serial, tiled, "matmul_bias m{m} k{k} n{n} t{threads}");
+                // the _t variants take the tile count directly, bypassing
+                // the volume floor so real tiles run at these toy sizes;
+                // scoped and pooled dispatch run the same tiles
+                let modes: [(&str, Par); 2] = [("scoped", Par::Scoped(threads)), ("pool", Par::Pool(&pool))];
+                for (mode, par) in modes {
+                    let mut serial = vec![0.0; m * n];
+                    matmul_bias(&a, &w, &bias, &mut serial, m, k, n);
+                    let mut tiled = vec![f32::NAN; m * n];
+                    let mut pack = vec![f32::NAN; packed_len(k, n)];
+                    matmul_bias_tiled_t(&a, &w, &bias, &mut tiled, m, k, n, &mut pack, par, threads);
+                    assert_eq!(serial, tiled, "matmul_bias {mode} m{m} k{k} n{n} t{threads}");
 
-                let mut serial = vec![0.25; k * n];
-                matmul_at_b_acc(&a, &g, &mut serial, m, k, n);
-                let mut tiled = vec![0.25; k * n];
-                matmul_at_b_acc_tiled_impl(&a, &g, &mut tiled, m, k, n, threads);
-                assert_eq!(serial, tiled, "matmul_at_b_acc m{m} k{k} n{n} t{threads}");
+                    let mut serial = vec![0.25; k * n];
+                    matmul_at_b_acc(&a, &g, &mut serial, m, k, n);
+                    let mut tiled = vec![0.25; k * n];
+                    let mut pack = vec![f32::NAN; packed_len(m, n)];
+                    matmul_at_b_acc_tiled_t(&a, &g, &mut tiled, m, k, n, &mut pack, par, threads);
+                    assert_eq!(serial, tiled, "matmul_at_b_acc {mode} m{m} k{k} n{n} t{threads}");
 
-                let mut serial = vec![0.0; m * k];
-                matmul_a_bt(&g, &w, &mut serial, m, n, k);
-                let mut tiled = vec![f32::NAN; m * k];
-                matmul_a_bt_tiled_impl(&g, &w, &mut tiled, m, n, k, threads);
-                assert_eq!(serial, tiled, "matmul_a_bt m{m} k{k} n{n} t{threads}");
+                    let mut serial = vec![0.0; m * k];
+                    matmul_a_bt(&g, &w, &mut serial, m, n, k);
+                    let mut tiled = vec![f32::NAN; m * k];
+                    matmul_a_bt_tiled_t(&g, &w, &mut tiled, m, n, k, par, threads);
+                    assert_eq!(serial, tiled, "matmul_a_bt {mode} m{m} k{k} n{n} t{threads}");
+                }
             }
+        }
+    }
+
+    #[test]
+    fn pack_b_layout_roundtrips() {
+        // every b element appears exactly once; padding lanes are zero
+        let mut rng = Rng::new(6);
+        for (k, n) in [(5, 3), (300, 10), (256, 8), (257, 17)] {
+            let b = rand_vec(&mut rng, k * n);
+            let mut pack = vec![f32::NAN; packed_len(k, n)];
+            pack_b(&b, &mut pack, k, n);
+            let pad_n = n.div_ceil(LANES) * LANES;
+            let mut seen = vec![0.0f32; k * n];
+            let mut k0 = 0;
+            while k0 < k {
+                let kc = KC.min(k - k0);
+                let panel = &pack[k0 * pad_n..(k0 + kc) * pad_n];
+                for (jb, block) in panel.chunks_exact(kc * LANES).enumerate() {
+                    for (dk, row) in block.chunks_exact(LANES).enumerate() {
+                        for (l, &v) in row.iter().enumerate() {
+                            let j = jb * LANES + l;
+                            if j < n {
+                                seen[(k0 + dk) * n + j] = v;
+                            } else {
+                                assert_eq!(v, 0.0, "padding lane k{k} n{n}");
+                            }
+                        }
+                    }
+                }
+                k0 += kc;
+            }
+            assert_eq!(seen, b, "k{k} n{n}");
         }
     }
 

@@ -6,9 +6,11 @@
 //! flatten} into a forward/backward plan over those kernels:
 //!
 //! - [`matmul`] — blocked matmul family: K-panel tiling keeps the
-//!   streamed weight panel L1/L2-resident while the accumulator row stays
-//!   in registers (the idiom the whole crate's hot loops autovectorize
-//!   with). Used by the dense layers *and* by conv via im2col.
+//!   streamed weight panel L1/L2-resident, and the hot path runs packed
+//!   8-lane microkernels (`pack_b` + an `[MR × LANES]` register-tiled
+//!   accumulator block) that are bitwise identical to the scalar
+//!   reference kernels. Used by the dense layers *and* by conv via
+//!   im2col.
 //! - [`conv`] — conv2d (valid padding, any stride) as im2col patch
 //!   extraction + matmul, mirroring `python/compile/kernels/conv2d.py`:
 //!   forward, weight/bias backward (patches^T · dOut, rematerializing
@@ -24,15 +26,19 @@
 //! All kernels are write-into-caller-slice: the `LayerGraph` interpreter
 //! routes every buffer through the per-learner `Workspace` arena
 //! (`runtime/workspace.rs`), whose slots the plan sizes at compile time —
-//! steady-state training performs **zero heap allocations**. The conv and
-//! dense hot loops additionally take a `threads` tile count; tiles own
-//! disjoint output elements with unchanged per-element accumulation
-//! order, so tiled results are bitwise identical to serial at any thread
-//! count.
+//! steady-state training performs **zero heap allocations**, including
+//! with thread tiling active. The conv and dense hot loops take a
+//! [`Par`](crate::runtime::pool::Par) scheduling mode (serial / scoped
+//! spawns / the workspace's persistent `WorkerPool`); tiles own disjoint
+//! output elements with unchanged per-element accumulation order, so
+//! tiled results are bitwise identical to serial at any thread count and
+//! under every mode.
 //!
-//! Everything here is plain data + `&self`-free functions: trivially
-//! `Send + Sync`, no `unsafe`, callable concurrently from the engine's
-//! per-learner worker threads.
+//! Everything here is plain data + `&self`-free functions, callable
+//! concurrently from the engine's per-learner worker threads. The only
+//! `unsafe` is the tile partitioning of one output slice into disjoint
+//! subslices handed to the dispatcher (each site carries its ownership
+//! argument; the modes' bitwise equality is pinned by unit tests).
 
 pub mod conv;
 pub mod graph;

@@ -14,29 +14,40 @@
 //! Ownership contract: a `Workspace` belongs to exactly one caller thread
 //! at a time (each simulation learner owns its own), so the engine's
 //! per-learner parallel rounds compose with the intra-step conv tiling
-//! (`threads` below) without any buffer aliasing.
+//! (`threads` below) without any buffer aliasing. The same ownership
+//! makes the per-workspace [`WorkerPool`] sound: dispatches from one
+//! workspace never overlap, and the pool dies with its workspace.
 //!
 //! Buffers only ever grow: `sized`/`zeroed` adjust the logical length per
 //! call (the native interpreter accepts any batch size), but capacity is
 //! retained, so after warm-up at the largest batch a caller uses, no
 //! further allocation happens.
 
+use super::pool::WorkerPool;
+
 /// Per-caller execution arena: output slots (all backends) plus the native
-/// interpreter's scratch tensors.
+/// interpreter's scratch tensors and (optionally) a persistent worker
+/// pool for the intra-step tiled kernels.
 pub struct Workspace {
     /// One reusable slot per artifact output, filled by `run_into` in the
     /// artifact's declared output order (train: params', opt_state', loss,
     /// metric; eval: loss, metric; infer: out).
     pub outputs: Vec<Vec<f32>>,
     /// Intra-step tiling threads for the conv/matmul hot loops. `1` (the
-    /// default) is the strictly serial, strictly allocation-free path;
-    /// `> 1` runs thread-tiled im2col+matmul with results **bitwise
-    /// identical** to the serial path (tiles own disjoint output elements,
-    /// and every element's accumulation order is unchanged), trading a few
-    /// small per-call tile-table allocations for parallelism.
+    /// default) is the strictly serial path; `> 1` runs thread-tiled
+    /// im2col+matmul with results **bitwise identical** to the serial
+    /// path (tiles own disjoint output elements, and every element's
+    /// accumulation order is unchanged). Without a pool the tiles run on
+    /// per-call scoped spawns (the PR 3 behavior); call [`Workspace::enable_pool`]
+    /// to stand up persistent workers instead — same results, dispatch
+    /// cost paid once per run, and zero steady-state allocations.
     pub threads: usize,
+    /// Persistent tile workers ([`WorkerPool`]), owned by this workspace
+    /// and shut down when it drops. `None` until `enable_pool`.
+    pub(crate) pool: Option<WorkerPool>,
     /// Native-interpreter scratch: per-layer activations, pooling argmax,
-    /// the shared im2col patch buffer, ping-pong deltas, flat gradient.
+    /// the shared im2col patch buffer, the packed-operand buffer,
+    /// ping-pong deltas, flat gradient.
     pub(crate) scratch: Scratch,
 }
 
@@ -45,11 +56,40 @@ impl Workspace {
         Workspace {
             outputs: Vec::new(),
             threads: 1,
+            pool: None,
             scratch: Scratch::new(),
         }
     }
 
-    /// Current arena footprint in bytes (capacities, all buffers).
+    /// Stand up the persistent worker pool for this workspace's `threads`
+    /// budget (`threads - 1` workers — the dispatching thread always runs
+    /// tile 0 itself). Idempotent while `threads` is unchanged; a no-op
+    /// at `threads <= 1`. Pool startup allocates (thread stacks), so
+    /// callers pinning the zero-alloc contract enable the pool during
+    /// warm-up.
+    pub fn enable_pool(&mut self) {
+        let workers = self.threads.saturating_sub(1);
+        if workers == 0 {
+            return;
+        }
+        if self.pool.as_ref().is_some_and(|p| p.threads() == self.threads) {
+            return;
+        }
+        self.pool = Some(WorkerPool::new(workers));
+    }
+
+    /// Tear the pool down (dispatch falls back to scoped spawns).
+    pub fn disable_pool(&mut self) {
+        self.pool = None;
+    }
+
+    /// Worker threads currently pooled (0 = no pool).
+    pub fn pool_workers(&self) -> usize {
+        self.pool.as_ref().map(|p| p.threads() - 1).unwrap_or(0)
+    }
+
+    /// Current arena footprint in bytes (capacities, all buffers; the
+    /// pool's thread stacks are not counted — they are not arena slots).
     pub fn bytes(&self) -> usize {
         let out: usize = self.outputs.iter().map(|v| 4 * v.capacity()).sum();
         out + self.scratch.bytes()
@@ -69,6 +109,11 @@ pub struct Scratch {
     /// backward pass reuses it for the patch-space gradient `dOut · Wᵀ`
     /// (the forward patches are no longer needed by then).
     pub(crate) patches: Vec<f32>,
+    /// Packed streamed-operand buffer for the microkernel GEMMs (forward
+    /// weight panels / backward delta panels — `matmul::pack_b`), sized
+    /// by the plan's `pack_unit`/`pack_fixed` so packing allocates
+    /// nothing on the hot path.
+    pub(crate) pack: Vec<f32>,
     /// Ping-pong layer-gradient buffers for the backward sweep.
     pub(crate) delta: Vec<f32>,
     pub(crate) delta2: Vec<f32>,
@@ -82,6 +127,7 @@ impl Scratch {
             acts: Vec::new(),
             pool_idx: Vec::new(),
             patches: Vec::new(),
+            pack: Vec::new(),
             delta: Vec::new(),
             delta2: Vec::new(),
             grad: Vec::new(),
@@ -94,6 +140,7 @@ impl Scratch {
         let pool: usize = self.pool_idx.iter().map(|v| 4 * v.capacity()).sum();
         acts + pool
             + 4 * (self.patches.capacity()
+                + self.pack.capacity()
                 + self.delta.capacity()
                 + self.delta2.capacity()
                 + self.grad.capacity())
@@ -128,6 +175,7 @@ pub(crate) fn sized_u32(v: &mut Vec<u32>, n: usize) {
 
 #[cfg(test)]
 mod tests {
+    use super::super::pool::Par;
     use super::*;
 
     #[test]
@@ -153,5 +201,31 @@ mod tests {
         assert_eq!(ws.bytes(), 0);
         sized(&mut ws.scratch.patches, 1000);
         assert!(ws.bytes() >= 4000);
+    }
+
+    #[test]
+    fn pool_follows_the_thread_budget() {
+        // the mode the native kernel derives from a workspace (the same
+        // expression NativeKernel::run_into builds after destructuring)
+        let mode = |ws: &Workspace| Par::new(ws.threads.max(1), ws.pool.as_ref());
+        let mut ws = Workspace::new();
+        ws.enable_pool(); // threads == 1: nothing to pool
+        assert_eq!(ws.pool_workers(), 0);
+        assert!(matches!(mode(&ws), Par::Serial));
+        ws.threads = 3;
+        assert!(matches!(mode(&ws), Par::Scoped(3)), "no pool yet: scoped spawns");
+        ws.enable_pool();
+        assert_eq!(ws.pool_workers(), 2, "caller thread runs tile 0 itself");
+        assert!(matches!(mode(&ws), Par::Pool(_)));
+        ws.enable_pool(); // idempotent at the same budget
+        assert_eq!(ws.pool_workers(), 2);
+        // a budget change without enable_pool must not widen the tiling:
+        // the stale pool is ignored until rebuilt
+        ws.threads = 5;
+        assert!(matches!(mode(&ws), Par::Scoped(5)));
+        ws.enable_pool(); // rebuilds for the new budget
+        assert_eq!(ws.pool_workers(), 4);
+        ws.disable_pool();
+        assert_eq!(ws.pool_workers(), 0);
     }
 }

@@ -39,6 +39,12 @@ pub struct SimConfig {
     /// one core each. Any value yields bitwise-identical results (tiling
     /// is deterministic — see `runtime/workspace.rs`).
     pub intra_threads: usize,
+    /// Use a persistent per-learner worker pool for the intra-step tiles
+    /// (the default): the spawn cost is paid once per run and dispatch is
+    /// a latch round-trip. `false` keeps the PR 3 per-call scoped spawns
+    /// — results are bitwise identical either way (the determinism test
+    /// pins pool == scoped == serial), only the schedule cost differs.
+    pub pool: bool,
     /// per-learner sampling rates; empty = all equal to artifact batch
     pub sample_rates: Vec<usize>,
     /// concept-drift schedule
@@ -66,6 +72,7 @@ impl SimConfig {
             init: InitPolicy::Homogeneous,
             threads: threads::default_threads(),
             intra_threads: 0,
+            pool: true,
             sample_rates: Vec::new(),
             drift: DriftProb::None,
             final_eval: false,
@@ -126,9 +133,15 @@ impl<'a> Engine<'a> {
             .map(|(i, params)| {
                 let rate = self.cfg.sample_rates.get(i).copied().unwrap_or(batch);
                 // every learner owns its workspace: per-learner rounds and
-                // intra-step tiling compose without buffer aliasing
+                // intra-step tiling compose without buffer aliasing. The
+                // persistent tile pool is stood up here, once per run —
+                // every subsequent tiled kernel call is a latch dispatch,
+                // not a spawn (and the pool dies with the learner).
                 let mut ws = self.mrt.train.workspace();
                 ws.threads = intra;
+                if self.cfg.pool {
+                    ws.enable_pool();
+                }
                 Learner::new(i, params, state_size, streams(i), rate, ws)
             })
             .collect())
@@ -267,6 +280,9 @@ impl<'a> Engine<'a> {
         let eval_batch = ev.exe.info.batch;
         let mut ws = ev.workspace();
         ws.threads = self.cfg.threads.max(1);
+        if self.cfg.pool {
+            ws.enable_pool();
+        }
         let mut loss = 0.0;
         let mut metric = 0.0;
         let reps = 5;

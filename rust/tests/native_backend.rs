@@ -172,53 +172,64 @@ fn sync_preserves_global_mean_under_real_training() {
 
 /// The workspace/tiling determinism contract, end-to-end: an engine run
 /// is **bitwise** reproducible across (a) serial vs parallel per-learner
-/// rounds and (b) untiled vs thread-tiled conv kernels, because every
-/// tile owns disjoint output elements with unchanged per-element
-/// accumulation order. Asserted on `mnist_cnn` (real conv2d/maxpool) with
-/// exact equality of final models and identical `NetStats`.
+/// rounds, (b) untiled vs thread-tiled conv kernels, and (c) the tile
+/// scheduling mode — per-call scoped spawns vs the persistent per-learner
+/// `WorkerPool` — because every tile owns disjoint output elements with
+/// unchanged per-element accumulation order, whoever runs it. Asserted on
+/// `mnist_cnn` (conv2d/maxpool) *and* `driving_cnn` (strided convs, tanh
+/// head) with exact equality of final models and identical `NetStats`.
 #[test]
 fn thread_count_and_conv_tiling_do_not_change_results() {
-    let run = |threads: usize, intra: usize| -> RunResult {
-        let rt = Runtime::native();
-        let mut cfg = SimConfig::new("mnist_cnn", "sgd", 3, 8, 0.05);
-        cfg.seed = 7;
-        cfg.threads = threads;
-        cfg.intra_threads = intra;
-        let engine = Engine::new(&rt, cfg).unwrap();
-        let factory = dynavg::experiments::Dataset::MnistLike.factory(7);
-        engine
-            .run(
-                &ProtocolSpec::Dynamic {
-                    delta: 1.0,
-                    check_every: 2,
-                },
-                &factory,
-            )
-            .unwrap()
-    };
-    let base = run(1, 1); // serial rounds, untiled conv
-    let parallel = run(4, 0); // parallel learner rounds, auto intra tiling
-    let tiled = run(1, 3); // serial rounds, 3-way tiled conv kernels
-    for (what, other) in [("parallel rounds", &parallel), ("tiled conv", &tiled)] {
-        assert_eq!(base.models, other.models, "{what}: final models differ");
-        assert_eq!(base.averaged, other.averaged, "{what}: averaged model differs");
-        assert_eq!(
-            base.net.total_bytes(),
-            other.net.total_bytes(),
-            "{what}: NetStats bytes differ"
-        );
-        assert_eq!(
-            base.net.sync_events, other.net.sync_events,
-            "{what}: NetStats sync events differ"
-        );
-        assert_eq!(
-            base.net.full_syncs, other.net.full_syncs,
-            "{what}: NetStats full syncs differ"
-        );
-        assert_eq!(
-            base.recorder.cumulative_loss, other.recorder.cumulative_loss,
-            "{what}: loss trajectory differs"
-        );
+    for (model, dataset, rounds) in [
+        ("mnist_cnn", dynavg::experiments::Dataset::MnistLike, 8),
+        ("driving_cnn", dynavg::experiments::Dataset::Driving { regional: false }, 5),
+    ] {
+        let run = |threads: usize, intra: usize, pool: bool| -> RunResult {
+            let rt = Runtime::native();
+            let mut cfg = SimConfig::new(model, "sgd", 3, rounds, 0.05);
+            cfg.seed = 7;
+            cfg.threads = threads;
+            cfg.intra_threads = intra;
+            cfg.pool = pool;
+            let engine = Engine::new(&rt, cfg).unwrap();
+            let factory = dataset.factory(7);
+            engine
+                .run(
+                    &ProtocolSpec::Dynamic {
+                        delta: 1.0,
+                        check_every: 2,
+                    },
+                    &factory,
+                )
+                .unwrap()
+        };
+        let base = run(1, 1, false); // serial rounds, untiled conv
+        let cases = [
+            ("parallel rounds", run(4, 0, true)), // parallel learners, auto intra tiling, pool
+            ("pooled tiles", run(1, 3, true)),    // serial rounds, 3-way tiles on the pool
+            ("scoped tiles", run(1, 3, false)),   // serial rounds, 3-way tiles on scoped spawns
+        ];
+        for (what, other) in &cases {
+            assert_eq!(base.models, other.models, "{model} {what}: final models differ");
+            assert_eq!(base.averaged, other.averaged, "{model} {what}: averaged model differs");
+            assert_eq!(
+                base.net.total_bytes(),
+                other.net.total_bytes(),
+                "{model} {what}: NetStats bytes differ"
+            );
+            assert_eq!(
+                base.net.sync_events, other.net.sync_events,
+                "{model} {what}: NetStats sync events differ"
+            );
+            assert_eq!(
+                base.net.full_syncs, other.net.full_syncs,
+                "{model} {what}: NetStats full syncs differ"
+            );
+            assert_eq!(
+                base.recorder.cumulative_loss, other.recorder.cumulative_loss,
+                "{model} {what}: loss trajectory differs"
+            );
+        }
     }
 }
 

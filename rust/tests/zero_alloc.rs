@@ -2,7 +2,10 @@
 //! first (warm-up) step sized every `Workspace` slot, a steady-state
 //! `mnist_cnn` train step performs **0 heap allocations** — the property
 //! that removed the ~1.6 MB-twice-per-step im2col churn the ROADMAP
-//! called out after PR 2.
+//! called out after PR 2. Since the persistent worker pool landed, the
+//! contract also holds with intra-step tiling active: a pool dispatch is
+//! a latch round-trip over a borrowed closure (pool startup, like arena
+//! sizing, counts as warm-up).
 //!
 //! Measured with a counting `#[global_allocator]` that forwards to the
 //! system allocator. Everything lives in one `#[test]` in its own
@@ -71,10 +74,8 @@ fn steady_state_steps_allocate_nothing() {
         let mut params = rt.init_params(model).unwrap();
         let mut state = vec![0.0f32; mrt.train.exe.info.state_size];
         let batch = make_batch();
-        // ws.threads stays 1: the intra-step tiled path trades a few
-        // small per-call tile tables for parallelism (documented in
-        // runtime/workspace.rs); the zero-alloc contract is the serial
-        // configuration the large-m engine rounds run in
+        // serial configuration (ws.threads == 1): the strict reference
+        // path the large-m engine rounds run in
         let mut ws = mrt.train.workspace();
         // warm-up: the first steps size every arena slot
         for _ in 0..2 {
@@ -86,6 +87,32 @@ fn steady_state_steps_allocate_nothing() {
             }
         });
         assert_eq!(n, 0, "{model}: {n} heap allocations in 5 steady-state train steps");
+    }
+
+    // the same contract with the persistent worker pool ACTIVE: tiled
+    // kernel calls are latch dispatches over a type-erased closure borrow
+    // and the packed-operand buffer is an arena slot, so an intra-tiled
+    // steady-state step allocates nothing either. (Pool startup — thread
+    // stacks — counts as warm-up, like the first arena sizing; the PR 3
+    // scoped-spawn mode is excluded: std::thread::scope allocates per
+    // call, which is exactly what the pool removes.)
+    for (model, make_batch) in cases {
+        let mrt = ModelRuntime::load(&rt, model, "sgd").unwrap();
+        let mut params = rt.init_params(model).unwrap();
+        let mut state = vec![0.0f32; mrt.train.exe.info.state_size];
+        let batch = make_batch();
+        let mut ws = mrt.train.workspace();
+        ws.threads = 3;
+        ws.enable_pool(); // warm-up: spawns the 2 pooled workers
+        for _ in 0..2 {
+            mrt.train.step(&mut params, &mut state, &batch, 0.05, &mut ws).unwrap();
+        }
+        let n = allocs_during(|| {
+            for _ in 0..5 {
+                mrt.train.step(&mut params, &mut state, &batch, 0.05, &mut ws).unwrap();
+            }
+        });
+        assert_eq!(n, 0, "{model}: {n} heap allocations in 5 pool-tiled steady-state train steps");
     }
 
     // eval + infer on the CNN, each with its own warm workspace
