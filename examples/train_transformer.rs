@@ -1,8 +1,11 @@
 //! End-to-end validation driver: decentralized training of a byte-level
-//! transformer LM (L1 Pallas attention + matmul kernels -> L2 JAX model
-//! -> AOT HLO -> L3 rust coordinator) with dynamic averaging, on a small
-//! text corpus, logging the loss curve. Proves all three layers compose
-//! on a workload the paper never tried (the protocol is model-agnostic).
+//! transformer LM with dynamic averaging, on a small text corpus, logging
+//! the loss curve. Proves the protocol is model-agnostic on a workload
+//! the paper never tried. Runs **hermetically on the native backend**
+//! since the attention subsystem landed (`runtime/tensor/{attn,seq}.rs`
+//! interprets the synthetic-manifest `transformer_lm`); over a
+//! `make artifacts` tree it drives the L1 Pallas attention -> L2 JAX ->
+//! AOT HLO path instead — same model tensor-for-tensor.
 //!
 //! ```text
 //! cargo run --release --example train_transformer [-- --rounds 300 --m 4]

@@ -167,8 +167,9 @@ def main():
                 {"name": n, "shape": list(s)} for (n, s, _, _) in model.spec.entries
             ],
             # explicit layer-op list: lets the rust *native* backend
-            # interpret this model too (runtime/tensor/graph.rs); omitted
-            # for models outside its op vocabulary (attention)
+            # interpret this model too (runtime/tensor/graph.rs for
+            # image/dense graphs, runtime/tensor/seq.rs for the
+            # transformer); only shape-inferable dense stacks omit it
             **({"ops": model.ops} if model.ops else {}),
         }
         print(f"model {mname}: P={model.spec.total}")

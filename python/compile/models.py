@@ -196,9 +196,15 @@ class TransformerLm(Model):
 
     x: i32[B, S+1] token window; loss = next-byte cross-entropy over the
     S positions; metric = next-byte accuracy.
+
+    Scaled defaults (d=32, 2 layers, 4 heads, ~36k params — the
+    ``MnistCnn`` convention: same topology as a production LM, widths
+    sized so CPU protocol experiments stay tractable). The op list lets
+    the rust native backend compile this model too
+    (``runtime/tensor/seq.rs``) — it must mirror ``apply`` exactly.
     """
 
-    def __init__(self, vocab=128, d_model=128, n_layers=2, n_heads=4, seq=64):
+    def __init__(self, vocab=128, d_model=32, n_layers=2, n_heads=4, seq=64):
         self.vocab, self.d, self.L, self.H, self.S = vocab, d_model, n_layers, n_heads, seq
         d, ff = d_model, 4 * d_model
         entries = [
@@ -219,6 +225,13 @@ class TransformerLm(Model):
             "transformer_lm", fl.ParamSpec(entries), (seq + 1,), "i32",
             (0,), "i32", "accuracy",
         )
+        self.ops = [{"op": "embed_pos"}]
+        for _ in range(n_layers):
+            self.ops += [
+                {"op": "attn_block", "heads": n_heads},
+                {"op": "ffn_block", "act": "relu"},
+            ]
+        self.ops += [{"op": "layernorm"}, self._dense()]
 
     @staticmethod
     def _ln(x, g):

@@ -7,22 +7,32 @@ depend on numerically —
 - ``util/rng.rs``          (xoshiro256** + SplitMix64 + Box-Muller, exact
                             integer semantics, f64 floats)
 - ``data/synth_mnist.rs``  (blob-prototype MNIST-like stream)
-- ``runtime/native.rs``    Glorot init (FNV-1a name hash, draw order)
+- ``data/corpus.rs``       (byte-window corpus stream for the LM)
+- ``runtime/native.rs``    Glorot init (FNV-1a name hash, draw order;
+                            entry-walk variant for sequence models)
 - ``runtime/tensor/``      layer-graph forward/backward for the dense and
                             conv ops (im2col conv2d, maxpool2 argmax,
-                            relu/tanh, softmax-xent / mse)
+                            relu/tanh, softmax-xent / mse) AND the
+                            sequence plan (embedding gather/scatter,
+                            (1+g)-gain LayerNorm, causal SDPA with
+                            probability recompute, relu FFN, token xent —
+                            mirrors runtime/tensor/{attn,seq}.rs)
 - ``coordinator/``         periodic + dynamic averaging with the exact
                             byte accounting of ``network/mod.rs``
 
 so that the communication-reduction and accuracy thresholds asserted in
 ``rust/tests/native_backend.rs`` can be validated (across seeds, with
 margin) before they are baked into the rust tests. The mirror uses f64
-where rust uses f32, so trajectories drift from the binary over hundreds
-of steps — thresholds must hold with a comfortable margin, not at 1.01x.
+where rust uses f32 for the conv models (the transformer mirror computes
+in f32), so trajectories drift from the binary over hundreds of steps —
+thresholds must hold with a comfortable margin, not at 1.01x.
 
 Usage:
     python3 -m python.tools.native_mirror cnn_protocol --seed 2024
     python3 -m python.tools.native_mirror logistic_protocol --seed 2024
+    python3 -m python.tools.native_mirror transformer_protocol --seed 2024
+    python3 -m python.tools.native_mirror transformer_fixed_batch
+    python3 -m python.tools.native_mirror transformer_fd
 """
 
 from __future__ import annotations
@@ -407,6 +417,233 @@ class MnistLogistic:
         return loss, acc, grad
 
 
+# ----------------------------------------------------------- corpus stream
+BASE_CORPUS = (
+    "the fleet of learners trains a single shared model from local streams. "
+    "each vehicle observes its own road and adapts the network weights. "
+    "when the models drift apart the coordinator averages them back together. "
+    "communication is expensive so the protocol only synchronizes on demand. "
+    "a local condition guards the divergence of the configuration. "
+    "if the squared distance to the reference exceeds the threshold a violation is sent. "
+    "the coordinator balances violations by querying additional learners. "
+    "averaging leaves the mean of the configuration invariant. "
+    "gradient noise pushes the replicas apart while averaging pulls them together. "
+    "concept drift makes the target distribution change without warning. "
+    "after a drift the learners suffer loss and communication spikes. "
+    "between drifts the system converges and communication goes quiet. "
+    "the serial baseline sees all data but must centralize every sample. "
+    "federated averaging samples a fraction of the nodes in every round. "
+    "dynamic averaging invests communication only when it is useful. "
+)
+
+
+class CorpusStream:
+    """Mirror of data/corpus.rs (BASE_CORPUS windows; drift unused here)."""
+
+    def __init__(self, stream_seed: int, window: int):
+        self.text = np.frombuffer(BASE_CORPUS.encode(), np.uint8)
+        self.rng = Rng((stream_seed ^ 0xC0F0) & M64)
+        self.window = window
+
+    def next_batch(self, b: int) -> np.ndarray:
+        x = np.empty((b, self.window), np.int64)
+        for i in range(b):
+            start = self.rng.below(len(self.text) - self.window)
+            x[i] = np.minimum(self.text[start : start + self.window], 127)
+        return x
+
+
+# ------------------------------------------------------------- transformer
+F32 = np.float32
+
+
+def transformer_entries(v, d, L, h, s, ff):
+    """(name, shape, fan_in, fan_out) in manifest packing order — mirrors
+    models.TransformerLm / the synthetic-manifest transformer() builder."""
+    es = [("embed", (v, d), v, d), ("pos", (s, d), s, d)]
+    for l in range(L):
+        es += [
+            (f"l{l}.ln1.g", (d,), 0, 0),
+            (f"l{l}.qkv.w", (d, 3 * d), d, 3 * d), (f"l{l}.qkv.b", (3 * d,), 0, 0),
+            (f"l{l}.proj.w", (d, d), d, d), (f"l{l}.proj.b", (d,), 0, 0),
+            (f"l{l}.ln2.g", (d,), 0, 0),
+            (f"l{l}.ff1.w", (d, ff), d, ff), (f"l{l}.ff1.b", (ff,), 0, 0),
+            (f"l{l}.ff2.w", (ff, d), ff, d), (f"l{l}.ff2.b", (d,), 0, 0),
+        ]
+    es += [("lnf.g", (d,), 0, 0), ("head.w", (d, v), d, v), ("head.b", (v,), 0, 0)]
+    return es
+
+
+def glorot_entries(entries, name: str, manifest_seed: int = 42):
+    """Mirror of native.rs glorot() for sequence models: sequential entry
+    walk, weights uniform in the Glorot limit, fan-0 entries zero."""
+    rng = Rng(manifest_seed ^ fnv1a(name))
+    out = []
+    for _, shape, fan_in, fan_out in entries:
+        size = int(np.prod(shape))
+        if fan_in > 0:
+            lim = np.sqrt(6.0 / (fan_in + fan_out))
+            out.append(np.array([rng.range(-lim, lim) for _ in range(size)], F32))
+        else:
+            out.append(np.zeros(size, F32))
+    return np.concatenate(out)
+
+
+class TransformerLm:
+    """Mirror of the synthetic-manifest transformer_lm sequence plan
+    (runtime/tensor/seq.rs): pre-norm causal transformer, (1+g) LN gain
+    (eps 1e-5), per-head causal SDPA with probability recompute in
+    backward, relu FFN, softmax-xent over next-byte targets. All f32."""
+
+    def __init__(self, v=128, d=32, L=2, h=4, s=64):
+        self.v, self.d, self.L, self.h, self.s, self.ff = v, d, L, h, s, 4 * d
+        self.hd = d // h
+        self.entries = transformer_entries(v, d, L, h, s, self.ff)
+        self.sizes = [int(np.prod(sh)) for _, sh, _, _ in self.entries]
+        self.offs = np.cumsum([0] + self.sizes).tolist()
+        self.P = self.offs[-1]
+
+    def init(self, name="transformer_lm"):
+        return glorot_entries(self.entries, name)
+
+    def unpack(self, p):
+        return {
+            name: p[off : off + size].reshape(sh)
+            for (name, sh, _, _), off, size in zip(self.entries, self.offs, self.sizes)
+        }
+
+    @staticmethod
+    def ln_fwd(x, g):
+        mu = x.mean(-1, keepdims=True, dtype=F32)
+        xc = x - mu
+        var = (xc * xc).mean(-1, keepdims=True, dtype=F32)
+        rstd = (1.0 / np.sqrt(var + F32(1e-5))).astype(F32)
+        return (xc * rstd * (1.0 + g)).astype(F32), mu.astype(F32), rstd
+
+    @staticmethod
+    def ln_bwd(dy, x, g, mu, rstd):
+        xhat = (x - mu) * rstd
+        dxh = (dy * (1.0 + g)).astype(F32)
+        a = dxh.mean(-1, keepdims=True, dtype=F32)
+        b = (dxh * xhat).mean(-1, keepdims=True, dtype=F32)
+        dx = (rstd * (dxh - a - xhat * b)).astype(F32)
+        dg = (dy * xhat).sum(0).astype(F32)
+        return dx, dg
+
+    @staticmethod
+    def causal_softmax(sc):
+        s = sc.shape[-1]
+        sc = np.where(np.tril(np.ones((s, s), bool)), sc, F32(-1e30))
+        sc = sc - sc.max(-1, keepdims=True)
+        e = np.exp(sc, dtype=F32)
+        return (e / e.sum(-1, keepdims=True, dtype=F32)).astype(F32)
+
+    def _split(self, m, b, s):
+        return m.reshape(b, s, self.h, self.hd).transpose(0, 2, 1, 3).reshape(b * self.h, s, self.hd)
+
+    def _merge(self, m, b, s):
+        return m.reshape(b, self.h, s, self.hd).transpose(0, 2, 1, 3).reshape(b * s, self.d)
+
+    def forward(self, p, tok):
+        P = self.unpack(p)
+        b, s = tok.shape
+        d = self.d
+        x = (P["embed"][tok.ravel()] + np.tile(P["pos"][:s], (b, 1))).astype(F32)
+        save = {"x0": x}
+        scale = F32(1.0 / np.sqrt(self.hd))
+        for l in range(self.L):
+            y1, mu1, r1 = self.ln_fwd(x, P[f"l{l}.ln1.g"])
+            qkv = (y1 @ P[f"l{l}.qkv.w"] + P[f"l{l}.qkv.b"]).astype(F32)
+            q = self._split(qkv[:, :d], b, s)
+            k = self._split(qkv[:, d : 2 * d], b, s)
+            vv = self._split(qkv[:, 2 * d :], b, s)
+            oh = np.empty_like(q)
+            for c in range(b * self.h):
+                pr = self.causal_softmax((q[c] @ k[c].T * scale).astype(F32))
+                oh[c] = (pr @ vv[c]).astype(F32)
+            o = self._merge(oh, b, s)
+            x1 = (x + o @ P[f"l{l}.proj.w"] + P[f"l{l}.proj.b"]).astype(F32)
+            y2, mu2, r2 = self.ln_fwd(x1, P[f"l{l}.ln2.g"])
+            hf = np.maximum(y2 @ P[f"l{l}.ff1.w"] + P[f"l{l}.ff1.b"], 0.0).astype(F32)
+            x2 = (x1 + hf @ P[f"l{l}.ff2.w"] + P[f"l{l}.ff2.b"]).astype(F32)
+            save[l] = (y1, mu1, r1, q, k, vv, o, x1, y2, mu2, r2, hf, x2)
+            x = x2
+        yf, muf, rf = self.ln_fwd(x, P["lnf.g"])
+        logits = (yf @ P["head.w"] + P["head.b"]).astype(F32)
+        save["f"] = (yf, muf, rf, logits)
+        return save
+
+    def loss_grad(self, p, win, want_grad=True):
+        tok, tgt = win[:, :-1], win[:, 1:]
+        b, s = tok.shape
+        d = self.d
+        P = self.unpack(p)
+        save = self.forward(p, tok)
+        yf, muf, rf, logits = save["f"]
+        n = b * s
+        zmax = logits.max(-1, keepdims=True)
+        lse = (zmax + np.log(np.exp(logits - zmax, dtype=F32).sum(-1, keepdims=True, dtype=F32))).astype(F32)
+        logp = logits - lse
+        rows = np.arange(n)
+        loss = float(-logp[rows, tgt.ravel()].astype(np.float64).mean())
+        acc = float((logits.argmax(-1) == tgt.ravel()).mean())
+        if not want_grad:
+            return loss, acc, None
+        delta = np.exp(logp, dtype=F32)
+        delta[rows, tgt.ravel()] -= 1.0
+        delta = (delta / F32(n)).astype(F32)
+        g = {name: np.zeros(sh, F32) for name, sh, _, _ in self.entries}
+        g["head.w"] += yf.T @ delta
+        g["head.b"] += delta.sum(0)
+        dyf = (delta @ P["head.w"].T).astype(F32)
+        x_last = save[self.L - 1][12]
+        dx, dgf = self.ln_bwd(dyf, x_last, P["lnf.g"], muf, rf)
+        g["lnf.g"] += dgf
+        delta = dx
+        scale = F32(1.0 / np.sqrt(self.hd))
+        for l in reversed(range(self.L)):
+            y1, mu1, r1, q, k, vv, o, x1, y2, mu2, r2, hf, x2 = save[l]
+            x0 = save["x0"] if l == 0 else save[l - 1][12]
+            resid = delta.copy()
+            t1 = (delta @ P[f"l{l}.ff2.w"].T).astype(F32)
+            t1[hf <= 0.0] = 0.0
+            g[f"l{l}.ff2.w"] += hf.T @ delta
+            g[f"l{l}.ff2.b"] += delta.sum(0)
+            g[f"l{l}.ff1.w"] += y2.T @ t1
+            g[f"l{l}.ff1.b"] += t1.sum(0)
+            dy2 = (t1 @ P[f"l{l}.ff1.w"].T).astype(F32)
+            dx, dg2 = self.ln_bwd(dy2, x1, P[f"l{l}.ln2.g"], mu2, r2)
+            g[f"l{l}.ln2.g"] += dg2
+            delta = (resid + dx).astype(F32)
+            resid = delta.copy()
+            dO = (delta @ P[f"l{l}.proj.w"].T).astype(F32)
+            g[f"l{l}.proj.w"] += o.T @ delta
+            g[f"l{l}.proj.b"] += delta.sum(0)
+            dOh = self._split(dO, b, s)
+            dq, dk, dv = np.empty_like(q), np.empty_like(k), np.empty_like(vv)
+            for c in range(b * self.h):
+                pr = self.causal_softmax((q[c] @ k[c].T * scale).astype(F32))
+                dp = (dOh[c] @ vv[c].T).astype(F32)
+                dv[c] = pr.T @ dOh[c]
+                ds = (pr * (dp - (dp * pr).sum(-1, keepdims=True, dtype=F32)) * scale).astype(F32)
+                dq[c] = ds @ k[c]
+                dk[c] = ds.T @ q[c]
+            dqkv = np.concatenate(
+                [self._merge(dq, b, s), self._merge(dk, b, s), self._merge(dv, b, s)], axis=1
+            ).astype(F32)
+            g[f"l{l}.qkv.w"] += y1.T @ dqkv
+            g[f"l{l}.qkv.b"] += dqkv.sum(0)
+            dy1 = (dqkv @ P[f"l{l}.qkv.w"].T).astype(F32)
+            dx, dg1 = self.ln_bwd(dy1, x0, P[f"l{l}.ln1.g"], mu1, r1)
+            g[f"l{l}.ln1.g"] += dg1
+            delta = (resid + dx).astype(F32)
+        for r in range(b * s):
+            g["embed"][tok.ravel()[r]] += delta[r]
+            g["pos"][r % s] += delta[r]
+        grad = np.concatenate([g[name].ravel() for name, _, _, _ in self.entries]).astype(F32)
+        return loss, acc, grad
+
+
 # ---------------------------------------------------------------- protocols
 HEADER = 16
 
@@ -598,24 +835,153 @@ def fixed_batch_scenario():
             print(f"{ok} {name}/{opt}: loss {first:.4f} -> {last:.4f}")
 
 
+def run_lm(model, proto, m, rounds, lr, seed, batch=10):
+    """Engine mirror for the transformer: corpus streams (factory seed
+    arithmetic matches experiments/common.rs), SGD local steps, final
+    holdout eval of the averaged model (5 x 50 windows)."""
+    init = model.init()
+    models = [init.copy() for _ in range(m)]
+    streams = [CorpusStream((seed * 7919 + i + 1) & M64, model.s + 1) for i in range(m)]
+    net = Net()
+    proto_rng = Rng(seed ^ 0xABCD)
+    cum_loss = 0.0
+    for t in range(1, rounds + 1):
+        for i in range(m):
+            win = streams[i].next_batch(batch)
+            loss, _, grad = model.loss_grad(models[i], win)
+            cum_loss += loss
+            models[i] = (models[i] - F32(lr) * grad).astype(F32)
+        proto.sync(t, models, net, proto_rng)
+    avg = np.mean(models, axis=0, dtype=np.float64).astype(F32)
+    losses, accs = [], []
+    for _ in range(5):
+        win = streams[0].next_batch(50)
+        loss, acc, _ = model.loss_grad(avg, win, want_grad=False)
+        losses.append(loss)
+        accs.append(acc)
+    return {
+        "comm": net.total,
+        "cum_loss": cum_loss,
+        "eval_loss": float(np.mean(losses)),
+        "eval_acc": float(np.mean(accs)),
+    }
+
+
+def transformer_protocol(m, rounds, lr, delta, check, seed):
+    """Validates rust/tests/native_backend.rs::
+    dynamic_averaging_cuts_communication_on_transformer_too — at
+    (m=4, rounds=40, lr=0.3, delta=2.0, check=5) the mirror reports
+    ratio 8.0x across seeds {1,2,5,7,9,11,13,42,2024}, loss ratio
+    <= 1.001, eval acc 0.122-0.175 (asserted: >=5x, <=1.25, >0.08)."""
+    model = TransformerLm()
+    dyn = run_lm(model, Dynamic(delta, check, m), m, rounds, lr, seed)
+    per = run_lm(model, Periodic(check), m, rounds, lr, seed)
+    ratio = per["comm"] / max(dyn["comm"], 1)
+    print(
+        f"seed {seed}: comm dyn {dyn['comm']} per {per['comm']} ratio {ratio:.1f}x | "
+        f"cum_loss dyn {dyn['cum_loss']:.2f} per {per['cum_loss']:.2f} "
+        f"({dyn['cum_loss'] / per['cum_loss']:.3f}) | "
+        f"acc dyn {dyn['eval_acc']:.3f} per {per['eval_acc']:.3f}"
+    )
+    return dyn, per
+
+
+def transformer_fixed_batch():
+    """Validates rust/tests/runtime_integration.rs::
+    transformer_artifact_next_byte_learning: 11 Adam(0.002) steps on one
+    fixed batch of 8 corpus windows — mirror: 5.0007 -> 3.6924 (ratio
+    0.738, asserted < 0.8; initial loss asserted in (3.0, 6.5))."""
+    model = TransformerLm()
+    p = model.init()
+    state = (np.zeros(model.P, F32), np.zeros(model.P, F32), 0)
+    win = CorpusStream(3, model.s + 1).next_batch(8)
+    first = last = None
+    for _ in range(11):
+        loss, acc, g = model.loss_grad(p, win)
+        first = loss if first is None else first
+        last = loss
+        p, state = adam_step(p, state, g, 0.002)
+    ok = "OK " if last < 0.8 * first else "FAIL"
+    print(f"{ok} transformer_lm/adam fixed batch: loss {first:.4f} -> {last:.4f} "
+          f"(ratio {last / first:.3f})")
+
+
+def transformer_fd(init_seed=7, tok_seed=8):
+    """Validates the finite-difference thresholds of
+    rust/src/runtime/tensor/seq.rs (h=3e-3, tol = 2e-3 + 2%) on the tiny
+    V=13/d=8/H=2/S=6/L=1/ff=32 model, replicating the rust test's exact
+    draw order (init_params: one Rng stream, glorot weights + uniform
+    ±0.1 gains/biases in entry order; tokens: Rng(8).below(13)) — so a
+    relu-kink-free configuration here is kink-free in the rust test too
+    (the model math is f32 in both)."""
+    model = TransformerLm(v=13, d=8, L=1, h=2, s=6)
+    print(f"tiny transformer P={model.P} (init seed {init_seed}, token seed {tok_seed})")
+    rng = Rng(init_seed)
+    p = np.zeros(model.P, F32)
+    for (_, sh, fan_in, fan_out), off, size in zip(model.entries, model.offs, model.sizes):
+        if fan_in > 0:
+            lim = np.sqrt(6.0 / (fan_in + fan_out))
+            p[off : off + size] = [rng.range(-lim, lim) for _ in range(size)]
+        else:  # nonzero gains/biases: exercise off-origin
+            p[off : off + size] = [rng.range(-0.1, 0.1) for _ in range(size)]
+    trng = Rng(tok_seed)
+    win = np.array([[trng.below(13) for _ in range(7)] for _ in range(3)])
+    _, _, grad = model.loss_grad(p, win)
+    h = F32(3e-3)
+    bad = 0
+    for idx in range(model.P):
+        pp = p.copy()
+        pp[idx] += h
+        lp, _, _ = model.loss_grad(pp, win, want_grad=False)
+        pp[idx] = p[idx] - h
+        lm, _, _ = model.loss_grad(pp, win, want_grad=False)
+        fd = (lp - lm) / (2 * h)
+        if abs(fd - grad[idx]) > 2e-3 + 0.02 * abs(grad[idx]):
+            bad += 1
+            print(f"  FAIL [{idx}]: fd {fd:.6f} grad {grad[idx]:.6f}")
+    print(f"{'OK ' if bad == 0 else 'FAIL'} FD: {bad} failures / {model.P} coords")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("scenario", choices=["cnn_protocol", "logistic_protocol", "fixed_batch"])
+    ap.add_argument(
+        "scenario",
+        choices=[
+            "cnn_protocol",
+            "logistic_protocol",
+            "fixed_batch",
+            "transformer_protocol",
+            "transformer_fixed_batch",
+            "transformer_fd",
+        ],
+    )
     ap.add_argument("--seed", type=int, default=2024)
     ap.add_argument("--m", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=40)
-    ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--delta", type=float, default=1.0)
+    # per-scenario defaults are filled below (None = "flag omitted", so an
+    # explicit --lr 0.05 on the transformer is honored, not replaced)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--delta", type=float, default=None)
     ap.add_argument("--check", type=int, default=5)
     args = ap.parse_args()
     if args.scenario == "cnn_protocol":
-        compare(MnistCnn(), "mnist_cnn", args.m, args.rounds, args.lr,
-                args.delta, args.check, args.seed)
+        compare(MnistCnn(), "mnist_cnn", args.m, args.rounds,
+                0.05 if args.lr is None else args.lr,
+                1.0 if args.delta is None else args.delta, args.check, args.seed)
     elif args.scenario == "fixed_batch":
         fixed_batch_scenario()
+    elif args.scenario == "transformer_protocol":
+        transformer_protocol(args.m, args.rounds,
+                             0.3 if args.lr is None else args.lr,
+                             2.0 if args.delta is None else args.delta,
+                             args.check, args.seed)
+    elif args.scenario == "transformer_fixed_batch":
+        transformer_fixed_batch()
+    elif args.scenario == "transformer_fd":
+        transformer_fd()
     else:
         compare(MnistLogistic(), "mnist_logistic", 8, 150, 0.05,
-                args.delta, args.check, args.seed)
+                1.0 if args.delta is None else args.delta, args.check, args.seed)
 
 
 if __name__ == "__main__":

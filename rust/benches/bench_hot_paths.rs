@@ -1,12 +1,14 @@
 //! Hot-path microbenchmarks (L3): the protocol vector algebra at the real
-//! model sizes, packed-vs-scalar GEMM, pool-vs-scoped tile dispatch
-//! overhead, train-step dispatch latency, and a memory-bandwidth
+//! model sizes, packed-vs-scalar GEMM, the causal-attention block at the
+//! `transformer_lm` shape, pool-vs-scoped tile dispatch overhead,
+//! train-step dispatch latency (incl. end-to-end `mnist_cnn` and
+//! `transformer_lm` throughput records), and a memory-bandwidth
 //! reference (memcpy) for the roofline comparison in EXPERIMENTS.md §Perf.
 
-use dynavg::data::{synth_mnist::MnistLike, Stream};
+use dynavg::data::{corpus::CorpusStream, synth_mnist::MnistLike, Stream};
 use dynavg::model::params;
-use dynavg::runtime::tensor::{conv, matmul};
-use dynavg::runtime::{LayerGraph, ModelRuntime, Par, Runtime, WorkerPool};
+use dynavg::runtime::tensor::{attn, conv, matmul};
+use dynavg::runtime::{LayerGraph, ModelPlan, ModelRuntime, Par, Runtime, WorkerPool};
 use dynavg::util::bench::{bench, black_box, header, record_json};
 use dynavg::util::rng::Rng;
 use dynavg::util::threads;
@@ -128,6 +130,31 @@ fn main() {
         let (oh, ow) = (conv::out_dim(h, kk, 1), conv::out_dim(wd, kk, 1));
         let cv_flops = 2.0 * (b * oh * ow * kk * kk * c * cout) as f64;
 
+        // causal-attention block at the transformer_lm shape: B=10 windows
+        // x 4 heads of S=64, hd=8 — QKᵀ + masked softmax + P·V per cell
+        let (ab, ah, asq, ahd) = (10usize, 4usize, 64usize, 8usize);
+        let bh = ab * ah;
+        let heads: Vec<f32> = (0..3 * bh * asq * ahd).map(|_| rng.normal_f32()).collect();
+        let mut probs = vec![0.0f32; bh * asq * asq];
+        let mut o_heads = vec![0.0f32; bh * asq * ahd];
+        let at = bench("attention_fwd_b10_h4_s64_hd8 (causal SDPA)", 20, || {
+            attn::attention_fwd(
+                black_box(&heads),
+                &mut probs,
+                &mut o_heads,
+                ab,
+                ah,
+                asq,
+                ahd,
+                Par::Serial,
+            );
+        });
+        let at_flops = (bh * 2 * 2 * asq * asq * ahd) as f64;
+        record_json(
+            "attention_block_fwd",
+            &[("median_ns", at.median_ns), ("gflops", at_flops / at.median_ns)],
+        );
+
         println!();
         println!(
             "matmul throughput       : {:>7.2} GFLOP/s ({:.1} MFLOP/iter)",
@@ -138,6 +165,11 @@ fn main() {
             "conv2d throughput       : {:>7.2} GFLOP/s ({:.1} MFLOP/iter)",
             cv_flops / cv.median_ns,
             cv_flops / 1e6
+        );
+        println!(
+            "attention throughput    : {:>7.2} GFLOP/s ({:.1} MFLOP/iter)",
+            at_flops / at.median_ns,
+            at_flops / 1e6
         );
     }
 
@@ -188,6 +220,7 @@ fn main() {
             ("mnist_logistic", "sgd"),
             ("mnist_mlp", "sgd"),
             ("driving_cnn", "sgd"),
+            ("transformer_lm", "sgd"),
         ] {
             let Ok(mrt) = ModelRuntime::load(&rt, model, opt) else {
                 println!("(skipping {model} — not in the {backend} manifest)");
@@ -200,6 +233,7 @@ fn main() {
                     dynavg::data::graphical::GraphicalStream::new(1, 2).next_batch(10)
                 }
                 "driving_cnn" => dynavg::driving::DrivingStream::new(1, 2, false).next_batch(10),
+                "transformer_lm" => CorpusStream::new(2, 65).next_batch(10),
                 _ => MnistLike::new(1, 2).next_batch(10),
             };
             // serial workspace: this row tracks single-core dispatch
@@ -252,6 +286,51 @@ fn main() {
             );
             record_json(
                 "train_step_mnist_cnn_throughput",
+                &[
+                    ("steps_per_s", steps_per_s),
+                    ("gflops", gflops),
+                    ("median_ns", res.median_ns),
+                    ("threads", ws.threads as f64),
+                    ("pool_workers", ws.pool_workers() as f64),
+                ],
+            );
+        }
+
+        // end-to-end transformer_lm train-step throughput record: the
+        // attention-subsystem analogue of the mnist_cnn row (plan FLOPs
+        // from SeqGraph::train_flops, pool at the machine's budget)
+        if let Ok(mrt) = ModelRuntime::load(&rt, "transformer_lm", "sgd") {
+            let info = rt.manifest.model("transformer_lm").unwrap();
+            let flops = ModelPlan::from_model(info).unwrap().train_flops(10);
+            let mut params_v = rt.init_params("transformer_lm").unwrap();
+            let mut state = vec![0.0; mrt.train.exe.info.state_size];
+            let batch = CorpusStream::new(3, 65).next_batch(10);
+            let mut ws = mrt.train.workspace();
+            ws.threads = threads::default_threads();
+            ws.enable_pool();
+            let res = bench(
+                &format!("train_step_transformer_lm_tiled (t={}, pool)", ws.threads),
+                20,
+                || {
+                    black_box(
+                        mrt.train
+                            .step(&mut params_v, &mut state, &batch, 0.3, &mut ws)
+                            .unwrap(),
+                    );
+                },
+            );
+            let steps_per_s = 1e9 / res.median_ns;
+            let gflops = flops / res.median_ns;
+            println!();
+            println!(
+                "transformer train-step  : {steps_per_s:>7.2} steps/s, {gflops:.2} GFLOP/s effective \
+                 ({:.1} MFLOP/step, intra-threads {}, pool workers {})",
+                flops / 1e6,
+                ws.threads,
+                ws.pool_workers()
+            );
+            record_json(
+                "train_step_transformer_lm_throughput",
                 &[
                     ("steps_per_s", steps_per_s),
                     ("gflops", gflops),

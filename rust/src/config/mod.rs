@@ -163,4 +163,19 @@ mod tests {
         let j = Json::parse(r#"{"model": "wat", "protocols": []}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
     }
+
+    #[test]
+    fn transformer_config_defaults_to_the_corpus_stream() {
+        // `dynavg run --config` with the LM picks the byte-window corpus
+        // (window 65 = S+1) — now a fully native run, no XLA involved
+        let j = Json::parse(
+            r#"{"model": "transformer_lm", "optimizer": "sgd", "m": 4,
+                "rounds": 40, "lr": 0.3, "protocols": ["dynamic:2.0:5", "periodic:5"]}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert!(matches!(c.dataset, Dataset::Corpus { window: 65 }));
+        assert_eq!(c.sim.model, "transformer_lm");
+        assert_eq!(c.protocols.len(), 2);
+    }
 }

@@ -115,10 +115,12 @@ fn cmd_list() -> Result<()> {
 
 /// Capability dump: which manifest models the loaded backend can actually
 /// execute (membership in the manifest is not enough — e.g. a native-only
-/// build over XLA artifacts cannot run `transformer_lm`), plus the
-/// steady-state `Workspace` arena footprint of one train step at the
-/// train-artifact batch size and the packed-operand (microkernel pack)
-/// slot inside it (native layer-graph models only).
+/// build over a pre-attention artifact manifest, one whose models carry
+/// no layer-op lists, cannot run them), plus the steady-state `Workspace`
+/// arena footprint of one train step at the train-artifact batch size,
+/// the packed-operand (microkernel pack) slot inside it, and — for
+/// sequence models — the attention scratch (score tiles, head-layout
+/// gradients, staging) that footprint includes.
 fn cmd_models() -> Result<()> {
     let rt = Runtime::new(dynavg::artifacts_dir())?;
     println!("backend: {}", rt.backend_name());
@@ -131,8 +133,8 @@ fn cmd_models() -> Result<()> {
         t.saturating_sub(1)
     );
     println!(
-        "{:<16} {:>9}  {:<14} {:<8} {:<6} {:>12} {:>10} executable",
-        "model", "P", "x_shape", "metric", "ops", "workspace", "pack"
+        "{:<16} {:>9}  {:<14} {:<8} {:<6} {:>12} {:>10} {:>10} executable",
+        "model", "P", "x_shape", "metric", "ops", "workspace", "pack", "attn"
     );
     for (name, m) in &rt.manifest.models {
         let executable = if rt.supports_model(name) {
@@ -140,7 +142,7 @@ fn cmd_models() -> Result<()> {
         } else if cfg!(feature = "backend-xla") {
             "no"
         } else {
-            "no (needs backend-xla)"
+            "no (regenerate artifacts for op lists, or backend-xla)"
         };
         let x_shape = format!("{:?}", m.x_shape);
         let ops = if m.ops.is_empty() {
@@ -152,7 +154,8 @@ fn cmd_models() -> Result<()> {
         // batch = the train artifact's nominal size): interpreter scratch
         // plus the four output slots (params' + opt_state' + 2 scalars);
         // `pack` breaks out the packed-operand slot the microkernel GEMMs
-        // stream (already included in the workspace total)
+        // stream and `attn` the attention scratch of sequence models
+        // (both already included in the workspace total)
         let train = rt
             .manifest
             .artifacts
@@ -160,15 +163,18 @@ fn cmd_models() -> Result<()> {
             .find(|a| a.kind == "train" && a.model == *name);
         let train_batch = train.map(|a| a.batch).unwrap_or(1);
         let out_slots = train.map(|a| a.param_count + a.state_size + 2).unwrap_or(0);
-        let (workspace, pack) = match dynavg::runtime::LayerGraph::from_model(m) {
-            Ok(g) => (
-                format!("{} B", g.workspace_bytes(train_batch) + 4 * out_slots),
-                format!("{} B", g.pack_bytes(train_batch)),
+        let (workspace, pack, attn) = match dynavg::runtime::ModelPlan::from_model(m) {
+            Ok(p) => (
+                format!("{} B", p.workspace_bytes(train_batch) + 4 * out_slots),
+                format!("{} B", p.pack_bytes(train_batch)),
+                p.attn_scratch_bytes(train_batch)
+                    .map(|b| format!("{b} B"))
+                    .unwrap_or_else(|| "-".to_string()),
             ),
-            Err(_) => ("-".to_string(), "-".to_string()),
+            Err(_) => ("-".to_string(), "-".to_string(), "-".to_string()),
         };
         println!(
-            "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {workspace:>12} {pack:>10} {executable}",
+            "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {workspace:>12} {pack:>10} {attn:>10} {executable}",
             name, m.param_count, m.metric,
         );
     }

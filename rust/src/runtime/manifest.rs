@@ -35,7 +35,9 @@ impl Dtype {
 /// disambiguate a conv net (e.g. a stride-2 3x3 conv on 26x26 and a
 /// stride-1 conv followed by 2x2 max-pooling both produce 12x12), so
 /// manifests carry the ops explicitly and the native interpreter compiles
-/// them into a forward/backward plan (`runtime::tensor::LayerGraph`).
+/// them into a forward/backward plan (`runtime::tensor::LayerGraph` for
+/// image/dense graphs, `runtime::tensor::SeqGraph` for token-sequence
+/// models whose list opens with [`OpSpec::EmbedPos`]).
 /// Dense-only stacks may omit the list; it is inferred from the shapes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum OpSpec {
@@ -47,6 +49,19 @@ pub enum OpSpec {
     MaxPool2,
     /// NHWC image -> flat feature vector (layout no-op).
     Flatten,
+    /// Token-embedding gather + learned positional add; consumes
+    /// (embed \[V, d\], pos \[S, d\]). Opens every sequence model.
+    EmbedPos,
+    /// Pre-norm residual self-attention block `x + proj(attn(ln(x)))`;
+    /// consumes (ln.g \[d\], qkv.w \[d, 3d\], qkv.b, proj.w \[d, d\],
+    /// proj.b). `heads` is mandatory: the head count changes the function
+    /// (per-head causal attention patterns), so no default is sound.
+    AttnBlock { heads: usize },
+    /// Pre-norm residual MLP block `x + ff2(act(ff1(ln(x))))`; consumes
+    /// (ln.g \[d\], ff1.w \[d, ff\], ff1.b, ff2.w \[ff, d\], ff2.b).
+    FfnBlock { act: String },
+    /// Standalone LayerNorm with `1 + g` gain; consumes (g \[d\]).
+    LayerNorm,
 }
 
 impl OpSpec {
@@ -81,6 +96,16 @@ impl OpSpec {
             }),
             "maxpool2" => Ok(OpSpec::MaxPool2),
             "flatten" => Ok(OpSpec::Flatten),
+            "embed_pos" => Ok(OpSpec::EmbedPos),
+            "attn_block" => Ok(OpSpec::AttnBlock {
+                heads: j
+                    .req("heads")
+                    .context("attn_block requires `heads` (the head count changes the function)")?
+                    .as_usize()
+                    .context("attn_block `heads` must be an integer")?,
+            }),
+            "ffn_block" => Ok(OpSpec::FfnBlock { act: act()? }),
+            "layernorm" => Ok(OpSpec::LayerNorm),
             other => anyhow::bail!("unknown layer op {other:?}"),
         }
     }
@@ -321,6 +346,27 @@ mod tests {
                 act: "linear".to_string()
             }
         );
+    }
+
+    #[test]
+    fn sequence_ops_parse_and_heads_is_mandatory() {
+        let j = Json::parse(r#"{"op": "embed_pos"}"#).unwrap();
+        assert_eq!(OpSpec::parse(&j).unwrap(), OpSpec::EmbedPos);
+        let j = Json::parse(r#"{"op": "layernorm"}"#).unwrap();
+        assert_eq!(OpSpec::parse(&j).unwrap(), OpSpec::LayerNorm);
+        let j = Json::parse(r#"{"op": "attn_block", "heads": 4}"#).unwrap();
+        assert_eq!(OpSpec::parse(&j).unwrap(), OpSpec::AttnBlock { heads: 4 });
+        let j = Json::parse(r#"{"op": "ffn_block", "act": "relu"}"#).unwrap();
+        assert_eq!(
+            OpSpec::parse(&j).unwrap(),
+            OpSpec::FfnBlock {
+                act: "relu".to_string()
+            }
+        );
+        // the head count changes the function — no silent default
+        let j = Json::parse(r#"{"op": "attn_block"}"#).unwrap();
+        let msg = format!("{:#}", OpSpec::parse(&j).unwrap_err());
+        assert!(msg.contains("heads"), "{msg}");
     }
 
     #[test]

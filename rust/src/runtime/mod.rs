@@ -3,10 +3,12 @@
 //!
 //! - **native** (default, always compiled): pure-Rust interpreter for the
 //!   manifest's {dense, conv2d, maxpool2, flatten} layer graphs (see
-//!   [`tensor::LayerGraph`]) with in-crate SGD/ADAM/RMSprop — no Python,
-//!   no XLA, no artifact files. A synthetic manifest covering the paper's
-//!   MLP *and* CNN architectures makes the whole stack hermetic (see
-//!   [`native::synthetic_manifest`]).
+//!   [`tensor::LayerGraph`]) *and* its token-sequence transformer models
+//!   (see [`tensor::SeqGraph`] — the attention subsystem) with in-crate
+//!   SGD/ADAM/RMSprop — no Python, no XLA, no artifact files. A synthetic
+//!   manifest covering the paper's MLP and CNN architectures plus the
+//!   byte-level LM makes the whole stack hermetic (see
+//!   [`native::synthetic_manifest`]); no model needs XLA anymore.
 //! - **xla** (cargo feature `backend-xla`): the PJRT CPU client executing
 //!   the AOT artifacts produced by `python/compile/aot.py` via
 //!   `make artifacts`. Python never runs at request time.
@@ -40,7 +42,7 @@ pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo, OpSpec};
 pub use native::NativeBackend;
 pub use pool::{Par, WorkerPool};
 pub use step::{Batch, EvalStep, InferStep, StepStats, TrainStep};
-pub use tensor::LayerGraph;
+pub use tensor::{LayerGraph, ModelPlan, SeqGraph};
 pub use workspace::Workspace;
 
 use std::collections::HashMap;
@@ -211,9 +213,13 @@ mod tests {
         assert!(rt.supports_model("drift_mlp"));
         assert!(rt.supports_model("mnist_cnn"), "conv graphs run natively");
         assert!(rt.supports_model("driving_cnn"), "strided conv + tanh too");
-        assert!(!rt.supports_model("transformer_lm"), "absent from manifest");
-        // present in the manifest but not an interpretable layer graph
-        // (attention-style tensors, no op list) -> unsupported
+        assert!(
+            rt.supports_model("transformer_lm"),
+            "attention runs natively since the sequence plan landed"
+        );
+        // present in the manifest but not interpretable: attention-style
+        // tensors *without* the sequence op list (a pre-op-list artifact
+        // manifest) -> still unsupported, with guidance
         let mut manifest = native::synthetic_manifest();
         let mut attn = manifest.models.get("drift_mlp").unwrap().clone();
         attn.name = "attn_net".to_string();

@@ -2,22 +2,27 @@
 //!
 //! The backend interprets the *manifest itself* as the model description:
 //! any model built from {dense, conv2d, maxpool2, flatten} layer ops is
-//! compiled by [`tensor::LayerGraph`](super::tensor::LayerGraph) into a
-//! forward/backward plan over the cache-tiled kernels in
-//! `runtime/tensor/` and executed directly on flat `f32` parameter
-//! vectors, mirroring the reference semantics of the python L1/L2 stack
-//! (`kernels/ref.py`, `kernels/conv2d.py`, `models.py`) and
+//! compiled by [`tensor::LayerGraph`](super::tensor::LayerGraph), and any
+//! token-sequence model (op list opening with `embed_pos`) by
+//! [`tensor::SeqGraph`](super::tensor::SeqGraph) — the
+//! [`ModelPlan`] dispatch — into a forward/backward plan over the
+//! cache-tiled kernels in `runtime/tensor/`, executed directly on flat
+//! `f32` parameter vectors and mirroring the reference semantics of the
+//! python L1/L2 stack (`kernels/ref.py`, `kernels/conv2d.py`,
+//! `kernels/attention.py`, `models.py`) and
 //! `python/compile/optimizers.py` (SGD / ADAM / RMSprop with the
 //! Keras-default hyperparameters). Dense stacks need no op list (inferred
-//! from tensor shapes); `mnist_cnn` and `driving_cnn` carry explicit op
-//! lists and run natively. Only attention models (`transformer_lm`) still
-//! need the `backend-xla` feature.
+//! from tensor shapes); `mnist_cnn`, `driving_cnn` and `transformer_lm`
+//! carry explicit op lists and run natively — since the attention
+//! subsystem landed there is **no XLA-only model left**; the
+//! `backend-xla` feature remains for executing AOT artifact trees.
 //!
 //! [`synthetic_manifest`] provides an in-crate manifest (linear, logistic
-//! and MLP heads plus the paper's two CNNs over the synthetic data
-//! streams) so the whole simulation stack — including every MNIST-like
-//! figure and the deep-driving case study — runs hermetically; this is
-//! what makes tier-1 (`cargo build --release && cargo test -q`) pass on a
+//! and MLP heads, the paper's two CNNs, and the byte-level transformer LM
+//! over the synthetic data streams) so the whole simulation stack —
+//! every MNIST-like figure, the deep-driving case study and the
+//! decentralized-transformer example — runs hermetically; this is what
+//! makes tier-1 (`cargo build --release && cargo test -q`) pass on a
 //! clean machine.
 //!
 //! Unlike the fixed XLA input shapes, the interpreter accepts any batch
@@ -38,7 +43,7 @@ use crate::util::rng::Rng;
 use super::backend::{self, Backend, Input, Kernel};
 use super::manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo, OpSpec};
 use super::pool::Par;
-use super::tensor::LayerGraph;
+use super::tensor::{LayerGraph, ModelPlan};
 use super::workspace::{sized, Workspace};
 
 /// The pure-Rust backend. Stateless: each compiled [`Kernel`] owns its
@@ -51,12 +56,12 @@ impl Backend for NativeBackend {
     }
 
     fn supports(&self, model: &ModelInfo) -> bool {
-        LayerGraph::from_model(model).is_ok()
+        ModelPlan::from_model(model).is_ok()
     }
 
     fn compile(&self, manifest: &Manifest, info: &ArtifactInfo) -> Result<Box<dyn Kernel>> {
         let model = manifest.model(&info.model)?;
-        let graph = LayerGraph::from_model(model)?;
+        let plan = ModelPlan::from_model(model)?;
         let optim = match info.kind.as_str() {
             "train" => {
                 let name = info
@@ -67,7 +72,7 @@ impl Backend for NativeBackend {
             }
             _ => None,
         };
-        Ok(Box::new(NativeKernel { graph, optim }))
+        Ok(Box::new(NativeKernel { plan, optim }))
     }
 
     /// Prefer the on-disk init blob when it exists (so a native run over
@@ -165,13 +170,14 @@ impl Optim {
 
 // ----------------------------------------------------------------- kernel
 //
-// Model interpretation lives in `runtime/tensor/graph.rs` ([`LayerGraph`]
-// — the general {dense, conv2d, maxpool2, flatten} plan compiler that
-// replaced PR 1's dense-only `DenseStack`); this kernel owns a compiled
-// plan plus the optimizer and adapts it to the artifact signatures.
+// Model interpretation lives in `runtime/tensor/` — `graph.rs`
+// ([`LayerGraph`], the {dense, conv2d, maxpool2, flatten} plan compiler)
+// and `seq.rs` ([`SeqGraph`], the transformer plan) behind the
+// [`ModelPlan`] dispatch; this kernel owns a compiled plan plus the
+// optimizer and adapts it to the artifact signatures.
 
 struct NativeKernel {
-    graph: LayerGraph,
+    plan: ModelPlan,
     /// Some for train artifacts, None for eval/infer.
     optim: Option<Optim>,
 }
@@ -180,15 +186,23 @@ fn f32_input<'a>(input: &Input<'a>, what: &str) -> Result<&'a [f32]> {
     match *input {
         Input::F32(data, _) => Ok(data),
         Input::I32(..) => anyhow::bail!(
-            "native backend: {what} must be f32 (i32 models need backend-xla)"
+            "native backend: {what} must be f32 (i32 token windows are only valid as the \
+             x input of sequence models)"
         ),
     }
 }
 
+fn i32_input<'a>(input: &Input<'a>, what: &str) -> Result<&'a [i32]> {
+    match *input {
+        Input::I32(data, _) => Ok(data),
+        Input::F32(..) => anyhow::bail!("native backend: {what} must be i32 token windows for sequence models"),
+    }
+}
+
 impl NativeKernel {
-    /// Infer the batch dimension from the flattened input length.
-    fn batch_of(&self, x: &[f32], y: Option<&[f32]>) -> Result<usize> {
-        let in_dim = self.graph.in_dim;
+    /// Infer the batch dimension of a layer-graph input from its length.
+    fn batch_of(&self, graph: &LayerGraph, x: &[f32], y: Option<&[f32]>) -> Result<usize> {
+        let in_dim = graph.in_dim;
         anyhow::ensure!(
             !x.is_empty() && x.len() % in_dim == 0,
             "x length {} is not a multiple of the input size {in_dim}",
@@ -197,10 +211,10 @@ impl NativeKernel {
         let b = x.len() / in_dim;
         if let Some(y) = y {
             anyhow::ensure!(
-                y.len() == b * self.graph.out_dim,
+                y.len() == b * graph.out_dim,
                 "y length {} != batch {b} x out dim {}",
                 y.len(),
-                self.graph.out_dim
+                graph.out_dim
             );
         }
         Ok(b)
@@ -208,12 +222,48 @@ impl NativeKernel {
 
     fn check_params(&self, params: &[f32]) -> Result<()> {
         anyhow::ensure!(
-            params.len() == self.graph.param_count,
+            params.len() == self.plan.param_count(),
             "params length {} != model param_count {}",
             params.len(),
-            self.graph.param_count
+            self.plan.param_count()
         );
         Ok(())
+    }
+
+    /// One supervised pass: loss + metric, with the flat gradient left in
+    /// `scratch.grad` when `want_grad`. Dispatches on the plan family —
+    /// layer graphs take (f32 x, f32 y), sequence plans take i32 token
+    /// windows (`y` is the zero-width placeholder and is ignored).
+    fn supervised(
+        &self,
+        x: &Input,
+        y: &Input,
+        want_grad: bool,
+        params: &[f32],
+        scratch: &mut super::workspace::Scratch,
+        par: Par,
+    ) -> Result<(f32, f32)> {
+        match &self.plan {
+            ModelPlan::Layer(g) => {
+                let x = f32_input(x, "x")?;
+                let y = f32_input(y, "y")?;
+                let b = self.batch_of(g, x, Some(y))?;
+                Ok(if want_grad {
+                    g.loss_grad_into(params, x, y, b, scratch, par)
+                } else {
+                    g.eval_into(params, x, y, b, scratch, par)
+                })
+            }
+            ModelPlan::Seq(g) => {
+                let tokens = i32_input(x, "x")?;
+                let b = g.check_tokens(tokens)?;
+                Ok(if want_grad {
+                    g.loss_grad_into(params, tokens, b, scratch, par)
+                } else {
+                    g.eval_into(params, tokens, b, scratch, par)
+                })
+            }
+        }
     }
 }
 
@@ -246,20 +296,17 @@ impl Kernel for NativeKernel {
                 anyhow::ensure!(inputs.len() == 5, "train takes (params, opt_state, x, y, lr)");
                 let params = f32_input(&inputs[0], "params")?;
                 let state = f32_input(&inputs[1], "opt_state")?;
-                let x = f32_input(&inputs[2], "x")?;
-                let y = f32_input(&inputs[3], "y")?;
                 let lr = f32_input(&inputs[4], "lr")?;
                 anyhow::ensure!(lr.len() == 1, "lr must be a scalar");
                 self.check_params(params)?;
                 let optim = self.optim.context("train kernel without optimizer")?;
                 anyhow::ensure!(
-                    state.len() == optim.state_size(self.graph.param_count),
+                    state.len() == optim.state_size(self.plan.param_count()),
                     "opt_state length {} != expected {}",
                     state.len(),
-                    optim.state_size(self.graph.param_count)
+                    optim.state_size(self.plan.param_count())
                 );
-                let b = self.batch_of(x, Some(y))?;
-                let (loss, metric) = self.graph.loss_grad_into(params, x, y, b, scratch, par);
+                let (loss, metric) = self.supervised(&inputs[2], &inputs[3], true, params, scratch, par)?;
                 // updated params/state are built in the reusable output
                 // slots: copy-in, then the optimizer updates in place —
                 // no allocation, and the caller can swap the slots out
@@ -277,11 +324,8 @@ impl Kernel for NativeKernel {
             "eval" => {
                 anyhow::ensure!(inputs.len() == 3, "eval takes (params, x, y)");
                 let params = f32_input(&inputs[0], "params")?;
-                let x = f32_input(&inputs[1], "x")?;
-                let y = f32_input(&inputs[2], "y")?;
                 self.check_params(params)?;
-                let b = self.batch_of(x, Some(y))?;
-                let (loss, metric) = self.graph.eval_into(params, x, y, b, scratch, par);
+                let (loss, metric) = self.supervised(&inputs[1], &inputs[2], false, params, scratch, par)?;
                 ensure_outputs(outputs, 2);
                 set_scalar(&mut outputs[0], loss);
                 set_scalar(&mut outputs[1], metric);
@@ -290,10 +334,20 @@ impl Kernel for NativeKernel {
             "infer" => {
                 anyhow::ensure!(inputs.len() == 2, "infer takes (params, x)");
                 let params = f32_input(&inputs[0], "params")?;
-                let x = f32_input(&inputs[1], "x")?;
                 self.check_params(params)?;
-                let b = self.batch_of(x, None)?;
-                self.graph.forward_into(params, x, b, scratch, par);
+                match &self.plan {
+                    ModelPlan::Layer(g) => {
+                        let x = f32_input(&inputs[1], "x")?;
+                        let b = self.batch_of(g, x, None)?;
+                        g.forward_into(params, x, b, scratch, par);
+                    }
+                    ModelPlan::Seq(g) => {
+                        // token infer: next-byte logits for every position
+                        let tokens = i32_input(&inputs[1], "x")?;
+                        let b = g.check_tokens(tokens)?;
+                        g.forward_into(params, tokens, b, scratch, par);
+                    }
+                }
                 ensure_outputs(outputs, 1);
                 let out = scratch.acts.last().expect("plan has at least one node");
                 sized(&mut outputs[0], out.len());
@@ -309,7 +363,7 @@ impl Kernel for NativeKernel {
     /// already runs warm.
     fn workspace(&self, info: &ArtifactInfo) -> Workspace {
         let mut ws = Workspace::new();
-        self.graph.prepare_scratch(info.batch.max(1), &mut ws.scratch);
+        self.plan.prepare_scratch(info.batch.max(1), &mut ws.scratch);
         ws
     }
 }
@@ -326,27 +380,63 @@ fn hash_name(s: &str) -> u64 {
     h
 }
 
-/// Deterministic Glorot init for any layer-graph model: weights uniform in
-/// ±sqrt(6/(fan_in+fan_out)), biases zero. Conv fans follow
+/// Deterministic Glorot init for any interpretable model: weights uniform
+/// in ±sqrt(6/(fan_in+fan_out)), biases zero. Conv fans follow
 /// `python/compile/flatten.conv_entries` (kh·kw·cin / kh·kw·cout). The
 /// per-element scales vector (heterogeneous-init noise, Fig 6.2) is the
 /// layer's Glorot std sqrt(2/(fan_in+fan_out)) — strictly positive
 /// everywhere. Weight draw order matches PR 1 exactly for dense stacks,
 /// so existing numeric test thresholds stay valid.
+///
+/// Sequence models walk their entry list instead of (w, b) slot pairs:
+/// embed/pos draw with (rows, width) fans, LN gains and biases start at
+/// zero (`1 + g` gain 1 — the python `flatten.ParamSpec.init` contract),
+/// and zero-fan entries take the mean weight std as their scale, exactly
+/// like the python side's eps-noise convention.
 fn glorot(info: &ModelInfo, seed: u64) -> Result<(Vec<f32>, Vec<f32>)> {
-    let graph = LayerGraph::from_model(info)?;
+    let plan = ModelPlan::from_model(info)?;
     let mut rng = Rng::new(seed ^ hash_name(&info.name));
     let mut init = vec![0.0f32; info.param_count];
     let mut scales = vec![0.0f32; info.param_count];
-    for slot in graph.slots() {
-        let fan = (slot.fan_in + slot.fan_out) as f64;
-        let limit = (6.0 / fan).sqrt();
-        let std = (2.0 / fan).sqrt() as f32;
-        for w in init[slot.w_off..slot.w_off + slot.w_len].iter_mut() {
-            *w = rng.range(-limit, limit) as f32;
+    match &plan {
+        ModelPlan::Layer(graph) => {
+            for slot in graph.slots() {
+                let fan = (slot.fan_in + slot.fan_out) as f64;
+                let limit = (6.0 / fan).sqrt();
+                let std = (2.0 / fan).sqrt() as f32;
+                for w in init[slot.w_off..slot.w_off + slot.w_len].iter_mut() {
+                    *w = rng.range(-limit, limit) as f32;
+                }
+                for s in scales[slot.w_off..slot.b_off + slot.b_len].iter_mut() {
+                    *s = std;
+                }
+            }
         }
-        for s in scales[slot.w_off..slot.b_off + slot.b_len].iter_mut() {
-            *s = std;
+        ModelPlan::Seq(graph) => {
+            let mut std_sum = 0.0f64;
+            let mut std_n = 0usize;
+            for e in graph.entries() {
+                if e.fan_in == 0 {
+                    continue;
+                }
+                let fan = (e.fan_in + e.fan_out) as f64;
+                let limit = (6.0 / fan).sqrt();
+                for w in init[e.off..e.off + e.len].iter_mut() {
+                    *w = rng.range(-limit, limit) as f32;
+                }
+                let std = (2.0 / fan).sqrt();
+                std_sum += std;
+                std_n += 1;
+                for s in scales[e.off..e.off + e.len].iter_mut() {
+                    *s = std as f32;
+                }
+            }
+            // zero-init entries (biases, LN gains) perturb at the mean
+            // weight scale under eps-heterogeneous init
+            let mean_std = (std_sum / std_n.max(1) as f64) as f32;
+            for s in scales.iter_mut().filter(|s| **s == 0.0) {
+                *s = mean_std;
+            }
         }
     }
     Ok((init, scales))
@@ -365,6 +455,7 @@ struct SynthModel {
     tensors: Vec<(String, Vec<usize>)>,
     ops: Vec<OpSpec>,
     param_count: usize,
+    x_dtype: Dtype,
 }
 
 impl SynthModel {
@@ -373,7 +464,14 @@ impl SynthModel {
             tensors: Vec::new(),
             ops: Vec::new(),
             param_count: 0,
+            x_dtype: Dtype::F32,
         }
+    }
+
+    fn tensor(mut self, name: &str, shape: &[usize]) -> SynthModel {
+        self.param_count += shape.iter().product::<usize>();
+        self.tensors.push((name.to_string(), shape.to_vec()));
+        self
     }
 
     fn dense(mut self, name: &str, d_in: usize, d_out: usize, act: &str) -> SynthModel {
@@ -417,6 +515,41 @@ impl SynthModel {
         m.ops.clear();
         m
     }
+
+    /// Pre-norm causal transformer LM over i32 byte windows, mirroring
+    /// `python/compile/models.py::TransformerLm` tensor-for-tensor (the
+    /// scaled defaults: the same topology the JAX side lowers, widths
+    /// sized so CPU protocol experiments stay tractable — the `mnist_cnn`
+    /// convention).
+    fn transformer(v: usize, d: usize, layers: usize, heads: usize, s: usize) -> SynthModel {
+        let ff = 4 * d;
+        let mut m = SynthModel::new().tensor("embed", &[v, d]).tensor("pos", &[s, d]);
+        m.x_dtype = Dtype::I32;
+        m.ops.push(OpSpec::EmbedPos);
+        for l in 0..layers {
+            m = m
+                .tensor(&format!("l{l}.ln1.g"), &[d])
+                .tensor(&format!("l{l}.qkv.w"), &[d, 3 * d])
+                .tensor(&format!("l{l}.qkv.b"), &[3 * d])
+                .tensor(&format!("l{l}.proj.w"), &[d, d])
+                .tensor(&format!("l{l}.proj.b"), &[d])
+                .tensor(&format!("l{l}.ln2.g"), &[d])
+                .tensor(&format!("l{l}.ff1.w"), &[d, ff])
+                .tensor(&format!("l{l}.ff1.b"), &[ff])
+                .tensor(&format!("l{l}.ff2.w"), &[ff, d])
+                .tensor(&format!("l{l}.ff2.b"), &[d]);
+            m.ops.push(OpSpec::AttnBlock { heads });
+            m.ops.push(OpSpec::FfnBlock {
+                act: "relu".to_string(),
+            });
+        }
+        m = m.tensor("lnf.g", &[d]).tensor("head.w", &[d, v]).tensor("head.b", &[v]);
+        m.ops.push(OpSpec::LayerNorm);
+        m.ops.push(OpSpec::Dense {
+            act: "linear".to_string(),
+        });
+        m
+    }
 }
 
 /// In-crate manifest for the native backend: no Python, no files. Models
@@ -430,11 +563,13 @@ impl SynthModel {
 /// | `mnist_mlp`      | 784 -> 64 -> 10                     | `MnistLike`       | xent |
 /// | `mnist_cnn`      | c3x8-c3x16-pool-fc64-fc10           | `MnistLike`       | xent |
 /// | `driving_cnn`    | c5x8s2-c5x12s2-c3x16-fc64-fc16-fc1t | `DrivingStream`   | mse  |
+/// | `transformer_lm` | d32-h4-L2-ff128 byte LM, S=64       | `CorpusStream`    | xent |
 ///
-/// `drift_mlp`, `mnist_cnn` and `driving_cnn` match the architectures the
-/// python side lowers (`python/compile/models.py`) tensor-for-tensor, so
-/// the experiment drivers — including every MNIST-like figure and the
-/// fig5_5 deep-driving case study — run unchanged on either backend.
+/// `drift_mlp`, `mnist_cnn`, `driving_cnn` and `transformer_lm` match the
+/// architectures the python side lowers (`python/compile/models.py`)
+/// tensor-for-tensor, so the experiment drivers — every MNIST-like
+/// figure, the fig5_5 deep-driving case study and the decentralized-
+/// transformer example — run unchanged on either backend.
 pub fn synthetic_manifest() -> Manifest {
     let dir = PathBuf::from("<synthetic>");
     let specs: &[(&str, &[usize], usize, &str, SynthModel)] = &[
@@ -489,6 +624,16 @@ pub fn synthetic_manifest() -> Manifest {
                 .dense("fc2", 64, 16, "relu")
                 .dense("fc3", 16, 1, "tanh"),
         ),
+        // the byte-level causal LM (python TransformerLm at its scaled
+        // defaults): x is an i32 [S+1] window — S inputs + next-byte
+        // targets — so y is a zero-width placeholder (y_dim 0)
+        (
+            "transformer_lm",
+            &[65],
+            0,
+            "accuracy",
+            SynthModel::transformer(128, 32, 2, 4, 64),
+        ),
     ];
     let mut models = std::collections::BTreeMap::new();
     let mut artifacts = std::collections::BTreeMap::new();
@@ -501,7 +646,7 @@ pub fn synthetic_manifest() -> Manifest {
                 name: name.to_string(),
                 param_count,
                 x_shape: x_shape.to_vec(),
-                x_dtype: Dtype::F32,
+                x_dtype: spec.x_dtype,
                 y_shape: vec![y_dim],
                 metric: metric.to_string(),
                 init_bin: dir.join(format!("{name}_init.bin")),
@@ -544,21 +689,26 @@ pub fn synthetic_manifest() -> Manifest {
                 hlo_path: dir.join("native"),
             },
         );
-        let iname = format!("{name}_infer");
-        artifacts.insert(
-            iname.clone(),
-            ArtifactInfo {
-                name: iname,
-                kind: "infer".to_string(),
-                model: name.to_string(),
-                optimizer: None,
-                batch: 1,
-                param_count,
-                state_size: 0,
-                outputs: ["out"].map(String::from).to_vec(),
-                hlo_path: dir.join("native"),
-            },
-        );
+        // f32 models only: the `InferStep` wrapper takes f32 features (the
+        // aot.py INFER_MODELS contract); token models are trained/eval'd
+        // through `Batch::I32` and need no infer artifact
+        if spec.x_dtype == Dtype::F32 {
+            let iname = format!("{name}_infer");
+            artifacts.insert(
+                iname.clone(),
+                ArtifactInfo {
+                    name: iname,
+                    kind: "infer".to_string(),
+                    model: name.to_string(),
+                    optimizer: None,
+                    batch: 1,
+                    param_count,
+                    state_size: 0,
+                    outputs: ["out"].map(String::from).to_vec(),
+                    hlo_path: dir.join("native"),
+                },
+            );
+        }
     }
     Manifest {
         dir,
@@ -616,7 +766,7 @@ mod tests {
                 .sum();
             assert_eq!(tiled, info.param_count, "{name} tensors tile P");
             // every model must be interpretable by the native backend
-            LayerGraph::from_model(info).unwrap();
+            ModelPlan::from_model(info).unwrap();
         }
         for (name, a) in &m.artifacts {
             assert!(m.models.contains_key(&a.model), "{name} references model");
@@ -624,12 +774,25 @@ mod tests {
                 let opt = Optim::parse(a.optimizer.as_deref().unwrap()).unwrap();
                 assert_eq!(a.state_size, opt.state_size(a.param_count), "{name}");
             }
+            if a.kind == "infer" {
+                assert_eq!(
+                    m.model(&a.model).unwrap().x_dtype,
+                    Dtype::F32,
+                    "{name}: token models carry no infer artifact (InferStep is f32)"
+                );
+            }
         }
-        // the paper's models match the python lowering exactly
-        // (drift_mlp: fl.dense_entries; CNNs: models.MnistCnn/DrivingCnn)
+        // the paper's models match the python lowering exactly (drift_mlp:
+        // fl.dense_entries; CNNs: models.MnistCnn/DrivingCnn; the LM:
+        // models.TransformerLm at its scaled defaults)
         assert_eq!(m.model("drift_mlp").unwrap().param_count, 5410);
         assert_eq!(m.model("mnist_cnn").unwrap().param_count, 149_418);
         assert_eq!(m.model("driving_cnn").unwrap().param_count, 39_277);
+        assert_eq!(m.model("transformer_lm").unwrap().param_count, 35_680);
+        assert_eq!(m.model("transformer_lm").unwrap().x_dtype, Dtype::I32);
+        assert!(m.artifacts.contains_key("transformer_lm_adam_train"));
+        assert!(m.artifacts.contains_key("transformer_lm_eval"));
+        assert!(!m.artifacts.contains_key("transformer_lm_infer"));
     }
 
     #[test]
@@ -849,6 +1012,67 @@ mod tests {
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("must be f32"), "dtype guidance: {msg}");
-        assert!(msg.contains("backend-xla"), "points at the xla feature: {msg}");
+        assert!(msg.contains("sequence"), "points at the sequence-model path: {msg}");
+    }
+
+    #[test]
+    fn transformer_glorot_init_is_deterministic_with_zero_gains() {
+        let manifest = synthetic_manifest();
+        let backend = NativeBackend;
+        let a = backend.init_params(&manifest, "transformer_lm").unwrap();
+        let b = backend.init_params(&manifest, "transformer_lm").unwrap();
+        assert_eq!(a, b, "same seed, same init");
+        assert_eq!(a.len(), 35_680);
+        // embed (first tensor) bounded by its Glorot limit and nonzero
+        let limit = (6.0f64 / (128.0 + 32.0)).sqrt() as f32;
+        assert!(a[..128 * 32].iter().all(|v| v.abs() <= limit));
+        assert!(a[..128 * 32].iter().any(|v| *v != 0.0));
+        // l0.ln1.g (after embed + pos) starts at zero: 1 + g gain of 1
+        let ln1 = 128 * 32 + 64 * 32;
+        assert!(a[ln1..ln1 + 32].iter().all(|v| *v == 0.0), "LN gains start at 0");
+        // scales strictly positive everywhere (zero-fan entries take the
+        // mean weight std), so eps-heterogeneous init perturbs every slot
+        let s = backend.init_scales(&manifest, "transformer_lm").unwrap();
+        assert!(s.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn transformer_trains_and_evals_natively() {
+        // the headline of this subsystem: the byte-level LM runs full
+        // train + eval steps hermetically — i32 windows in, params moved
+        let rt = crate::runtime::Runtime::native();
+        let exe = rt.load(&Manifest::train_name("transformer_lm", "sgd")).unwrap();
+        let params = rt.init_params("transformer_lm").unwrap();
+        let state = vec![0.0f32; 1];
+        let mut rng = Rng::new(9);
+        let b = 2;
+        let win = 65;
+        let x: Vec<i32> = (0..b * win).map(|_| rng.below(128) as i32).collect();
+        let y = vec![0i32; b];
+        let outs = exe
+            .run(&[
+                Input::F32(&params, &[params.len()]),
+                Input::F32(&state, &[1]),
+                Input::I32(&x, &[b, win]),
+                Input::I32(&y, &[b, 1]),
+                Input::F32(&[0.3], &[]),
+            ])
+            .unwrap();
+        assert_eq!(outs[0].len(), params.len());
+        assert!((outs[2][0] - (128.0f32).ln()).abs() < 0.5, "initial loss ~ln(V): {}", outs[2][0]);
+        assert_ne!(outs[0], params, "params moved");
+        // out-of-vocabulary tokens are rejected, not gathered out of bounds
+        let mut bad = x.clone();
+        bad[3] = 1000;
+        let err = exe
+            .run(&[
+                Input::F32(&params, &[params.len()]),
+                Input::F32(&state, &[1]),
+                Input::I32(&bad, &[b, win]),
+                Input::I32(&y, &[b, 1]),
+                Input::F32(&[0.3], &[]),
+            ])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("vocabulary"), "{err:#}");
     }
 }

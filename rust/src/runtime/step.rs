@@ -34,6 +34,10 @@ pub struct TrainStep {
     pub x_shape: Vec<usize>, // including batch dim
     pub y_shape: Vec<usize>,
     pub x_dtype: Dtype,
+    /// Zero-width-label placeholder for token models (transformer: the
+    /// targets live inside x), built once so steady-state i32 steps
+    /// allocate nothing (`tests/zero_alloc.rs`).
+    dummy_y: Vec<i32>,
 }
 
 /// Result of one local mini-batch step.
@@ -55,11 +59,13 @@ impl TrainStep {
         } else {
             y_shape.extend_from_slice(y_shape_tail);
         }
+        let dummy_y = vec![0i32; y_shape.iter().product()];
         TrainStep {
             exe,
             x_shape,
             y_shape,
             x_dtype,
+            dummy_y,
         }
     }
 
@@ -93,19 +99,16 @@ impl TrainStep {
                 ],
                 ws,
             )?,
-            (Batch::I32 { x }, Dtype::I32) => {
-                let dummy_y = vec![0i32; self.y_shape.iter().product()];
-                self.exe.run_into(
-                    &[
-                        Input::F32(params, &pshape),
-                        Input::F32(opt_state, &sshape),
-                        Input::I32(x, &self.x_shape),
-                        Input::I32(&dummy_y, &self.y_shape),
-                        Input::F32(&lr_slice, &[]),
-                    ],
-                    ws,
-                )?
-            }
+            (Batch::I32 { x }, Dtype::I32) => self.exe.run_into(
+                &[
+                    Input::F32(params, &pshape),
+                    Input::F32(opt_state, &sshape),
+                    Input::I32(x, &self.x_shape),
+                    Input::I32(&self.dummy_y, &self.y_shape),
+                    Input::F32(&lr_slice, &[]),
+                ],
+                ws,
+            )?,
             _ => anyhow::bail!("batch dtype does not match artifact"),
         };
         anyhow::ensure!(ws.outputs.len() == 4, "train artifact must return 4 outputs");
@@ -130,6 +133,8 @@ pub struct EvalStep {
     pub x_shape: Vec<usize>,
     pub y_shape: Vec<usize>,
     pub x_dtype: Dtype,
+    /// See [`TrainStep`]: reusable zero-width-label placeholder.
+    dummy_y: Vec<i32>,
 }
 
 impl EvalStep {
@@ -143,11 +148,13 @@ impl EvalStep {
         } else {
             y_shape.extend_from_slice(y_shape_tail);
         }
+        let dummy_y = vec![0i32; y_shape.iter().product()];
         EvalStep {
             exe,
             x_shape,
             y_shape,
             x_dtype,
+            dummy_y,
         }
     }
 
@@ -167,17 +174,14 @@ impl EvalStep {
                 ],
                 ws,
             )?,
-            (Batch::I32 { x }, Dtype::I32) => {
-                let dummy_y = vec![0i32; self.y_shape.iter().product()];
-                self.exe.run_into(
-                    &[
-                        Input::F32(params, &pshape),
-                        Input::I32(x, &self.x_shape),
-                        Input::I32(&dummy_y, &self.y_shape),
-                    ],
-                    ws,
-                )?
-            }
+            (Batch::I32 { x }, Dtype::I32) => self.exe.run_into(
+                &[
+                    Input::F32(params, &pshape),
+                    Input::I32(x, &self.x_shape),
+                    Input::I32(&self.dummy_y, &self.y_shape),
+                ],
+                ws,
+            )?,
             _ => anyhow::bail!("batch dtype does not match artifact"),
         };
         anyhow::ensure!(ws.outputs.len() == 2, "eval artifact must return 2 outputs");

@@ -1,0 +1,869 @@
+//! Attention-subsystem kernels: everything a pre-norm causal transformer
+//! needs beyond the GEMM family — token-embedding gather with scatter-add
+//! backward, LayerNorm with `1 + g` gain, causal row softmax, per-head
+//! scaled-dot-product attention (forward, and a FlashAttention-style
+//! backward that *recomputes* the probabilities instead of storing every
+//! layer's score matrix — the same choice `python/compile/kernels/
+//! attention.py` makes in its custom VJP), head split/merge layout moves,
+//! and softmax cross-entropy over the vocabulary with integer targets.
+//!
+//! Every kernel writes into caller slices (the [`Scratch`] arena slots the
+//! `SeqGraph` plan sizes at compile time — zero allocations on the hot
+//! path) and the compute-heavy ones take a [`Par`] scheduling mode. The
+//! determinism contract matches the conv/matmul kernels: tiles own
+//! **disjoint output elements** and every element's accumulation order is
+//! fixed (rows ascending, lanes ascending), so serial, scoped-spawn and
+//! worker-pool schedules are bitwise identical at any thread count:
+//!
+//! - embedding gather / LayerNorm / causal softmax partition by *row*
+//!   (each output row depends on one input row);
+//! - attention partitions by *(batch, head) cell* — a cell's score tile,
+//!   probability tile and output tile are private to its tile closure;
+//! - the embedding **scatter-add** backward partitions by *output-row
+//!   ownership* (vocabulary rows for `dEmbed`, position rows for `dPos`):
+//!   every tile scans the token stream in ascending position order and
+//!   accumulates only the rows it owns, which is exactly the serial
+//!   per-element order;
+//! - the per-head `QKᵀ` / `P·V` products go through the scalar kernels of
+//!   `matmul.rs` (a cell is the parallel unit; its tiles stay serial).
+//!
+//! Cross-row reductions (LN gain gradient, loss) stay serial, like the
+//! dense bias gradients (`matmul::add_col_sums`) always have.
+//!
+//! The FFN activation is whatever the manifest declares (`relu` for
+//! `transformer_lm`, mirroring `python/compile/models.py`) — it reuses
+//! [`Act`](super::graph::Act), so the backward runs through the same
+//! post-activation association the python VJPs use.
+
+use super::super::pool::{Par, SendPtr};
+use super::matmul;
+
+/// LayerNorm variance epsilon (matches `jnp.sqrt(var + 1e-5)` in
+/// `python/compile/models.py::TransformerLm._ln`).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Spawn-amortization floors for the bandwidth-bound row sweeps (gather,
+/// LayerNorm), in touched elements — the same scale as the im2col floors
+/// in `conv.rs`. Floors never change results (tiled == serial bitwise);
+/// the `_t` variants bypass them so unit tests run real tiles.
+const TILE_MIN_ELEMS: usize = 1 << 18;
+const POOL_MIN_ELEMS: usize = 1 << 15;
+
+#[inline]
+fn sweep_tile_threads(elems: usize, par: Par) -> usize {
+    par.tile_count(elems, TILE_MIN_ELEMS, POOL_MIN_ELEMS)
+}
+
+// ---------------------------------------------------------------- embedding
+
+/// Forward embedding: `out[(bi·s + si), :] = embed[token] + pos[si]` for
+/// the first `s` tokens of each `win`-token window (`tokens: [b, win]`,
+/// `win > s` — the trailing tokens are next-byte targets, not inputs).
+/// Callers validate token range; rows are tiled by ownership.
+pub fn embed_fwd(
+    embed: &[f32],
+    pos: &[f32],
+    tokens: &[i32],
+    win: usize,
+    out: &mut [f32],
+    b: usize,
+    s: usize,
+    d: usize,
+    par: Par,
+) {
+    embed_fwd_t(embed, pos, tokens, win, out, b, s, d, par, sweep_tile_threads(b * s * d, par))
+}
+
+fn embed_fwd_t(
+    embed: &[f32],
+    pos: &[f32],
+    tokens: &[i32],
+    win: usize,
+    out: &mut [f32],
+    b: usize,
+    s: usize,
+    d: usize,
+    par: Par,
+    t: usize,
+) {
+    debug_assert!(win >= s);
+    debug_assert_eq!(tokens.len(), b * win);
+    debug_assert_eq!(out.len(), b * s * d);
+    debug_assert!(pos.len() >= s * d);
+    let rows = b * s;
+    let t = t.min(rows).max(1);
+    let chunk = rows.div_ceil(t);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    par.run(t, |ti| {
+        let r0 = ti * chunk;
+        let r1 = rows.min(r0 + chunk);
+        if r0 >= r1 {
+            return;
+        }
+        // SAFETY: tiles own the disjoint row ranges [r0, r1) of `out`,
+        // and `par.run` returns before the `out` borrow ends.
+        let tile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r0 * d), (r1 - r0) * d) };
+        for (dr, row) in tile.chunks_exact_mut(d).enumerate() {
+            let r = r0 + dr;
+            let (bi, si) = (r / s, r % s);
+            let tok = tokens[bi * win + si] as usize;
+            let e = &embed[tok * d..(tok + 1) * d];
+            let p = &pos[si * d..(si + 1) * d];
+            for (o, (&ev, &pv)) in row.iter_mut().zip(e.iter().zip(p)) {
+                *o = ev + pv;
+            }
+        }
+    });
+}
+
+/// Backward embedding scatter-add: `d_embed[token] += delta[row]` and
+/// `d_pos[si] += delta[row]`, accumulated in ascending row (= position)
+/// order. Tiles own disjoint *output* rows — a vocabulary-row range of
+/// `d_embed` and a position-row range of `d_pos` — and each scans the
+/// token stream front to back, so the per-element accumulation order is
+/// the serial one regardless of tiling (the scatter-add analogue of the
+/// col2im ownership partition in `conv.rs`).
+pub fn embed_bwd(
+    delta: &[f32],
+    tokens: &[i32],
+    win: usize,
+    d_embed: &mut [f32],
+    d_pos: &mut [f32],
+    b: usize,
+    s: usize,
+    d: usize,
+    v: usize,
+    par: Par,
+) {
+    embed_bwd_t(delta, tokens, win, d_embed, d_pos, b, s, d, v, par, sweep_tile_threads(b * s * d, par))
+}
+
+fn embed_bwd_t(
+    delta: &[f32],
+    tokens: &[i32],
+    win: usize,
+    d_embed: &mut [f32],
+    d_pos: &mut [f32],
+    b: usize,
+    s: usize,
+    d: usize,
+    v: usize,
+    par: Par,
+    t: usize,
+) {
+    debug_assert_eq!(delta.len(), b * s * d);
+    debug_assert_eq!(d_embed.len(), v * d);
+    debug_assert!(d_pos.len() >= s * d);
+    let t = t.min(v.max(s)).max(1);
+    if t <= 1 {
+        for (r, drow) in delta.chunks_exact(d).enumerate() {
+            let (bi, si) = (r / s, r % s);
+            let tok = tokens[bi * win + si] as usize;
+            let erow = &mut d_embed[tok * d..(tok + 1) * d];
+            for (o, &g) in erow.iter_mut().zip(drow) {
+                *o += g;
+            }
+            let prow = &mut d_pos[si * d..(si + 1) * d];
+            for (o, &g) in prow.iter_mut().zip(drow) {
+                *o += g;
+            }
+        }
+        return;
+    }
+    let (vchunk, pchunk) = (v.div_ceil(t), s.div_ceil(t));
+    let e_ptr = SendPtr(d_embed.as_mut_ptr());
+    let p_ptr = SendPtr(d_pos.as_mut_ptr());
+    par.run(t, |ti| {
+        // clamp both range starts: with chunk = ceil(total/t) a high tile
+        // index can start past the end of one range while still owning
+        // rows of the other (e.g. more tiles than vocab rows)
+        let (v0, v1) = ((ti * vchunk).min(v), v.min(ti * vchunk + vchunk));
+        let (p0, p1) = ((ti * pchunk).min(s), s.min(ti * pchunk + pchunk));
+        if v0 >= v1 && p0 >= p1 {
+            return;
+        }
+        // SAFETY: tile `ti` owns vocabulary rows [v0, v1) of `d_embed` and
+        // position rows [p0, p1) of `d_pos` exclusively (possibly empty —
+        // a zero-length slice at the one-past-end offset is valid);
+        // `par.run` returns before either &mut borrow ends.
+        let etile = unsafe { std::slice::from_raw_parts_mut(e_ptr.0.add(v0 * d), (v1 - v0) * d) };
+        let ptile = unsafe { std::slice::from_raw_parts_mut(p_ptr.0.add(p0 * d), (p1 - p0) * d) };
+        for (r, drow) in delta.chunks_exact(d).enumerate() {
+            let (bi, si) = (r / s, r % s);
+            let tok = tokens[bi * win + si] as usize;
+            if tok >= v0 && tok < v1 {
+                let erow = &mut etile[(tok - v0) * d..(tok - v0 + 1) * d];
+                for (o, &g) in erow.iter_mut().zip(drow) {
+                    *o += g;
+                }
+            }
+            if si >= p0 && si < p1 {
+                let prow = &mut ptile[(si - p0) * d..(si - p0 + 1) * d];
+                for (o, &g) in prow.iter_mut().zip(drow) {
+                    *o += g;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------- layernorm
+
+/// Pre-norm LayerNorm forward over `m` rows of width `d`:
+/// `out = (x - mu) · rstd · (1 + g)` with `rstd = 1/sqrt(var + eps)` and
+/// biased variance (the `jnp.var` default). Writes `(mu, rstd)` per row
+/// into `stats` (`2·m`) for the backward pass. Row-tiled.
+pub fn layernorm_fwd(x: &[f32], g: &[f32], out: &mut [f32], stats: &mut [f32], m: usize, d: usize, par: Par) {
+    layernorm_fwd_t(x, g, out, stats, m, d, par, sweep_tile_threads(m * d, par))
+}
+
+fn layernorm_fwd_t(x: &[f32], g: &[f32], out: &mut [f32], stats: &mut [f32], m: usize, d: usize, par: Par, t: usize) {
+    debug_assert_eq!(x.len(), m * d);
+    debug_assert_eq!(out.len(), m * d);
+    debug_assert_eq!(g.len(), d);
+    debug_assert_eq!(stats.len(), 2 * m);
+    let t = t.min(m).max(1);
+    let chunk = m.div_ceil(t);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let st_ptr = SendPtr(stats.as_mut_ptr());
+    par.run(t, |ti| {
+        let r0 = ti * chunk;
+        let r1 = m.min(r0 + chunk);
+        if r0 >= r1 {
+            return;
+        }
+        // SAFETY: tiles own the disjoint row ranges [r0, r1) of `out` and
+        // `stats`; `par.run` returns before the &mut borrows end.
+        let otile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r0 * d), (r1 - r0) * d) };
+        let stile = unsafe { std::slice::from_raw_parts_mut(st_ptr.0.add(2 * r0), 2 * (r1 - r0)) };
+        for (dr, orow) in otile.chunks_exact_mut(d).enumerate() {
+            let xrow = &x[(r0 + dr) * d..(r0 + dr + 1) * d];
+            let mut sum = 0.0f32;
+            for &xv in xrow {
+                sum += xv;
+            }
+            let mu = sum / d as f32;
+            let mut var = 0.0f32;
+            for &xv in xrow {
+                let c = xv - mu;
+                var += c * c;
+            }
+            var /= d as f32;
+            let rstd = 1.0 / (var + LN_EPS).sqrt();
+            stile[2 * dr] = mu;
+            stile[2 * dr + 1] = rstd;
+            for ((o, &xv), &gv) in orow.iter_mut().zip(xrow).zip(g) {
+                *o = (xv - mu) * rstd * (1.0 + gv);
+            }
+        }
+    });
+}
+
+/// LayerNorm input gradient from the saved `(mu, rstd)` stats:
+/// with `xhat = (x - mu)·rstd` and `dxh = delta·(1 + g)`,
+/// `dx = rstd · (dxh - mean(dxh) - xhat · mean(dxh · xhat))`. Row-tiled.
+pub fn layernorm_bwd(delta: &[f32], x: &[f32], g: &[f32], stats: &[f32], dx: &mut [f32], m: usize, d: usize, par: Par) {
+    layernorm_bwd_t(delta, x, g, stats, dx, m, d, par, sweep_tile_threads(m * d, par))
+}
+
+fn layernorm_bwd_t(
+    delta: &[f32],
+    x: &[f32],
+    g: &[f32],
+    stats: &[f32],
+    dx: &mut [f32],
+    m: usize,
+    d: usize,
+    par: Par,
+    t: usize,
+) {
+    debug_assert_eq!(delta.len(), m * d);
+    debug_assert_eq!(x.len(), m * d);
+    debug_assert_eq!(dx.len(), m * d);
+    debug_assert_eq!(stats.len(), 2 * m);
+    let t = t.min(m).max(1);
+    let chunk = m.div_ceil(t);
+    let dx_ptr = SendPtr(dx.as_mut_ptr());
+    par.run(t, |ti| {
+        let r0 = ti * chunk;
+        let r1 = m.min(r0 + chunk);
+        if r0 >= r1 {
+            return;
+        }
+        // SAFETY: tiles own the disjoint row ranges [r0, r1) of `dx`;
+        // `par.run` returns before the `dx` borrow ends.
+        let tile = unsafe { std::slice::from_raw_parts_mut(dx_ptr.0.add(r0 * d), (r1 - r0) * d) };
+        for (dr, orow) in tile.chunks_exact_mut(d).enumerate() {
+            let r = r0 + dr;
+            let xrow = &x[r * d..(r + 1) * d];
+            let drow = &delta[r * d..(r + 1) * d];
+            let (mu, rstd) = (stats[2 * r], stats[2 * r + 1]);
+            let mut a = 0.0f32; // mean(dxh)
+            let mut bsum = 0.0f32; // mean(dxh · xhat)
+            for ((&dv, &xv), &gv) in drow.iter().zip(xrow).zip(g) {
+                let dxh = dv * (1.0 + gv);
+                a += dxh;
+                bsum += dxh * ((xv - mu) * rstd);
+            }
+            a /= d as f32;
+            bsum /= d as f32;
+            for (((o, &dv), &xv), &gv) in orow.iter_mut().zip(drow).zip(xrow).zip(g) {
+                let xhat = (xv - mu) * rstd;
+                let dxh = dv * (1.0 + gv);
+                *o = rstd * (dxh - a - xhat * bsum);
+            }
+        }
+    });
+}
+
+/// LayerNorm gain gradient `dg[j] += Σ_rows delta[r,j] · xhat[r,j]` —
+/// a cross-row column reduction, kept serial like the dense bias
+/// gradients (`matmul::add_col_sums`).
+pub fn layernorm_gain_grad(delta: &[f32], x: &[f32], stats: &[f32], dg: &mut [f32], m: usize, d: usize) {
+    debug_assert_eq!(delta.len(), m * d);
+    debug_assert_eq!(x.len(), m * d);
+    debug_assert_eq!(dg.len(), d);
+    debug_assert_eq!(stats.len(), 2 * m);
+    for r in 0..m {
+        let (mu, rstd) = (stats[2 * r], stats[2 * r + 1]);
+        let xrow = &x[r * d..(r + 1) * d];
+        let drow = &delta[r * d..(r + 1) * d];
+        for ((o, &dv), &xv) in dg.iter_mut().zip(drow).zip(xrow) {
+            *o += dv * ((xv - mu) * rstd);
+        }
+    }
+}
+
+// ----------------------------------------------------------- causal softmax
+
+/// Row softmax over an `[s, s]` score tile with the causal mask: row `i`
+/// normalizes over columns `0..=i` (max-subtracted), columns `> i` are
+/// zeroed — the same probabilities as masking with -1e30 before the
+/// softmax (those entries underflow to exactly 0), which is what the
+/// python Pallas kernel does.
+pub fn causal_softmax(scores: &mut [f32], s: usize) {
+    debug_assert_eq!(scores.len(), s * s);
+    for (i, row) in scores.chunks_exact_mut(s).enumerate() {
+        let (live, dead) = row.split_at_mut(i + 1);
+        let max = live.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f32;
+        for x in live.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in live.iter_mut() {
+            *x *= inv;
+        }
+        dead.fill(0.0);
+    }
+}
+
+// ---------------------------------------------------------------- attention
+
+/// Head-block layout helpers: `heads` buffers hold Q | K | V as three
+/// consecutive `[b·h, s, hd]` blocks (one contiguous `[s, hd]` tile per
+/// (batch, head) cell — the shape the per-cell GEMMs stream).
+#[inline]
+fn cell(buf: &[f32], part: usize, bh: usize, c: usize, s: usize, hd: usize) -> &[f32] {
+    let off = (part * bh + c) * s * hd;
+    &buf[off..off + s * hd]
+}
+
+/// One (batch, head) attention cell, forward: `P = softmax(mask(QKᵀ ·
+/// rscale))` into `probs`, `O = P·V` into `o`. Factored out so forward
+/// and the backward recompute share the exact accumulation order.
+fn attn_cell_fwd(q: &[f32], k: &[f32], probs: &mut [f32], s: usize, hd: usize, rscale: f32) {
+    matmul::matmul_a_bt(q, k, probs, s, hd, s);
+    for p in probs.iter_mut() {
+        *p *= rscale;
+    }
+    causal_softmax(probs, s);
+}
+
+/// Multi-head causal SDPA forward over head-layout buffers:
+/// `heads = [Q | K | V]` (`3·b·h·s·hd`), probabilities land in `probs`
+/// (`b·h·s·s`, kept for nothing — backward recomputes them — but written
+/// through the caller's arena slot so the cell needs no local buffer),
+/// outputs in `o_heads` (`b·h·s·hd`). Cells are the tile unit.
+pub fn attention_fwd(
+    heads: &[f32],
+    probs: &mut [f32],
+    o_heads: &mut [f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    hd: usize,
+    par: Par,
+) {
+    let macs = b * h * 2 * s * s * hd;
+    let t = par.tile_count(macs, matmul::TILE_MIN_MACS, matmul::POOL_MIN_MACS);
+    attention_fwd_t(heads, probs, o_heads, b, h, s, hd, par, t)
+}
+
+fn attention_fwd_t(
+    heads: &[f32],
+    probs: &mut [f32],
+    o_heads: &mut [f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    hd: usize,
+    par: Par,
+    t: usize,
+) {
+    let bh = b * h;
+    debug_assert_eq!(heads.len(), 3 * bh * s * hd);
+    debug_assert_eq!(probs.len(), bh * s * s);
+    debug_assert_eq!(o_heads.len(), bh * s * hd);
+    let t = t.min(bh).max(1);
+    let chunk = bh.div_ceil(t);
+    let rscale = 1.0 / (hd as f32).sqrt();
+    let p_ptr = SendPtr(probs.as_mut_ptr());
+    let o_ptr = SendPtr(o_heads.as_mut_ptr());
+    par.run(t, |ti| {
+        let c0 = ti * chunk;
+        let c1 = bh.min(c0 + chunk);
+        for c in c0..c1 {
+            // SAFETY: cell `c` owns probs[c·s·s ..] and o_heads[c·s·hd ..]
+            // exclusively (cells partition both buffers); `par.run`
+            // returns before the &mut borrows end.
+            let p = unsafe { std::slice::from_raw_parts_mut(p_ptr.0.add(c * s * s), s * s) };
+            let o = unsafe { std::slice::from_raw_parts_mut(o_ptr.0.add(c * s * hd), s * hd) };
+            attn_cell_fwd(cell(heads, 0, bh, c, s, hd), cell(heads, 1, bh, c, s, hd), p, s, hd, rscale);
+            matmul::matmul(p, cell(heads, 2, bh, c, s, hd), o, s, s, hd);
+        }
+    });
+}
+
+/// Multi-head causal SDPA backward, recomputing the probabilities per
+/// cell (FlashAttention-style — no per-layer score storage): given the
+/// head-layout output gradient `d_o_heads`, writes `[dQ | dK | dV]` into
+/// `d_heads` (`3·b·h·s·hd`). `probs`/`dprobs` are `b·h·s·s` arena slots
+/// (P and dP are live simultaneously inside the softmax Jacobian).
+/// Same cell partition — and the same per-element order — as forward.
+pub fn attention_bwd(
+    heads: &[f32],
+    d_o_heads: &[f32],
+    probs: &mut [f32],
+    dprobs: &mut [f32],
+    d_heads: &mut [f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    hd: usize,
+    par: Par,
+) {
+    // 5 GEMM-shaped products per cell (recomputed QKᵀ, dP, dV, dQ, dK)
+    let macs = b * h * 5 * s * s * hd;
+    let t = par.tile_count(macs, matmul::TILE_MIN_MACS, matmul::POOL_MIN_MACS);
+    attention_bwd_t(heads, d_o_heads, probs, dprobs, d_heads, b, h, s, hd, par, t)
+}
+
+fn attention_bwd_t(
+    heads: &[f32],
+    d_o_heads: &[f32],
+    probs: &mut [f32],
+    dprobs: &mut [f32],
+    d_heads: &mut [f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    hd: usize,
+    par: Par,
+    t: usize,
+) {
+    let bh = b * h;
+    debug_assert_eq!(heads.len(), 3 * bh * s * hd);
+    debug_assert_eq!(d_o_heads.len(), bh * s * hd);
+    debug_assert_eq!(probs.len(), bh * s * s);
+    debug_assert_eq!(dprobs.len(), bh * s * s);
+    debug_assert_eq!(d_heads.len(), 3 * bh * s * hd);
+    let t = t.min(bh).max(1);
+    let chunk = bh.div_ceil(t);
+    let rscale = 1.0 / (hd as f32).sqrt();
+    let p_ptr = SendPtr(probs.as_mut_ptr());
+    let dp_ptr = SendPtr(dprobs.as_mut_ptr());
+    let dh_ptr = SendPtr(d_heads.as_mut_ptr());
+    par.run(t, |ti| {
+        let c0 = ti * chunk;
+        let c1 = bh.min(c0 + chunk);
+        for c in c0..c1 {
+            let (q, k, v) = (
+                cell(heads, 0, bh, c, s, hd),
+                cell(heads, 1, bh, c, s, hd),
+                cell(heads, 2, bh, c, s, hd),
+            );
+            let go = &d_o_heads[c * s * hd..(c + 1) * s * hd];
+            // SAFETY: cell `c` owns its probs/dprobs tiles and the dQ/dK/dV
+            // rows at (part·bh + c)·s·hd exclusively — cells partition all
+            // three buffers — and `par.run` returns before the borrows end.
+            let p = unsafe { std::slice::from_raw_parts_mut(p_ptr.0.add(c * s * s), s * s) };
+            let dp = unsafe { std::slice::from_raw_parts_mut(dp_ptr.0.add(c * s * s), s * s) };
+            let dq = unsafe { std::slice::from_raw_parts_mut(dh_ptr.0.add(c * s * hd), s * hd) };
+            let dk = unsafe { std::slice::from_raw_parts_mut(dh_ptr.0.add((bh + c) * s * hd), s * hd) };
+            let dv = unsafe { std::slice::from_raw_parts_mut(dh_ptr.0.add((2 * bh + c) * s * hd), s * hd) };
+            attn_cell_fwd(q, k, p, s, hd, rscale); // rematerialize P
+            matmul::matmul_a_bt(go, v, dp, s, hd, s); // dP = dO · Vᵀ
+            dv.fill(0.0);
+            matmul::matmul_at_b_acc(p, go, dv, s, s, hd); // dV = Pᵀ · dO
+            // softmax Jacobian, the scale folded in: dS = P ⊙ (dP - Σ dP⊙P) · rscale
+            for (prow, dprow) in p.chunks_exact(s).zip(dp.chunks_exact_mut(s)) {
+                let mut dot = 0.0f32;
+                for (&pv, &dpv) in prow.iter().zip(dprow.iter()) {
+                    dot += pv * dpv;
+                }
+                for (&pv, dpv) in prow.iter().zip(dprow.iter_mut()) {
+                    *dpv = pv * (*dpv - dot) * rscale;
+                }
+            }
+            matmul::matmul(dp, k, dq, s, s, hd); // dQ = dS · K
+            dk.fill(0.0);
+            matmul::matmul_at_b_acc(dp, q, dk, s, s, hd); // dK = dSᵀ · Q
+        }
+    });
+}
+
+// ------------------------------------------------------------ layout moves
+//
+// Pure data movement between the token-major `[b·s, d]` activations the
+// dense GEMMs stream and the `[b·h, s, hd]` head blocks the attention
+// cells stream. O(b·s·d) copies — serial, like the other cheap
+// reductions; order is irrelevant (no accumulation).
+
+/// Split a `[b·s, 3d]` QKV activation into the `[Q | K | V]` head blocks.
+pub fn split_qkv_heads(qkv: &[f32], heads: &mut [f32], b: usize, h: usize, s: usize, hd: usize) {
+    let d = h * hd;
+    let bh = b * h;
+    debug_assert_eq!(qkv.len(), b * s * 3 * d);
+    debug_assert_eq!(heads.len(), 3 * bh * s * hd);
+    for (r, row) in qkv.chunks_exact(3 * d).enumerate() {
+        let (bi, si) = (r / s, r % s);
+        for hi in 0..h {
+            for part in 0..3 {
+                let src = &row[part * d + hi * hd..part * d + (hi + 1) * hd];
+                let off = (part * bh + (bi * h + hi)) * s * hd + si * hd;
+                heads[off..off + hd].copy_from_slice(src);
+            }
+        }
+    }
+}
+
+/// Merge `[dQ | dK | dV]` head blocks back into a `[b·s, 3d]` gradient.
+pub fn merge_qkv_heads(d_heads: &[f32], dqkv: &mut [f32], b: usize, h: usize, s: usize, hd: usize) {
+    let d = h * hd;
+    let bh = b * h;
+    debug_assert_eq!(d_heads.len(), 3 * bh * s * hd);
+    debug_assert_eq!(dqkv.len(), b * s * 3 * d);
+    for (r, row) in dqkv.chunks_exact_mut(3 * d).enumerate() {
+        let (bi, si) = (r / s, r % s);
+        for hi in 0..h {
+            for part in 0..3 {
+                let off = (part * bh + (bi * h + hi)) * s * hd + si * hd;
+                row[part * d + hi * hd..part * d + (hi + 1) * hd].copy_from_slice(&d_heads[off..off + hd]);
+            }
+        }
+    }
+}
+
+/// Split a token-major `[b·s, d]` activation into `[b·h, s, hd]` blocks
+/// (used for the attention output gradient `dO`).
+pub fn split_heads(x: &[f32], heads: &mut [f32], b: usize, h: usize, s: usize, hd: usize) {
+    let d = h * hd;
+    debug_assert_eq!(x.len(), b * s * d);
+    debug_assert_eq!(heads.len(), b * h * s * hd);
+    for (r, row) in x.chunks_exact(d).enumerate() {
+        let (bi, si) = (r / s, r % s);
+        for hi in 0..h {
+            let off = ((bi * h + hi) * s + si) * hd;
+            heads[off..off + hd].copy_from_slice(&row[hi * hd..(hi + 1) * hd]);
+        }
+    }
+}
+
+/// Merge `[b·h, s, hd]` head blocks into a token-major `[b·s, d]` output.
+pub fn merge_heads(heads: &[f32], out: &mut [f32], b: usize, h: usize, s: usize, hd: usize) {
+    let d = h * hd;
+    debug_assert_eq!(heads.len(), b * h * s * hd);
+    debug_assert_eq!(out.len(), b * s * d);
+    for (r, row) in out.chunks_exact_mut(d).enumerate() {
+        let (bi, si) = (r / s, r % s);
+        for hi in 0..h {
+            let off = ((bi * h + hi) * s + si) * hd;
+            row[hi * hd..(hi + 1) * hd].copy_from_slice(&heads[off..off + hd]);
+        }
+    }
+}
+
+// --------------------------------------------------------------- token loss
+
+/// Softmax cross-entropy over the vocabulary with integer next-token
+/// targets: row `(bi, si)` of `logits: [b·s, v]` is scored against
+/// `tokens[bi·win + si + 1]`. Returns `(mean NLL, accuracy)` and writes
+/// `dLoss/dLogits = (softmax - onehot) / (b·s)` into `delta`
+/// (pre-sized `b·s·v`, every element overwritten). Serial: the loss is a
+/// cross-row reduction and the volume is tiny next to the GEMMs.
+pub fn xent_tokens(
+    logits: &[f32],
+    tokens: &[i32],
+    win: usize,
+    delta: &mut [f32],
+    b: usize,
+    s: usize,
+    v: usize,
+) -> (f32, f32) {
+    debug_assert_eq!(logits.len(), b * s * v);
+    debug_assert_eq!(delta.len(), b * s * v);
+    debug_assert!(win > s, "windows carry s inputs + next-byte targets");
+    let n = b * s;
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for r in 0..n {
+        let (bi, si) = (r / s, r % s);
+        let tgt = tokens[bi * win + si + 1] as usize;
+        let row = &logits[r * v..(r + 1) * v];
+        let drow = &mut delta[r * v..(r + 1) * v];
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+        let mut sum = 0.0f32;
+        for &x in row {
+            sum += (x - max).exp();
+        }
+        let lse = max + sum.ln();
+        loss -= f64::from(row[tgt] - lse);
+        for (j, (o, &x)) in drow.iter_mut().zip(row).enumerate() {
+            *o = ((x - lse).exp() - if j == tgt { 1.0 } else { 0.0 }) / n as f32;
+        }
+        let amax = row
+            .iter()
+            .enumerate()
+            .fold((0usize, f32::NEG_INFINITY), |best, (j, &x)| if x > best.1 { (j, x) } else { best })
+            .0;
+        if amax == tgt {
+            correct += 1;
+        }
+    }
+    ((loss / n as f64) as f32, correct as f32 / n as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::pool::WorkerPool;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows_and_applies_gain() {
+        let mut rng = Rng::new(1);
+        let (m, d) = (5, 16);
+        let x = rand_vec(&mut rng, m * d);
+        let mut g = vec![0.0f32; d];
+        let mut out = vec![f32::NAN; m * d];
+        let mut stats = vec![f32::NAN; 2 * m];
+        layernorm_fwd(&x, &g, &mut out, &mut stats, m, d, Par::Serial);
+        for row in out.chunks_exact(d) {
+            let mean: f32 = row.iter().sum::<f32>() / d as f32;
+            let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            assert!(mean.abs() < 1e-5, "zero mean, got {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "unit variance, got {var}");
+        }
+        // gain scales the normalized rows: g = 1 doubles them (1 + g = 2)
+        g.fill(1.0);
+        let mut out2 = vec![f32::NAN; m * d];
+        layernorm_fwd(&x, &g, &mut out2, &mut stats, m, d, Par::Serial);
+        for (&a, &b) in out.iter().zip(&out2) {
+            assert!((2.0 * a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn causal_softmax_rows_are_probabilities_with_zero_future() {
+        let mut rng = Rng::new(2);
+        let s = 7;
+        let mut sc = rand_vec(&mut rng, s * s);
+        causal_softmax(&mut sc, s);
+        for (i, row) in sc.chunks_exact(s).enumerate() {
+            let sum: f32 = row[..=i].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} sums to {sum}");
+            assert!(row[..=i].iter().all(|&p| p >= 0.0));
+            assert!(row[i + 1..].iter().all(|&p| p == 0.0), "future masked in row {i}");
+        }
+    }
+
+    #[test]
+    fn embed_gather_and_scatter_are_adjoint() {
+        // <embed_fwd(E, 0, tok), delta> == <E, embed_bwd(delta, tok)> — the
+        // gather/scatter pair must be exact transposes of each other
+        let mut rng = Rng::new(3);
+        let (b, s, d, v, win) = (3, 4, 5, 11, 5);
+        let embed = rand_vec(&mut rng, v * d);
+        let pos = vec![0.0f32; s * d];
+        let tokens: Vec<i32> = (0..b * win).map(|_| rng.below(v) as i32).collect();
+        let delta = rand_vec(&mut rng, b * s * d);
+        let mut out = vec![f32::NAN; b * s * d];
+        embed_fwd(&embed, &pos, &tokens, win, &mut out, b, s, d, Par::Serial);
+        let lhs: f64 = out.iter().zip(&delta).map(|(&o, &g)| f64::from(o) * f64::from(g)).sum();
+        let mut de = vec![0.0f32; v * d];
+        let mut dp = vec![0.0f32; s * d];
+        embed_bwd(&delta, &tokens, win, &mut de, &mut dp, b, s, d, v, Par::Serial);
+        let rhs: f64 = de.iter().zip(&embed).map(|(&a, &e)| f64::from(a) * f64::from(e)).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+        // position gradient sums the batch: every pos row touched b times
+        assert!(dp.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn head_split_merge_roundtrip() {
+        let mut rng = Rng::new(4);
+        let (b, h, s, hd) = (2, 3, 5, 4);
+        let d = h * hd;
+        let qkv = rand_vec(&mut rng, b * s * 3 * d);
+        let mut heads = vec![f32::NAN; 3 * b * h * s * hd];
+        split_qkv_heads(&qkv, &mut heads, b, h, s, hd);
+        let mut back = vec![f32::NAN; b * s * 3 * d];
+        merge_qkv_heads(&heads, &mut back, b, h, s, hd);
+        assert_eq!(qkv, back);
+        let x = rand_vec(&mut rng, b * s * d);
+        let mut hx = vec![f32::NAN; b * h * s * hd];
+        split_heads(&x, &mut hx, b, h, s, hd);
+        let mut xb = vec![f32::NAN; b * s * d];
+        merge_heads(&hx, &mut xb, b, h, s, hd);
+        assert_eq!(x, xb);
+    }
+
+    #[test]
+    fn attention_output_ignores_future_tokens() {
+        // causal property end-to-end: perturbing V at position s-1 must not
+        // change outputs at earlier positions
+        let mut rng = Rng::new(5);
+        let (b, h, s, hd) = (1, 2, 6, 4);
+        let bh = b * h;
+        let mut heads = rand_vec(&mut rng, 3 * bh * s * hd);
+        let mut probs = vec![f32::NAN; bh * s * s];
+        let mut o1 = vec![f32::NAN; bh * s * hd];
+        attention_fwd(&heads, &mut probs, &mut o1, b, h, s, hd, Par::Serial);
+        for c in 0..bh {
+            let v_last = (2 * bh + c) * s * hd + (s - 1) * hd;
+            for j in 0..hd {
+                heads[v_last + j] += 10.0;
+            }
+        }
+        let mut o2 = vec![f32::NAN; bh * s * hd];
+        attention_fwd(&heads, &mut probs, &mut o2, b, h, s, hd, Par::Serial);
+        for c in 0..bh {
+            let cell1 = &o1[c * s * hd..(c + 1) * s * hd];
+            let cell2 = &o2[c * s * hd..(c + 1) * s * hd];
+            assert_eq!(cell1[..(s - 1) * hd], cell2[..(s - 1) * hd], "past positions unchanged");
+            assert_ne!(cell1[(s - 1) * hd..], cell2[(s - 1) * hd..], "last position sees V change");
+        }
+    }
+
+    #[test]
+    fn uniform_scores_attend_uniformly_over_the_past() {
+        // Q ⟂ K (zero scores) => row i averages V[0..=i]
+        let (b, h, s, hd) = (1, 1, 4, 2);
+        let mut heads = vec![0.0f32; 3 * s * hd];
+        for i in 0..s {
+            heads[2 * s * hd + i * hd] = i as f32; // V[i] = (i, 0)
+        }
+        let mut probs = vec![f32::NAN; s * s];
+        let mut o = vec![f32::NAN; s * hd];
+        attention_fwd(&heads, &mut probs, &mut o, b, h, s, hd, Par::Serial);
+        for i in 0..s {
+            let want = (0..=i).map(|j| j as f32).sum::<f32>() / (i + 1) as f32;
+            assert!((o[i * hd] - want).abs() < 1e-6, "row {i}: {} vs {want}", o[i * hd]);
+        }
+    }
+
+    #[test]
+    fn xent_gradient_rows_sum_to_zero_and_loss_matches_uniform() {
+        let (b, s, v, win) = (2, 3, 5, 4);
+        let logits = vec![0.0f32; b * s * v];
+        let tokens: Vec<i32> = (0..b * win).map(|i| (i % v) as i32).collect();
+        let mut delta = vec![f32::NAN; b * s * v];
+        let (loss, acc) = xent_tokens(&logits, &tokens, win, &mut delta, b, s, v);
+        assert!((loss - (v as f32).ln()).abs() < 1e-5, "uniform loss = ln(v), got {loss}");
+        assert!((0.0..=1.0).contains(&acc));
+        for row in delta.chunks_exact(v) {
+            let sum: f32 = row.iter().sum();
+            assert!(sum.abs() < 1e-6, "softmax-xent rows sum to 0, got {sum}");
+        }
+    }
+
+    /// The determinism contract for the new kernels: scoped and pooled
+    /// tiles (forced via the `_t` variants at toy sizes) are bitwise
+    /// identical to serial for the row-tiled sweeps, the cell-tiled
+    /// attention, and the ownership-partitioned scatter-add backward.
+    #[test]
+    fn tiled_attention_kernels_are_bitwise_identical_to_serial() {
+        let mut rng = Rng::new(6);
+        let pool = WorkerPool::new(2);
+        let (b, h, s, hd, v, win) = (2, 2, 5, 4, 9, 6);
+        let d = h * hd;
+        let bh = b * h;
+        let embed = rand_vec(&mut rng, v * d);
+        let posv = rand_vec(&mut rng, s * d);
+        let tokens: Vec<i32> = (0..b * win).map(|_| rng.below(v) as i32).collect();
+        let g = rand_vec(&mut rng, d);
+        let x = rand_vec(&mut rng, b * s * d);
+        let delta = rand_vec(&mut rng, b * s * d);
+        let heads = rand_vec(&mut rng, 3 * bh * s * hd);
+        let d_o = rand_vec(&mut rng, bh * s * hd);
+
+        let mut e_ref = vec![f32::NAN; b * s * d];
+        embed_fwd_t(&embed, &posv, &tokens, win, &mut e_ref, b, s, d, Par::Serial, 1);
+        let mut ln_ref = vec![f32::NAN; b * s * d];
+        let mut st_ref = vec![f32::NAN; 2 * b * s];
+        layernorm_fwd_t(&x, &g, &mut ln_ref, &mut st_ref, b * s, d, Par::Serial, 1);
+        let mut lb_ref = vec![f32::NAN; b * s * d];
+        layernorm_bwd_t(&delta, &x, &g, &st_ref, &mut lb_ref, b * s, d, Par::Serial, 1);
+        let mut de_ref = vec![0.1f32; v * d];
+        let mut dp_ref = vec![0.2f32; s * d];
+        embed_bwd_t(&delta, &tokens, win, &mut de_ref, &mut dp_ref, b, s, d, v, Par::Serial, 1);
+        let mut p_ref = vec![f32::NAN; bh * s * s];
+        let mut o_ref = vec![f32::NAN; bh * s * hd];
+        attention_fwd(&heads, &mut p_ref, &mut o_ref, b, h, s, hd, Par::Serial);
+        let mut dpr = vec![f32::NAN; bh * s * s];
+        let mut dh_ref = vec![f32::NAN; 3 * bh * s * hd];
+        attention_bwd(&heads, &d_o, &mut p_ref, &mut dpr, &mut dh_ref, b, h, s, hd, Par::Serial);
+
+        for threads in [2usize, 3, 8] {
+            let modes: [(&str, Par); 2] = [("scoped", Par::Scoped(threads)), ("pool", Par::Pool(&pool))];
+            for (mode, par) in modes {
+                let mut out = vec![f32::NAN; b * s * d];
+                embed_fwd_t(&embed, &posv, &tokens, win, &mut out, b, s, d, par, threads);
+                assert_eq!(out, e_ref, "embed_fwd {mode} t{threads}");
+
+                let mut ln = vec![f32::NAN; b * s * d];
+                let mut st = vec![f32::NAN; 2 * b * s];
+                layernorm_fwd_t(&x, &g, &mut ln, &mut st, b * s, d, par, threads);
+                assert_eq!(ln, ln_ref, "layernorm_fwd {mode} t{threads}");
+                assert_eq!(st, st_ref, "layernorm stats {mode} t{threads}");
+
+                let mut lb = vec![f32::NAN; b * s * d];
+                layernorm_bwd_t(&delta, &x, &g, &st, &mut lb, b * s, d, par, threads);
+                assert_eq!(lb, lb_ref, "layernorm_bwd {mode} t{threads}");
+
+                let mut de = vec![0.1f32; v * d];
+                let mut dpos = vec![0.2f32; s * d];
+                embed_bwd_t(&delta, &tokens, win, &mut de, &mut dpos, b, s, d, v, par, threads);
+                assert_eq!(de, de_ref, "embed_bwd dE {mode} t{threads}");
+                assert_eq!(dpos, dp_ref, "embed_bwd dPos {mode} t{threads}");
+
+                // the _t variants bypass the MAC floor so real cell tiles
+                // run at these toy sizes (incl. t > cells oversubscription)
+                let mut p = vec![f32::NAN; bh * s * s];
+                let mut o = vec![f32::NAN; bh * s * hd];
+                attention_fwd_t(&heads, &mut p, &mut o, b, h, s, hd, par, threads);
+                let mut dp2 = vec![f32::NAN; bh * s * s];
+                let mut dh = vec![f32::NAN; 3 * bh * s * hd];
+                attention_bwd_t(&heads, &d_o, &mut p, &mut dp2, &mut dh, b, h, s, hd, par, threads);
+                assert_eq!(o, o_ref, "attention_fwd {mode} t{threads}");
+                assert_eq!(dh, dh_ref, "attention_bwd {mode} t{threads}");
+            }
+        }
+    }
+}

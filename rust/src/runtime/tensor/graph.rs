@@ -38,7 +38,7 @@ pub enum Act {
 }
 
 impl Act {
-    fn parse(s: &str) -> Result<Act> {
+    pub(crate) fn parse(s: &str) -> Result<Act> {
         match s {
             "linear" | "none" => Ok(Act::Linear),
             "relu" => Ok(Act::Relu),
@@ -47,7 +47,7 @@ impl Act {
         }
     }
 
-    fn apply(self, v: &mut [f32]) {
+    pub(crate) fn apply(self, v: &mut [f32]) {
         match self {
             Act::Linear => {}
             Act::Relu => {
@@ -66,7 +66,7 @@ impl Act {
     /// `delta *= act'(z)` expressed through the *post-activation* output
     /// (relu': out > 0; tanh': 1 - out²) — the same association the
     /// python custom VJPs use.
-    fn backprop(self, delta: &mut [f32], out: &[f32]) {
+    pub(crate) fn backprop(self, delta: &mut [f32], out: &[f32]) {
         match self {
             Act::Linear => {}
             Act::Relu => {
@@ -206,8 +206,9 @@ impl LayerGraph {
     pub fn from_model(info: &ModelInfo) -> Result<LayerGraph> {
         anyhow::ensure!(
             info.x_dtype == Dtype::F32,
-            "model {:?} has i32 inputs; the native backend supports f32 models only \
-             (enable the backend-xla feature for token models)",
+            "model {:?} has i32 token inputs but no sequence op list; token models need \
+             ops opening with embed_pos (regenerate artifacts with `make artifacts`) or \
+             the backend-xla feature",
             info.name
         );
         let inferred;
@@ -339,6 +340,13 @@ impl LayerGraph {
                 }
                 OpSpec::Flatten => {
                     shape = Shape::Flat(shape.len());
+                }
+                OpSpec::EmbedPos | OpSpec::AttnBlock { .. } | OpSpec::FfnBlock { .. } | OpSpec::LayerNorm => {
+                    anyhow::bail!(
+                        "model {:?}: sequence op {op:?} in an image/dense graph — sequence \
+                         models compile through SeqGraph (their op list opens with embed_pos)",
+                        info.name
+                    );
                 }
             }
         }
@@ -806,9 +814,9 @@ fn infer_dense_ops(info: &ModelInfo) -> Result<Vec<OpSpec>> {
             .all(|pair| pair[0].1.len() == 2 && pair[1].1.len() == 1);
     anyhow::ensure!(
         dense_like,
-        "model {:?} is not a dense stack and declares no layer-op list; the \
-         native backend supports {{dense, conv2d, maxpool2, flatten}} graphs \
-         only (enable the backend-xla feature for attention models)",
+        "model {:?} is not a dense stack and declares no layer-op list; conv and \
+         attention manifests must carry ops explicitly (regenerate artifacts with \
+         `make artifacts`) or run on the backend-xla feature",
         info.name
     );
     let layers = info.tensors.len() / 2;

@@ -1,33 +1,37 @@
 //! Shape-aware tensor-op subsystem for the native backend.
 //!
 //! Pure-Rust, cache-conscious CPU kernels covering everything the paper's
-//! CNN architectures need, plus the [`LayerGraph`] interpreter that
-//! compiles a manifest model built from {dense, conv2d, maxpool2,
-//! flatten} into a forward/backward plan over those kernels:
+//! CNN architectures *and* the transformer LM need, plus the two plan
+//! compilers that interpret a manifest model over those kernels:
 //!
 //! - [`matmul`] — blocked matmul family: K-panel tiling keeps the
 //!   streamed weight panel L1/L2-resident, and the hot path runs packed
 //!   8-lane microkernels (`pack_b` + an `[MR × LANES]` register-tiled
 //!   accumulator block) that are bitwise identical to the scalar
-//!   reference kernels. Used by the dense layers *and* by conv via
-//!   im2col.
+//!   reference kernels. Used by the dense layers, by conv via im2col and
+//!   by the transformer's QKV/proj/FFN/head projections.
 //! - [`conv`] — conv2d (valid padding, any stride) as im2col patch
-//!   extraction + matmul, mirroring `python/compile/kernels/conv2d.py`:
-//!   forward, weight/bias backward (patches^T · dOut, rematerializing
-//!   patches), and input backward (dOut · W^T scattered by col2im).
-//! - [`pool`] — 2x2/stride-2 max pooling with recorded argmax for the
-//!   backward scatter.
-//! - [`graph`] — [`LayerGraph`]: the model compiler/interpreter that
-//!   replaced the dense-only `DenseStack` of PR 1. It executes any
-//!   manifest model whose `ops` list uses the ops above (dense stacks
-//!   need no list — they are inferred from tensor shapes), which is what
-//!   lets `mnist_cnn` and `driving_cnn` run hermetically.
+//!   extraction + matmul, mirroring `python/compile/kernels/conv2d.py`.
+//! - [`pool`] — 2x2/stride-2 max pooling with recorded argmax.
+//! - [`attn`] — the attention subsystem: embedding gather (scatter-add
+//!   backward), LayerNorm with `1 + g` gain, causal row softmax,
+//!   per-head scaled-dot-product attention with FlashAttention-style
+//!   probability recompute in backward, head split/merge, and softmax
+//!   cross-entropy over the vocabulary — mirroring
+//!   `python/compile/kernels/attention.py` + `models.py::TransformerLm`.
+//! - [`graph`] — [`LayerGraph`]: the plan compiler/interpreter for
+//!   {dense, conv2d, maxpool2, flatten} models (dense stacks need no op
+//!   list — they are inferred from tensor shapes).
+//! - [`seq`] — [`SeqGraph`]: the sibling plan for token-sequence models
+//!   whose op list opens with `embed_pos` — this is what lets
+//!   `transformer_lm` train hermetically, retiring the last XLA-only
+//!   surface.
 //!
-//! All kernels are write-into-caller-slice: the `LayerGraph` interpreter
-//! routes every buffer through the per-learner `Workspace` arena
-//! (`runtime/workspace.rs`), whose slots the plan sizes at compile time —
+//! All kernels are write-into-caller-slice: both interpreters route every
+//! buffer through the per-learner `Workspace` arena
+//! (`runtime/workspace.rs`), whose slots the plans size at compile time —
 //! steady-state training performs **zero heap allocations**, including
-//! with thread tiling active. The conv and dense hot loops take a
+//! with thread tiling active. The hot loops take a
 //! [`Par`](crate::runtime::pool::Par) scheduling mode (serial / scoped
 //! spawns / the workspace's persistent `WorkerPool`); tiles own disjoint
 //! output elements with unchanged per-element accumulation order, so
@@ -40,9 +44,113 @@
 //! subslices handed to the dispatcher (each site carries its ownership
 //! argument; the modes' bitwise equality is pinned by unit tests).
 
+use anyhow::Result;
+
+use super::manifest::{Dtype, ModelInfo, OpSpec};
+use super::workspace::Scratch;
+
+pub mod attn;
 pub mod conv;
 pub mod graph;
 pub mod matmul;
 pub mod pool;
+pub mod seq;
 
 pub use graph::{Act, LayerGraph};
+pub use seq::SeqGraph;
+
+/// The compiled plan of one manifest model, whichever family it belongs
+/// to: image/dense graphs interpret through [`LayerGraph`], token-sequence
+/// models (op list opening with `embed_pos`, i32 windows) through
+/// [`SeqGraph`]. This is the dispatch point the native backend, the
+/// capability dump (`dynavg models`) and the benches share.
+pub enum ModelPlan {
+    Layer(LayerGraph),
+    Seq(SeqGraph),
+}
+
+impl ModelPlan {
+    pub fn from_model(info: &ModelInfo) -> Result<ModelPlan> {
+        let seq_like = matches!(info.ops.first(), Some(OpSpec::EmbedPos))
+            || (info.x_dtype == Dtype::I32 && !info.ops.is_empty());
+        if seq_like {
+            SeqGraph::from_model(info).map(ModelPlan::Seq)
+        } else {
+            LayerGraph::from_model(info).map(ModelPlan::Layer)
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        match self {
+            ModelPlan::Layer(g) => g.param_count,
+            ModelPlan::Seq(g) => g.param_count,
+        }
+    }
+
+    /// Steady-state scratch footprint of one train/eval step at batch `b`.
+    pub fn workspace_bytes(&self, b: usize) -> usize {
+        match self {
+            ModelPlan::Layer(g) => g.workspace_bytes(b),
+            ModelPlan::Seq(g) => g.workspace_bytes(b),
+        }
+    }
+
+    /// Bytes of the packed-operand (microkernel pack) arena slot.
+    pub fn pack_bytes(&self, b: usize) -> usize {
+        match self {
+            ModelPlan::Layer(g) => g.pack_bytes(b),
+            ModelPlan::Seq(g) => g.pack_bytes(b),
+        }
+    }
+
+    /// Bytes of the attention-specific scratch (scores, head-layout
+    /// gradients, staging) — `None` for image/dense graphs.
+    pub fn attn_scratch_bytes(&self, b: usize) -> Option<usize> {
+        match self {
+            ModelPlan::Layer(_) => None,
+            ModelPlan::Seq(g) => Some(g.attn_scratch_bytes(b)),
+        }
+    }
+
+    /// Approximate FLOPs of one train step at batch `b` (GEMM convention;
+    /// see the per-plan docs).
+    pub fn train_flops(&self, b: usize) -> f64 {
+        match self {
+            ModelPlan::Layer(g) => g.train_flops(b),
+            ModelPlan::Seq(g) => g.train_flops(b),
+        }
+    }
+
+    /// Size every arena slot for batch `b` (idempotent warm-up).
+    pub(crate) fn prepare_scratch(&self, b: usize, s: &mut Scratch) {
+        match self {
+            ModelPlan::Layer(g) => g.prepare_scratch(b, s),
+            ModelPlan::Seq(g) => g.prepare_scratch(b, s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_dispatch_picks_the_right_family() {
+        let manifest = crate::runtime::native::synthetic_manifest();
+        assert!(matches!(
+            ModelPlan::from_model(manifest.model("mnist_cnn").unwrap()),
+            Ok(ModelPlan::Layer(_))
+        ));
+        assert!(matches!(
+            ModelPlan::from_model(manifest.model("transformer_lm").unwrap()),
+            Ok(ModelPlan::Seq(_))
+        ));
+        let plan = ModelPlan::from_model(manifest.model("transformer_lm").unwrap()).unwrap();
+        assert_eq!(plan.param_count(), 35_680);
+        assert!(plan.attn_scratch_bytes(10).is_some());
+        assert!(plan.attn_scratch_bytes(10).unwrap() < plan.workspace_bytes(10));
+        let plan = ModelPlan::from_model(manifest.model("mnist_cnn").unwrap()).unwrap();
+        assert!(plan.attn_scratch_bytes(10).is_none());
+        assert!(plan.train_flops(10) > 0.0);
+    }
+}

@@ -97,9 +97,12 @@ impl Workspace {
 }
 
 /// The native interpreter's scratch tensors. Slot assignment (which node
-/// writes where, and the shared-buffer sizes) is decided by
-/// [`LayerGraph`](super::tensor::LayerGraph) at plan-compile time; see
-/// `LayerGraph::prepare_scratch`.
+/// writes where, and the shared-buffer sizes) is decided at plan-compile
+/// time — by [`LayerGraph`](super::tensor::LayerGraph) for image/dense
+/// graphs and by [`SeqGraph`](super::tensor::SeqGraph) for token-sequence
+/// models; see their `prepare_scratch` methods. The two plan kinds use
+/// disjoint slot subsets (a workspace serves one compiled kernel), so the
+/// unused slots of the other family stay empty at zero cost.
 pub struct Scratch {
     /// Post-activation output of every plan node (slot = node index).
     pub(crate) acts: Vec<Vec<f32>>,
@@ -119,6 +122,25 @@ pub struct Scratch {
     pub(crate) delta2: Vec<f32>,
     /// Flat parameter gradient (`param_count`).
     pub(crate) grad: Vec<f32>,
+    /// Per-LayerNorm-site (mean, rstd) rows (slot = LN site index), saved
+    /// by the sequence forward for the backward pass. `2·b·s` each.
+    pub(crate) stats: Vec<Vec<f32>>,
+    /// Sequence staging buffer, `b·s·max(3d, ff)`: the QKV GEMM result
+    /// before the head split / the attention head outputs before the
+    /// token-major merge (forward), the merged dQKV and the FFN hidden
+    /// gradient (backward). All uses are live at different times.
+    pub(crate) wide: Vec<f32>,
+    /// Per-(batch, head) causal attention probabilities, `b·h·s·s`
+    /// (forward, and the FlashAttention-style recompute in backward).
+    pub(crate) attn_p: Vec<f32>,
+    /// Backward score-space gradient `dP`/`dS`, `b·h·s·s` (needed
+    /// alongside `attn_p`: the softmax Jacobian reads both).
+    pub(crate) attn_dp: Vec<f32>,
+    /// Head-layout gradients, `4·b·s·d`: \[dO heads | dQ | dK | dV\].
+    pub(crate) dheads: Vec<f32>,
+    /// Pending residual-branch delta of the pre-norm backward walk,
+    /// `b·s·d` (exactly one residual is pending at any point).
+    pub(crate) resid: Vec<f32>,
 }
 
 impl Scratch {
@@ -131,6 +153,12 @@ impl Scratch {
             delta: Vec::new(),
             delta2: Vec::new(),
             grad: Vec::new(),
+            stats: Vec::new(),
+            wide: Vec::new(),
+            attn_p: Vec::new(),
+            attn_dp: Vec::new(),
+            dheads: Vec::new(),
+            resid: Vec::new(),
         }
     }
 
@@ -138,12 +166,19 @@ impl Scratch {
     pub fn bytes(&self) -> usize {
         let acts: usize = self.acts.iter().map(|v| 4 * v.capacity()).sum();
         let pool: usize = self.pool_idx.iter().map(|v| 4 * v.capacity()).sum();
+        let stats: usize = self.stats.iter().map(|v| 4 * v.capacity()).sum();
         acts + pool
+            + stats
             + 4 * (self.patches.capacity()
                 + self.pack.capacity()
                 + self.delta.capacity()
                 + self.delta2.capacity()
-                + self.grad.capacity())
+                + self.grad.capacity()
+                + self.wide.capacity()
+                + self.attn_p.capacity()
+                + self.attn_dp.capacity()
+                + self.dheads.capacity()
+                + self.resid.capacity())
     }
 }
 

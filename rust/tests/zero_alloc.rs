@@ -7,6 +7,13 @@
 //! a latch round-trip over a borrowed closure (pool startup, like arena
 //! sizing, counts as warm-up).
 //!
+//! Since the attention subsystem landed, the contract covers
+//! `transformer_lm` too: the sequence plan's scratch (score tiles,
+//! head-layout gradients, LN stats, staging) is slot-planned at compile
+//! time like everything else, and the i32 token path reuses a
+//! precomputed dummy-label placeholder instead of allocating one per
+//! step.
+//!
 //! Measured with a counting `#[global_allocator]` that forwards to the
 //! system allocator. Everything lives in one `#[test]` in its own
 //! integration-test binary, so no sibling test thread can touch the
@@ -15,6 +22,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use dynavg::data::corpus::CorpusStream;
 use dynavg::data::synth_mnist::MnistLike;
 use dynavg::data::Stream;
 use dynavg::driving::DrivingStream;
@@ -63,11 +71,14 @@ fn steady_state_steps_allocate_nothing() {
     let rt = Runtime::native();
 
     // train: the paper's CNN (the step the ROADMAP flagged), the driving
-    // CNN (strided convs, no pool) and a dense stack for the general claim
-    let cases: [(&str, fn() -> Batch); 3] = [
+    // CNN (strided convs, no pool), a dense stack for the general claim,
+    // and the transformer LM (attention scratch, i32 windows, the
+    // precomputed dummy-y placeholder)
+    let cases: [(&str, fn() -> Batch); 4] = [
         ("mnist_cnn", || MnistLike::new(5, 1).next_batch(10)),
         ("driving_cnn", || DrivingStream::new(5, 1, false).next_batch(10)),
         ("mnist_mlp", || MnistLike::new(5, 2).next_batch(10)),
+        ("transformer_lm", || CorpusStream::new(5, 65).next_batch(10)),
     ];
     for (model, make_batch) in cases {
         let mrt = ModelRuntime::load(&rt, model, "sgd").unwrap();
