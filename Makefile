@@ -2,7 +2,7 @@
 # and must pass hermetically (no Python, no XLA, no artifacts, default
 # features — the native backend).
 
-.PHONY: verify build test fmt clippy xla-check bench-smoke bench-baseline bench-report ci artifacts
+.PHONY: verify build test fmt clippy xla-check bench-smoke bench-baseline bench-report mirror-check serve-smoke ci artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -46,7 +46,31 @@ bench-baseline:
 bench-report:
 	python3 python/tools/bench_report.py
 
-ci: fmt clippy xla-check verify bench-smoke
+# Numeric cross-check against the numpy mirror (needs python3 + numpy;
+# the only non-hermetic ci dependency). The gated scenarios exit nonzero
+# on a threshold violation; CI additionally runs the slower protocol
+# scenarios (see .github/workflows/ci.yml).
+mirror-check:
+	python3 python/tools/packed_order_check.py
+	python3 python/tools/native_mirror.py fixed_batch
+	python3 python/tools/native_mirror.py wire_protocol
+
+# Loopback coordinator end-to-end: serve + 4 clients, dense then int8;
+# the server fails unless measured wire bytes equal NetStats exactly.
+serve-smoke: build
+	@for enc in dense int8; do \
+	  rm -f port.txt; \
+	  ./target/release/dynavg serve --model mnist_logistic --m 4 --rounds 20 \
+	    --encoding $$enc --port 0 --port-file port.txt & serve=$$!; \
+	  while [ ! -s port.txt ]; do sleep 0.1; done; \
+	  for i in 1 2 3 4; do \
+	    ./target/release/dynavg connect --addr 127.0.0.1:$$(cat port.txt) & \
+	  done; \
+	  wait $$serve || exit 1; \
+	  wait; \
+	done; rm -f port.txt
+
+ci: fmt clippy xla-check verify serve-smoke mirror-check bench-smoke
 
 # XLA artifact build (requires python + jax; NOT needed for tier-1).
 # Produces artifacts/manifest.json + HLO text for the conv/attention

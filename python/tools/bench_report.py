@@ -5,9 +5,10 @@ The rust benches (`cargo bench`, see rust/src/util/bench.rs) append one
 JSON object per result to $BENCH_JSON — raw timings ({name, iters,
 mean_ns, median_ns, min_ns}) plus derived-metric records such as the
 end-to-end mnist_cnn / transformer_lm train-step throughputs ({name,
-steps_per_s, gflops, ...}) and the attention-block GFLOP/s row
-(attention_block_fwd). CI uploads each run's file; committed snapshots
-live at the repo root as BENCH_<tag>.json.
+steps_per_s, gflops, ...}), the attention-block GFLOP/s row
+(attention_block_fwd), and the wire-codec encode/decode GB/s rows
+(wire_encode_*/wire_decode_*, {name, gbps, median_ns}). CI uploads each
+run's file; committed snapshots live at the repo root as BENCH_<tag>.json.
 
 Modes (stdlib only, no dependencies):
 
@@ -82,6 +83,8 @@ def cell(rec):
         return f"{rec['steps_per_s']:.2f} steps/s"
     if "gflops" in rec:
         return f"{rec['gflops']:.2f} GF/s"
+    if "gbps" in rec:
+        return f"{rec['gbps']:.2f} GB/s"
     if "median_ns" in rec:
         return fmt_ns(rec["median_ns"])
     for a, b in NS_PAIRS:
@@ -135,7 +138,7 @@ def diff(old_path, new_path, threshold, strict):
             if key in new_rec and key in old_rec and old_rec[key] > 0:
                 what = "median" if key == "median_ns" else key
                 checks.append((what, new_rec[key] / old_rec[key] - 1.0))
-        for key in ("steps_per_s", "gflops"):
+        for key in ("steps_per_s", "gflops", "gbps"):
             if key in new_rec and key in old_rec and new_rec[key] > 0:
                 checks.append((key, old_rec[key] / new_rec[key] - 1.0))
         # one warning per record: median_ns, steps_per_s and gflops of a

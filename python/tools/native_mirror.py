@@ -33,6 +33,7 @@ Usage:
     python3 -m python.tools.native_mirror transformer_protocol --seed 2024
     python3 -m python.tools.native_mirror transformer_fixed_batch
     python3 -m python.tools.native_mirror transformer_fd
+    python3 -m python.tools.native_mirror wire_protocol --seed 2024
 """
 
 from __future__ import annotations
@@ -646,21 +647,22 @@ class TransformerLm:
 
 # ---------------------------------------------------------------- protocols
 HEADER = 16
+CHUNK = 1024
 
 
 class Net:
+    """Mirror of network/mod.rs: the caller supplies the *encoded* payload
+    size (wire/encoding.rs computes it); dense is 4·p."""
+
     def __init__(self):
         self.up = 0
         self.down = 0
 
-    def send(self, kind: str, p: int):
-        mb = 4 * p
+    def send(self, kind: str, payload: int):
         if kind in ("violation", "upload"):
-            self.up += HEADER + mb
-        elif kind == "download":
-            self.down += HEADER + mb
-        elif kind == "query":
-            self.down += HEADER
+            self.up += HEADER + payload
+        elif kind in ("download", "query"):
+            self.down += HEADER + payload
         else:
             raise ValueError(kind)
 
@@ -669,16 +671,77 @@ class Net:
         return self.up + self.down
 
 
+class Enc:
+    """Mirror of wire/encoding.rs + the Link fallback rule: a lossy
+    encoding without a reference transfers dense (bootstrap protection).
+    Model math in f32, matching the rust codec arithmetic."""
+
+    def __init__(self, kind: str, fraction: float = 0.1):
+        assert kind in ("dense", "int8", "int16", "topk")
+        self.kind = kind
+        self.fraction = fraction
+
+    def label(self) -> str:
+        return f"topk:{self.fraction}" if self.kind == "topk" else self.kind
+
+    def _effective(self, ref) -> str:
+        return "dense" if ref is None else self.kind
+
+    def nbytes(self, n: int, ref) -> int:
+        kind = self._effective(ref)
+        if kind == "dense":
+            return 4 * n
+        if kind == "int8":
+            return 4 + 4 * ((n + CHUNK - 1) // CHUNK) + n
+        if kind == "int16":
+            return 4 + 4 * ((n + CHUNK - 1) // CHUNK) + 2 * n
+        k = min(max(int(np.ceil(self.fraction * n)), 1), n)
+        return 8 + 8 * k
+
+    def roundtrip(self, v, ref):
+        """encode+decode of `v` against `ref` — what both a Link transfer
+        and a wire hop do to the values."""
+        kind = self._effective(ref)
+        if kind == "dense":
+            return v.copy()
+        d = (v - ref).astype(np.float32)
+        n = d.shape[0]
+        if kind in ("int8", "int16"):
+            levels = np.float32(127.0 if kind == "int8" else 32767.0)
+            out = ref.copy()
+            for start in range(0, n, CHUNK):
+                c = d[start : start + CHUNK]
+                max_abs = np.float32(np.abs(c).max()) if c.size else np.float32(0.0)
+                if max_abs == 0.0:
+                    continue
+                scale = np.float32(max_abs / levels)
+                t = (c / scale).astype(np.float32)
+                # f32::round — half away from zero, then clamp
+                q = np.where(t >= 0.0, np.floor(t + 0.5), np.ceil(t - 0.5))
+                q = np.clip(q, -levels, levels).astype(np.float32)
+                out[start : start + CHUNK] = (ref[start : start + CHUNK] + q * scale).astype(np.float32)
+            return out
+        k = min(max(int(np.ceil(self.fraction * n)), 1), n)
+        keep = np.argsort(-np.abs(d), kind="stable")[:k]  # ties: ascending index
+        out = ref.copy()
+        out[keep] = (ref[keep] + d[keep]).astype(np.float32)
+        return out
+
+
+DENSE = Enc("dense")
+
+
 def sq_dist(a, b) -> float:
     d = a.astype(np.float64) - b.astype(np.float64)
     return float(d @ d)
 
 
 class Dynamic:
-    def __init__(self, delta: float, check_every: int, m: int):
+    def __init__(self, delta: float, check_every: int, m: int, enc: Enc = DENSE):
         self.delta = delta
         self.check = check_every
         self.m = m
+        self.enc = enc
         self.ref = None
         self.v = 0
 
@@ -695,7 +758,8 @@ class Dynamic:
             if sq_dist(models[i], r) > self.delta:
                 in_b[i] = True
                 sel.append(i)
-                net.send("violation", p)
+                net.send("violation", self.enc.nbytes(p, r))
+                models[i] = self.enc.roundtrip(models[i], r)
         if not sel:
             return
         self.v += len(sel)
@@ -703,7 +767,8 @@ class Dynamic:
             for i in range(m):
                 if not in_b[i]:
                     net.send("query", 0)
-                    net.send("upload", p)
+                    net.send("upload", self.enc.nbytes(p, r))
+                    models[i] = self.enc.roundtrip(models[i], r)
                     in_b[i] = True
                     sel.append(i)
             self.v = 0
@@ -716,51 +781,70 @@ class Dynamic:
             free = [i for i in range(m) if not in_b[i]]
             nxt = free[rng.below(len(free))]
             net.send("query", 0)
-            net.send("upload", p)
+            net.send("upload", self.enc.nbytes(p, r))
+            models[nxt] = self.enc.roundtrip(models[nxt], r)
             in_b[nxt] = True
             sel.append(nxt)
+        avg = self.enc.roundtrip(avg, r)
         for i in sel:
             models[i] = avg.copy()
-            net.send("download", p)
+            net.send("download", self.enc.nbytes(p, r))
         if len(sel) == m:
             self.ref = avg.copy()
             self.v = 0
 
 
 class Periodic:
-    def __init__(self, period: int):
+    def __init__(self, period: int, enc: Enc = DENSE):
         self.period = period
+        self.enc = enc
+        self.ref = None  # last distributed average (None = dense bootstrap)
 
     def sync(self, t, models, net, rng):
         if t % self.period != 0:
             return
         m, p = len(models), models[0].shape[0]
-        avg = np.mean(models, axis=0, dtype=np.float64).astype(np.float32)
         for i in range(m):
-            net.send("upload", p)
+            net.send("upload", self.enc.nbytes(p, self.ref))
+            models[i] = self.enc.roundtrip(models[i], self.ref)
+        avg = np.mean(models, axis=0, dtype=np.float64).astype(np.float32)
+        avg = self.enc.roundtrip(avg, self.ref)
+        for i in range(m):
             models[i] = avg.copy()
-            net.send("download", p)
+            net.send("download", self.enc.nbytes(p, self.ref))
+        self.ref = avg.copy()
 
 
 # ------------------------------------------------------------------ engine
-def run(model, model_name, proto, m, rounds, lr, seed, batch=10):
+def make_batches(m, rounds, seed, batch=10, evals=5, eval_batch=50):
+    """Pre-draw every stream batch one engine run consumes. Stream draws
+    are protocol-independent (the engine advances streams identically no
+    matter what sigma does), so one cache serves every protocol/encoding
+    run at the same (m, rounds, seed) — the dominant cost of the pure-
+    python MnistLike renderer paid once instead of per run."""
+    streams = [MnistLike(seed, (seed * 7919 + i + 1) & M64) for i in range(m)]
+    train = [[streams[i].batch(batch) for i in range(m)] for _ in range(rounds)]
+    evalb = [streams[0].batch(eval_batch) for _ in range(evals)]
+    return train, evalb
+
+
+def run(model, model_name, proto, m, rounds, lr, seed, batch=10, data=None):
     init = glorot_slots(model.SLOTS, model_name)
     models = [init.copy() for _ in range(m)]
-    streams = [MnistLike(seed, (seed * 7919 + i + 1) & M64) for i in range(m)]
+    train, evalb = data if data is not None else make_batches(m, rounds, seed, batch)
     net = Net()
     proto_rng = Rng(seed ^ 0xABCD)
     cum_loss = 0.0
     for t in range(1, rounds + 1):
         for i in range(m):
-            x, y = streams[i].batch(batch)
+            x, y = train[t - 1][i]
             loss, _, grad = model.loss_grad(models[i], x, y)
             cum_loss += loss
             models[i] = models[i] - np.float32(lr) * grad
         proto.sync(t, models, net, proto_rng)
     avg = np.mean(models, axis=0, dtype=np.float64).astype(np.float32)
     accs, losses = [], []
-    for _ in range(5):
-        x, y = streams[0].batch(50)
+    for x, y in evalb:
         loss, acc, _ = model.loss_grad(avg, x, y, want_grad=False)
         losses.append(loss)
         accs.append(acc)
@@ -773,8 +857,9 @@ def run(model, model_name, proto, m, rounds, lr, seed, batch=10):
 
 
 def compare(model, model_name, m, rounds, lr, delta, check, seed):
-    dyn = run(model, model_name, Dynamic(delta, check, m), m, rounds, lr, seed)
-    per = run(model, model_name, Periodic(check), m, rounds, lr, seed)
+    data = make_batches(m, rounds, seed)
+    dyn = run(model, model_name, Dynamic(delta, check, m), m, rounds, lr, seed, data=data)
+    per = run(model, model_name, Periodic(check), m, rounds, lr, seed, data=data)
     ratio = per["comm"] / max(dyn["comm"], 1)
     print(
         f"seed {seed}: comm dyn {dyn['comm']} per {per['comm']} ratio {ratio:.1f}x | "
@@ -783,6 +868,46 @@ def compare(model, model_name, m, rounds, lr, delta, check, seed):
         f"acc dyn {dyn['eval_acc']:.3f} per {per['eval_acc']:.3f}"
     )
     return dyn, per
+
+
+def wire_protocol(m, rounds, lr, delta, check, seed):
+    """Validates the wire-encoding thresholds of
+    rust/tests/wire_loopback.rs: dynamic vs periodic on mnist_logistic
+    across all four delta encodings, with the Link-equivalent lossy
+    roundtrips applied to every transfer and NetStats charged the encoded
+    payload sizes."""
+    model = MnistLogistic()
+    encs = [Enc("dense"), Enc("int8"), Enc("int16"), Enc("topk", 0.1)]
+    data = make_batches(m, rounds, seed)
+    results = {}
+    for enc in encs:
+        dyn = run(model, "mnist_logistic", Dynamic(delta, check, m, enc), m, rounds, lr, seed, data=data)
+        per = run(model, "mnist_logistic", Periodic(check, enc), m, rounds, lr, seed, data=data)
+        results[enc.label()] = (dyn, per)
+    dense_dyn = results["dense"][0]
+    print(f"seed {seed}: m={m} rounds={rounds} lr={lr} delta={delta} check={check}")
+    # the exact gates rust/tests/wire_loopback.rs asserts (validated here
+    # across seeds with margin before they were baked into the rust test):
+    # every encoding keeps the >=5x dynamic-vs-periodic reduction; int8
+    # halves dense wire bytes losslessly in practice (<=1.05x loss); top-k
+    # halves them at a real convergence cost (measured 1.27-1.35x across
+    # seeds — unsent coordinates reset to the reference on partial syncs),
+    # gated at <=1.5x.
+    loss_gate = {"int8": 1.05, "int16": 1.05, "topk:0.1": 1.5}
+    cut_gate = {"int8": 2.0, "topk:0.1": 2.0}
+    bad = 0
+    for label, (dyn, per) in results.items():
+        ratio = per["comm"] / max(dyn["comm"], 1)
+        cut = dense_dyn["comm"] / max(dyn["comm"], 1)
+        loss_ratio = dyn["cum_loss"] / dense_dyn["cum_loss"]
+        gated = ratio >= 5.0 and cut >= cut_gate.get(label, 0.0) and loss_ratio <= loss_gate.get(label, 1.0)
+        bad += not gated
+        print(
+            f"  {'OK ' if gated else 'FAIL'} {label:<9} dyn {dyn['comm']:>9} per {per['comm']:>9} "
+            f"ratio {ratio:>5.1f}x | vs dense-dyn: bytes /{cut:.2f} "
+            f"loss x{loss_ratio:.4f} | acc dyn {dyn['eval_acc']:.3f} per {per['eval_acc']:.3f}"
+        )
+    return bad
 
 
 def synthetic_batch(x_shape, out_dim, metric, b, seed):
@@ -808,7 +933,9 @@ def fixed_batch_scenario():
     """Mirror of tests/runtime_integration.rs
     every_f32_train_artifact_executes_and_learns_a_fixed_batch: 12
     optimizer steps on the *exact* seed-7 batch must strictly reduce the
-    loss for every (CNN, optimizer) pair the native backend now covers."""
+    loss for every (CNN, optimizer) pair the native backend now covers.
+    Returns the number of failing pairs (nonzero fails the CI job)."""
+    bad = 0
     cases = [
         (MnistCnn(), "mnist_cnn", (28, 28, 1), 10, "accuracy"),
         (DrivingCnn(), "driving_cnn", (32, 64, 1), 1, "mse"),
@@ -833,6 +960,8 @@ def fixed_batch_scenario():
                     p, state = rmsprop_step(p, state, g, lr)
             ok = "OK " if last < first else "FAIL"
             print(f"{ok} {name}/{opt}: loss {first:.4f} -> {last:.4f}")
+            bad += last >= first
+    return bad
 
 
 def run_lm(model, proto, m, rounds, lr, seed, batch=10):
@@ -953,6 +1082,7 @@ def main():
             "transformer_protocol",
             "transformer_fixed_batch",
             "transformer_fd",
+            "wire_protocol",
         ],
     )
     ap.add_argument("--seed", type=int, default=2024)
@@ -969,7 +1099,8 @@ def main():
                 0.05 if args.lr is None else args.lr,
                 1.0 if args.delta is None else args.delta, args.check, args.seed)
     elif args.scenario == "fixed_batch":
-        fixed_batch_scenario()
+        if fixed_batch_scenario():
+            raise SystemExit(1)
     elif args.scenario == "transformer_protocol":
         transformer_protocol(args.m, args.rounds,
                              0.3 if args.lr is None else args.lr,
@@ -979,6 +1110,10 @@ def main():
         transformer_fixed_batch()
     elif args.scenario == "transformer_fd":
         transformer_fd()
+    elif args.scenario == "wire_protocol":
+        if wire_protocol(8, 150, 0.05 if args.lr is None else args.lr,
+                         1.0 if args.delta is None else args.delta, args.check, args.seed):
+            raise SystemExit(1)
     else:
         compare(MnistLogistic(), "mnist_logistic", 8, 150, 0.05,
                 1.0 if args.delta is None else args.delta, args.check, args.seed)

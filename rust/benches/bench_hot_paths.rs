@@ -73,6 +73,51 @@ fn main() {
         gbps(11.0 * 4.0 * p as f64, avg.median_ns)
     );
 
+    // wire codec throughput: encode/decode of one model delta at the
+    // mnist_cnn size against a reference, per delta encoding. GB/s counts
+    // the 4·P model f32 bytes each op consumes/produces (what bounds a
+    // transfer end to end), not the smaller wire payload — rendered as
+    // the BENCH_* "GB/s" trajectory rows by bench_report.py
+    println!();
+    {
+        use dynavg::wire::Encoding;
+        let v = &models[2];
+        let mut buf: Vec<u8> = Vec::new();
+        let mut dec: Vec<f32> = Vec::new();
+        let model_bytes = 4.0 * p as f64;
+        for enc in [
+            Encoding::Dense,
+            Encoding::Int8,
+            Encoding::Int16,
+            Encoding::TopK { fraction: 0.1 },
+        ] {
+            let label = enc.label().replace([':', '.'], "_");
+            let e = bench(&format!("wire_encode_{label}_P150k"), 20, || {
+                enc.encode(black_box(v), Some(black_box(&r)), &mut buf);
+            });
+            let wire_len = buf.len();
+            let d = bench(&format!("wire_decode_{label}_P150k"), 20, || {
+                enc.decode(black_box(&buf), Some(black_box(&r)), &mut dec).unwrap();
+            });
+            println!(
+                "{:<10} codec       : encode {:>6.2} GB/s, decode {:>6.2} GB/s ({} wire bytes for {} model bytes)",
+                enc.label(),
+                gbps(model_bytes, e.median_ns),
+                gbps(model_bytes, d.median_ns),
+                wire_len,
+                4 * p
+            );
+            record_json(
+                &format!("wire_encode_{label}"),
+                &[("gbps", gbps(model_bytes, e.median_ns)), ("median_ns", e.median_ns)],
+            );
+            record_json(
+                &format!("wire_decode_{label}"),
+                &[("gbps", gbps(model_bytes, d.median_ns)), ("median_ns", d.median_ns)],
+            );
+        }
+    }
+
     // tensor-kernel throughput (runtime/tensor): the blocked matmul at the
     // mnist_cnn fc1 shape and the im2col conv2d at its conv2 shape — these
     // two dominate the native CNN train step, and their JSON records seed

@@ -7,6 +7,7 @@ use dynavg::coordinator::{
 use dynavg::network::NetStats;
 use dynavg::util::bench::{bench, header};
 use dynavg::util::rng::Rng;
+use dynavg::wire::Link;
 
 fn configuration(m: usize, p: usize, spread: f32, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
     let mut rng = Rng::new(seed);
@@ -46,6 +47,7 @@ fn main() {
                 // reference set via first-round adoption below
             }
             let mut rng = Rng::new(9);
+            let mut link = Link::dense();
             let mut models = models0.clone();
             let mut net = NetStats::new();
             // seed dynamic reference
@@ -64,6 +66,7 @@ fn main() {
                             weights: &weights,
                             net: &mut net,
                             rng: &mut rng,
+                            link: &mut link,
                         });
                         // restore divergence so every iteration does work
                         models.clone_from(&models0);
@@ -80,6 +83,7 @@ fn main() {
                     weights: &weights,
                     net: &mut net,
                     rng: &mut rng,
+                    link: &mut link,
                 });
                 models.clone_from(&models0);
             });
@@ -105,12 +109,14 @@ fn main() {
             let mut models = models0.clone();
             let mut net = NetStats::new();
             let mut rng = Rng::new(1);
+            let mut link = Link::dense();
             let rep = d.sync(&mut SyncCtx {
                 round: 1,
                 models: &mut models,
                 weights: &weights,
                 net: &mut net,
                 rng: &mut rng,
+                link: &mut link,
             });
             updated_total += rep.updated;
             iters += 1;

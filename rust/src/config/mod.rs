@@ -75,6 +75,9 @@ impl ExperimentConfig {
         if let Some(rates) = root.get("sample_rates").and_then(|v| v.as_arr()) {
             sim.sample_rates = rates.iter().filter_map(|r| r.as_usize()).collect();
         }
+        if let Some(enc) = root.get("encoding").and_then(|v| v.as_str()) {
+            sim.encoding = crate::wire::Encoding::parse(enc)?;
+        }
 
         let dataset = match root
             .get("dataset")
@@ -86,13 +89,7 @@ impl ExperimentConfig {
             "driving" => Dataset::Driving { regional: false },
             "driving_regional" => Dataset::Driving { regional: true },
             "corpus" => Dataset::Corpus { window: 65 },
-            "auto" => match model.as_str() {
-                "mnist_cnn" | "mnist_logistic" | "mnist_mlp" => Dataset::MnistLike,
-                "drift_mlp" => Dataset::Graphical,
-                "driving_cnn" => Dataset::Driving { regional: false },
-                "transformer_lm" => Dataset::Corpus { window: 65 },
-                other => anyhow::bail!("no default dataset for model {other:?}"),
-            },
+            "auto" => Dataset::for_model(&model)?,
             other => anyhow::bail!("unknown dataset {other:?}"),
         };
 
@@ -161,6 +158,22 @@ mod tests {
     #[test]
     fn rejects_unknown_model_dataset() {
         let j = Json::parse(r#"{"model": "wat", "protocols": []}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn encoding_key_parses_and_rejects() {
+        let j = Json::parse(
+            r#"{"model": "mnist_logistic", "encoding": "topk:0.1",
+                "protocols": ["dynamic:1.0:5"]}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.sim.encoding.label(), "topk:0.1");
+        let j = Json::parse(
+            r#"{"model": "mnist_logistic", "encoding": "gzip", "protocols": []}"#,
+        )
+        .unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
     }
 

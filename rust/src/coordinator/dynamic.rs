@@ -115,6 +115,9 @@ impl Protocol for DynamicAveraging {
             .reference
             .get_or_insert_with(|| ctx.models[0].clone())
             .clone();
+        // both endpoints of every transfer this round hold r — lossy
+        // encodings delta-code against it
+        ctx.link.set_reference(&r);
 
         // --- local condition checks (each learner, in isolation) ---------
         let mut in_b = vec![false; m];
@@ -123,8 +126,9 @@ impl Protocol for DynamicAveraging {
             if params::sq_dist(&ctx.models[i], &r) > self.cfg.delta {
                 in_b[i] = true;
                 violators.push(i);
-                // learner i sends its model with the violation notice
-                ctx.net.send(MsgKind::ViolationWithModel, p);
+                // learner i sends its model with the violation notice; the
+                // coordinator sees the decoded (possibly lossy) copy
+                ctx.link.transfer(ctx.net, MsgKind::ViolationWithModel, &mut ctx.models[i]);
             }
         }
         report.violations = violators.len();
@@ -141,8 +145,8 @@ impl Protocol for DynamicAveraging {
             for i in 0..m {
                 if !in_b[i] {
                     // poll the remaining learners' models
-                    ctx.net.send(MsgKind::QueryModel, 0);
-                    ctx.net.send(MsgKind::ModelUpload, p);
+                    ctx.link.query(ctx.net);
+                    ctx.link.transfer(ctx.net, MsgKind::ModelUpload, &mut ctx.models[i]);
                     in_b[i] = true;
                     selected.push(i);
                 }
@@ -171,16 +175,20 @@ impl Protocol for DynamicAveraging {
                 .cfg
                 .augmentation
                 .pick(&in_b, ctx.models, &self.scratch, ctx.rng);
-            ctx.net.send(MsgKind::QueryModel, 0);
-            ctx.net.send(MsgKind::ModelUpload, p);
+            ctx.link.query(ctx.net);
+            ctx.link.transfer(ctx.net, MsgKind::ModelUpload, &mut ctx.models[next]);
             in_b[next] = true;
             selected.push(next);
         }
 
         // --- distribute the (partial) average -----------------------------
+        // encoded once, charged per receiver; every participant adopts the
+        // decoded copy (so full syncs set the reference to what the
+        // learners actually hold)
+        ctx.link
+            .transfer_broadcast(ctx.net, MsgKind::ModelDownload, &mut self.scratch, selected.len());
         for &i in &selected {
             ctx.models[i].copy_from_slice(&self.scratch);
-            ctx.net.send(MsgKind::ModelDownload, p);
         }
         report.updated = selected.len();
         if selected.len() == m {
@@ -222,12 +230,15 @@ mod tests {
         net: &mut NetStats,
         rng: &mut Rng,
     ) -> SyncReport {
+        // dense link: stateless, so a fresh one per sync is equivalent
+        let mut link = crate::wire::Link::dense();
         let mut ctx = SyncCtx {
             round,
             models,
             weights,
             net,
             rng,
+            link: &mut link,
         };
         proto.sync(&mut ctx)
     }

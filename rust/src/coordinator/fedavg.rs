@@ -47,11 +47,17 @@ impl Protocol for FedAvg {
         if self.scratch.len() != p {
             self.scratch = vec![0.0; p];
         }
-        params::weighted_average_into(ctx.models, &chosen, ctx.weights, &mut self.scratch);
+        // the sampled subset differs every round, so there is no reference
+        // both endpoints share — FedAvg transfers stay dense-coded (the
+        // link never gets a reference installed for this protocol)
         for &i in &chosen {
-            ctx.net.send(MsgKind::ModelUpload, p);
+            ctx.link.transfer(ctx.net, MsgKind::ModelUpload, &mut ctx.models[i]);
+        }
+        params::weighted_average_into(ctx.models, &chosen, ctx.weights, &mut self.scratch);
+        ctx.link
+            .transfer_broadcast(ctx.net, MsgKind::ModelDownload, &mut self.scratch, chosen.len());
+        for &i in &chosen {
             ctx.models[i].copy_from_slice(&self.scratch);
-            ctx.net.send(MsgKind::ModelDownload, p);
         }
         ctx.net.sync_events += 1;
         if k == m {
@@ -69,12 +75,14 @@ mod tests {
     use super::*;
     use crate::network::NetStats;
     use crate::util::rng::Rng;
+    use crate::wire::Link;
 
     fn run_one(frac: f64, m: usize) -> (Vec<Vec<f32>>, NetStats, SyncReport) {
         let mut models: Vec<Vec<f32>> = (0..m).map(|i| vec![i as f32]).collect();
         let w = vec![1.0; m];
         let mut net = NetStats::new();
         let mut rng = Rng::new(7);
+        let mut link = Link::dense();
         let mut proto = FedAvg::new(1, frac);
         let rep = proto.sync(&mut SyncCtx {
             round: 1,
@@ -82,6 +90,7 @@ mod tests {
             weights: &w,
             net: &mut net,
             rng: &mut rng,
+            link: &mut link,
         });
         (models, net, rep)
     }
@@ -121,6 +130,7 @@ mod tests {
         let w = vec![3.0, 1.0];
         let mut net = NetStats::new();
         let mut rng = Rng::new(0);
+        let mut link = Link::dense();
         let mut proto = FedAvg::new(1, 1.0);
         proto.sync(&mut SyncCtx {
             round: 1,
@@ -128,6 +138,7 @@ mod tests {
             weights: &w,
             net: &mut net,
             rng: &mut rng,
+            link: &mut link,
         });
         // (3*0 + 1*10)/4 = 2.5
         assert!((models[0][0] - 2.5).abs() < 1e-6);

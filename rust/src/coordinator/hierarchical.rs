@@ -8,7 +8,10 @@
 //! group-level violations travel to the root. This models e.g. per-region
 //! fleet servers in the paper's in-fleet-learning motivation. Byte
 //! accounting attributes leaf<->aggregator traffic at full model cost and
-//! aggregator<->root traffic likewise (one model per group).
+//! aggregator<->root traffic likewise (one model per group). Hierarchical
+//! transfers never install a shared codec reference on the link, so lossy
+//! encodings fall back to dense here (group references differ per group —
+//! a single delta reference cannot serve all receivers).
 //!
 //! Invariants (tested): global mean invariance; after a sync every leaf's
 //! distance to its group reference ≤ delta_local, and every group mean's
@@ -84,19 +87,20 @@ impl Protocol for HierarchicalDynamic {
             let mut mean = vec![0.0f32; p];
             params::average_into(ctx.models, &members, &mut mean);
             if !violators.is_empty() {
-                for _ in &violators {
-                    ctx.net.send(MsgKind::ViolationWithModel, p);
+                for &i in &violators {
+                    ctx.link.transfer(ctx.net, MsgKind::ViolationWithModel, &mut ctx.models[i]);
                 }
                 // aggregator pulls the rest of its group and averages
-                for i in &members {
-                    if !violators.contains(i) {
-                        ctx.net.send(MsgKind::QueryModel, 0);
-                        ctx.net.send(MsgKind::ModelUpload, p);
+                for &i in &members {
+                    if !violators.contains(&i) {
+                        ctx.link.query(ctx.net);
+                        ctx.link.transfer(ctx.net, MsgKind::ModelUpload, &mut ctx.models[i]);
                     }
                 }
+                ctx.link
+                    .transfer_broadcast(ctx.net, MsgKind::ModelDownload, &mut mean, members.len());
                 for &i in &members {
                     ctx.models[i].copy_from_slice(&mean);
-                    ctx.net.send(MsgKind::ModelDownload, p);
                 }
                 self.group_refs[g] = mean.clone();
                 group_synced[g] = true;
@@ -113,8 +117,8 @@ impl Protocol for HierarchicalDynamic {
             .collect();
         if !group_violations.is_empty() {
             // all aggregators ship their group mean to the root
-            for _ in 0..groups {
-                ctx.net.send(MsgKind::ModelUpload, p);
+            for gm in group_means.iter_mut() {
+                ctx.link.transfer(ctx.net, MsgKind::ModelUpload, gm);
             }
             // root averages group means weighted by group size
             let mut global = vec![0.0f32; p];
@@ -129,12 +133,14 @@ impl Protocol for HierarchicalDynamic {
             for o in global.iter_mut() {
                 *o /= total;
             }
-            // distribute to every leaf through the aggregators
+            // distribute to every leaf through the aggregators: one
+            // root -> aggregator copy per group plus one aggregator -> leaf
+            // copy per learner
+            ctx.link
+                .transfer_broadcast(ctx.net, MsgKind::ModelDownload, &mut global, groups + m);
             for g in 0..groups {
-                ctx.net.send(MsgKind::ModelDownload, p); // root -> aggregator
                 for &i in &self.members(g, m) {
                     ctx.models[i].copy_from_slice(&global);
-                    ctx.net.send(MsgKind::ModelDownload, p); // aggregator -> leaf
                 }
                 self.group_refs[g] = global.clone();
             }
@@ -161,6 +167,7 @@ mod tests {
     use super::*;
     use crate::network::NetStats;
     use crate::util::rng::Rng;
+    use crate::wire::Link;
 
     fn sync(
         proto: &mut HierarchicalDynamic,
@@ -169,12 +176,14 @@ mod tests {
         let w = vec![1.0; models.len()];
         let mut net = NetStats::new();
         let mut rng = Rng::new(0);
+        let mut link = Link::dense();
         let rep = proto.sync(&mut SyncCtx {
             round: 1,
             models,
             weights: &w,
             net: &mut net,
             rng: &mut rng,
+            link: &mut link,
         });
         (rep, net)
     }
@@ -256,12 +265,14 @@ mod tests {
         let w = vec![1.0; m];
         let mut pnet = NetStats::new();
         let mut prng = Rng::new(0);
+        let mut plink = Link::dense();
         per.sync(&mut SyncCtx {
             round: 1,
             models: &mut pmodels,
             weights: &w,
             net: &mut pnet,
             rng: &mut prng,
+            link: &mut plink,
         });
         assert!(
             hnet.total_bytes() < pnet.total_bytes(),

@@ -20,6 +20,7 @@ mod tests {
     use super::*;
     use crate::network::NetStats;
     use crate::util::rng::Rng;
+    use crate::wire::Link;
 
     #[test]
     fn never_communicates() {
@@ -27,6 +28,7 @@ mod tests {
         let w = vec![1.0; 2];
         let mut net = NetStats::new();
         let mut rng = Rng::new(0);
+        let mut link = Link::dense();
         let mut proto = NoSync;
         for t in 1..=100 {
             let rep = proto.sync(&mut SyncCtx {
@@ -35,6 +37,7 @@ mod tests {
                 weights: &w,
                 net: &mut net,
                 rng: &mut rng,
+                link: &mut link,
             });
             assert!(!rep.communicated);
         }

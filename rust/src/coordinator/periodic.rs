@@ -52,16 +52,24 @@ impl Protocol for PeriodicAveraging {
         if self.scratch.len() != p {
             self.scratch = vec![0.0; p];
         }
+        // uploads delta-code against the last distributed average (the
+        // first sync has no shared reference yet and goes dense)
+        for i in 0..m {
+            ctx.link.transfer(ctx.net, MsgKind::ModelUpload, &mut ctx.models[i]);
+        }
         if self.weighted {
             params::weighted_average_into(ctx.models, &idx, ctx.weights, &mut self.scratch);
         } else {
             params::average_into(ctx.models, &idx, &mut self.scratch);
         }
+        ctx.link
+            .transfer_broadcast(ctx.net, MsgKind::ModelDownload, &mut self.scratch, m);
         for i in 0..m {
-            ctx.net.send(MsgKind::ModelUpload, p);
             ctx.models[i].copy_from_slice(&self.scratch);
-            ctx.net.send(MsgKind::ModelDownload, p);
         }
+        // every learner now holds the decoded average — the shared
+        // reference for the next period's deltas
+        ctx.link.set_reference(&self.scratch);
         ctx.net.sync_events += 1;
         ctx.net.full_syncs += 1;
         report.communicated = true;
@@ -76,6 +84,7 @@ mod tests {
     use super::*;
     use crate::network::NetStats;
     use crate::util::rng::Rng;
+    use crate::wire::Link;
 
     #[test]
     fn averages_all_on_period() {
@@ -83,6 +92,7 @@ mod tests {
         let w = vec![1.0, 1.0];
         let mut net = NetStats::new();
         let mut rng = Rng::new(0);
+        let mut link = Link::dense();
         let mut proto = PeriodicAveraging::new(5);
         for t in 1..=4 {
             let rep = proto.sync(&mut SyncCtx {
@@ -91,6 +101,7 @@ mod tests {
                 weights: &w,
                 net: &mut net,
                 rng: &mut rng,
+                link: &mut link,
             });
             assert!(!rep.communicated);
         }
@@ -100,6 +111,7 @@ mod tests {
             weights: &w,
             net: &mut net,
             rng: &mut rng,
+            link: &mut link,
         });
         assert!(rep.full);
         assert_eq!(models[0], vec![1.0, 1.0]);
@@ -119,6 +131,7 @@ mod tests {
         let w = vec![1.0; 3];
         let mut net = NetStats::new();
         let mut rng = Rng::new(0);
+        let mut link = Link::dense();
         let mut proto = PeriodicAveraging::new(2);
         for t in 1..=10 {
             proto.sync(&mut SyncCtx {
@@ -127,6 +140,7 @@ mod tests {
                 weights: &w,
                 net: &mut net,
                 rng: &mut rng,
+                link: &mut link,
             });
         }
         // 5 sync rounds x 3 learners x 2 directions

@@ -8,6 +8,7 @@
 
 use crate::network::NetStats;
 use crate::util::rng::Rng;
+use crate::wire::Link;
 
 /// Everything a synchronization operator may observe/mutate in one round.
 pub struct SyncCtx<'a> {
@@ -21,6 +22,10 @@ pub struct SyncCtx<'a> {
     pub net: &'a mut NetStats,
     /// Protocol-owned randomness (FedAvg subsampling, random augmentation).
     pub rng: &'a mut Rng,
+    /// Wire codec state: model transfers are charged (and, for lossy
+    /// encodings, roundtripped) through this. `Link::dense()` is the
+    /// identity transport with the historical `4·P` accounting.
+    pub link: &'a mut Link,
 }
 
 /// What a sync invocation did (for metrics / the figures).

@@ -54,6 +54,19 @@ pub enum Dataset {
 }
 
 impl Dataset {
+    /// The stream substrate a model name trains on (shared by `dynavg
+    /// run`, `dynavg serve` and the wire clients, so every entrypoint
+    /// derives identical per-learner streams from a model + seed).
+    pub fn for_model(model: &str) -> Result<Dataset> {
+        Ok(match model {
+            "mnist_cnn" | "mnist_logistic" | "mnist_mlp" => Dataset::MnistLike,
+            "drift_mlp" => Dataset::Graphical,
+            "driving_cnn" => Dataset::Driving { regional: false },
+            "transformer_lm" => Dataset::Corpus { window: 65 },
+            other => anyhow::bail!("unknown model {other:?}"),
+        })
+    }
+
     /// Stream factory closure for the engine; `seed` is the experiment
     /// seed (concept is shared across learners, samples are not).
     pub fn factory(&self, seed: u64) -> Box<dyn Fn(usize) -> Box<dyn Stream> + '_> {

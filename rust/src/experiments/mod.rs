@@ -12,6 +12,7 @@ pub mod fig6_1;
 pub mod fig6_2;
 pub mod fig_a1;
 pub mod fig_a6;
+pub mod wire;
 
 pub use common::{image_model, Dataset, Harness, Scale};
 
@@ -30,6 +31,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig6_2d", "heterogeneous initialization grid (dynamic, Fig A.8b)"),
     ("figA_1", "communication/loss over time: sigma_d=0.3 vs sigma_b=10"),
     ("figA_6", "black-box optimizers: SGD / ADAM / RMSprop"),
+    ("wire", "measured wire bytes: dynamic vs periodic across delta encodings"),
 ];
 
 /// Dispatch an experiment by id. Returns after printing its tables and
@@ -65,6 +67,9 @@ pub fn dispatch(rt: &Runtime, id: &str, scale: Scale, seed: u64) -> Result<()> {
         }
         "figA_6" => {
             fig_a6::run(rt, scale, seed)?;
+        }
+        "wire" => {
+            wire::run(rt, scale, seed)?;
         }
         "all" => {
             for (name, _) in EXPERIMENTS {

@@ -1,0 +1,113 @@
+//! Wire-bytes experiment: the paper's headline communication reduction
+//! (dynamic vs periodic averaging), re-measured in *encoded frame bytes*
+//! rather than `4·P` slice math, across the delta encodings of
+//! [`crate::wire::encoding`].
+//!
+//! For each encoding (dense f32, int8/int16 per-chunk quantized, top-k
+//! sparse) the driver runs dynamic averaging and periodic averaging with
+//! the same check period and reports cumulative communication `C(T,m)` as
+//! charged on the wire, the dynamic-vs-periodic reduction, and the loss
+//! ratio relative to the dense run — the measured form of the claim
+//! gated by `tests/wire_loopback.rs`.
+
+use anyhow::Result;
+
+use crate::coordinator::ProtocolSpec;
+use crate::metrics::write_summary_csv;
+use crate::runtime::Runtime;
+use crate::sim::SimConfig;
+use crate::wire::Encoding;
+
+use super::common::{Dataset, Harness, Scale};
+
+pub struct WireRow {
+    pub encoding: String,
+    pub dynamic_bytes: u64,
+    pub periodic_bytes: u64,
+    /// periodic_bytes / dynamic_bytes — the paper's communication reduction,
+    /// in measured frame bytes
+    pub reduction: f64,
+    pub dynamic_loss: f64,
+    pub periodic_loss: f64,
+}
+
+pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<WireRow>> {
+    let (m, rounds) = scale.size(8, 150);
+    let check_every = 5;
+    let delta = 1.0;
+    let encodings = [
+        Encoding::Dense,
+        Encoding::Int8,
+        Encoding::Int16,
+        Encoding::TopK { fraction: 0.1 },
+    ];
+
+    let mut rows = Vec::new();
+    let mut summaries = Vec::new();
+    for enc in encodings {
+        let mut cfg = SimConfig::new("mnist_logistic", "sgd", m, rounds, 0.05);
+        cfg.seed = seed;
+        cfg.final_eval = true;
+        cfg.encoding = enc;
+        let harness = Harness::new(
+            rt,
+            cfg,
+            Dataset::MnistLike,
+            &format!("wire/{}", enc.label().replace([':', '.'], "_")),
+        );
+        let dynamic = harness.run_protocol(&ProtocolSpec::Dynamic { delta, check_every })?;
+        let periodic = harness.run_protocol(&ProtocolSpec::Periodic { period: check_every })?;
+        summaries.push(dynamic.summary.clone());
+        summaries.push(periodic.summary.clone());
+        rows.push(WireRow {
+            encoding: enc.label(),
+            dynamic_bytes: dynamic.summary.comm_bytes,
+            periodic_bytes: periodic.summary.comm_bytes,
+            reduction: periodic.summary.comm_bytes as f64 / dynamic.summary.comm_bytes.max(1) as f64,
+            dynamic_loss: dynamic.summary.cumulative_loss,
+            periodic_loss: periodic.summary.cumulative_loss,
+        });
+    }
+
+    let dense_dyn_bytes = rows[0].dynamic_bytes.max(1);
+    let dense_dyn_loss = rows[0].dynamic_loss.max(1e-12);
+    println!("\n-- wire: measured frame bytes, dynamic(delta={delta},b={check_every}) vs periodic(b={check_every}) --");
+    println!(
+        "{:<10} {:>14} {:>14} {:>10} {:>12} {:>12} {:>10} {:>10}",
+        "encoding", "dyn_bytes", "per_bytes", "reduction", "dyn_loss", "per_loss", "vs_dense", "loss_rat"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:>14} {:>14} {:>9.1}x {:>12.2} {:>12.2} {:>9.2}x {:>10.4}",
+            r.encoding,
+            r.dynamic_bytes,
+            r.periodic_bytes,
+            r.reduction,
+            r.dynamic_loss,
+            r.periodic_loss,
+            dense_dyn_bytes as f64 / r.dynamic_bytes.max(1) as f64,
+            r.dynamic_loss / dense_dyn_loss,
+        );
+    }
+
+    let dir = crate::results_dir().join("wire");
+    write_summary_csv(&dir.join("summary.csv"), &summaries)?;
+    write_rows(&rows)?;
+    Ok(rows)
+}
+
+fn write_rows(rows: &[WireRow]) -> Result<()> {
+    use std::io::Write;
+    let dir = crate::results_dir().join("wire");
+    std::fs::create_dir_all(&dir)?;
+    let mut f = std::fs::File::create(dir.join("reduction.csv"))?;
+    writeln!(f, "encoding,dynamic_bytes,periodic_bytes,reduction,dynamic_loss,periodic_loss")?;
+    for r in rows {
+        writeln!(
+            f,
+            "{},{},{},{:.6},{:.6},{:.6}",
+            r.encoding, r.dynamic_bytes, r.periodic_bytes, r.reduction, r.dynamic_loss, r.periodic_loss
+        )?;
+    }
+    Ok(())
+}

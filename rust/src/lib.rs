@@ -41,6 +41,7 @@ pub mod runtime;
 pub mod sim;
 pub mod testing;
 pub mod util;
+pub mod wire;
 
 /// Default artifacts directory (relative to the repo root).
 pub fn artifacts_dir() -> std::path::PathBuf {

@@ -6,10 +6,17 @@
 //!   run --model M --optimizer O --protocol SPEC --m N --rounds T [--lr ..]
 //!       one custom protocol run; SPEC like dynamic:0.7:10, periodic:20,
 //!       fedavg:50:0.3, continuous, nosync
+//!   serve --model M --m N --rounds T [--encoding dense|int8|int16|topk:F] ...
+//!       host dynamic averaging over loopback TCP; learner clients attach
+//!       with `connect` and trade encoded deltas (measured wire bytes)
+//!   connect --addr HOST:PORT
+//!       run one learner client against a `serve` coordinator
 //!   list       available experiments and artifacts
 //!   models     per-backend capability dump: which manifest models the
 //!              loaded backend can execute (also: `--list-models`)
 //!   info       manifest / runtime info
+
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -18,6 +25,9 @@ use dynavg::experiments::{self, Scale};
 use dynavg::runtime::Runtime;
 use dynavg::sim::SimConfig;
 use dynavg::util::cli::Args;
+use dynavg::wire::client::run_client;
+use dynavg::wire::serve::{ServeConfig, WireServer};
+use dynavg::wire::Encoding;
 
 fn main() {
     if let Err(e) = run() {
@@ -31,6 +41,8 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("exp") => cmd_exp(&args),
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("connect") => cmd_connect(&args),
         Some("list") => cmd_list(),
         Some("models") => cmd_models(),
         Some("info") => cmd_info(),
@@ -47,6 +59,9 @@ fn print_usage() {
     println!("usage:");
     println!("  dynavg exp <id> [--scale tiny|small|medium|paper] [--seed N]");
     println!("  dynavg run --model M --protocol SPEC [--optimizer O] [--m N] [--rounds T] [--lr F]");
+    println!("  dynavg serve --model M [--m N] [--rounds T] [--encoding dense|int8|int16|topk:F]");
+    println!("               [--port P] [--port-file PATH] [--delta D] [--check B] [--final-eval]");
+    println!("  dynavg connect --addr HOST:PORT [--timeout-secs S]");
     println!("  dynavg list | models | info");
 }
 
@@ -78,19 +93,85 @@ fn cmd_run(args: &Args) -> Result<()> {
     let rounds = args.get_usize("rounds", 100) as u64;
     let lr = args.get_f64("lr", 0.1) as f32;
     let seed = args.get_usize("seed", 42) as u64;
-    let dataset = match model.as_str() {
-        "mnist_cnn" | "mnist_logistic" | "mnist_mlp" => experiments::Dataset::MnistLike,
-        "drift_mlp" => experiments::Dataset::Graphical,
-        "driving_cnn" => experiments::Dataset::Driving { regional: false },
-        "transformer_lm" => experiments::Dataset::Corpus { window: 65 },
-        other => anyhow::bail!("unknown model {other:?}"),
-    };
+    let dataset = experiments::Dataset::for_model(&model)?;
     let rt = Runtime::new(dynavg::artifacts_dir())?;
     let mut cfg = SimConfig::new(&model, &optimizer, m, rounds, lr);
     cfg.seed = seed;
+    cfg.encoding = Encoding::parse(&args.get_str("encoding", "dense"))?;
     cfg.final_eval = true;
     let harness = experiments::Harness::new(&rt, cfg, dataset, "custom");
     harness.run_all(&[spec], args.has("serial"))?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_str("model", "mnist_logistic");
+    let m = args.get_usize("m", 4);
+    let rounds = args.get_usize("rounds", 30) as u64;
+    let mut cfg = ServeConfig::new(&model, m, rounds);
+    cfg.optimizer = args.get_str("optimizer", "sgd");
+    cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
+    cfg.seed = args.get_usize("seed", cfg.seed as usize) as u64;
+    cfg.delta = args.get_f64("delta", cfg.delta);
+    cfg.check_every = args.get_usize("check", cfg.check_every as usize) as u64;
+    cfg.encoding = Encoding::parse(&args.get_str("encoding", "dense"))?;
+    cfg.timeout = Duration::from_secs(args.get_usize("timeout-secs", 120) as u64);
+    cfg.final_eval = args.has("final-eval");
+    cfg.debug_wire = args.has("debug-wire");
+    let port = args.get_usize("port", 7070) as u16;
+
+    let rt = Runtime::new(dynavg::artifacts_dir())?;
+    let server = WireServer::bind(cfg.clone(), port)?;
+    let addr = server.local_addr()?;
+    if let Some(path) = args.get("port-file") {
+        server.write_port_file(std::path::Path::new(path))?;
+    }
+    println!(
+        "serving dynamic averaging on {addr} (model={model}, m={m}, rounds={rounds}, \
+         delta={}, check={}, encoding={})",
+        cfg.delta,
+        cfg.check_every,
+        cfg.encoding.label()
+    );
+    let report = server.run(&rt)?;
+    let net = &report.net;
+    println!("run complete:");
+    println!(
+        "  protocol bytes   up={} down={} total={} (messages={}, models_sent={})",
+        net.up_bytes,
+        net.down_bytes,
+        net.total_bytes(),
+        net.messages,
+        net.models_sent
+    );
+    println!(
+        "  wire bytes       up={} down={} transport_total={} (charged == NetStats: verified)",
+        report.wire_up_bytes, report.wire_down_bytes, report.wire_transport_bytes
+    );
+    println!(
+        "  syncs            events={} full={}",
+        net.sync_events, net.full_syncs
+    );
+    println!("  cumulative loss  {:.6}", report.cumulative_loss);
+    if let Some((loss, metric)) = report.eval {
+        println!("  holdout eval     loss={loss:.6} metric={metric:.6}");
+    }
+    Ok(())
+}
+
+fn cmd_connect(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7070");
+    let timeout = Duration::from_secs(args.get_usize("timeout-secs", 120) as u64);
+    let rt = Runtime::new(dynavg::artifacts_dir())?;
+    let report = run_client(&rt, &addr, timeout)?;
+    let final_loss = report.losses.last().copied().unwrap_or(f32::NAN);
+    println!(
+        "client {} done: rounds={} final_loss={final_loss:.6} sent={}B received={}B",
+        report.id,
+        report.losses.len(),
+        report.sent_bytes,
+        report.received_bytes
+    );
     Ok(())
 }
 

@@ -90,6 +90,8 @@ impl Recorder {
 #[derive(Clone, Debug)]
 pub struct Summary {
     pub protocol: String,
+    /// wire encoding label (`dense`, `int8`, `int16`, `topk:<frac>`)
+    pub encoding: String,
     pub cumulative_loss: f64,
     pub comm_bytes: u64,
     pub tail_metric: f64,
@@ -102,15 +104,16 @@ pub struct Summary {
 impl Summary {
     pub fn table_header() -> String {
         format!(
-            "{:<22} {:>14} {:>14} {:>12} {:>11} {:>11} {:>7} {:>6}",
-            "protocol", "cum_loss", "comm_bytes", "comm_MB", "tail_metric", "eval_metric", "syncs", "full"
+            "{:<22} {:<9} {:>14} {:>14} {:>12} {:>11} {:>11} {:>7} {:>6}",
+            "protocol", "enc", "cum_loss", "comm_bytes", "comm_MB", "tail_metric", "eval_metric", "syncs", "full"
         )
     }
 
     pub fn table_row(&self) -> String {
         format!(
-            "{:<22} {:>14.2} {:>14} {:>12.2} {:>11.4} {:>11} {:>7} {:>6}",
+            "{:<22} {:<9} {:>14.2} {:>14} {:>12.2} {:>11.4} {:>11} {:>7} {:>6}",
             self.protocol,
+            self.encoding,
             self.cumulative_loss,
             self.comm_bytes,
             self.comm_bytes as f64 / 1e6,
@@ -132,13 +135,14 @@ pub fn write_summary_csv(path: &Path, rows: &[Summary]) -> Result<()> {
     let mut f = std::fs::File::create(path)?;
     writeln!(
         f,
-        "protocol,cum_loss,comm_bytes,tail_metric,eval_loss,eval_metric,sync_events,full_syncs"
+        "protocol,encoding,cum_loss,comm_bytes,tail_metric,eval_loss,eval_metric,sync_events,full_syncs"
     )?;
     for s in rows {
         writeln!(
             f,
-            "{},{:.6},{},{:.6},{},{},{},{}",
+            "{},{},{:.6},{},{:.6},{},{},{},{}",
             s.protocol,
+            s.encoding,
             s.cumulative_loss,
             s.comm_bytes,
             s.tail_metric,

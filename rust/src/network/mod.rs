@@ -1,12 +1,18 @@
 //! Simulated star-topology network with exact byte accounting.
 //!
 //! The paper measures protocols by cumulative communication `C(T,m) =
-//! Σ_t c(f_t)` in bytes. Every model transfer costs `4·P` payload bytes
-//! plus a fixed header; control-only messages (violation notices, queries)
-//! cost the header. Both directions are counted, matching the paper's
-//! "bytes required by the protocol to synchronize".
+//! Σ_t c(f_t)` in bytes. Every message costs its *encoded* payload size
+//! plus a fixed header; the caller supplies the payload size, computed by
+//! the wire codec ([`crate::wire`]). The dense encoding's payload for a
+//! `P`-parameter model is exactly `4·P` bytes, reproducing the historical
+//! slice-math accounting; quantized and top-k encodings charge their real
+//! (smaller) frame sizes. Control-only messages (queries) carry no
+//! payload and cost the header. Both directions are counted, matching the
+//! paper's "bytes required by the protocol to synchronize".
 
-/// Fixed per-message overhead (source, type, round tag, length).
+/// Fixed per-message overhead — exactly the wire frame header
+/// ([`crate::wire::frame::HEADER_LEN`]): magic, version, kind, encoding,
+/// flags, source, round tag, payload length.
 pub const HEADER_BYTES: u64 = 16;
 
 /// Message taxonomy on the learner<->coordinator star.
@@ -23,7 +29,7 @@ pub enum MsgKind {
 }
 
 /// Accumulating traffic statistics for one protocol run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct NetStats {
     pub up_bytes: u64,
     pub down_bytes: u64,
@@ -44,21 +50,22 @@ impl NetStats {
         self.up_bytes + self.down_bytes
     }
 
-    /// Record a message carrying a model of `p` f32 parameters.
-    pub fn send(&mut self, kind: MsgKind, p: usize) {
-        let model_bytes = 4 * p as u64;
+    /// Record a message whose encoded payload is `payload_bytes` long
+    /// (header excluded). Model-carrying kinds count toward
+    /// `models_sent`; queries pass 0.
+    pub fn send(&mut self, kind: MsgKind, payload_bytes: u64) {
         self.messages += 1;
         match kind {
             MsgKind::ViolationWithModel | MsgKind::ModelUpload => {
-                self.up_bytes += HEADER_BYTES + model_bytes;
+                self.up_bytes += HEADER_BYTES + payload_bytes;
                 self.models_sent += 1;
             }
             MsgKind::ModelDownload => {
-                self.down_bytes += HEADER_BYTES + model_bytes;
+                self.down_bytes += HEADER_BYTES + payload_bytes;
                 self.models_sent += 1;
             }
             MsgKind::QueryModel => {
-                self.down_bytes += HEADER_BYTES;
+                self.down_bytes += HEADER_BYTES + payload_bytes;
             }
         }
     }
@@ -69,9 +76,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn model_transfer_costs_4p_plus_header() {
+    fn model_transfer_costs_payload_plus_header() {
         let mut n = NetStats::new();
-        n.send(MsgKind::ModelUpload, 100);
+        // dense payload for a 100-parameter model: 4 * 100 bytes
+        n.send(MsgKind::ModelUpload, 400);
         assert_eq!(n.up_bytes, HEADER_BYTES + 400);
         assert_eq!(n.down_bytes, 0);
         assert_eq!(n.models_sent, 1);
@@ -80,7 +88,7 @@ mod tests {
     #[test]
     fn query_is_header_only() {
         let mut n = NetStats::new();
-        n.send(MsgKind::QueryModel, 12345);
+        n.send(MsgKind::QueryModel, 0);
         assert_eq!(n.down_bytes, HEADER_BYTES);
         assert_eq!(n.models_sent, 0);
     }
@@ -88,8 +96,8 @@ mod tests {
     #[test]
     fn totals_accumulate() {
         let mut n = NetStats::new();
-        n.send(MsgKind::ViolationWithModel, 10);
-        n.send(MsgKind::ModelDownload, 10);
+        n.send(MsgKind::ViolationWithModel, 40);
+        n.send(MsgKind::ModelDownload, 40);
         assert_eq!(n.total_bytes(), 2 * (HEADER_BYTES + 40));
         assert_eq!(n.messages, 2);
     }

@@ -16,6 +16,7 @@ use crate::network::NetStats;
 use crate::runtime::{Batch, EvalStep, ModelRuntime, Runtime};
 use crate::util::rng::Rng;
 use crate::util::threads;
+use crate::wire::{Encoding, Link};
 
 use super::learner::Learner;
 
@@ -51,6 +52,9 @@ pub struct SimConfig {
     pub drift: DriftProb,
     /// evaluate on a holdout stream at the end
     pub final_eval: bool,
+    /// wire encoding for model transfers (dense reproduces the
+    /// historical `4·P` byte accounting bit for bit)
+    pub encoding: Encoding,
 }
 
 #[derive(Clone, Debug)]
@@ -76,6 +80,7 @@ impl SimConfig {
             sample_rates: Vec::new(),
             drift: DriftProb::None,
             final_eval: false,
+            encoding: Encoding::Dense,
         }
     }
 }
@@ -176,6 +181,7 @@ impl<'a> Engine<'a> {
             DriftProb::Forced(rounds) => DriftSchedule::forced(rounds.clone()),
         };
         let weights: Vec<f32> = learners.iter().map(|l| l.sample_rate as f32).collect();
+        let mut link = Link::new(self.cfg.encoding);
         let train = &self.mrt.train;
         let lr = self.cfg.lr;
 
@@ -218,6 +224,7 @@ impl<'a> Engine<'a> {
                 weights: &weights,
                 net: &mut net,
                 rng: &mut proto_rng,
+                link: &mut link,
             });
             for (l, p) in learners.iter_mut().zip(models) {
                 l.params = p;
@@ -251,6 +258,7 @@ impl<'a> Engine<'a> {
 
         let summary = Summary {
             protocol: protocol.name(),
+            encoding: self.cfg.encoding.label(),
             cumulative_loss: recorder.cumulative_loss,
             comm_bytes: net.total_bytes(),
             tail_metric: recorder.tail_metric(50),

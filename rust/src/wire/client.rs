@@ -1,0 +1,234 @@
+//! Learner client for the loopback coordinator (`dynavg connect`).
+//!
+//! A client is one [`crate::sim::Learner`] driven over TCP instead of by
+//! the in-process engine: it trains locally between check rounds, checks
+//! the local condition `||f_i − r||² ≤ Δ` against the reference the
+//! coordinator installed, and trades encoded deltas with the server
+//! ([`crate::wire::serve`]) — `Violation`/`Upload` out, `Download` in.
+//!
+//! Determinism: the client rebuilds exactly the learner the engine would
+//! build for its assigned id — same initial parameters (homogeneous init
+//! is the runtime's `init_params` directly), same stream seed derivation,
+//! same train artifact — and runs it single-threaded (the workspace
+//! tiling contract makes thread count irrelevant to the results), so m
+//! clients against `dynavg serve` reproduce the in-process run bit for
+//! bit.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::experiments::Dataset;
+use crate::model::params;
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::sim::Learner;
+use crate::util::json::Json;
+use crate::wire::encoding::Encoding;
+use crate::wire::frame::{Frame, FrameKind, FLAG_FULL_SYNC};
+
+/// What one client run produced.
+pub struct ClientReport {
+    /// Learner id the coordinator assigned (its accept order).
+    pub id: usize,
+    /// Final local parameters after the last round.
+    pub params: Vec<f32>,
+    /// Per-round training loss / metric.
+    pub losses: Vec<f32>,
+    pub metrics: Vec<f32>,
+    /// Total frame bytes this client sent / received (including uncharged
+    /// transport — the per-client view of the server's tally).
+    pub sent_bytes: u64,
+    pub received_bytes: u64,
+}
+
+/// Connect to a `dynavg serve` coordinator and run the full protocol.
+/// Retries the connect briefly (the server may still be binding), then
+/// trains until the coordinator's `Done`.
+pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientReport> {
+    let mut stream = connect_with_retry(addr, timeout)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+
+    let mut sent_bytes = 0u64;
+    let mut received_bytes = 0u64;
+
+    // --- handshake --------------------------------------------------------
+    let mut hello = Frame::control(FrameKind::Hello, 0, 0);
+    hello.payload = Json::obj(vec![("proto", Json::num(1.0))]).to_string().into_bytes();
+    send(&mut stream, &hello, &mut sent_bytes)?;
+    let config = recv(&mut stream, &mut received_bytes)?;
+    if config.kind != FrameKind::Config {
+        bail!("expected config from coordinator, got {}", config.kind.name());
+    }
+    let j = Json::parse(std::str::from_utf8(&config.payload)?)?;
+    let get_num = |key: &str| -> Result<f64> {
+        j.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("config: {key} is not a number"))
+    };
+    let id = get_num("id")? as usize;
+    let rounds = get_num("rounds")? as u64;
+    let lr = get_num("lr")? as f32;
+    let seed = get_num("seed")? as u64;
+    let delta = get_num("delta")?;
+    let check_every = get_num("check_every")? as u64;
+    let model = j.req("model")?.as_str().context("config: model")?.to_string();
+    let optimizer = j.req("optimizer")?.as_str().context("config: optimizer")?.to_string();
+    let enc = Encoding::parse(j.req("encoding")?.as_str().context("config: encoding")?)?;
+    if check_every == 0 || rounds == 0 {
+        bail!("config: rounds and check period must be positive");
+    }
+
+    // --- rebuild the engine's learner for this id -------------------------
+    if !rt.supports_model(&model) {
+        bail!("model {model:?} is not executable on the {} backend", rt.backend_name());
+    }
+    let mrt = ModelRuntime::load(rt, &model, &optimizer)?;
+    let init = rt.init_params(&model)?;
+    let p = init.len();
+    let state_size = mrt.train.exe.info.state_size;
+    let rate = mrt.train.exe.info.batch;
+    let factory = Dataset::for_model(&model)?.factory(seed);
+    // single-threaded, no pool: results are bitwise independent of the
+    // tiling schedule, so this matches the engine's threaded learners
+    let mut ws = mrt.train.workspace();
+    ws.threads = 1;
+    let mut learner = Learner::new(id, init, state_size, factory(id), rate, ws);
+
+    let mut reference: Option<Vec<f32>> = None;
+    let mut losses = Vec::with_capacity(rounds as usize);
+    let mut metrics = Vec::with_capacity(rounds as usize);
+    let mut buf: Vec<u8> = Vec::new();
+
+    for t in 1..=rounds {
+        learner.local_step(&mrt.train, lr);
+        if let Some(err) = &learner.last_err {
+            bail!("local step failed at round {t}: {err}");
+        }
+        let stats = learner.last.expect("step succeeded");
+        losses.push(stats.loss);
+        metrics.push(stats.metric);
+
+        if t % check_every != 0 {
+            continue;
+        }
+        let round = t as u32;
+
+        // reference bootstrap: client 0 ships its model dense, everyone
+        // adopts the coordinator's broadcast
+        if reference.is_none() {
+            if id == 0 {
+                let mut f = Frame::control(FrameKind::RefModel, id as u16, round);
+                f.encoding_tag = Encoding::Dense.tag();
+                Encoding::Dense.encode(&learner.params, None, &mut buf);
+                f.payload = buf.clone();
+                send(&mut stream, &f, &mut sent_bytes)?;
+            }
+            let f = recv(&mut stream, &mut received_bytes)?;
+            if f.kind != FrameKind::SetReference {
+                bail!("round {t}: expected set_reference, got {}", f.kind.name());
+            }
+            let mut r = Vec::new();
+            Encoding::Dense.decode(&f.payload, None, &mut r)?;
+            if r.len() != p {
+                bail!("set_reference carries {} params, model has {p}", r.len());
+            }
+            reference = Some(r);
+        }
+        let r = reference.as_ref().expect("reference set above").clone();
+
+        // local condition check — exactly the coordinator's comparison
+        if params::sq_dist(&learner.params, &r) > delta {
+            let mut f = Frame::control(FrameKind::Violation, id as u16, round);
+            f.encoding_tag = enc.tag();
+            enc.encode(&learner.params, Some(&r), &mut buf);
+            f.payload = buf.clone();
+            send(&mut stream, &f, &mut sent_bytes)?;
+        } else {
+            send(
+                &mut stream,
+                &Frame::control(FrameKind::CheckOk, id as u16, round),
+                &mut sent_bytes,
+            )?;
+        }
+
+        // serve the coordinator until the round resolves
+        loop {
+            let f = recv(&mut stream, &mut received_bytes)?;
+            match f.kind {
+                FrameKind::Resolved => break,
+                FrameKind::Query => {
+                    let mut up = Frame::control(FrameKind::Upload, id as u16, round);
+                    up.encoding_tag = enc.tag();
+                    enc.encode(&learner.params, Some(&r), &mut buf);
+                    up.payload = buf.clone();
+                    send(&mut stream, &up, &mut sent_bytes)?;
+                }
+                FrameKind::Download => {
+                    enc.decode(&f.payload, Some(&r), &mut learner.params)?;
+                    if learner.params.len() != p {
+                        bail!("round {t}: download carries {} params, model has {p}", learner.params.len());
+                    }
+                    if f.flags & FLAG_FULL_SYNC != 0 {
+                        reference = Some(learner.params.clone());
+                    }
+                }
+                other => bail!("round {t}: unexpected {} from coordinator", other.name()),
+            }
+        }
+    }
+
+    // --- final report: model + per-round losses and metrics ---------------
+    let mut flat = Vec::with_capacity(p + 2 * rounds as usize);
+    flat.extend_from_slice(&learner.params);
+    flat.extend_from_slice(&losses);
+    flat.extend_from_slice(&metrics);
+    let mut report = Frame::control(FrameKind::FinalReport, id as u16, rounds as u32);
+    report.encoding_tag = Encoding::Dense.tag();
+    Encoding::Dense.encode(&flat, None, &mut buf);
+    report.payload = buf;
+    send(&mut stream, &report, &mut sent_bytes)?;
+    let done = recv(&mut stream, &mut received_bytes)?;
+    if done.kind != FrameKind::Done {
+        bail!("expected done from coordinator, got {}", done.kind.name());
+    }
+
+    Ok(ClientReport {
+        id,
+        params: learner.params,
+        losses,
+        metrics,
+        sent_bytes,
+        received_bytes,
+    })
+}
+
+fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() > deadline {
+                    return Err(e).with_context(|| format!("connecting to coordinator at {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn send(stream: &mut TcpStream, f: &Frame, sent: &mut u64) -> Result<()> {
+    f.write_to(stream)
+        .with_context(|| format!("sending {} to coordinator", f.kind.name()))?;
+    *sent += f.wire_bytes();
+    Ok(())
+}
+
+fn recv(stream: &mut TcpStream, received: &mut u64) -> Result<Frame> {
+    let f = Frame::read_from(stream).context("receiving from coordinator")?;
+    *received += f.wire_bytes();
+    Ok(f)
+}

@@ -1,0 +1,421 @@
+//! Delta encodings for model transfers.
+//!
+//! A transfer carries either absolute parameters (dense) or a *delta*
+//! against a reference vector both endpoints already hold (the dynamic
+//! averaging reference `r`, or the last distributed average for periodic
+//! protocols). Three encodings, all hand-rolled (no new deps), all with
+//! exact `encoded_bytes()` accounting so `NetStats::send` can charge real
+//! payload sizes:
+//!
+//! | encoding | payload layout                                | bytes          |
+//! |----------|-----------------------------------------------|----------------|
+//! | dense    | `n × f32 LE` (absolute values, exact)         | `4n`           |
+//! | int8     | `u32 n`, per 1024-chunk: `f32 scale, n_c × i8`| `4+4⌈n/1024⌉+n`|
+//! | int16    | `u32 n`, per 1024-chunk: `f32 scale, n_c ×i16`| `4+4⌈n/1024⌉+2n`|
+//! | topk     | `u32 n, u32 k`, `k × (u32 idx, f32 val)`      | `8+8k`         |
+//!
+//! Quantized encodings use a per-chunk max-abs scale (`scale = max|d|/127`
+//! for int8, `/32767` for int16); the per-element reconstruction error is
+//! bounded by `scale/2`. Top-k keeps the `k = ⌈fraction·n⌉` largest-|delta|
+//! entries (ties broken by ascending index) and implies the rest of the
+//! delta is zero, i.e. those parameters stay at the reference value.
+//!
+//! When no reference is available (e.g. a periodic protocol's very first
+//! sync), lossy encodings would sparsify/quantize absolute parameters and
+//! destroy the model — callers fall back to dense for those bootstrap
+//! transfers (see [`crate::wire::link::Link`]).
+
+use anyhow::{bail, Result};
+
+/// Values per quantization chunk; each chunk stores one f32 scale.
+pub const CHUNK: usize = 1024;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Encoding {
+    /// Raw little-endian f32 — exact; reproduces the pre-wire `4·P` payload
+    /// accounting bit for bit.
+    Dense,
+    /// Per-chunk max-abs scale + one signed byte per parameter (~4x cut).
+    Int8,
+    /// Per-chunk max-abs scale + two bytes per parameter (~2x cut).
+    Int16,
+    /// The `k = ⌈fraction·n⌉` largest-|delta| entries as (index, value).
+    TopK { fraction: f64 },
+}
+
+impl Encoding {
+    /// Parse a CLI/config label: `dense`, `int8`, `int16`, `topk:<frac>`.
+    pub fn parse(s: &str) -> Result<Encoding> {
+        match s {
+            "dense" => Ok(Encoding::Dense),
+            "int8" => Ok(Encoding::Int8),
+            "int16" => Ok(Encoding::Int16),
+            _ => {
+                if let Some(frac) = s.strip_prefix("topk:") {
+                    let fraction: f64 = frac
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad topk fraction {frac:?}"))?;
+                    if !(fraction > 0.0 && fraction <= 1.0) {
+                        bail!("topk fraction must be in (0, 1], got {fraction}");
+                    }
+                    Ok(Encoding::TopK { fraction })
+                } else {
+                    bail!("unknown encoding {s:?} (expected dense|int8|int16|topk:<frac>)")
+                }
+            }
+        }
+    }
+
+    /// Label that roundtrips through [`Encoding::parse`]; used for wire
+    /// negotiation, summary tables and CSV columns.
+    pub fn label(&self) -> String {
+        match self {
+            Encoding::Dense => "dense".into(),
+            Encoding::Int8 => "int8".into(),
+            Encoding::Int16 => "int16".into(),
+            Encoding::TopK { fraction } => format!("topk:{fraction}"),
+        }
+    }
+
+    /// One-byte wire tag carried in the frame header (0 = control frame,
+    /// no payload encoding). The top-k fraction travels in the handshake
+    /// config, not per frame — the payload is self-describing (`n`, `k`).
+    pub fn tag(&self) -> u8 {
+        match self {
+            Encoding::Dense => 1,
+            Encoding::Int8 => 2,
+            Encoding::Int16 => 3,
+            Encoding::TopK { .. } => 4,
+        }
+    }
+
+    pub fn is_lossy(&self) -> bool {
+        !matches!(self, Encoding::Dense)
+    }
+
+    /// Exact payload size in bytes for an `n`-parameter transfer.
+    pub fn encoded_bytes(&self, n: usize) -> u64 {
+        let n64 = n as u64;
+        match self {
+            Encoding::Dense => 4 * n64,
+            Encoding::Int8 => 4 + 4 * n64.div_ceil(CHUNK as u64) + n64,
+            Encoding::Int16 => 4 + 4 * n64.div_ceil(CHUNK as u64) + 2 * n64,
+            Encoding::TopK { fraction } => 8 + 8 * top_k_count(*fraction, n) as u64,
+        }
+    }
+
+    /// Encode `v` (against `reference` for lossy encodings) into `out`.
+    /// `out` is cleared first; its final length equals `encoded_bytes(v.len())`.
+    pub fn encode(&self, v: &[f32], reference: Option<&[f32]>, out: &mut Vec<u8>) {
+        out.clear();
+        let reference = reference.filter(|r| r.len() == v.len());
+        match self {
+            Encoding::Dense => {
+                out.reserve(4 * v.len());
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Encoding::Int8 => encode_quantized(v, reference, 127.0, out),
+            Encoding::Int16 => encode_quantized(v, reference, 32767.0, out),
+            Encoding::TopK { fraction } => encode_top_k(v, reference, *fraction, out),
+        }
+    }
+
+    /// Decode a payload into `out` (resized to the encoded length). Lossy
+    /// encodings reconstruct against `reference` when its length matches;
+    /// the encoder applied the same rule, so endpoints that share the
+    /// reference state agree. Corrupt or truncated payloads return an
+    /// error — they never panic.
+    pub fn decode(&self, payload: &[u8], reference: Option<&[f32]>, out: &mut Vec<f32>) -> Result<()> {
+        match self {
+            Encoding::Dense => {
+                if payload.len() % 4 != 0 {
+                    bail!("dense payload length {} is not a multiple of 4", payload.len());
+                }
+                out.clear();
+                out.reserve(payload.len() / 4);
+                for b in payload.chunks_exact(4) {
+                    out.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+                }
+                Ok(())
+            }
+            Encoding::Int8 => decode_quantized(payload, reference, 1, out),
+            Encoding::Int16 => decode_quantized(payload, reference, 2, out),
+            Encoding::TopK { .. } => decode_top_k(payload, reference, out),
+        }
+    }
+}
+
+/// Number of entries a top-k encoding keeps: `⌈fraction·n⌉`, at least 1.
+pub fn top_k_count(fraction: f64, n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    ((fraction * n as f64).ceil() as usize).clamp(1, n)
+}
+
+fn delta_of(v: &[f32], reference: Option<&[f32]>) -> Vec<f32> {
+    match reference {
+        Some(r) => v.iter().zip(r).map(|(&a, &b)| a - b).collect(),
+        None => v.to_vec(),
+    }
+}
+
+fn encode_quantized(v: &[f32], reference: Option<&[f32]>, levels: f32, out: &mut Vec<u8>) {
+    let delta = delta_of(v, reference);
+    out.extend_from_slice(&(delta.len() as u32).to_le_bytes());
+    for chunk in delta.chunks(CHUNK) {
+        let mut max_abs = 0.0f32;
+        for &d in chunk {
+            max_abs = max_abs.max(d.abs());
+        }
+        let scale = if max_abs == 0.0 { 0.0 } else { max_abs / levels };
+        out.extend_from_slice(&scale.to_le_bytes());
+        for &d in chunk {
+            let q = if scale == 0.0 {
+                0.0
+            } else {
+                (d / scale).round().clamp(-levels, levels)
+            };
+            if levels <= 127.0 {
+                out.push(q as i8 as u8);
+            } else {
+                out.extend_from_slice(&(q as i16).to_le_bytes());
+            }
+        }
+    }
+}
+
+fn decode_quantized(payload: &[u8], reference: Option<&[f32]>, width: usize, out: &mut Vec<f32>) -> Result<()> {
+    let n = read_u32(payload, 0)? as usize;
+    let chunks = n.div_ceil(CHUNK);
+    let expect = 4 + 4 * chunks + width * n;
+    if payload.len() != expect {
+        bail!("quantized payload: {} bytes for n={n} (expected {expect})", payload.len());
+    }
+    let reference = reference.filter(|r| r.len() == n);
+    out.clear();
+    out.reserve(n);
+    let mut pos = 4;
+    let mut i = 0;
+    for _ in 0..chunks {
+        let scale = read_f32(payload, pos)?;
+        pos += 4;
+        let n_c = CHUNK.min(n - i);
+        for _ in 0..n_c {
+            let q = if width == 1 {
+                payload[pos] as i8 as f32
+            } else {
+                i16::from_le_bytes([payload[pos], payload[pos + 1]]) as f32
+            };
+            pos += width;
+            let d = q * scale;
+            out.push(match reference {
+                Some(r) => r[i] + d,
+                None => d,
+            });
+            i += 1;
+        }
+    }
+    Ok(())
+}
+
+fn encode_top_k(v: &[f32], reference: Option<&[f32]>, fraction: f64, out: &mut Vec<u8>) {
+    let delta = delta_of(v, reference);
+    let n = delta.len();
+    let k = top_k_count(fraction, n);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    // total order: |delta| descending, ties by ascending index (total_cmp
+    // keeps this deterministic even for non-finite values)
+    let by_magnitude = |&a: &u32, &b: &u32| {
+        delta[b as usize]
+            .abs()
+            .total_cmp(&delta[a as usize].abs())
+            .then(a.cmp(&b))
+    };
+    if k < n {
+        order.select_nth_unstable_by(k, by_magnitude);
+        order.truncate(k);
+    }
+    order.sort_unstable(); // payload indices ascending
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    for &idx in &order {
+        out.extend_from_slice(&idx.to_le_bytes());
+        out.extend_from_slice(&delta[idx as usize].to_le_bytes());
+    }
+}
+
+fn decode_top_k(payload: &[u8], reference: Option<&[f32]>, out: &mut Vec<f32>) -> Result<()> {
+    let n = read_u32(payload, 0)? as usize;
+    let k = read_u32(payload, 4)? as usize;
+    if k > n {
+        bail!("topk payload: k={k} exceeds n={n}");
+    }
+    let expect = 8 + 8 * k;
+    if payload.len() != expect {
+        bail!("topk payload: {} bytes for k={k} (expected {expect})", payload.len());
+    }
+    let reference = reference.filter(|r| r.len() == n);
+    out.clear();
+    match reference {
+        Some(r) => out.extend_from_slice(r),
+        None => out.resize(n, 0.0),
+    }
+    let mut pos = 8;
+    for _ in 0..k {
+        let idx = read_u32(payload, pos)? as usize;
+        let val = read_f32(payload, pos + 4)?;
+        pos += 8;
+        if idx >= n {
+            bail!("topk payload: index {idx} out of range (n={n})");
+        }
+        out[idx] = match reference {
+            Some(r) => r[idx] + val,
+            None => val,
+        };
+    }
+    Ok(())
+}
+
+fn read_u32(b: &[u8], pos: usize) -> Result<u32> {
+    match b.get(pos..pos + 4) {
+        Some(s) => Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]])),
+        None => bail!("payload truncated at byte {pos}"),
+    }
+}
+
+fn read_f32(b: &[u8], pos: usize) -> Result<f32> {
+    Ok(f32::from_bits(read_u32(b, pos)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(enc: Encoding, v: &[f32], reference: Option<&[f32]>) -> Vec<f32> {
+        let mut buf = Vec::new();
+        enc.encode(v, reference, &mut buf);
+        assert_eq!(buf.len() as u64, enc.encoded_bytes(v.len()), "{enc:?} length accounting");
+        let mut out = Vec::new();
+        enc.decode(&buf, reference, &mut out).unwrap();
+        assert_eq!(out.len(), v.len());
+        out
+    }
+
+    #[test]
+    fn dense_is_bitwise_identity() {
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..2500).map(|_| rng.normal_f32()).collect();
+        let out = roundtrip(Encoding::Dense, &v, None);
+        for (a, b) in v.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn quantized_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(2);
+        for &(enc, levels) in &[(Encoding::Int8, 127.0f32), (Encoding::Int16, 32767.0)] {
+            let r: Vec<f32> = (0..3000).map(|_| rng.normal_f32()).collect();
+            let v: Vec<f32> = r.iter().map(|&x| x + 0.01 * rng.normal_f32()).collect();
+            let out = roundtrip(enc, &v, Some(&r));
+            for chunk_start in (0..v.len()).step_by(CHUNK) {
+                let end = (chunk_start + CHUNK).min(v.len());
+                let max_abs = (chunk_start..end).map(|i| (v[i] - r[i]).abs()).fold(0.0f32, f32::max);
+                let scale = max_abs / levels;
+                for i in chunk_start..end {
+                    let err = (out[i] - v[i]).abs();
+                    assert!(err <= scale * 0.5 + 1e-7, "err {err} > scale/2 {}", scale * 0.5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_zero_delta_is_exact() {
+        let v = vec![1.5f32; 2048];
+        let out = roundtrip(Encoding::Int8, &v, Some(&v));
+        assert_eq!(v, out);
+    }
+
+    #[test]
+    fn top_k_places_indices_and_keeps_reference_elsewhere() {
+        let r = vec![0.5f32; 100];
+        let mut v = r.clone();
+        v[3] += 5.0;
+        v[42] -= 4.0;
+        v[99] += 3.0;
+        let enc = Encoding::TopK { fraction: 0.03 };
+        let out = roundtrip(enc, &v, Some(&r));
+        for i in 0..100 {
+            if i == 3 || i == 42 || i == 99 {
+                assert_eq!(out[i], v[i], "kept entry {i}");
+            } else {
+                assert_eq!(out[i], r[i], "dropped entry {i} must stay at reference");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_tie_break_is_ascending_index() {
+        let v = vec![1.0f32; 8];
+        let mut buf = Vec::new();
+        Encoding::TopK { fraction: 0.5 }.encode(&v, None, &mut buf);
+        // n=8, k=4: indices 0..4 win the all-equal tie
+        let mut idx = Vec::new();
+        for e in 0..4 {
+            let off = 8 + 8 * e;
+            idx.push(u32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]]));
+        }
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn encoded_bytes_matches_formula() {
+        assert_eq!(Encoding::Dense.encoded_bytes(7850), 31400);
+        assert_eq!(Encoding::Int8.encoded_bytes(7850), 4 + 4 * 8 + 7850);
+        assert_eq!(Encoding::Int16.encoded_bytes(7850), 4 + 4 * 8 + 2 * 7850);
+        // k = ceil(0.1 * 7850) = 785
+        assert_eq!(Encoding::TopK { fraction: 0.1 }.encoded_bytes(7850), 8 + 8 * 785);
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for s in ["dense", "int8", "int16", "topk:0.1", "topk:0.25"] {
+            let e = Encoding::parse(s).unwrap();
+            assert_eq!(e.label(), s);
+            assert_eq!(Encoding::parse(&e.label()).unwrap(), e);
+        }
+        assert!(Encoding::parse("gzip").is_err());
+        assert!(Encoding::parse("topk:0").is_err());
+        assert!(Encoding::parse("topk:1.5").is_err());
+    }
+
+    #[test]
+    fn corrupt_payloads_error_not_panic() {
+        let v: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        for enc in [Encoding::Int8, Encoding::Int16, Encoding::TopK { fraction: 0.1 }] {
+            let mut buf = Vec::new();
+            enc.encode(&v, None, &mut buf);
+            // truncated
+            assert!(enc.decode(&buf[..buf.len() - 1], None, &mut out).is_err());
+            // short header
+            assert!(enc.decode(&buf[..2], None, &mut out).is_err());
+            // inflated element count
+            let mut bad = buf.clone();
+            bad[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+            assert!(enc.decode(&bad, None, &mut out).is_err());
+        }
+        // topk index out of range
+        let mut buf = Vec::new();
+        Encoding::TopK { fraction: 0.05 }.encode(&v, None, &mut buf);
+        buf[8..12].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(Encoding::TopK { fraction: 0.05 }.decode(&buf, None, &mut out).is_err());
+        // dense length not multiple of 4
+        assert!(Encoding::Dense.decode(&[0, 1, 2], None, &mut out).is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! Length-prefixed binary frame format for the loopback coordinator.
+//!
+//! Every frame starts with a fixed 16-byte header — deliberately equal to
+//! [`crate::network::HEADER_BYTES`], so a dense model frame's wire size is
+//! exactly what `NetStats` charges (`16 + 4·P`):
+//!
+//! | bytes | field       | contents                                   |
+//! |-------|-------------|--------------------------------------------|
+//! | 0     | magic       | `0xDA`                                     |
+//! | 1     | version     | `1`                                        |
+//! | 2     | kind        | [`FrameKind`] discriminant                 |
+//! | 3     | encoding    | [`Encoding::tag`], `0` for control frames  |
+//! | 4     | flags       | bit 0: full sync (on `Download`)           |
+//! | 5     | reserved    | `0`                                        |
+//! | 6..8  | source      | `u16` LE learner id; `0xFFFF` = coordinator|
+//! | 8..12 | round       | `u32` LE                                   |
+//! | 12..16| payload len | `u32` LE                                   |
+//!
+//! Kinds 1–4 are the four charged [`crate::network::MsgKind`] protocol
+//! messages; kinds ≥ 16 are uncharged transport frames (handshake, check
+//! reports, round resolution, final reports). A JSON debug codec
+//! ([`Frame::to_json`] / [`Frame::from_json`]) mirrors the binary layout
+//! for `--debug-wire` logging and tooling.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::network::MsgKind;
+use crate::util::json::Json;
+
+pub const MAGIC: u8 = 0xDA;
+pub const VERSION: u8 = 1;
+pub const HEADER_LEN: usize = 16;
+/// Sender id used by the coordinator.
+pub const COORDINATOR: u16 = 0xFFFF;
+/// Upper bound on accepted payloads (256 MiB) — rejects corrupt length
+/// prefixes before allocating.
+pub const MAX_PAYLOAD: u32 = 1 << 28;
+
+/// Full-sync flag on a `Download` frame: the receiver must also adopt the
+/// payload as its new reference.
+pub const FLAG_FULL_SYNC: u8 = 1;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    // charged protocol frames (mirror network::MsgKind)
+    Violation = 1,
+    Query = 2,
+    Upload = 3,
+    Download = 4,
+    // uncharged transport frames
+    Hello = 16,
+    Config = 17,
+    CheckOk = 18,
+    Resolved = 19,
+    SetReference = 20,
+    RefModel = 21,
+    FinalReport = 22,
+    Done = 23,
+}
+
+impl FrameKind {
+    pub fn from_byte(b: u8) -> Result<FrameKind> {
+        Ok(match b {
+            1 => FrameKind::Violation,
+            2 => FrameKind::Query,
+            3 => FrameKind::Upload,
+            4 => FrameKind::Download,
+            16 => FrameKind::Hello,
+            17 => FrameKind::Config,
+            18 => FrameKind::CheckOk,
+            19 => FrameKind::Resolved,
+            20 => FrameKind::SetReference,
+            21 => FrameKind::RefModel,
+            22 => FrameKind::FinalReport,
+            23 => FrameKind::Done,
+            _ => bail!("unknown frame kind {b}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameKind::Violation => "violation",
+            FrameKind::Query => "query",
+            FrameKind::Upload => "upload",
+            FrameKind::Download => "download",
+            FrameKind::Hello => "hello",
+            FrameKind::Config => "config",
+            FrameKind::CheckOk => "check_ok",
+            FrameKind::Resolved => "resolved",
+            FrameKind::SetReference => "set_reference",
+            FrameKind::RefModel => "ref_model",
+            FrameKind::FinalReport => "final_report",
+            FrameKind::Done => "done",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<FrameKind> {
+        for k in ALL_KINDS {
+            if k.name() == s {
+                return Ok(k);
+            }
+        }
+        bail!("unknown frame kind {s:?}")
+    }
+
+    /// The charged protocol message this frame corresponds to, if any;
+    /// transport frames are free in the paper's communication accounting.
+    pub fn msg_kind(&self) -> Option<MsgKind> {
+        match self {
+            FrameKind::Violation => Some(MsgKind::ViolationWithModel),
+            FrameKind::Query => Some(MsgKind::QueryModel),
+            FrameKind::Upload => Some(MsgKind::ModelUpload),
+            FrameKind::Download => Some(MsgKind::ModelDownload),
+            _ => None,
+        }
+    }
+}
+
+const ALL_KINDS: [FrameKind; 12] = [
+    FrameKind::Violation,
+    FrameKind::Query,
+    FrameKind::Upload,
+    FrameKind::Download,
+    FrameKind::Hello,
+    FrameKind::Config,
+    FrameKind::CheckOk,
+    FrameKind::Resolved,
+    FrameKind::SetReference,
+    FrameKind::RefModel,
+    FrameKind::FinalReport,
+    FrameKind::Done,
+];
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    /// [`super::Encoding::tag`] of the payload; 0 for control frames.
+    pub encoding_tag: u8,
+    pub flags: u8,
+    pub source: u16,
+    pub round: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A payload-less control frame.
+    pub fn control(kind: FrameKind, source: u16, round: u32) -> Frame {
+        Frame {
+            kind,
+            encoding_tag: 0,
+            flags: 0,
+            source,
+            round,
+            payload: Vec::new(),
+        }
+    }
+
+    /// Total bytes this frame occupies on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        (HEADER_LEN + self.payload.len()) as u64
+    }
+
+    pub fn is_charged(&self) -> bool {
+        self.kind.msg_kind().is_some()
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        let mut header = [0u8; HEADER_LEN];
+        header[0] = MAGIC;
+        header[1] = VERSION;
+        header[2] = self.kind as u8;
+        header[3] = self.encoding_tag;
+        header[4] = self.flags;
+        header[6..8].copy_from_slice(&self.source.to_le_bytes());
+        header[8..12].copy_from_slice(&self.round.to_le_bytes());
+        header[12..16].copy_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        w.write_all(&header)?;
+        w.write_all(&self.payload)
+    }
+
+    /// Read one frame, validating magic/version/kind and rejecting
+    /// oversized length prefixes. Errors, never panics, on corrupt input.
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        let mut header = [0u8; HEADER_LEN];
+        r.read_exact(&mut header).context("reading frame header")?;
+        if header[0] != MAGIC {
+            bail!("bad frame magic 0x{:02x} (expected 0x{MAGIC:02x})", header[0]);
+        }
+        if header[1] != VERSION {
+            bail!("unsupported wire version {} (expected {VERSION})", header[1]);
+        }
+        let kind = FrameKind::from_byte(header[2])?;
+        let len = u32::from_le_bytes([header[12], header[13], header[14], header[15]]);
+        if len > MAX_PAYLOAD {
+            bail!("frame payload length {len} exceeds limit {MAX_PAYLOAD}");
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)
+            .with_context(|| format!("reading {len}-byte {} payload", kind.name()))?;
+        Ok(Frame {
+            kind,
+            encoding_tag: header[3],
+            flags: header[4],
+            source: u16::from_le_bytes([header[6], header[7]]),
+            round: u32::from_le_bytes([header[8], header[9], header[10], header[11]]),
+            payload,
+        })
+    }
+
+    // ---- JSON debug codec ------------------------------------------------
+
+    /// Full JSON form (payload as a byte array) — lossless debug mirror of
+    /// the binary layout.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("encoding", Json::num(self.encoding_tag as f64)),
+            ("flags", Json::num(self.flags as f64)),
+            ("source", Json::num(self.source as f64)),
+            ("round", Json::num(self.round as f64)),
+            (
+                "payload",
+                Json::Arr(self.payload.iter().map(|&b| Json::num(b as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Frame> {
+        let kind = FrameKind::from_name(j.req("kind")?.as_str().unwrap_or_default())?;
+        let byte = |key: &str| -> Result<f64> {
+            Ok(j.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("frame json: {key} not a number"))?)
+        };
+        let payload: Result<Vec<u8>> = j
+            .req("payload")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("frame json: payload not an array"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .filter(|&b| (0.0..=255.0).contains(&b))
+                    .map(|b| b as u8)
+                    .ok_or_else(|| anyhow::anyhow!("frame json: payload byte out of range"))
+            })
+            .collect();
+        Ok(Frame {
+            kind,
+            encoding_tag: byte("encoding")? as u8,
+            flags: byte("flags")? as u8,
+            source: byte("source")? as u16,
+            round: byte("round")? as u32,
+            payload: payload?,
+        })
+    }
+
+    /// Compact one-line JSON summary (payload length only) for
+    /// `--debug-wire` logging.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("source", Json::num(self.source as f64)),
+            ("round", Json::num(self.round as f64)),
+            ("flags", Json::num(self.flags as f64)),
+            ("payload_len", Json::num(self.payload.len() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Frame {
+        Frame {
+            kind: FrameKind::Violation,
+            encoding_tag: 2,
+            flags: FLAG_FULL_SYNC,
+            source: 3,
+            round: 41,
+            payload: vec![1, 2, 3, 4, 5],
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        assert_eq!(buf.len() as u64, f.wire_bytes());
+        assert_eq!(buf.len(), HEADER_LEN + 5);
+        let g = Frame::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn header_matches_netstats_constant() {
+        assert_eq!(HEADER_LEN as u64, crate::network::HEADER_BYTES);
+    }
+
+    #[test]
+    fn charged_kinds_map_to_msg_kinds() {
+        assert_eq!(FrameKind::Violation.msg_kind(), Some(MsgKind::ViolationWithModel));
+        assert_eq!(FrameKind::Query.msg_kind(), Some(MsgKind::QueryModel));
+        assert_eq!(FrameKind::Upload.msg_kind(), Some(MsgKind::ModelUpload));
+        assert_eq!(FrameKind::Download.msg_kind(), Some(MsgKind::ModelDownload));
+        for k in [FrameKind::Hello, FrameKind::Resolved, FrameKind::Done] {
+            assert_eq!(k.msg_kind(), None);
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_error_not_panic() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        // truncated header / truncated payload
+        assert!(Frame::read_from(&mut &buf[..4]).is_err());
+        assert!(Frame::read_from(&mut &buf[..HEADER_LEN + 2]).is_err());
+        // bad magic
+        let mut bad = buf.clone();
+        bad[0] = 0x00;
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+        // bad version
+        let mut bad = buf.clone();
+        bad[1] = 9;
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+        // unknown kind
+        let mut bad = buf.clone();
+        bad[2] = 200;
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+        // absurd payload length prefix
+        let mut bad = buf.clone();
+        bad[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn json_debug_codec_roundtrip() {
+        let f = sample();
+        let j = f.to_json();
+        let g = Frame::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(f, g);
+        // summary carries the length, not the bytes
+        let s = f.summary_json();
+        assert_eq!(s.get("payload_len").unwrap().as_usize(), Some(5));
+        assert!(s.get("payload").is_none());
+    }
+
+    #[test]
+    fn json_rejects_bad_kind_and_bytes() {
+        let j = Json::parse(r#"{"kind":"nope","encoding":0,"flags":0,"source":0,"round":0,"payload":[]}"#).unwrap();
+        assert!(Frame::from_json(&j).is_err());
+        let j =
+            Json::parse(r#"{"kind":"hello","encoding":0,"flags":0,"source":0,"round":0,"payload":[300]}"#).unwrap();
+        assert!(Frame::from_json(&j).is_err());
+    }
+}

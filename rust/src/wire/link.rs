@@ -1,0 +1,181 @@
+//! In-process transport accounting: the codec state a protocol's model
+//! transfers flow through.
+//!
+//! [`Link`] owns the negotiated [`Encoding`] plus the codec reference both
+//! endpoints share (the dynamic-averaging reference `r`, or the last
+//! distributed average for periodic protocols). Every model transfer
+//! charges [`crate::network::NetStats`] with the *encoded* payload size
+//! and applies the lossy encode/decode roundtrip in place, so an
+//! in-process simulation run produces exactly the models and byte totals
+//! a wire run over the loopback coordinator does. `Link::dense()` is the
+//! identity transport: no value changes, and the accounting reproduces
+//! the historical `4·P` payload charge bit for bit.
+//!
+//! Transfers made before any reference exists (e.g. a periodic protocol's
+//! first sync) fall back to dense — sparsifying or quantizing *absolute*
+//! parameters would destroy the model, and the wire protocol bootstraps
+//! its reference with a dense frame for the same reason.
+
+use crate::network::{MsgKind, NetStats};
+use crate::wire::encoding::Encoding;
+
+pub struct Link {
+    encoding: Encoding,
+    reference: Option<Vec<f32>>,
+    buf: Vec<u8>,
+    scratch: Vec<f32>,
+}
+
+impl Link {
+    pub fn new(encoding: Encoding) -> Link {
+        Link {
+            encoding,
+            reference: None,
+            buf: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// The identity transport (exact values, `4·P` payloads).
+    pub fn dense() -> Link {
+        Link::new(Encoding::Dense)
+    }
+
+    pub fn encoding(&self) -> Encoding {
+        self.encoding
+    }
+
+    /// Install the shared codec reference. Protocols call this at the
+    /// start of each check round (dynamic: `r`; periodic: last average),
+    /// so downloads within a round still encode against the reference the
+    /// receivers hold. No-op for dense.
+    pub fn set_reference(&mut self, r: &[f32]) {
+        if self.encoding.is_lossy() {
+            match &mut self.reference {
+                Some(cur) => {
+                    cur.clear();
+                    cur.extend_from_slice(r);
+                }
+                None => self.reference = Some(r.to_vec()),
+            }
+        }
+    }
+
+    pub fn has_reference(&self) -> bool {
+        self.reference.is_some()
+    }
+
+    /// The encoding actually used for an `n`-parameter transfer right now:
+    /// lossy encodings need a matching reference, otherwise the transfer
+    /// falls back to dense.
+    fn effective(&self, n: usize) -> Encoding {
+        match &self.reference {
+            Some(r) if r.len() == n => self.encoding,
+            _ if self.encoding.is_lossy() => Encoding::Dense,
+            _ => self.encoding,
+        }
+    }
+
+    /// Encoded payload size an `n`-parameter transfer is charged.
+    pub fn payload_bytes(&self, n: usize) -> u64 {
+        self.effective(n).encoded_bytes(n)
+    }
+
+    /// Transfer one model: charge the encoded payload and apply the lossy
+    /// encode/decode roundtrip to `v` in place (dense is a no-op).
+    pub fn transfer(&mut self, net: &mut NetStats, kind: MsgKind, v: &mut [f32]) {
+        net.send(kind, self.payload_bytes(v.len()));
+        self.roundtrip(v);
+    }
+
+    /// Broadcast one model to `copies` receivers: the payload is encoded
+    /// once (one roundtrip) but each copy is charged.
+    pub fn transfer_broadcast(&mut self, net: &mut NetStats, kind: MsgKind, v: &mut [f32], copies: usize) {
+        let bytes = self.payload_bytes(v.len());
+        for _ in 0..copies {
+            net.send(kind, bytes);
+        }
+        self.roundtrip(v);
+    }
+
+    /// A model request: header-only, no payload.
+    pub fn query(&mut self, net: &mut NetStats) {
+        net.send(MsgKind::QueryModel, 0);
+    }
+
+    fn roundtrip(&mut self, v: &mut [f32]) {
+        let enc = self.effective(v.len());
+        if !enc.is_lossy() {
+            return;
+        }
+        let Link {
+            reference, buf, scratch, ..
+        } = self;
+        let reference = reference.as_deref();
+        enc.encode(v, reference, buf);
+        enc.decode(buf, reference, scratch)
+            .expect("self-encoded payload decodes");
+        v.copy_from_slice(scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_link_reproduces_4p_accounting_and_values() {
+        let mut link = Link::dense();
+        let mut net = NetStats::new();
+        let mut v: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
+        let before = v.clone();
+        link.transfer(&mut net, MsgKind::ModelUpload, &mut v);
+        assert_eq!(net.up_bytes, crate::network::HEADER_BYTES + 4 * 100);
+        assert_eq!(v, before, "dense transfer is the identity");
+    }
+
+    #[test]
+    fn lossy_without_reference_falls_back_to_dense() {
+        let mut link = Link::new(Encoding::TopK { fraction: 0.1 });
+        let mut net = NetStats::new();
+        let mut v: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let before = v.clone();
+        link.transfer(&mut net, MsgKind::ModelUpload, &mut v);
+        assert_eq!(net.up_bytes, crate::network::HEADER_BYTES + 4 * 100);
+        assert_eq!(v, before, "bootstrap transfer must not sparsify the model");
+    }
+
+    #[test]
+    fn lossy_with_reference_charges_encoded_bytes_and_roundtrips() {
+        let mut link = Link::new(Encoding::Int8);
+        let r: Vec<f32> = vec![1.0; 100];
+        link.set_reference(&r);
+        let mut net = NetStats::new();
+        let mut v: Vec<f32> = r.iter().map(|&x| x + 0.05).collect();
+        link.transfer(&mut net, MsgKind::ModelUpload, &mut v);
+        let payload = Encoding::Int8.encoded_bytes(100);
+        assert_eq!(net.up_bytes, crate::network::HEADER_BYTES + payload);
+        for (i, (&got, &r)) in v.iter().zip(&r).enumerate() {
+            let err = (got - (r + 0.05)).abs();
+            assert!(err <= 0.05 / 127.0 / 2.0 + 1e-7, "elt {i}: err {err}");
+        }
+    }
+
+    #[test]
+    fn broadcast_charges_each_copy_once() {
+        let mut link = Link::dense();
+        let mut net = NetStats::new();
+        let mut v = vec![0.0f32; 10];
+        link.transfer_broadcast(&mut net, MsgKind::ModelDownload, &mut v, 4);
+        assert_eq!(net.messages, 4);
+        assert_eq!(net.down_bytes, 4 * (crate::network::HEADER_BYTES + 40));
+    }
+
+    #[test]
+    fn query_is_header_only() {
+        let mut link = Link::dense();
+        let mut net = NetStats::new();
+        link.query(&mut net);
+        assert_eq!(net.down_bytes, crate::network::HEADER_BYTES);
+    }
+}

@@ -1,0 +1,28 @@
+//! Wire subsystem: codecs, delta encodings, and the loopback coordinator.
+//!
+//! The paper's headline claim is an order-of-magnitude communication
+//! reduction; this module turns that claim from abstract `4·P` slice math
+//! into *measured bytes on the wire*:
+//!
+//! - [`frame`] — length-prefixed binary frames (16-byte header, equal to
+//!   [`crate::network::HEADER_BYTES`]) plus a JSON debug codec.
+//! - [`encoding`] — dense f32, per-chunk-quantized int8/int16, and
+//!   top-k-sparse delta encodings with exact `encoded_bytes()` accounting.
+//! - [`link`] — the in-process transport: protocols charge `NetStats`
+//!   with encoded payload sizes and lossy transfers roundtrip values,
+//!   so a simulated run matches a socket run byte for byte.
+//! - [`serve`] / [`client`] — the loopback coordinator on
+//!   `std::net::TcpListener`: `dynavg serve` hosts dynamic averaging,
+//!   learner clients connect and trade encoded deltas, reproducing the
+//!   in-process protocol bit for bit (asserted in `tests/wire_loopback.rs`
+//!   and the CI serve-smoke step).
+
+pub mod client;
+pub mod encoding;
+pub mod frame;
+pub mod link;
+pub mod serve;
+
+pub use encoding::Encoding;
+pub use frame::{Frame, FrameKind};
+pub use link::Link;

@@ -1,0 +1,521 @@
+//! The loopback coordinator: `dynavg serve` hosts dynamic averaging over
+//! TCP while learner clients ([`crate::wire::client`]) train locally and
+//! trade encoded deltas.
+//!
+//! The server replicates the in-process [`crate::coordinator::DynamicAveraging`]
+//! arithmetic exactly — same [`params::average_into`] / [`params::sq_dist`]
+//! kernels, same violation-counter semantics, same `Random`-augmentation
+//! rng draw order (`Rng::new(seed ^ 0xABCD)`, matching the engine's
+//! protocol rng) — so a wire run reproduces an engine run bit for bit
+//! (asserted in `tests/wire_loopback.rs`). Protocol over the socket:
+//!
+//! 1. handshake: each client sends `Hello`, receives a `Config` frame
+//!    (JSON payload) assigning its learner id and the full run config.
+//! 2. clients free-run local SGD between check rounds. At the first check
+//!    round, client 0 ships its model dense (`RefModel`, uncharged) and
+//!    the server broadcasts it back as the shared reference
+//!    (`SetReference`) — Algorithm 1's `r := f^0`.
+//! 3. at every check round each client reports either `CheckOk`
+//!    (uncharged) or `Violation` with its encoded delta (charged). The
+//!    server balances exactly like the in-process coordinator — polling
+//!    extra models with charged `Query`/`Upload` pairs when the violation
+//!    counter forces a full sync or the balancing loop augments the set —
+//!    then distributes the average (`Download`, charged, `FLAG_FULL_SYNC`
+//!    when all m participate) and ends the round with `Resolved`.
+//! 4. after the last round every client ships a `FinalReport` (model +
+//!    per-round losses/metrics, uncharged bookkeeping) and receives `Done`.
+//!
+//! Byte accounting: charged frames are tallied both through
+//! [`NetStats::send`] (the simulation-side accounting) and by summing the
+//! actual frame bytes written/read; [`WireServer::run`] fails unless the
+//! two agree exactly — the invariant the CI serve-smoke step gates.
+//!
+//! Hosting restrictions (by construction, not oversight): the dynamic
+//! protocol with `Random` augmentation only — the coordinator cannot use
+//! `FarthestFirst` because it never holds non-member models before
+//! querying them — homogeneous init, equal sample rates, no drift.
+
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::experiments::Dataset;
+use crate::model::params;
+use crate::network::{MsgKind, NetStats};
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::wire::encoding::Encoding;
+use crate::wire::frame::{Frame, FrameKind, COORDINATOR, FLAG_FULL_SYNC};
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub model: String,
+    pub optimizer: String,
+    pub m: usize,
+    pub rounds: u64,
+    pub lr: f32,
+    pub seed: u64,
+    /// Divergence threshold Δ of the hosted dynamic-averaging protocol.
+    pub delta: f64,
+    /// Local-condition check period b.
+    pub check_every: u64,
+    pub encoding: Encoding,
+    /// Per-socket read/write timeout plus the accept deadline (bounds how
+    /// long the coordinator waits on a slow or dead client before failing
+    /// the run instead of hanging CI).
+    pub timeout: Duration,
+    /// Evaluate the final averaged model on a holdout stream.
+    pub final_eval: bool,
+    /// Log every frame (compact JSON) to stderr.
+    pub debug_wire: bool,
+}
+
+impl ServeConfig {
+    pub fn new(model: &str, m: usize, rounds: u64) -> ServeConfig {
+        ServeConfig {
+            model: model.to_string(),
+            optimizer: "sgd".to_string(),
+            m,
+            rounds,
+            lr: 0.05,
+            seed: 42,
+            delta: 1.0,
+            check_every: 5,
+            encoding: Encoding::Dense,
+            timeout: Duration::from_secs(120),
+            final_eval: false,
+            debug_wire: false,
+        }
+    }
+}
+
+/// Everything a completed serve run produced (the wire-side analog of
+/// [`crate::sim::RunResult`]).
+pub struct ServeReport {
+    /// Simulation-side accounting, built through the same [`NetStats::send`]
+    /// calls the in-process protocol makes.
+    pub net: NetStats,
+    /// Measured bytes of charged protocol frames actually on the wire
+    /// (header + payload per frame), split by direction. [`WireServer::run`]
+    /// verified these equal `net.up_bytes` / `net.down_bytes`.
+    pub wire_up_bytes: u64,
+    pub wire_down_bytes: u64,
+    /// Measured bytes of *all* frames, including the uncharged
+    /// handshake/bookkeeping transport.
+    pub wire_transport_bytes: u64,
+    /// Final per-learner models (id order) and their average.
+    pub models: Vec<Vec<f32>>,
+    pub averaged: Vec<f32>,
+    /// Σ_t Σ_i loss — summed in the engine's order for bitwise parity
+    /// with [`crate::metrics::Recorder`]'s cumulative loss.
+    pub cumulative_loss: f64,
+    pub eval: Option<(f64, f64)>,
+}
+
+pub struct WireServer {
+    cfg: ServeConfig,
+    listener: TcpListener,
+}
+
+/// One accepted client connection; accept order assigns learner ids.
+struct Conn {
+    stream: TcpStream,
+    id: u16,
+}
+
+impl WireServer {
+    /// Bind on loopback; `port` 0 picks an ephemeral port (read it back
+    /// via [`WireServer::local_addr`] or [`WireServer::write_port_file`]).
+    pub fn bind(cfg: ServeConfig, port: u16) -> Result<WireServer> {
+        if cfg.m == 0 || cfg.m >= COORDINATOR as usize {
+            bail!("m={} out of range", cfg.m);
+        }
+        if cfg.rounds == 0 || cfg.check_every == 0 {
+            bail!("rounds and check period must be positive");
+        }
+        let listener = TcpListener::bind(("127.0.0.1", port)).context("binding loopback listener")?;
+        Ok(WireServer { cfg, listener })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Write the bound port (one line) so scripts can discover an
+    /// ephemeral `--port 0` choice race-free.
+    pub fn write_port_file(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        writeln!(f, "{}", self.local_addr()?.port())?;
+        Ok(())
+    }
+
+    fn accept_clients(&self) -> Result<Vec<Conn>> {
+        self.listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + self.cfg.timeout;
+        let mut conns = Vec::with_capacity(self.cfg.m);
+        while conns.len() < self.cfg.m {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(Some(self.cfg.timeout))?;
+                    stream.set_write_timeout(Some(self.cfg.timeout))?;
+                    conns.push(Conn {
+                        stream,
+                        id: conns.len() as u16,
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        bail!("only {}/{} clients connected within the timeout", conns.len(), self.cfg.m);
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        self.listener.set_nonblocking(false)?;
+        Ok(conns)
+    }
+
+    /// Host one full dynamic-averaging run; returns once all m clients
+    /// completed `rounds` rounds and shipped their final reports.
+    pub fn run(self, rt: &Runtime) -> Result<ServeReport> {
+        let cfg = self.cfg.clone();
+        if !rt.supports_model(&cfg.model) {
+            bail!("model {:?} is not executable on the {} backend", cfg.model, rt.backend_name());
+        }
+        let mrt = ModelRuntime::load(rt, &cfg.model, &cfg.optimizer)?;
+        let p = mrt.model.param_count;
+        let m = cfg.m;
+        let enc = cfg.encoding;
+
+        let mut conns = self.accept_clients()?;
+        let mut tally = Tally::default();
+
+        // --- handshake ----------------------------------------------------
+        for conn in conns.iter_mut() {
+            let hello = recv(conn, &cfg, &mut tally)?;
+            if hello.kind != FrameKind::Hello {
+                bail!("expected hello from client, got {}", hello.kind.name());
+            }
+            let j = Json::parse(std::str::from_utf8(&hello.payload)?)?;
+            let proto = j.req("proto")?.as_usize().unwrap_or(0);
+            if proto != 1 {
+                bail!("client speaks wire protocol {proto}, server speaks 1");
+            }
+            let config = Json::obj(vec![
+                ("id", Json::num(conn.id as f64)),
+                ("m", Json::num(m as f64)),
+                ("model", Json::str(cfg.model.clone())),
+                ("optimizer", Json::str(cfg.optimizer.clone())),
+                ("rounds", Json::num(cfg.rounds as f64)),
+                ("lr", Json::num(cfg.lr as f64)),
+                ("seed", Json::num(cfg.seed as f64)),
+                ("delta", Json::num(cfg.delta)),
+                ("check_every", Json::num(cfg.check_every as f64)),
+                ("encoding", Json::str(cfg.encoding.label())),
+            ]);
+            let mut f = Frame::control(FrameKind::Config, COORDINATOR, 0);
+            f.payload = config.to_string().into_bytes();
+            send(conn, &f, &cfg, &mut tally)?;
+        }
+
+        // --- protocol state (mirrors coordinator::DynamicAveraging) -------
+        let mut net = NetStats::new();
+        let mut proto_rng = Rng::new(cfg.seed ^ 0xABCD);
+        let mut reference: Option<Vec<f32>> = None;
+        let mut violations_seen = 0usize;
+        // latest decoded model per participating learner — the server-side
+        // counterpart of the coordinator's view of `ctx.models`
+        let mut latest: Vec<Vec<f32>> = vec![Vec::new(); m];
+        let mut scratch = vec![0.0f32; p];
+        let mut payload_buf: Vec<u8> = Vec::new();
+
+        let mut t = cfg.check_every;
+        while t <= cfg.rounds {
+            let round = t as u32;
+            // first check round: adopt client 0's model as the reference
+            // (Algorithm 1 init; uncharged — in-process this is a clone)
+            if reference.is_none() {
+                let f = recv(&mut conns[0], &cfg, &mut tally)?;
+                if f.kind != FrameKind::RefModel {
+                    bail!("round {t}: expected ref_model from client 0, got {}", f.kind.name());
+                }
+                let mut r = Vec::new();
+                Encoding::Dense.decode(&f.payload, None, &mut r)?;
+                if r.len() != p {
+                    bail!("ref_model carries {} params, model has {p}", r.len());
+                }
+                let mut set = Frame::control(FrameKind::SetReference, COORDINATOR, round);
+                set.encoding_tag = Encoding::Dense.tag();
+                set.payload = f.payload;
+                for conn in conns.iter_mut() {
+                    send(conn, &set, &cfg, &mut tally)?;
+                }
+                reference = Some(r);
+            }
+            let r = reference.as_ref().expect("reference set above").clone();
+
+            // collect all m check reports in id order — the order the
+            // in-process check loop visits learners
+            let mut in_b = vec![false; m];
+            let mut selected: Vec<usize> = Vec::new();
+            for i in 0..m {
+                let f = recv(&mut conns[i], &cfg, &mut tally)?;
+                match f.kind {
+                    FrameKind::CheckOk => {}
+                    FrameKind::Violation => {
+                        if f.encoding_tag != enc.tag() {
+                            bail!("client {i} used encoding tag {}, negotiated {}", f.encoding_tag, enc.tag());
+                        }
+                        enc.decode(&f.payload, Some(&r), &mut latest[i])?;
+                        net.send(MsgKind::ViolationWithModel, f.payload.len() as u64);
+                        in_b[i] = true;
+                        selected.push(i);
+                    }
+                    other => bail!("round {t}: client {i} sent {}", other.name()),
+                }
+            }
+
+            if selected.is_empty() {
+                broadcast_control(&mut conns, FrameKind::Resolved, round, &cfg, &mut tally)?;
+                t += cfg.check_every;
+                continue;
+            }
+            net.sync_events += 1;
+
+            // violation counter may force a full sync: poll the remaining
+            // learners in index order
+            violations_seen += selected.len();
+            if violations_seen >= m {
+                for i in 0..m {
+                    if !in_b[i] {
+                        query_upload(&mut conns[i], round, enc, &r, &mut latest[i], &cfg, &mut net, &mut tally)?;
+                        in_b[i] = true;
+                        selected.push(i);
+                    }
+                }
+                violations_seen = 0;
+            }
+
+            // balancing loop — identical to DynamicAveraging::sync with
+            // Augmentation::Random (same candidates, same rng draws)
+            loop {
+                params::average_into(&latest, &selected, &mut scratch);
+                let balanced = params::sq_dist(&scratch, &r) <= cfg.delta;
+                if balanced || selected.len() == m {
+                    break;
+                }
+                let candidates: Vec<usize> = (0..m).filter(|&i| !in_b[i]).collect();
+                let next = candidates[proto_rng.below(candidates.len())];
+                query_upload(&mut conns[next], round, enc, &r, &mut latest[next], &cfg, &mut net, &mut tally)?;
+                in_b[next] = true;
+                selected.push(next);
+            }
+
+            // distribute the (partial) average: encoded once, one charged
+            // frame per participant; what everyone then holds — including
+            // the reference after a full sync — is the *decoded* copy
+            let full = selected.len() == m;
+            enc.encode(&scratch, Some(&r), &mut payload_buf);
+            enc.decode(&payload_buf, Some(&r), &mut scratch)?;
+            let down = Frame {
+                kind: FrameKind::Download,
+                encoding_tag: enc.tag(),
+                flags: if full { FLAG_FULL_SYNC } else { 0 },
+                source: COORDINATOR,
+                round,
+                payload: payload_buf.clone(),
+            };
+            for &i in &selected {
+                send(&mut conns[i], &down, &cfg, &mut tally)?;
+                net.send(MsgKind::ModelDownload, down.payload.len() as u64);
+                latest[i].clone_from(&scratch);
+            }
+            if full {
+                reference = Some(scratch.clone());
+                violations_seen = 0;
+                net.full_syncs += 1;
+            }
+            broadcast_control(&mut conns, FrameKind::Resolved, round, &cfg, &mut tally)?;
+            t += cfg.check_every;
+        }
+
+        // --- final reports (uncharged bookkeeping) ------------------------
+        let mut models: Vec<Vec<f32>> = vec![Vec::new(); m];
+        let mut losses: Vec<Vec<f32>> = Vec::with_capacity(m);
+        for i in 0..m {
+            let f = recv(&mut conns[i], &cfg, &mut tally)?;
+            if f.kind != FrameKind::FinalReport {
+                bail!("expected final_report from client {i}, got {}", f.kind.name());
+            }
+            let mut flat = Vec::new();
+            Encoding::Dense.decode(&f.payload, None, &mut flat)?;
+            let want = p + 2 * cfg.rounds as usize;
+            if flat.len() != want {
+                bail!("final_report from client {i}: {} f32s (expected {want})", flat.len());
+            }
+            models[i] = flat[..p].to_vec();
+            losses.push(flat[p..p + cfg.rounds as usize].to_vec());
+        }
+        broadcast_control(&mut conns, FrameKind::Done, cfg.rounds as u32, &cfg, &mut tally)?;
+
+        // Σ_t Σ_i loss with the learner index innermost — the engine's f64
+        // summation order, so cumulative loss matches bitwise
+        let mut cumulative_loss = 0.0f64;
+        for ti in 0..cfg.rounds as usize {
+            let round_sum: f64 = losses.iter().map(|l| l[ti] as f64).sum();
+            cumulative_loss += round_sum;
+        }
+
+        let mut averaged = vec![0.0f32; p];
+        let idx: Vec<usize> = (0..m).collect();
+        params::average_into(&models, &idx, &mut averaged);
+
+        let eval = if cfg.final_eval {
+            holdout_eval(&mrt, &cfg, &averaged)?
+        } else {
+            None
+        };
+
+        // the tentpole invariant: measured charged wire bytes must equal
+        // the simulation-side NetStats accounting exactly
+        if tally.up != net.up_bytes || tally.down != net.down_bytes {
+            bail!(
+                "wire bytes diverge from NetStats: wire up/down {}/{} vs netstats {}/{}",
+                tally.up,
+                tally.down,
+                net.up_bytes,
+                net.down_bytes
+            );
+        }
+
+        Ok(ServeReport {
+            net,
+            wire_up_bytes: tally.up,
+            wire_down_bytes: tally.down,
+            wire_transport_bytes: tally.transport,
+            models,
+            averaged,
+            cumulative_loss,
+            eval,
+        })
+    }
+}
+
+/// Measured byte counters: charged frames by direction, plus the total
+/// including uncharged transport.
+#[derive(Default)]
+struct Tally {
+    up: u64,
+    down: u64,
+    transport: u64,
+}
+
+impl Tally {
+    fn count(&mut self, f: &Frame, server_sent: bool) {
+        let bytes = f.wire_bytes();
+        self.transport += bytes;
+        if f.is_charged() {
+            if server_sent {
+                self.down += bytes;
+            } else {
+                self.up += bytes;
+            }
+        }
+    }
+}
+
+fn send(conn: &mut Conn, f: &Frame, cfg: &ServeConfig, tally: &mut Tally) -> Result<()> {
+    if cfg.debug_wire {
+        eprintln!("wire: -> {} {}", conn.id, f.summary_json());
+    }
+    f.write_to(&mut conn.stream)
+        .with_context(|| format!("sending {} to client {}", f.kind.name(), conn.id))?;
+    tally.count(f, true);
+    Ok(())
+}
+
+fn recv(conn: &mut Conn, cfg: &ServeConfig, tally: &mut Tally) -> Result<Frame> {
+    let f = Frame::read_from(&mut conn.stream).with_context(|| format!("receiving from client {}", conn.id))?;
+    if cfg.debug_wire {
+        eprintln!("wire: <- {} {}", conn.id, f.summary_json());
+    }
+    tally.count(&f, false);
+    Ok(f)
+}
+
+fn broadcast_control(
+    conns: &mut [Conn],
+    kind: FrameKind,
+    round: u32,
+    cfg: &ServeConfig,
+    tally: &mut Tally,
+) -> Result<()> {
+    let f = Frame::control(kind, COORDINATOR, round);
+    for conn in conns.iter_mut() {
+        send(conn, &f, cfg, tally)?;
+    }
+    Ok(())
+}
+
+/// Charged query/upload pair: ask one learner for its model, decode the
+/// encoded reply into `latest`.
+#[allow(clippy::too_many_arguments)]
+fn query_upload(
+    conn: &mut Conn,
+    round: u32,
+    enc: Encoding,
+    r: &[f32],
+    latest: &mut Vec<f32>,
+    cfg: &ServeConfig,
+    net: &mut NetStats,
+    tally: &mut Tally,
+) -> Result<()> {
+    let q = Frame::control(FrameKind::Query, COORDINATOR, round);
+    send(conn, &q, cfg, tally)?;
+    net.send(MsgKind::QueryModel, 0);
+    let f = recv(conn, cfg, tally)?;
+    if f.kind != FrameKind::Upload {
+        bail!("round {round}: expected upload from client {}, got {}", conn.id, f.kind.name());
+    }
+    enc.decode(&f.payload, Some(r), latest)?;
+    net.send(MsgKind::ModelUpload, f.payload.len() as u64);
+    Ok(())
+}
+
+/// Recreate the engine's holdout evaluation: learner 0's stream advanced
+/// past the training prefix (the synthetic streams draw per sample, so
+/// consuming `rounds` training batches lands on the same position), then
+/// 5 fresh eval batches on the averaged model.
+fn holdout_eval(mrt: &ModelRuntime, cfg: &ServeConfig, averaged: &[f32]) -> Result<Option<(f64, f64)>> {
+    let Some(ev) = &mrt.eval else {
+        return Ok(None);
+    };
+    let dataset = Dataset::for_model(&cfg.model)?;
+    let factory = dataset.factory(cfg.seed);
+    let mut stream = factory(0);
+    let rate = mrt.train.exe.info.batch;
+    for _ in 0..cfg.rounds {
+        let _ = stream.next_batch(rate);
+    }
+    let eval_batch = ev.exe.info.batch;
+    let mut ws = ev.workspace();
+    ws.threads = crate::util::threads::default_threads().max(1);
+    ws.enable_pool();
+    let mut loss = 0.0;
+    let mut metric = 0.0;
+    let reps = 5;
+    for _ in 0..reps {
+        let batch = stream.next_batch(eval_batch);
+        let s = ev.eval(averaged, &batch, &mut ws)?;
+        loss += s.loss as f64;
+        metric += s.metric as f64;
+    }
+    Ok(Some((loss / reps as f64, metric / reps as f64)))
+}

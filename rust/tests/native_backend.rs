@@ -19,6 +19,7 @@ use dynavg::network::NetStats;
 use dynavg::runtime::{ModelRuntime, Runtime};
 use dynavg::sim::{Engine, RunResult, SimConfig};
 use dynavg::util::rng::Rng;
+use dynavg::wire::Link;
 
 fn run_model_protocol(model: &str, m: usize, rounds: u64, lr: f32, spec: &ProtocolSpec) -> RunResult {
     let rt = Runtime::native();
@@ -187,6 +188,7 @@ fn sync_preserves_global_mean_under_real_training() {
     let weights = vec![1.0f32; m];
     let mut net = NetStats::new();
     let mut rng = Rng::new(5);
+    let mut link = Link::dense();
     let idx: Vec<usize> = (0..m).collect();
     let mut synced_rounds = 0;
     let mut ws = mrt.train.workspace();
@@ -205,6 +207,7 @@ fn sync_preserves_global_mean_under_real_training() {
             weights: &weights,
             net: &mut net,
             rng: &mut rng,
+            link: &mut link,
         });
         let mut after = vec![0.0f32; p];
         params::average_into(&models, &idx, &mut after);

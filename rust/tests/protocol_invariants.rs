@@ -11,6 +11,7 @@ use dynavg::model::params;
 use dynavg::network::NetStats;
 use dynavg::testing::{forall, prop::forall_check, Config};
 use dynavg::util::rng::Rng;
+use dynavg::wire::Link;
 
 /// A random model configuration around a random reference.
 #[derive(Debug)]
@@ -47,12 +48,14 @@ fn sync_once(case: &Case, seed: u64) -> (Vec<Vec<f32>>, NetStats, DynamicAveragi
     let weights = vec![1.0; models.len()];
     let mut net = NetStats::new();
     let mut rng = Rng::new(seed);
+    let mut link = Link::dense();
     proto.sync(&mut SyncCtx {
         round: 1,
         models: &mut models,
         weights: &weights,
         net: &mut net,
         rng: &mut rng,
+        link: &mut link,
     });
     (models, net, proto)
 }
@@ -127,12 +130,14 @@ fn prop_dynamic_communication_never_exceeds_periodic() {
             let weights = vec![1.0; models.len()];
             let mut per_net = NetStats::new();
             let mut rng = Rng::new(4);
+            let mut link = Link::dense();
             per.sync(&mut SyncCtx {
                 round: 1,
                 models: &mut models,
                 weights: &weights,
                 net: &mut per_net,
                 rng: &mut rng,
+                link: &mut link,
             });
             dyn_net.models_sent <= per_net.models_sent
         },
@@ -175,12 +180,14 @@ fn prop_fedavg_subset_size() {
         let weights = vec![1.0; m];
         let mut net = NetStats::new();
         let mut rng = Rng::new(9);
+        let mut link = Link::dense();
         let rep = proto.sync(&mut SyncCtx {
             round: 1,
             models: &mut models,
             weights: &weights,
             net: &mut net,
             rng: &mut rng,
+            link: &mut link,
         });
         rep.updated == ((c * m as f64).ceil() as usize).clamp(1, m)
     });
@@ -208,12 +215,14 @@ fn prop_all_augmentation_strategies_satisfy_def2() {
                 let weights = vec![1.0; models.len()];
                 let mut net = NetStats::new();
                 let mut rng = Rng::new(7);
+                let mut link = Link::dense();
                 proto.sync(&mut SyncCtx {
                     round: 1,
                     models: &mut models,
                     weights: &weights,
                     net: &mut net,
                     rng: &mut rng,
+                    link: &mut link,
                 });
                 let r = proto.reference().unwrap();
                 for f in &models {
@@ -239,6 +248,7 @@ fn dynamic_reaches_quiescence_on_converging_learners() {
     let run = |spec: &ProtocolSpec| -> (u64, u64) {
         let mut protocol = spec.build();
         let mut rng = Rng::new(5);
+        let mut link = Link::dense();
         let mut models: Vec<Vec<f32>> = vec![vec![0.0; p]; m];
         let weights = vec![1.0; m];
         let mut net = NetStats::new();
@@ -258,6 +268,7 @@ fn dynamic_reaches_quiescence_on_converging_learners() {
                 weights: &weights,
                 net: &mut net,
                 rng: &mut rng,
+                link: &mut link,
             });
             if t > 150 {
                 late_bytes += net.total_bytes() - before;
@@ -282,6 +293,7 @@ fn dynamic_communication_clusters_after_drift() {
     let m = 6;
     let p = 16;
     let mut rng = Rng::new(11);
+    let mut link = Link::dense();
     let mut protocol = DynamicAveraging::new(DynamicConfig::new(0.05, 1));
     let mut models: Vec<Vec<f32>> = vec![vec![0.0; p]; m];
     let weights = vec![1.0; m];
@@ -305,6 +317,7 @@ fn dynamic_communication_clusters_after_drift() {
             weights: &weights,
             net: &mut net,
             rng: &mut rng,
+            link: &mut link,
         });
         bytes_by_round.push(net.total_bytes() - before);
     }

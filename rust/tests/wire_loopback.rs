@@ -1,0 +1,174 @@
+//! Loopback wire tests — the PR's two headline claims:
+//!
+//! 1. `dynavg serve` + m learner clients over loopback TCP reproduce the
+//!    in-process dynamic-averaging run *bit for bit* (models, averaged
+//!    model, cumulative loss, NetStats) on the dense codec — and, because
+//!    both sides roundtrip through the identical codec at the identical
+//!    points, on the quantized codec too.
+//! 2. the paper's dynamic-vs-periodic communication reduction holds in
+//!    *measured wire bytes* for every delta encoding, and the lossy
+//!    codecs cut dense wire bytes by the margins validated against the
+//!    numpy mirror (`python/tools/native_mirror.py wire_protocol`):
+//!    int8 ≥2x at ≤1.05x loss; top-k(0.1) ≥2x at ≤1.5x loss (top-k
+//!    resets unsent coordinates to the reference on partial syncs, so
+//!    its measured loss ratio sits at ~1.27–1.35 — the trade-off is
+//!    documented in README and asserted here at mirror-validated bounds).
+
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use dynavg::coordinator::ProtocolSpec;
+use dynavg::experiments::Dataset;
+use dynavg::runtime::Runtime;
+use dynavg::sim::engine::{Engine, RunResult};
+use dynavg::sim::SimConfig;
+use dynavg::wire::client::{run_client, ClientReport};
+use dynavg::wire::serve::{ServeConfig, ServeReport, WireServer};
+use dynavg::wire::Encoding;
+
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| Runtime::new(dynavg::artifacts_dir()).expect("runtime"))
+}
+
+const SEED: u64 = 2024;
+const LR: f32 = 0.05;
+const DELTA: f64 = 1.0;
+const CHECK: u64 = 5;
+
+/// In-process engine run with the exact config `dynavg serve` hosts.
+fn engine_run(m: usize, rounds: u64, enc: Encoding, spec: &ProtocolSpec) -> RunResult {
+    let mut cfg = SimConfig::new("mnist_logistic", "sgd", m, rounds, LR);
+    cfg.seed = SEED;
+    cfg.final_eval = false;
+    cfg.encoding = enc;
+    let engine = Engine::new(rt(), cfg).expect("engine");
+    let factory = Dataset::MnistLike.factory(SEED);
+    engine.run(spec, &factory).expect("engine run")
+}
+
+/// Full serve run: bind an ephemeral port, attach m client threads (each
+/// with its own Runtime, like separate `dynavg connect` processes), host
+/// the protocol on this thread.
+fn serve_run(m: usize, rounds: u64, enc: Encoding) -> (ServeReport, Vec<ClientReport>) {
+    let mut cfg = ServeConfig::new("mnist_logistic", m, rounds);
+    cfg.lr = LR;
+    cfg.seed = SEED;
+    cfg.delta = DELTA;
+    cfg.check_every = CHECK;
+    cfg.encoding = enc;
+    cfg.timeout = Duration::from_secs(120);
+    let server = WireServer::bind(cfg, 0).expect("bind");
+    let addr = server.local_addr().expect("local addr").to_string();
+
+    let handles: Vec<_> = (0..m)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let rt = Runtime::new(dynavg::artifacts_dir()).expect("client runtime");
+                run_client(&rt, &addr, Duration::from_secs(120)).expect("client run")
+            })
+        })
+        .collect();
+    let report = server.run(rt()).expect("serve run");
+    let mut clients: Vec<ClientReport> = handles.into_iter().map(|h| h.join().expect("client thread")).collect();
+    clients.sort_by_key(|c| c.id);
+    (report, clients)
+}
+
+fn assert_bitwise(tag: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{tag}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: entry {i} diverges ({x} vs {y})");
+    }
+}
+
+/// Claim 1: the loopback run is the in-process run, bit for bit, on the
+/// dense codec — and on int8, where both sides share every roundtrip.
+#[test]
+fn loopback_serve_reproduces_in_process_run_bitwise() {
+    let (m, rounds) = (4, 30);
+    let spec = ProtocolSpec::Dynamic {
+        delta: DELTA,
+        check_every: CHECK,
+    };
+    for enc in [Encoding::Dense, Encoding::Int8] {
+        let engine = engine_run(m, rounds, enc, &spec);
+        let (serve, clients) = serve_run(m, rounds, enc);
+
+        // the run exercised the protocol (otherwise parity is vacuous)
+        assert!(serve.net.sync_events > 0, "{}: no sync events", enc.label());
+
+        for i in 0..m {
+            let tag = format!("{} model {i}", enc.label());
+            assert_bitwise(&tag, &engine.models[i], &serve.models[i]);
+            assert_bitwise(&format!("{tag} (client view)"), &serve.models[i], &clients[i].params);
+        }
+        assert_bitwise(&format!("{} averaged", enc.label()), &engine.averaged, &serve.averaged);
+        assert_eq!(
+            engine.summary.cumulative_loss.to_bits(),
+            serve.cumulative_loss.to_bits(),
+            "{}: cumulative loss {} vs {}",
+            enc.label(),
+            engine.summary.cumulative_loss,
+            serve.cumulative_loss
+        );
+
+        // identical protocol ⇒ identical accounting; and the charged bytes
+        // actually observed on the socket equal that accounting exactly
+        assert_eq!(engine.net, serve.net, "{}: NetStats diverge", enc.label());
+        assert_eq!(serve.wire_up_bytes, serve.net.up_bytes, "{}: up bytes", enc.label());
+        assert_eq!(serve.wire_down_bytes, serve.net.down_bytes, "{}: down bytes", enc.label());
+        assert!(serve.wire_transport_bytes > serve.net.total_bytes(), "{}: transport total", enc.label());
+    }
+}
+
+/// Claim 2: the ≥5x dynamic-vs-periodic reduction in measured wire bytes
+/// holds per encoding, with the lossy codecs' cuts and loss ratios at the
+/// mirror-validated thresholds (see module docs).
+#[test]
+fn wire_bytes_reduction_holds_across_encodings() {
+    let (m, rounds) = (8, 150);
+    let dynamic = ProtocolSpec::Dynamic {
+        delta: DELTA,
+        check_every: CHECK,
+    };
+    let periodic = ProtocolSpec::Periodic { period: CHECK };
+
+    let mut dense_dyn: Option<(u64, f64)> = None;
+    for enc in [Encoding::Dense, Encoding::Int8, Encoding::TopK { fraction: 0.1 }] {
+        let dyn_run = engine_run(m, rounds, enc, &dynamic);
+        let per_run = engine_run(m, rounds, enc, &periodic);
+        let (dyn_bytes, per_bytes) = (dyn_run.net.total_bytes(), per_run.net.total_bytes());
+        assert!(dyn_run.net.sync_events > 0, "{}: dynamic never synced", enc.label());
+        assert!(
+            per_bytes >= 5 * dyn_bytes,
+            "{}: dynamic-vs-periodic reduction {:.2}x < 5x ({dyn_bytes} vs {per_bytes} bytes)",
+            enc.label(),
+            per_bytes as f64 / dyn_bytes.max(1) as f64
+        );
+
+        let loss = dyn_run.summary.cumulative_loss;
+        match enc {
+            Encoding::Dense => dense_dyn = Some((dyn_bytes, loss)),
+            _ => {
+                let (dense_bytes, dense_loss) = dense_dyn.expect("dense runs first");
+                // mirror-validated: int8 cut 3.98x / loss 1.0000,
+                // topk(0.1) cut 2.55–4.06x / loss 1.27–1.35 across seeds
+                let loss_bound = if enc == Encoding::Int8 { 1.05 } else { 1.5 };
+                assert!(
+                    2 * dyn_bytes <= dense_bytes,
+                    "{}: cut vs dense {:.2}x < 2x ({dyn_bytes} vs {dense_bytes} bytes)",
+                    enc.label(),
+                    dense_bytes as f64 / dyn_bytes.max(1) as f64
+                );
+                assert!(
+                    loss <= loss_bound * dense_loss,
+                    "{}: loss ratio {:.4} > {loss_bound} ({loss:.2} vs dense {dense_loss:.2})",
+                    enc.label(),
+                    loss / dense_loss
+                );
+            }
+        }
+    }
+}
