@@ -2,7 +2,7 @@
 # and must pass hermetically (no Python, no XLA, no artifacts, default
 # features — the native backend).
 
-.PHONY: verify build test fmt clippy xla-check bench-smoke bench-baseline bench-report mirror-check serve-smoke ci artifacts
+.PHONY: verify build test fmt clippy xla-check bench-smoke bench-baseline bench-report mirror-check serve-smoke fleet-smoke ci artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -54,6 +54,7 @@ mirror-check:
 	python3 python/tools/packed_order_check.py
 	python3 python/tools/native_mirror.py fixed_batch
 	python3 python/tools/native_mirror.py wire_protocol
+	python3 python/tools/native_mirror.py fleet_protocol
 
 # Loopback coordinator end-to-end: serve + 4 clients, dense then int8;
 # the server fails unless measured wire bytes equal NetStats exactly.
@@ -70,7 +71,14 @@ serve-smoke: build
 	  wait; \
 	done; rm -f port.txt
 
-ci: fmt clippy xla-check verify serve-smoke mirror-check bench-smoke
+# Fleet-scale smoke: m=256 dynamic-vs-periodic with C=0.25 sampling and
+# 5% dropout through the shared scheduler. The experiment driver itself
+# asserts the >=5x byte reduction and the arena-pool memory bound, so a
+# nonzero exit is the gate.
+fleet-smoke: build
+	./target/release/dynavg exp fleet --scale small
+
+ci: fmt clippy xla-check verify serve-smoke fleet-smoke mirror-check bench-smoke
 
 # XLA artifact build (requires python + jax; NOT needed for tier-1).
 # Produces artifacts/manifest.json + HLO text for the conv/attention

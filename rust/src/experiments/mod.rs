@@ -12,6 +12,7 @@ pub mod fig6_1;
 pub mod fig6_2;
 pub mod fig_a1;
 pub mod fig_a6;
+pub mod fleet;
 pub mod wire;
 
 pub use common::{image_model, Dataset, Harness, Scale};
@@ -32,6 +33,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("figA_1", "communication/loss over time: sigma_d=0.3 vs sigma_b=10"),
     ("figA_6", "black-box optimizers: SGD / ADAM / RMSprop"),
     ("wire", "measured wire bytes: dynamic vs periodic across delta encodings"),
+    ("fleet", "fleet scale: sampled cohorts + dropout at m up to 1000 (shared scheduler)"),
 ];
 
 /// Dispatch an experiment by id. Returns after printing its tables and
@@ -70,6 +72,9 @@ pub fn dispatch(rt: &Runtime, id: &str, scale: Scale, seed: u64) -> Result<()> {
         }
         "wire" => {
             wire::run(rt, scale, seed)?;
+        }
+        "fleet" => {
+            fleet::run(rt, scale, seed)?;
         }
         "all" => {
             for (name, _) in EXPERIMENTS {

@@ -1,0 +1,108 @@
+//! FedAvg-style client sampling (McMahan et al., 1602.05629): each round
+//! a C-fraction of the population trains. Sampling is seeded and
+//! deterministic — the cohort stream is independent of the protocol and
+//! data rng streams, so the same seed yields the same cohorts no matter
+//! which σ runs on top (mirrored by `fleet_schedule` in
+//! `python/tools/native_mirror.py`).
+
+use crate::util::rng::Rng;
+
+pub struct Cohort {
+    participation: f64,
+    rng: Rng,
+}
+
+impl Cohort {
+    /// `seed` is the engine's fleet-cohort stream (`cfg.seed ^ 0xC0F07`).
+    pub fn new(participation: f64, seed: u64) -> Cohort {
+        Cohort {
+            participation: participation.clamp(0.0, 1.0),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Sample this round's cohort from `avail` (ascending learner ids)
+    /// into `out`, also ascending. The target size is
+    /// `floor(C·population + 0.5)` clamped to `[1, |avail|]` — the
+    /// population (not |avail|) anchors the target so in-flight
+    /// stragglers shrink the cohort rather than reshuffle its share.
+    /// When every available learner is wanted no randomness is drawn, so
+    /// the full-participation path consumes no rng state.
+    pub fn sample(&mut self, avail: &[usize], population: usize, out: &mut Vec<usize>) {
+        out.clear();
+        if avail.is_empty() {
+            return;
+        }
+        let target = (self.participation * population as f64 + 0.5).floor() as usize;
+        let k = target.clamp(1, avail.len());
+        if k == avail.len() {
+            out.extend_from_slice(avail);
+            return;
+        }
+        let picks = self.rng.sample_indices(avail.len(), k);
+        out.extend(picks.into_iter().map(|j| avail[j]));
+        out.sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: usize) -> Vec<usize> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn same_seed_same_cohorts() {
+        let avail = ids(100);
+        let mut a = Cohort::new(0.1, 7);
+        let mut b = Cohort::new(0.1, 7);
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        for _ in 0..20 {
+            a.sample(&avail, 100, &mut oa);
+            b.sample(&avail, 100, &mut ob);
+            assert_eq!(oa, ob);
+            assert_eq!(oa.len(), 10);
+            assert!(oa.windows(2).all(|w| w[0] < w[1]), "ascending, distinct");
+        }
+    }
+
+    #[test]
+    fn full_participation_draws_no_randomness() {
+        let avail = ids(8);
+        // `a` runs 5 full-participation rounds before the partial one;
+        // `b` runs the partial sample immediately — identical outputs
+        // prove the full path consumed no rng state
+        let mut a = Cohort::new(1.0, 3);
+        let mut out = Vec::new();
+        for _ in 0..5 {
+            a.sample(&avail, 8, &mut out);
+            assert_eq!(out, avail);
+        }
+        let mut a = Cohort::new(0.5, 3);
+        let mut b = Cohort::new(0.5, 3);
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        let full = ids(8);
+        a.sample(&full, 8, &mut oa);
+        b.sample(&full, 8, &mut ob);
+        assert_eq!(oa, ob);
+        assert_eq!(oa.len(), 4);
+    }
+
+    #[test]
+    fn target_clamps_to_availability() {
+        let mut c = Cohort::new(0.5, 1);
+        let mut out = Vec::new();
+        // tiny availability: clamped down to |avail|
+        c.sample(&[3, 9], 100, &mut out);
+        assert_eq!(out, vec![3, 9]);
+        // zero participation still trains one learner
+        let mut c = Cohort::new(0.0, 1);
+        c.sample(&ids(10), 10, &mut out);
+        assert_eq!(out.len(), 1);
+        // empty availability: empty cohort
+        c.sample(&[], 10, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,97 @@
+//! Fault injection for fleet rounds: per-learner dropout and straggler
+//! delays, drawn from a dedicated seeded stream so fault schedules are
+//! deterministic and independent of the protocol, data, and cohort
+//! streams (mirrored by `fleet_schedule` in
+//! `python/tools/native_mirror.py` — the draw order below is part of
+//! that contract).
+
+use crate::util::rng::Rng;
+
+/// What happened to one sampled learner this round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fate {
+    OnTime,
+    /// Sampled but offline this round: no local step, no sync.
+    Dropped,
+    /// Trains this round, but the update only arrives
+    /// `straggle_rounds` later (the learner is in flight until then).
+    Straggled,
+}
+
+pub struct Faults {
+    dropout: f64,
+    straggle: f64,
+    forced: Vec<usize>,
+    rng: Rng,
+}
+
+impl Faults {
+    /// `seed` is the engine's fleet-fault stream (`cfg.seed ^ 0xFA17`).
+    pub fn new(dropout: f64, straggle: f64, forced: Vec<usize>, seed: u64) -> Faults {
+        Faults {
+            dropout,
+            straggle,
+            forced,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Classify one sampled learner. Draw order is fixed: the dropout
+    /// coin first (whenever dropout > 0), then the forced-straggler list
+    /// (no draw), then the straggle coin. With every knob zero this
+    /// consumes no rng state.
+    pub fn classify(&mut self, id: usize) -> Fate {
+        if self.dropout > 0.0 && self.rng.bernoulli(self.dropout) {
+            return Fate::Dropped;
+        }
+        if self.forced.contains(&id) {
+            return Fate::Straggled;
+        }
+        if self.straggle > 0.0 && self.rng.bernoulli(self.straggle) {
+            return Fate::Straggled;
+        }
+        Fate::OnTime
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forced_stragglers_always_straggle() {
+        let mut f = Faults::new(0.0, 0.0, vec![2, 5], 1);
+        for _ in 0..10 {
+            assert_eq!(f.classify(2), Fate::Straggled);
+            assert_eq!(f.classify(5), Fate::Straggled);
+            assert_eq!(f.classify(0), Fate::OnTime);
+        }
+    }
+
+    #[test]
+    fn fault_free_config_draws_no_randomness() {
+        // classify() with all knobs zero must not advance the rng
+        let mut a = Faults::new(0.0, 0.0, Vec::new(), 9);
+        for id in 0..100 {
+            assert_eq!(a.classify(id), Fate::OnTime);
+        }
+        let mut fresh = Rng::new(9);
+        assert_eq!(a.rng.next_u64(), fresh.next_u64());
+    }
+
+    #[test]
+    fn dropout_rate_is_roughly_honored() {
+        let mut f = Faults::new(0.25, 0.0, Vec::new(), 42);
+        let dropped = (0..4000).filter(|&id| f.classify(id) == Fate::Dropped).count();
+        assert!((800..1200).contains(&dropped), "dropped {dropped} of 4000 at p=0.25");
+    }
+
+    #[test]
+    fn same_seed_same_fates() {
+        let mut a = Faults::new(0.3, 0.2, vec![7], 11);
+        let mut b = Faults::new(0.3, 0.2, vec![7], 11);
+        for id in 0..200 {
+            assert_eq!(a.classify(id), b.classify(id));
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Fleet execution subsystem: thousands of learners on shared resources.
+//!
+//! The paper's motivating setting is fleets of phones and cars, but the
+//! pre-fleet engine built one `Workspace` (plus one tile `WorkerPool`)
+//! per learner and scoped-spawned the learner loop every round — memory
+//! and dispatch cost scaled with the *population* m, capping runs at
+//! paper-scale m≈4–16. This module inverts that resource model:
+//!
+//! - [`FleetScheduler`] owns ONE global [`crate::runtime::WorkerPool`]
+//!   whose threads drain per-learner round work items from a shared
+//!   claim queue, and a pool of `min(threads, m)` reusable workspace
+//!   arenas checked out per work item. The compiled plan is already
+//!   shared via [`crate::runtime::ModelRuntime`], so resident memory
+//!   scales with the *active cohort*, not m.
+//! - [`Cohort`] is FedAvg-style client sampling (McMahan et al.,
+//!   1602.05629): each round trains a seeded, deterministic C-fraction
+//!   of the available population.
+//! - [`Faults`] injects per-learner dropout (sampled but offline) and
+//!   stragglers (the update trains now but arrives `straggle_rounds`
+//!   simulated round-slots later, merging under the protocol's
+//!   reference semantics when async arrival is enabled).
+//!
+//! Determinism contract: learner results are independent of which
+//! thread/arena runs a work item (arenas are content-free scratch and
+//! tiling is element-disjoint — see `runtime/workspace.rs`), so fleet
+//! runs are bitwise identical across thread counts; and with
+//! [`FleetConfig::is_full`] the engine draws no fleet randomness at all,
+//! keeping the full-participation path bitwise identical to the
+//! pre-fleet engine across {serial, scoped, pool} × thread counts.
+
+pub mod cohort;
+pub mod faults;
+pub mod scheduler;
+
+pub use cohort::Cohort;
+pub use faults::{Fate, Faults};
+pub use scheduler::FleetScheduler;
+
+/// Fleet knobs of one engine run (threaded through
+/// [`crate::sim::SimConfig`] and the `dynavg run` CLI). The defaults are
+/// full participation with no faults — the paper's original setting.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Fraction C of the population sampled to train each round
+    /// (clamped so at least one available learner trains).
+    pub participation: f64,
+    /// Probability that a sampled learner is offline this round
+    /// (no local step, no sync).
+    pub dropout: f64,
+    /// Probability that a sampled learner straggles: it trains this
+    /// round, but its update only arrives `straggle_rounds` later.
+    pub straggle: f64,
+    /// Simulated round-slots a straggled update stays in flight
+    /// (the learner is unsampleable until it arrives).
+    pub straggle_rounds: u64,
+    /// Learner ids that *always* straggle when sampled — deterministic
+    /// fault injection for tests.
+    pub forced_stragglers: Vec<usize>,
+    /// Merge straggled updates into the sync of their arrival round
+    /// (async rounds). `false` silently returns stragglers to the pool.
+    pub async_merge: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            participation: 1.0,
+            dropout: 0.0,
+            straggle: 0.0,
+            straggle_rounds: 1,
+            forced_stragglers: Vec::new(),
+            async_merge: true,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Full participation, no faults: the engine skips every fleet rng
+    /// draw and cohort branch, preserving the pre-fleet bitwise contract.
+    pub fn is_full(&self) -> bool {
+        self.participation >= 1.0
+            && self.dropout <= 0.0
+            && self.straggle <= 0.0
+            && self.forced_stragglers.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_full_participation() {
+        assert!(FleetConfig::default().is_full());
+        let sampled = FleetConfig {
+            participation: 0.5,
+            ..FleetConfig::default()
+        };
+        assert!(!sampled.is_full());
+        let faulty = FleetConfig {
+            dropout: 0.05,
+            ..FleetConfig::default()
+        };
+        assert!(!faulty.is_full());
+        let forced = FleetConfig {
+            forced_stragglers: vec![3],
+            ..FleetConfig::default()
+        };
+        assert!(!forced.is_full());
+    }
+}

@@ -1,0 +1,234 @@
+//! The fleet scheduler: one global [`WorkerPool`] plus a
+//! `min(threads, m)` pool of reusable workspace arenas drain per-learner
+//! round work items from a shared claim queue.
+//!
+//! This replaces the retired per-learner resource model (one `Workspace`
+//! + one tile pool per learner, scoped-spawned every round): the fleet
+//! pool is spawned once per run, a round is one latch dispatch, and each
+//! dispatched thread checks out the arena matching its slot index —
+//! `WorkerPool::run(slots, ..)` with `slots <= threads` runs every slot
+//! on a distinct thread exactly once, so arena checkout needs no locks.
+//!
+//! Determinism: work items claim `active` positions through an atomic
+//! counter, so *which* thread/arena runs a given learner is racy — but a
+//! local step's results depend only on the learner's own state and
+//! batch (arenas are content-free scratch; tile partitions own disjoint
+//! output elements — see `runtime/workspace.rs`), so every per-learner
+//! result is bitwise independent of the schedule. The engine reduces
+//! losses in ascending learner order afterwards, keeping whole runs
+//! bitwise identical across thread counts.
+//!
+//! Zero-alloc: the engine stages each active learner's mini-batch on the
+//! coordinator thread before dispatch, so a work item is claim + step on
+//! a warm arena — zero heap allocations (pinned by `tests/zero_alloc.rs`
+//! with the shared pool active).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::Result;
+
+use crate::runtime::{Batch, TrainStep, WorkerPool, Workspace};
+use crate::sim::Learner;
+
+/// Raw-pointer cell that carries disjoint-index `&mut` access into the
+/// dispatch closure. SAFETY is argued at each dereference site.
+struct SharedMut<T>(*mut T);
+
+// SAFETY: the wrapped pointer is only dereferenced at indices that the
+// dispatch protocol proves disjoint across threads (distinct slot ids /
+// uniquely-claimed queue positions), and `run_round` outlives every
+// dispatched closure (WorkerPool::run joins its latch before returning).
+unsafe impl<T> Send for SharedMut<T> {}
+unsafe impl<T> Sync for SharedMut<T> {}
+
+pub struct FleetScheduler {
+    pool: WorkerPool,
+    arenas: Vec<Workspace>,
+    peak_resident: u64,
+}
+
+impl FleetScheduler {
+    /// `threads` is the fleet worker budget and `m` the population; the
+    /// scheduler stands up `min(threads, m)` arenas (= the max work items
+    /// in flight). `intra` tile threads per arena and `tile_pool` mirror
+    /// the engine's intra-step knobs — per-arena tile pools are distinct
+    /// from (and nest under) the fleet pool.
+    pub fn new(train: &TrainStep, threads: usize, m: usize, intra: usize, tile_pool: bool) -> FleetScheduler {
+        let slots = threads.max(1).min(m.max(1));
+        let arenas = (0..slots)
+            .map(|_| {
+                let mut ws = train.workspace();
+                ws.threads = intra.max(1);
+                if tile_pool {
+                    ws.enable_pool();
+                }
+                ws
+            })
+            .collect();
+        FleetScheduler {
+            pool: WorkerPool::new(slots - 1),
+            arenas,
+            peak_resident: 0,
+        }
+    }
+
+    /// Number of reusable arenas (== max concurrent work items).
+    pub fn slots(&self) -> usize {
+        self.arenas.len()
+    }
+
+    /// High-water mark of resident arena bytes across the rounds run so
+    /// far — the fleet's answer to "memory scales with active learners,
+    /// not m" (surfaced through `metrics::Summary` and `dynavg models`).
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.peak_resident
+    }
+
+    /// Deterministically size every arena from the coordinator thread by
+    /// running one throwaway step per arena on copies of `params`. Work
+    /// items themselves size arenas lazily on first use; tests that pin
+    /// steady-state allocation counts call this so no cold arena hides
+    /// behind a racy first-round claim schedule.
+    pub fn warm(&mut self, train: &TrainStep, params: &[f32], state_size: usize, batch: &Batch) -> Result<()> {
+        for ws in self.arenas.iter_mut() {
+            let mut p = params.to_vec();
+            let mut s = vec![0.0f32; state_size];
+            train.step(&mut p, &mut s, batch, 0.0, ws)?;
+        }
+        Ok(())
+    }
+
+    /// Run one fleet round: every id in `active` (strictly ascending
+    /// indices into `learners`) takes one local step on a checked-out
+    /// arena. Step outcomes land in each learner's `last`/`last_err`;
+    /// the caller inspects them after the dispatch returns.
+    pub fn run_round(&mut self, learners: &mut [Learner], active: &[usize], train: &TrainStep, lr: f32) {
+        debug_assert!(
+            active.windows(2).all(|w| w[0] < w[1]),
+            "active ids must be strictly ascending (disjointness proof)"
+        );
+        debug_assert!(active.iter().all(|&id| id < learners.len()));
+        if !active.is_empty() {
+            let slots = self.arenas.len().min(active.len());
+            let next = AtomicUsize::new(0);
+            let learners_ptr = SharedMut(learners.as_mut_ptr());
+            let arenas_ptr = SharedMut(self.arenas.as_mut_ptr());
+            self.pool.run(slots, |slot| {
+                // SAFETY: WorkerPool::run hands each tile index in
+                // 0..slots to exactly one thread, so `slot` is unique per
+                // concurrent closure and arenas[slot] is exclusively
+                // borrowed here. Each queue position is claimed by exactly
+                // one fetch_add winner and `active` holds strictly
+                // ascending (hence distinct) indices, so each learner is
+                // mutated by exactly one thread. Both borrows end before
+                // run() returns the latch.
+                let ws = unsafe { &mut *arenas_ptr.0.add(slot) };
+                loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= active.len() {
+                        break;
+                    }
+                    let l = unsafe { &mut *learners_ptr.0.add(active[k]) };
+                    l.local_step(train, lr, ws);
+                }
+            });
+        }
+        let resident: u64 = self.arenas.iter().map(|w| w.bytes() as u64).sum();
+        self.peak_resident = self.peak_resident.max(resident);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist::MnistLike;
+    use crate::data::Stream;
+    use crate::runtime::{ModelRuntime, Runtime};
+
+    fn learners(rt: &Runtime, mrt: &ModelRuntime, m: usize) -> Vec<Learner> {
+        let state_size = mrt.train.exe.info.state_size;
+        let batch = mrt.train.exe.info.batch;
+        (0..m)
+            .map(|i| {
+                let params = rt.init_params("mnist_logistic").unwrap();
+                Learner::new(i, params, state_size, Box::new(MnistLike::new(5, 10 + i as u64)), batch)
+            })
+            .collect()
+    }
+
+    /// Fleet rounds are bitwise independent of the thread budget: the
+    /// same learners stepped through 1-, 2- and 5-slot schedulers end up
+    /// with identical parameters.
+    #[test]
+    fn round_results_are_schedule_independent() {
+        let rt = Runtime::native();
+        let mrt = ModelRuntime::load(&rt, "mnist_logistic", "sgd").unwrap();
+        let m = 6;
+        let active: Vec<usize> = (0..m).collect();
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for threads in [1, 2, 5] {
+            let mut ls = learners(&rt, &mrt, m);
+            let mut sched = FleetScheduler::new(&mrt.train, threads, m, 1, false);
+            assert_eq!(sched.slots(), threads.min(m));
+            for _ in 0..3 {
+                for &i in &active {
+                    ls[i].stage();
+                }
+                sched.run_round(&mut ls, &active, &mrt.train, 0.05);
+            }
+            assert!(ls.iter().all(|l| l.last_err.is_none()));
+            let params: Vec<Vec<f32>> = ls.iter().map(|l| l.params.clone()).collect();
+            match &reference {
+                None => reference = Some(params),
+                Some(r) => assert_eq!(r, &params, "threads={threads} diverged"),
+            }
+        }
+    }
+
+    /// A partial cohort only steps its members, and the resident
+    /// footprint is bounded by the arenas actually warmed.
+    #[test]
+    fn partial_cohorts_step_only_active_learners() {
+        let rt = Runtime::native();
+        let mrt = ModelRuntime::load(&rt, "mnist_logistic", "sgd").unwrap();
+        let mut ls = learners(&rt, &mrt, 4);
+        let before: Vec<Vec<f32>> = ls.iter().map(|l| l.params.clone()).collect();
+        let mut sched = FleetScheduler::new(&mrt.train, 2, 4, 1, false);
+        let active = vec![1, 3];
+        for &i in &active {
+            ls[i].stage();
+        }
+        sched.run_round(&mut ls, &active, &mrt.train, 0.05);
+        assert_eq!(ls[0].params, before[0]);
+        assert_eq!(ls[2].params, before[2]);
+        assert_ne!(ls[1].params, before[1]);
+        assert_ne!(ls[3].params, before[3]);
+        assert!(sched.peak_resident_bytes() > 0);
+        // empty rounds are a no-op
+        sched.run_round(&mut ls, &[], &mrt.train, 0.05);
+        assert_eq!(ls[1].last_err, None);
+    }
+
+    /// warm() sizes every arena so the peak-resident number is already
+    /// final before the first real round.
+    #[test]
+    fn warm_sizes_all_arenas() {
+        let rt = Runtime::native();
+        let mrt = ModelRuntime::load(&rt, "mnist_logistic", "sgd").unwrap();
+        let mut sched = FleetScheduler::new(&mrt.train, 3, 8, 1, false);
+        let params = rt.init_params("mnist_logistic").unwrap();
+        let batch = MnistLike::new(5, 1).next_batch(mrt.train.exe.info.batch);
+        sched
+            .warm(&mrt.train, &params, mrt.train.exe.info.state_size, &batch)
+            .unwrap();
+        let warmed: u64 = sched.arenas.iter().map(|w| w.bytes() as u64).sum();
+        assert!(warmed > 0);
+        let mut ls = learners(&rt, &mrt, 8);
+        let active: Vec<usize> = (0..8).collect();
+        for &i in &active {
+            ls[i].stage();
+        }
+        sched.run_round(&mut ls, &active, &mrt.train, 0.05);
+        assert_eq!(sched.peak_resident_bytes(), warmed, "no arena grew after warm()");
+    }
+}

@@ -34,6 +34,7 @@ pub mod coordinator;
 pub mod data;
 pub mod driving;
 pub mod experiments;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod network;

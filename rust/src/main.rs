@@ -59,6 +59,8 @@ fn print_usage() {
     println!("usage:");
     println!("  dynavg exp <id> [--scale tiny|small|medium|paper] [--seed N]");
     println!("  dynavg run --model M --protocol SPEC [--optimizer O] [--m N] [--rounds T] [--lr F]");
+    println!("             [--threads N] [--participation C] [--dropout P] [--straggle P]");
+    println!("             [--straggle-rounds K] [--no-async-merge]");
     println!("  dynavg serve --model M [--m N] [--rounds T] [--encoding dense|int8|int16|topk:F]");
     println!("               [--port P] [--port-file PATH] [--delta D] [--check B] [--final-eval]");
     println!("  dynavg connect --addr HOST:PORT [--timeout-secs S]");
@@ -99,6 +101,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.seed = seed;
     cfg.encoding = Encoding::parse(&args.get_str("encoding", "dense"))?;
     cfg.final_eval = true;
+    // fleet knobs: participation sampling, dropout, stragglers (defaults
+    // reproduce the paper's full-participation setting bit for bit)
+    cfg.threads = args.get_usize("threads", cfg.threads);
+    cfg.fleet.participation = args.get_f64("participation", 1.0);
+    cfg.fleet.dropout = args.get_f64("dropout", 0.0);
+    cfg.fleet.straggle = args.get_f64("straggle", 0.0);
+    cfg.fleet.straggle_rounds = args.get_usize("straggle-rounds", 1) as u64;
+    cfg.fleet.async_merge = !args.has("no-async-merge");
     let harness = experiments::Harness::new(&rt, cfg, dataset, "custom");
     harness.run_all(&[spec], args.has("serial"))?;
     Ok(())
@@ -206,8 +216,8 @@ fn cmd_models() -> Result<()> {
     let rt = Runtime::new(dynavg::artifacts_dir())?;
     println!("backend: {}", rt.backend_name());
     // the intra-step tile pool a solo workspace would stand up at this
-    // machine's budget (the engine divides this across learners; each
-    // learner's pool is its workspace's threads - 1)
+    // machine's budget (the fleet scheduler divides this across its
+    // arenas; each arena's tile pool is its workspace's threads - 1)
     let t = dynavg::util::threads::default_threads();
     println!(
         "tile pool: {} worker(s) + dispatching thread at default_threads={t}",
@@ -217,6 +227,7 @@ fn cmd_models() -> Result<()> {
         "{:<16} {:>9}  {:<14} {:<8} {:<6} {:>12} {:>10} {:>10} executable",
         "model", "P", "x_shape", "metric", "ops", "workspace", "pack", "attn"
     );
+    let mut fleet_rows: Vec<(String, u64)> = Vec::new();
     for (name, m) in &rt.manifest.models {
         let executable = if rt.supports_model(name) {
             "yes"
@@ -245,18 +256,44 @@ fn cmd_models() -> Result<()> {
         let train_batch = train.map(|a| a.batch).unwrap_or(1);
         let out_slots = train.map(|a| a.param_count + a.state_size + 2).unwrap_or(0);
         let (workspace, pack, attn) = match dynavg::runtime::ModelPlan::from_model(m) {
-            Ok(p) => (
-                format!("{} B", p.workspace_bytes(train_batch) + 4 * out_slots),
-                format!("{} B", p.pack_bytes(train_batch)),
-                p.attn_scratch_bytes(train_batch)
-                    .map(|b| format!("{b} B"))
-                    .unwrap_or_else(|| "-".to_string()),
-            ),
+            Ok(p) => {
+                let ws_bytes = (p.workspace_bytes(train_batch) + 4 * out_slots) as u64;
+                if rt.supports_model(name) && train.is_some() {
+                    fleet_rows.push((name.clone(), ws_bytes));
+                }
+                (
+                    format!("{ws_bytes} B"),
+                    format!("{} B", p.pack_bytes(train_batch)),
+                    p.attn_scratch_bytes(train_batch)
+                        .map(|b| format!("{b} B"))
+                        .unwrap_or_else(|| "-".to_string()),
+                )
+            }
             Err(_) => ("-".to_string(), "-".to_string(), "-".to_string()),
         };
         println!(
             "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {workspace:>12} {pack:>10} {attn:>10} {executable}",
             name, m.param_count, m.metric,
+        );
+    }
+    // fleet amortization: the retired per-learner resource model stood up
+    // one arena per learner (m × workspace); the fleet scheduler checks
+    // min(threads, m) reusable arenas out of a pool, so resident bytes
+    // scale with the active cohort, not the population
+    let fleet_m = 1000usize;
+    let slots = t.max(1).min(fleet_m);
+    println!("\nfleet amortization (m={fleet_m}, {slots} arena(s) at threads={t}):");
+    println!(
+        "{:<16} {:>16} {:>16} {:>14}",
+        "model", "per-learner", "fleet resident", "amortization"
+    );
+    for (name, ws) in &fleet_rows {
+        println!(
+            "{:<16} {:>13.1} MB {:>13.1} MB {:>13.1}x",
+            name,
+            (ws * fleet_m as u64) as f64 / 1e6,
+            (ws * slots as u64) as f64 / 1e6,
+            fleet_m as f64 / slots as f64
         );
     }
     Ok(())

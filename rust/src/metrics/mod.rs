@@ -22,6 +22,13 @@ pub struct RoundRecord {
     pub synced: bool,
     /// was a concept drift triggered this round
     pub drifted: bool,
+    /// learners that took a local step this round (the sampled cohort
+    /// minus dropouts; == m under full participation)
+    pub cohort: usize,
+    /// sampled learners that dropped out this round
+    pub dropped: usize,
+    /// sampled learners whose update arrives in a later round
+    pub straggled: usize,
 }
 
 /// Recorder for one protocol run.
@@ -56,6 +63,21 @@ impl Recorder {
         tail.iter().map(|r| r.metric_mean).sum::<f64>() / tail.len() as f64
     }
 
+    /// Mean active-cohort size per round (== m under full participation).
+    pub fn mean_cohort(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().map(|r| r.cohort as f64).sum::<f64>() / self.rows.len() as f64
+    }
+
+    /// Total (dropped, straggled) learner-rounds across the run.
+    pub fn fault_totals(&self) -> (u64, u64) {
+        self.rows.iter().fold((0, 0), |(d, s), r| {
+            (d + r.dropped as u64, s + r.straggled as u64)
+        })
+    }
+
     /// Write the time series as CSV.
     pub fn write_csv(&self, path: &Path, label: &str) -> Result<()> {
         if let Some(dir) = path.parent() {
@@ -65,21 +87,24 @@ impl Recorder {
             .with_context(|| format!("creating {path:?}"))?;
         writeln!(
             f,
-            "protocol,round,loss_sum,cum_loss,metric_mean,cum_bytes,synced,drifted"
+            "protocol,round,loss_sum,cum_loss,metric_mean,cum_bytes,synced,drifted,cohort,dropped,straggled"
         )?;
         let mut cum = 0.0;
         for r in &self.rows {
             cum += r.loss_sum;
             writeln!(
                 f,
-                "{label},{},{:.6},{:.6},{:.6},{},{},{}",
+                "{label},{},{:.6},{:.6},{:.6},{},{},{},{},{},{}",
                 r.round,
                 r.loss_sum,
                 cum,
                 r.metric_mean,
                 r.cum_bytes,
                 r.synced as u8,
-                r.drifted as u8
+                r.drifted as u8,
+                r.cohort,
+                r.dropped,
+                r.straggled
             )?;
         }
         Ok(())
@@ -99,19 +124,31 @@ pub struct Summary {
     pub eval_metric: Option<f64>,
     pub sync_events: u64,
     pub full_syncs: u64,
+    /// high-water mark of resident fleet-arena bytes (bounded by
+    /// `min(threads, m)` arenas, not the population m)
+    pub peak_ws_bytes: u64,
 }
 
 impl Summary {
     pub fn table_header() -> String {
         format!(
-            "{:<22} {:<9} {:>14} {:>14} {:>12} {:>11} {:>11} {:>7} {:>6}",
-            "protocol", "enc", "cum_loss", "comm_bytes", "comm_MB", "tail_metric", "eval_metric", "syncs", "full"
+            "{:<22} {:<9} {:>14} {:>14} {:>12} {:>11} {:>11} {:>7} {:>6} {:>9}",
+            "protocol",
+            "enc",
+            "cum_loss",
+            "comm_bytes",
+            "comm_MB",
+            "tail_metric",
+            "eval_metric",
+            "syncs",
+            "full",
+            "ws_MB"
         )
     }
 
     pub fn table_row(&self) -> String {
         format!(
-            "{:<22} {:<9} {:>14.2} {:>14} {:>12.2} {:>11.4} {:>11} {:>7} {:>6}",
+            "{:<22} {:<9} {:>14.2} {:>14} {:>12.2} {:>11.4} {:>11} {:>7} {:>6} {:>9.2}",
             self.protocol,
             self.encoding,
             self.cumulative_loss,
@@ -122,7 +159,8 @@ impl Summary {
                 .map(|v| format!("{v:.4}"))
                 .unwrap_or_else(|| "-".into()),
             self.sync_events,
-            self.full_syncs
+            self.full_syncs,
+            self.peak_ws_bytes as f64 / 1e6
         )
     }
 }
@@ -135,12 +173,12 @@ pub fn write_summary_csv(path: &Path, rows: &[Summary]) -> Result<()> {
     let mut f = std::fs::File::create(path)?;
     writeln!(
         f,
-        "protocol,encoding,cum_loss,comm_bytes,tail_metric,eval_loss,eval_metric,sync_events,full_syncs"
+        "protocol,encoding,cum_loss,comm_bytes,tail_metric,eval_loss,eval_metric,sync_events,full_syncs,peak_ws_bytes"
     )?;
     for s in rows {
         writeln!(
             f,
-            "{},{},{:.6},{},{:.6},{},{},{},{}",
+            "{},{},{:.6},{},{:.6},{},{},{},{},{}",
             s.protocol,
             s.encoding,
             s.cumulative_loss,
@@ -149,7 +187,8 @@ pub fn write_summary_csv(path: &Path, rows: &[Summary]) -> Result<()> {
             s.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
             s.eval_metric.map(|v| format!("{v:.6}")).unwrap_or_default(),
             s.sync_events,
-            s.full_syncs
+            s.full_syncs,
+            s.peak_ws_bytes
         )?;
     }
     Ok(())
@@ -167,6 +206,9 @@ mod tests {
             cum_bytes: bytes,
             synced: false,
             drifted: false,
+            cohort: 4,
+            dropped: 0,
+            straggled: 0,
         }
     }
 
@@ -189,6 +231,21 @@ mod tests {
         }
         assert!((r.tail_metric(3) - 9.0).abs() < 1e-9);
         assert!((r.tail_metric(100) - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_stats_aggregate() {
+        let mut r = Recorder::new();
+        let mut a = row(1, 0.0, 0);
+        a.cohort = 2;
+        a.dropped = 1;
+        let mut b = row(2, 0.0, 0);
+        b.cohort = 4;
+        b.straggled = 2;
+        r.record(a);
+        r.record(b);
+        assert!((r.mean_cohort() - 3.0).abs() < 1e-9);
+        assert_eq!(r.fault_totals(), (1, 2));
     }
 
     #[test]

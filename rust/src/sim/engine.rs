@@ -4,12 +4,22 @@
 //! [`crate::runtime::Backend`] executes (the native interpreter by
 //! default, PJRT artifacts under `backend-xla`), so the same protocol
 //! code drives both substrates.
-
+//!
+//! Execution goes through the fleet subsystem (`crate::fleet`): one
+//! global [`crate::fleet::FleetScheduler`] drains learner-round work
+//! items instead of the retired per-round scoped spawns, resident
+//! workspace memory is bounded by `min(threads, cohort)` arenas, and the
+//! `FleetConfig` knobs add FedAvg-style client sampling, dropout,
+//! stragglers, and async round arrival. With the default
+//! (full-participation, fault-free) fleet config the engine draws no
+//! fleet randomness and its results are bitwise identical to the
+//! pre-fleet engine across {serial, scoped, pool} × thread counts.
 
 use anyhow::Result;
 
-use crate::coordinator::{Protocol, ProtocolSpec, SyncCtx};
+use crate::coordinator::{Protocol, ProtocolSpec, SyncCtx, SyncReport};
 use crate::data::{DriftSchedule, Stream};
+use crate::fleet::{Cohort, Fate, Faults, FleetConfig, FleetScheduler};
 use crate::metrics::{Recorder, RoundRecord, Summary};
 use crate::model::InitPolicy;
 use crate::network::NetStats;
@@ -32,15 +42,16 @@ pub struct SimConfig {
     pub lr: f32,
     pub seed: u64,
     pub init: InitPolicy,
-    /// worker threads for the per-round local steps
+    /// worker threads of the fleet scheduler (== max work items in
+    /// flight; arenas are capped at `min(threads, m)`)
     pub threads: usize,
-    /// intra-step tile threads for each learner's conv hot loop; 0 (the
-    /// default) auto-divides `threads` by the learner-worker count so
-    /// per-learner parallelism and intra-step tiling compose to roughly
-    /// one core each. Any value yields bitwise-identical results (tiling
-    /// is deterministic — see `runtime/workspace.rs`).
+    /// intra-step tile threads for each arena's conv hot loop; 0 (the
+    /// default) auto-divides `threads` by the arena count so fleet
+    /// parallelism and intra-step tiling compose to roughly one core
+    /// each. Any value yields bitwise-identical results (tiling is
+    /// deterministic — see `runtime/workspace.rs`).
     pub intra_threads: usize,
-    /// Use a persistent per-learner worker pool for the intra-step tiles
+    /// Use a persistent per-arena worker pool for the intra-step tiles
     /// (the default): the spawn cost is paid once per run and dispatch is
     /// a latch round-trip. `false` keeps the PR 3 per-call scoped spawns
     /// — results are bitwise identical either way (the determinism test
@@ -50,6 +61,9 @@ pub struct SimConfig {
     pub sample_rates: Vec<usize>,
     /// concept-drift schedule
     pub drift: DriftProb,
+    /// fleet knobs: participation fraction, dropout, stragglers, async
+    /// arrival (defaults = full participation, the paper's setting)
+    pub fleet: FleetConfig,
     /// evaluate on a holdout stream at the end
     pub final_eval: bool,
     /// wire encoding for model transfers (dense reproduces the
@@ -79,6 +93,7 @@ impl SimConfig {
             pool: true,
             sample_rates: Vec::new(),
             drift: DriftProb::None,
+            fleet: FleetConfig::default(),
             final_eval: false,
             encoding: Encoding::Dense,
         }
@@ -111,8 +126,8 @@ impl<'a> Engine<'a> {
         Ok(Engine { rt, mrt, cfg })
     }
 
-    /// Intra-step tile threads per learner: the explicit config value, or
-    /// the leftover parallelism once `threads` workers cover the learners.
+    /// Intra-step tile threads per arena: the explicit config value, or
+    /// the leftover parallelism once `threads` workers cover the arenas.
     fn intra_threads(&self) -> usize {
         if self.cfg.intra_threads > 0 {
             return self.cfg.intra_threads;
@@ -131,23 +146,12 @@ impl<'a> Engine<'a> {
             .build(&init, &scales, self.cfg.m, &mut rng);
         let state_size = self.mrt.train.exe.info.state_size;
         let batch = self.mrt.train.exe.info.batch;
-        let intra = self.intra_threads();
         Ok(models
             .into_iter()
             .enumerate()
             .map(|(i, params)| {
                 let rate = self.cfg.sample_rates.get(i).copied().unwrap_or(batch);
-                // every learner owns its workspace: per-learner rounds and
-                // intra-step tiling compose without buffer aliasing. The
-                // persistent tile pool is stood up here, once per run —
-                // every subsequent tiled kernel call is a latch dispatch,
-                // not a spawn (and the pool dies with the learner).
-                let mut ws = self.mrt.train.workspace();
-                ws.threads = intra;
-                if self.cfg.pool {
-                    ws.enable_pool();
-                }
-                Learner::new(i, params, state_size, streams(i), rate, ws)
+                Learner::new(i, params, state_size, streams(i), rate)
             })
             .collect())
     }
@@ -180,13 +184,41 @@ impl<'a> Engine<'a> {
             DriftProb::Random(p) => DriftSchedule::random(*p),
             DriftProb::Forced(rounds) => DriftSchedule::forced(rounds.clone()),
         };
-        let weights: Vec<f32> = learners.iter().map(|l| l.sample_rate as f32).collect();
         let mut link = Link::new(self.cfg.encoding);
         let train = &self.mrt.train;
         let lr = self.cfg.lr;
 
+        // fleet state: the scheduler (one global pool + arena pool) and
+        // the sampling/fault streams. Under full participation the
+        // cohort/fault rngs are never drawn, so the pre-fleet streams
+        // (proto, drift, init, data) are untouched bit for bit.
+        let full = self.cfg.fleet.is_full();
+        let mut sched = FleetScheduler::new(train, self.cfg.threads, m, self.intra_threads(), self.cfg.pool);
+        let mut cohort = Cohort::new(self.cfg.fleet.participation, self.cfg.seed ^ 0xC0F07);
+        let mut faults = Faults::new(
+            self.cfg.fleet.dropout,
+            self.cfg.fleet.straggle,
+            self.cfg.fleet.forced_stragglers.clone(),
+            self.cfg.seed ^ 0xFA17,
+        );
+        // round-state buffers, reused across rounds
+        let mut avail: Vec<usize> = Vec::with_capacity(m);
+        let mut arrivals: Vec<usize> = Vec::new();
+        let mut sampled: Vec<usize> = Vec::with_capacity(m);
+        let mut active: Vec<usize> = Vec::with_capacity(m);
+        let mut straggled: Vec<usize> = Vec::new();
+        let mut participants: Vec<usize> = Vec::with_capacity(m);
+        let mut weights: Vec<f32> = Vec::with_capacity(m);
+        // round-slot at which an in-flight straggler's update arrives
+        // (0 = not in flight; rounds are 1-based)
+        let mut busy: Vec<u64> = vec![0; m];
+        // holdout source: the last round's first participant (cohort-
+        // aware — learner 0 may never have participated)
+        let mut eval_src = 0usize;
+
         for t in 1..=self.cfg.rounds {
-            // concept drift (identical new concept for all learners)
+            // concept drift (identical new concept for all learners,
+            // including offline ones — drift is environmental)
             let drifted = if let Some(epoch) = drift_sched.tick(t, &mut drift_rng) {
                 for l in learners.iter_mut() {
                     l.stream.drift(epoch);
@@ -196,39 +228,98 @@ impl<'a> Engine<'a> {
                 false
             };
 
-            // local mini-batch steps, concurrent across learners
-            threads::parallel_for_each_mut(learners, self.cfg.threads, |_, l| {
-                l.local_step(train, lr);
-            });
-            if let Some(err) = learners.iter().find_map(|l| l.last_err.clone()) {
+            // cohort selection + fault injection (ascending id order —
+            // the draw order the python mirror replicates)
+            active.clear();
+            straggled.clear();
+            arrivals.clear();
+            let mut dropped = 0usize;
+            if full {
+                active.extend(0..m);
+            } else {
+                avail.clear();
+                for (i, &b) in busy.iter().enumerate() {
+                    if b == t {
+                        arrivals.push(i);
+                    }
+                    if b <= t {
+                        avail.push(i);
+                    }
+                }
+                cohort.sample(&avail, m, &mut sampled);
+                for &id in &sampled {
+                    match faults.classify(id) {
+                        Fate::Dropped => dropped += 1,
+                        Fate::Straggled => {
+                            active.push(id);
+                            straggled.push(id);
+                        }
+                        Fate::OnTime => active.push(id),
+                    }
+                }
+            }
+
+            // local mini-batch steps: batches are staged in ascending id
+            // order on this thread (deterministic stream order), then the
+            // fleet scheduler drains the work items
+            for &id in &active {
+                learners[id].stage();
+            }
+            sched.run_round(learners, &active, train, lr);
+            if let Some(err) = active.iter().find_map(|&id| learners[id].last_err.clone()) {
                 anyhow::bail!("local step failed: {err}");
             }
-            let loss_sum: f64 = learners
+            let loss_sum: f64 = active
                 .iter()
-                .map(|l| l.last.map(|s| s.loss as f64).unwrap_or(0.0))
+                .map(|&id| learners[id].last.map(|s| s.loss as f64).unwrap_or(0.0))
                 .sum();
-            let metric_mean: f64 = learners
+            let metric_mean: f64 = active
                 .iter()
-                .map(|l| l.last.map(|s| s.metric as f64).unwrap_or(0.0))
+                .map(|&id| learners[id].last.map(|s| s.metric as f64).unwrap_or(0.0))
                 .sum::<f64>()
-                / m as f64;
+                / active.len().max(1) as f64;
 
-            // synchronization operator
-            let mut models: Vec<Vec<f32>> = learners
-                .iter_mut()
-                .map(|l| std::mem::take(&mut l.params))
-                .collect();
-            let report = protocol.sync(&mut SyncCtx {
-                round: t,
-                models: &mut models,
-                weights: &weights,
-                net: &mut net,
-                rng: &mut proto_rng,
-                link: &mut link,
-            });
-            for (l, p) in learners.iter_mut().zip(models) {
-                l.params = p;
+            // participants this round: on-time actives, plus straggled
+            // updates arriving now when async merge is on (they join the
+            // sync under the protocol's reference semantics)
+            participants.clear();
+            participants.extend(active.iter().copied().filter(|id| !straggled.contains(id)));
+            if self.cfg.fleet.async_merge && !arrivals.is_empty() {
+                participants.extend(arrivals.iter().copied());
+                participants.sort_unstable();
+                participants.dedup();
             }
+            for &id in &straggled {
+                busy[id] = t + self.cfg.fleet.straggle_rounds.max(1);
+            }
+            if let Some(&first) = participants.first().or(active.first()) {
+                eval_src = first;
+            }
+
+            // synchronization operator on the participating subset, with
+            // the weight vector rebuilt from this round's cohort
+            let report = if participants.is_empty() {
+                SyncReport::default()
+            } else {
+                weights.clear();
+                weights.extend(participants.iter().map(|&id| learners[id].sample_rate as f32));
+                let mut models: Vec<Vec<f32>> = participants
+                    .iter()
+                    .map(|&id| std::mem::take(&mut learners[id].params))
+                    .collect();
+                let report = protocol.sync(&mut SyncCtx {
+                    round: t,
+                    models: &mut models,
+                    weights: &weights,
+                    net: &mut net,
+                    rng: &mut proto_rng,
+                    link: &mut link,
+                });
+                for (&id, p) in participants.iter().zip(models) {
+                    learners[id].params = p;
+                }
+                report
+            };
 
             recorder.record(RoundRecord {
                 round: t,
@@ -237,6 +328,9 @@ impl<'a> Engine<'a> {
                 cum_bytes: net.total_bytes(),
                 synced: report.communicated,
                 drifted,
+                cohort: active.len(),
+                dropped,
+                straggled: straggled.len(),
             });
         }
 
@@ -249,7 +343,7 @@ impl<'a> Engine<'a> {
         let mut eval_metric = None;
         if self.cfg.final_eval {
             if let Some(ev) = &self.mrt.eval {
-                let stats = self.holdout_eval(ev, &averaged, learners)?;
+                let stats = self.holdout_eval(ev, &averaged, learners, eval_src)?;
                 eval_loss = Some(stats.0);
                 eval_metric = Some(stats.1);
                 recorder.final_eval = Some(stats);
@@ -266,6 +360,7 @@ impl<'a> Engine<'a> {
             eval_metric,
             sync_events: net.sync_events,
             full_syncs: net.full_syncs,
+            peak_ws_bytes: sched.peak_resident_bytes(),
         };
         Ok(RunResult {
             summary,
@@ -281,10 +376,13 @@ impl<'a> Engine<'a> {
         ev: &EvalStep,
         averaged: &[f32],
         learners: &mut [Learner],
+        eval_src: usize,
     ) -> Result<(f64, f64)> {
-        // evaluate the averaged model on fresh batches from learner 0's
-        // stream (same distribution, unseen samples); eval runs alone on
-        // the coordinator thread, so it gets the full tile budget
+        // evaluate the averaged model on fresh batches from the last
+        // participating learner's stream (same distribution, unseen
+        // samples — and under partial participation, a stream whose
+        // owner actually took part); eval runs alone on the coordinator
+        // thread, so it gets the full tile budget
         let eval_batch = ev.exe.info.batch;
         let mut ws = ev.workspace();
         ws.threads = self.cfg.threads.max(1);
@@ -295,7 +393,7 @@ impl<'a> Engine<'a> {
         let mut metric = 0.0;
         let reps = 5;
         for _ in 0..reps {
-            let batch = learners[0].stream.next_batch(eval_batch);
+            let batch = learners[eval_src].stream.next_batch(eval_batch);
             let s = ev.eval(averaged, &batch, &mut ws)?;
             loss += s.loss as f64;
             metric += s.metric as f64;
@@ -314,6 +412,7 @@ pub fn run_serial(
     let mut serial_cfg = cfg.clone();
     serial_cfg.m = 1;
     serial_cfg.rounds = cfg.rounds * cfg.m as u64;
+    serial_cfg.fleet = FleetConfig::default();
     let engine = Engine::new(rt, serial_cfg)?;
 
     // interleave the m streams round-robin

@@ -1,13 +1,15 @@
-//! One local learner: flat model + optimizer state + its data stream +
-//! its private execution [`Workspace`].
+//! One local learner: flat model + optimizer state + its data stream.
 //!
-//! Each learner owns its workspace, so the engine's per-learner parallel
-//! rounds and the workspace's intra-step conv tiling compose without any
-//! buffer aliasing — and after the first (warm-up) round, a learner's
-//! local steps allocate nothing.
+//! Learners no longer own an execution arena — the fleet scheduler
+//! (`crate::fleet`) checks a reusable [`Workspace`] out of its pool for
+//! each round work item, so resident memory scales with the *active
+//! cohort* rather than the population. Results are bitwise independent
+//! of which arena runs a step (arenas are content-free scratch), and a
+//! steady-state step still allocates nothing: the coordinator stages
+//! the mini-batch before dispatch via [`Learner::stage`].
 
 use crate::data::Stream;
-use crate::runtime::{StepStats, TrainStep, Workspace};
+use crate::runtime::{Batch, StepStats, TrainStep, Workspace};
 
 pub struct Learner {
     pub id: usize,
@@ -17,8 +19,11 @@ pub struct Learner {
     /// per-round sampling rate B^i (Algorithm 2 weights; constant here
     /// unless an experiment configures heterogeneous rates)
     pub sample_rate: usize,
-    /// private execution arena (scratch + output slots, reused per round)
-    pub ws: Workspace,
+    /// mini-batch staged by the coordinator for the next step — drawn on
+    /// the coordinator thread so stream order stays deterministic under
+    /// any work-item schedule, and the fleet work item itself performs
+    /// zero heap allocations
+    pub staged: Option<Batch>,
     /// stats of the most recent local step
     pub last: Option<StepStats>,
     pub last_err: Option<String>,
@@ -31,7 +36,6 @@ impl Learner {
         state_size: usize,
         stream: Box<dyn Stream>,
         sample_rate: usize,
-        ws: Workspace,
     ) -> Learner {
         Learner {
             id,
@@ -39,16 +43,29 @@ impl Learner {
             opt_state: vec![0.0; state_size],
             stream,
             sample_rate,
-            ws,
+            staged: None,
             last: None,
             last_err: None,
         }
     }
 
-    /// Observe one mini-batch and apply the learning algorithm φ.
-    pub fn local_step(&mut self, train: &TrainStep, lr: f32) {
-        let batch = self.stream.next_batch(self.sample_rate);
-        match train.step(&mut self.params, &mut self.opt_state, &batch, lr, &mut self.ws) {
+    /// Draw the next mini-batch from the stream and stage it for
+    /// [`Learner::local_step`] — the only allocating part of a fleet
+    /// work item, kept on the coordinator thread.
+    pub fn stage(&mut self) {
+        self.staged = Some(self.stream.next_batch(self.sample_rate));
+    }
+
+    /// Observe one mini-batch and apply the learning algorithm φ on the
+    /// checked-out arena `ws`. Consumes the staged batch if one is
+    /// present, else draws directly from the stream (the single-learner
+    /// wire client path).
+    pub fn local_step(&mut self, train: &TrainStep, lr: f32, ws: &mut Workspace) {
+        let batch = match self.staged.take() {
+            Some(b) => b,
+            None => self.stream.next_batch(self.sample_rate),
+        };
+        match train.step(&mut self.params, &mut self.opt_state, &batch, lr, ws) {
             Ok(stats) => {
                 self.last = Some(stats);
                 self.last_err = None;

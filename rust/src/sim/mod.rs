@@ -1,13 +1,15 @@
 //! The decentralized-training simulation engine (paper §2 setting).
 //!
-//! Round-synchronous: in round t every learner observes a mini-batch from
-//! its local stream, applies the learning algorithm φ (the AOT train-step
-//! artifact, executed via PJRT), then the synchronization operator σ runs.
-//! Local steps of one round execute concurrently on a scoped thread pool;
-//! protocol decisions are strictly sequential and deterministic.
+//! Round-synchronous: in round t every participating learner observes a
+//! mini-batch from its local stream, applies the learning algorithm φ
+//! (the backend's train-step artifact), then the synchronization
+//! operator σ runs on the round's participants. Local steps are drained
+//! by the fleet scheduler (`crate::fleet`) — one persistent worker pool
+//! plus `min(threads, m)` reusable arenas; protocol decisions are
+//! strictly sequential and deterministic.
 
 pub mod engine;
 pub mod learner;
 
-pub use engine::{Engine, RunResult, SimConfig};
+pub use engine::{run_serial, DriftProb, Engine, RunResult, SimConfig, StreamFactory};
 pub use learner::Learner;

@@ -95,7 +95,7 @@ pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientR
     // tiling schedule, so this matches the engine's threaded learners
     let mut ws = mrt.train.workspace();
     ws.threads = 1;
-    let mut learner = Learner::new(id, init, state_size, factory(id), rate, ws);
+    let mut learner = Learner::new(id, init, state_size, factory(id), rate);
 
     let mut reference: Option<Vec<f32>> = None;
     let mut losses = Vec::with_capacity(rounds as usize);
@@ -103,7 +103,7 @@ pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientR
     let mut buf: Vec<u8> = Vec::new();
 
     for t in 1..=rounds {
-        learner.local_step(&mrt.train, lr);
+        learner.local_step(&mrt.train, lr, &mut ws);
         if let Some(err) = &learner.last_err {
             bail!("local step failed at round {t}: {err}");
         }

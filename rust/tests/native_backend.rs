@@ -291,6 +291,77 @@ fn thread_count_and_conv_tiling_do_not_change_results() {
     }
 }
 
+/// The fleet path (sampled cohorts + dropout + forced stragglers with
+/// async arrival) extends the determinism contract: the cohort and fault
+/// streams are seeded and drawn on the coordinator thread in ascending
+/// learner order, work items only race over *which arena* runs a step
+/// (arenas are content-free scratch), and the engine reduces in ascending
+/// id order — so the whole run, including the per-round cohort/fault
+/// series, is bitwise identical across thread budgets and tile modes.
+#[test]
+fn fleet_sampling_and_stragglers_are_deterministic_across_thread_counts() {
+    let run = |threads: usize, intra: usize, pool: bool| -> RunResult {
+        let rt = Runtime::native();
+        let mut cfg = SimConfig::new("mnist_logistic", "sgd", 12, 40, 0.05);
+        cfg.seed = 11;
+        cfg.threads = threads;
+        cfg.intra_threads = intra;
+        cfg.pool = pool;
+        cfg.fleet.participation = 0.5;
+        cfg.fleet.dropout = 0.1;
+        cfg.fleet.forced_stragglers = vec![1, 4];
+        cfg.fleet.straggle_rounds = 2;
+        cfg.final_eval = true; // exercises the cohort-aware holdout source
+        let engine = Engine::new(&rt, cfg).unwrap();
+        let factory = dynavg::experiments::Dataset::MnistLike.factory(11);
+        engine
+            .run(
+                &ProtocolSpec::Dynamic {
+                    delta: 1.0,
+                    check_every: 5,
+                },
+                &factory,
+            )
+            .unwrap()
+    };
+    let base = run(1, 1, false);
+    // the fleet conditions actually fired in the reference run
+    let (dropped, straggled) = base.recorder.fault_totals();
+    assert!(dropped > 0, "dropout never fired at p=0.1 over 40 rounds");
+    assert!(straggled > 0, "forced stragglers never straggled");
+    assert!(
+        base.recorder.rows.iter().any(|r| r.cohort < 12),
+        "sampling never produced a partial cohort at C=0.5"
+    );
+    assert!(base.summary.peak_ws_bytes > 0);
+    for (what, other) in [
+        ("fleet pool", run(4, 0, true)),
+        ("fleet scoped-tiles", run(2, 2, false)),
+    ] {
+        assert_eq!(base.models, other.models, "{what}: final models differ");
+        assert_eq!(base.averaged, other.averaged, "{what}: averaged model differs");
+        assert_eq!(
+            base.net.total_bytes(),
+            other.net.total_bytes(),
+            "{what}: NetStats bytes differ"
+        );
+        assert_eq!(base.net.sync_events, other.net.sync_events, "{what}: sync events differ");
+        assert_eq!(base.net.full_syncs, other.net.full_syncs, "{what}: full syncs differ");
+        assert_eq!(
+            base.recorder.cumulative_loss, other.recorder.cumulative_loss,
+            "{what}: loss trajectory differs"
+        );
+        let series = |r: &RunResult| -> Vec<(usize, usize, usize)> {
+            r.recorder.rows.iter().map(|x| (x.cohort, x.dropped, x.straggled)).collect()
+        };
+        assert_eq!(series(&base), series(&other), "{what}: cohort/fault series differ");
+        assert_eq!(
+            base.summary.eval_metric, other.summary.eval_metric,
+            "{what}: holdout eval differs"
+        );
+    }
+}
+
 #[test]
 fn backends_report_identity() {
     let rt = Runtime::native();

@@ -26,7 +26,9 @@ use dynavg::data::corpus::CorpusStream;
 use dynavg::data::synth_mnist::MnistLike;
 use dynavg::data::Stream;
 use dynavg::driving::DrivingStream;
+use dynavg::fleet::FleetScheduler;
 use dynavg::runtime::{Batch, ModelRuntime, Runtime};
+use dynavg::sim::Learner;
 
 struct CountingAlloc;
 
@@ -124,6 +126,43 @@ fn steady_state_steps_allocate_nothing() {
             }
         });
         assert_eq!(n, 0, "{model}: {n} heap allocations in 5 pool-tiled steady-state train steps");
+    }
+
+    // the fleet scheduler's work items: with batches staged on the
+    // coordinator and every arena warmed (`warm()` sizes them
+    // deterministically, so no cold arena can hide behind the racy first
+    // claim schedule), draining a full round — claim via fetch_add, step
+    // on the checked-out arena, latch — performs 0 steady-state heap
+    // allocations, with the per-arena tile pools ACTIVE. The staged
+    // `Option<Batch>::take()` is a move; dropping the batch afterwards
+    // only deallocates, which the counter ignores by design.
+    {
+        let mrt = ModelRuntime::load(&rt, "mnist_cnn", "sgd").unwrap();
+        let state_size = mrt.train.exe.info.state_size;
+        let rate = mrt.train.exe.info.batch;
+        let mut learners: Vec<Learner> = (0..4)
+            .map(|i| {
+                let params = rt.init_params("mnist_cnn").unwrap();
+                Learner::new(i, params, state_size, Box::new(MnistLike::new(5, 10 + i as u64)), rate)
+            })
+            .collect();
+        let active: Vec<usize> = (0..4).collect();
+        let mut sched = FleetScheduler::new(&mrt.train, 3, 4, 2, true);
+        let params = rt.init_params("mnist_cnn").unwrap();
+        let batch = MnistLike::new(5, 99).next_batch(rate);
+        sched.warm(&mrt.train, &params, state_size, &batch).unwrap();
+        for _ in 0..2 {
+            for &i in &active {
+                learners[i].stage();
+            }
+            sched.run_round(&mut learners, &active, &mrt.train, 0.05);
+        }
+        for &i in &active {
+            learners[i].stage(); // staging allocates; it happens outside the window
+        }
+        let n = allocs_during(|| sched.run_round(&mut learners, &active, &mrt.train, 0.05));
+        assert_eq!(n, 0, "fleet: {n} heap allocations draining a 4-learner round");
+        assert!(learners.iter().all(|l| l.last_err.is_none()));
     }
 
     // eval + infer on the CNN, each with its own warm workspace
