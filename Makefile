@@ -2,7 +2,7 @@
 # and must pass hermetically (no Python, no XLA, no artifacts, default
 # features — the native backend).
 
-.PHONY: verify build test fmt clippy xla-check bench-smoke bench-baseline bench-report mirror-check serve-smoke fleet-smoke ci artifacts
+.PHONY: verify build test fmt clippy xla-check simd-check bench-smoke bench-baseline bench-report mirror-check serve-smoke fleet-smoke ci artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -25,6 +25,14 @@ clippy:
 xla-check:
 	cargo clippy -p dynavg --all-targets --features backend-xla -- -D warnings
 
+# The SIMD tier: lint + full test suite with the AVX2/FMA microkernels
+# compiled in (runtime-detected, so this also passes on non-AVX2 hosts —
+# there the tier silently stays scalar and the property tests compare
+# scalar against itself).
+simd-check:
+	cargo clippy -p dynavg --all-targets --features simd -- -D warnings
+	cargo test -q -p dynavg --features simd
+
 bench-smoke:
 	BENCH_JSON=$(CURDIR)/BENCH_smoke.json cargo bench -- --smoke
 	python3 python/tools/bench_report.py --diff-latest BENCH_smoke.json
@@ -36,10 +44,14 @@ bench-smoke:
 # baseline; custom TAGs should preserve that ordering.
 #   make bench-baseline               # -> BENCH_<yyyymmdd>-<sha>.json
 #   make bench-baseline TAG=20260731  # -> BENCH_20260731.json
+#   make bench-baseline FEATURES="--features simd"   # SIMD-tier kernels
+# FEATURES forces -p dynavg (--features is rejected at the root of a
+# virtual workspace); the bench target lives in that package either way.
 TAG ?= $(shell date +%Y%m%d)-$(shell git rev-parse --short HEAD)
+FEATURES ?=
 bench-baseline:
 	rm -f $(CURDIR)/BENCH_$(TAG).json
-	BENCH_JSON=$(CURDIR)/BENCH_$(TAG).json cargo bench
+	BENCH_JSON=$(CURDIR)/BENCH_$(TAG).json cargo bench -p dynavg $(FEATURES)
 	@echo "wrote BENCH_$(TAG).json — commit it to arm --diff-latest durably"
 
 # Trajectory table across committed BENCH_*.json records (stdlib python).
@@ -78,7 +90,7 @@ serve-smoke: build
 fleet-smoke: build
 	./target/release/dynavg exp fleet --scale small
 
-ci: fmt clippy xla-check verify serve-smoke fleet-smoke mirror-check bench-smoke
+ci: fmt clippy xla-check simd-check verify serve-smoke fleet-smoke mirror-check bench-smoke
 
 # XLA artifact build (requires python + jax; NOT needed for tier-1).
 # Produces artifacts/manifest.json + HLO text for the conv/attention

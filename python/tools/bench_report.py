@@ -5,8 +5,10 @@ The rust benches (`cargo bench`, see rust/src/util/bench.rs) append one
 JSON object per result to $BENCH_JSON — raw timings ({name, iters,
 mean_ns, median_ns, min_ns}) plus derived-metric records such as the
 end-to-end mnist_cnn / transformer_lm train-step throughputs ({name,
-steps_per_s, gflops, ...}), the attention-block GFLOP/s row
-(attention_block_fwd), the wire-codec encode/decode GB/s rows
+steps_per_s, gflops, ...}), the attention-block GFLOP/s rows
+(attention_block_fwd and its KV-blocked attention_streaming_fwd twin),
+the autotune-winner rows (autotune_gemm_kc / autotune_attention_bc,
+{name, kc_winner|bc_winner, gflops}), the wire-codec encode/decode GB/s rows
 (wire_encode_*/wire_decode_*, {name, gbps, median_ns}), the fleet
 round-dispatch rows (fleet_round_dispatch_m*, {name, median_ns, cohort,
 threads}) and the fleet resident-memory amortization row
@@ -73,8 +75,16 @@ def fmt_ns(ns):
 
 
 # derived-metric pairs rendered as "A vs B" cells (both lower-is-better
-# timings, also diffed): pool-vs-scoped tile dispatch, packed-vs-scalar GEMM
-NS_PAIRS = [("pool_ns", "scoped_ns"), ("packed_ns", "scalar_ns")]
+# timings, also diffed): pool-vs-scoped tile dispatch, packed-vs-scalar
+# GEMM, and the SIMD tier vs the scalar blocked reference (simd_ns is
+# only present when the record was produced by a --features simd build
+# on a machine with AVX2+FMA)
+NS_PAIRS = [("pool_ns", "scoped_ns"), ("packed_ns", "scalar_ns"), ("simd_ns", "scalar_ns")]
+
+# autotune-winner records ({*_winner, gflops}): the cell names the
+# winning tile parameter next to its throughput, and --diff prints a
+# note (not a regression) when the winner moved between records
+WINNER_KEYS = [("kc_winner", "kc"), ("bc_winner", "Bc")]
 
 
 def cell(rec):
@@ -83,6 +93,9 @@ def cell(rec):
     # the derived unit is the one the trajectory is judged in
     if rec is None:
         return "-"
+    for key, label in WINNER_KEYS:
+        if key in rec:
+            return f"{label}={rec[key]:.0f} @ {rec.get('gflops', 0.0):.2f} GF/s"
     if "steps_per_s" in rec:
         return f"{rec['steps_per_s']:.2f} steps/s"
     if "gflops" in rec:
@@ -95,9 +108,11 @@ def cell(rec):
         return f"{rec.get('fleet_mb', 0.0):.2f} MB ({rec['amortization_x']:.0f}x amortized)"
     if "median_ns" in rec:
         return fmt_ns(rec["median_ns"])
-    for a, b in NS_PAIRS:
-        if a in rec and b in rec:
-            return f"{fmt_ns(rec[a])} vs {fmt_ns(rec[b])}"
+    pairs = [
+        f"{fmt_ns(rec[a])} vs {fmt_ns(rec[b])}" for a, b in NS_PAIRS if a in rec and b in rec
+    ]
+    if pairs:
+        return " | ".join(pairs)
     return "?"
 
 
@@ -130,10 +145,20 @@ def diff(old_path, new_path, threshold, strict):
     old = load_records(old_path)
     new = load_records(new_path)
     regressions = []
+    notes = []
     for name, new_rec in new.items():
         old_rec = old.get(name)
         if old_rec is None:
             continue
+        # autotune-winner moves are informational: a different tile
+        # parameter winning is expected across machines; only the gflops
+        # drop (checked below) is a regression
+        for key, label in WINNER_KEYS:
+            if key in new_rec and key in old_rec and new_rec[key] != old_rec[key]:
+                notes.append(
+                    f"{name}: {label} winner moved "
+                    f"{old_rec[key]:.0f} -> {new_rec[key]:.0f}"
+                )
         # records stamped with a thread count are only comparable between
         # machines of the same shape (steps/s at t=16 vs t=4 is not a
         # regression) — skip the pair when the counts differ
@@ -158,6 +183,8 @@ def diff(old_path, new_path, threshold, strict):
     base = os.path.basename
     print(f"bench diff: {base(old_path)} -> {base(new_path)} "
           f"({len(new)} benches, threshold {threshold:.0%})")
+    for note in notes:
+        print(f"note: {note}")
     for name, what, slowdown in regressions:
         # ::warning:: renders as a GitHub Actions annotation; plain text
         # elsewhere — non-fatal either way unless --strict

@@ -11,7 +11,7 @@ use dynavg::fleet::FleetScheduler;
 use dynavg::model::params;
 use dynavg::sim::Learner;
 use dynavg::runtime::tensor::{attn, conv, matmul};
-use dynavg::runtime::{LayerGraph, ModelPlan, ModelRuntime, Par, Runtime, WorkerPool};
+use dynavg::runtime::{KernelTier, LayerGraph, ModelPlan, ModelRuntime, Par, Runtime, WorkerPool};
 use dynavg::util::bench::{bench, black_box, header, record_json};
 use dynavg::util::rng::Rng;
 use dynavg::util::threads;
@@ -150,13 +150,75 @@ fn main() {
                 k,
                 n,
                 &mut pack,
-                Par::Serial,
+                Par::serial(),
             );
         });
-        record_json(
-            "matmul_packed_vs_scalar",
-            &[("packed_ns", mmp.median_ns), ("scalar_ns", mm.median_ns)],
-        );
+        // the explicit AVX2/FMA tier over the same shape (tolerance-equal
+        // output; only present when built with --features simd on a
+        // machine that has the units) — the SIMD-vs-scalar GEMM row the
+        // acceptance bar reads
+        let tier = KernelTier::detect();
+        let mut gemm_fields = vec![("packed_ns", mmp.median_ns), ("scalar_ns", mm.median_ns)];
+        if tier == KernelTier::Simd {
+            let mms = bench("matmul_bias_packed_simd_m256_k2304_n64 (f32x8)", 20, || {
+                matmul::matmul_bias_tiled(
+                    black_box(&a),
+                    black_box(&w),
+                    &bias,
+                    &mut mm_out,
+                    m,
+                    k,
+                    n,
+                    &mut pack,
+                    Par::serial().with_tier(KernelTier::Simd),
+                );
+            });
+            gemm_fields.push(("simd_ns", mms.median_ns));
+            println!(
+                "simd GEMM speedup       : {:>7.2}x over scalar packed ({:.2} vs {:.2} GFLOP/s)",
+                mmp.median_ns / mms.median_ns,
+                mm_flops / mms.median_ns,
+                mm_flops / mmp.median_ns
+            );
+        }
+        record_json("matmul_packed_vs_scalar", &gemm_fields);
+
+        // autotune: K-panel height sweep over the packed GEMM (pack layout
+        // depends on kc, so each candidate re-packs outside the timed
+        // loop; `packed_len` is kc-independent, one buffer serves all).
+        // The winner record is the row bench_report.py diffs across
+        // BENCH_*.json to catch a tile-parameter regression.
+        {
+            let mut kc_winner = 0usize;
+            let mut kc_best = 0.0f64;
+            for kc in [64usize, 128, 256, 512] {
+                matmul::pack_b_kc(&w, &mut pack, k, n, kc);
+                let r = bench(&format!("gemm_packed_kc{kc}_m256_k2304_n64"), 10, || {
+                    matmul::bias_acc_packed_kc(
+                        black_box(&a),
+                        black_box(&pack),
+                        &bias,
+                        &mut mm_out,
+                        m,
+                        k,
+                        n,
+                        kc,
+                        tier,
+                    );
+                });
+                let gflops = mm_flops / r.median_ns;
+                if gflops > kc_best {
+                    kc_best = gflops;
+                    kc_winner = kc;
+                }
+            }
+            println!("gemm kc autotune        : kc={kc_winner} wins at {kc_best:.2} GFLOP/s");
+            record_json(
+                "autotune_gemm_kc",
+                &[("kc_winner", kc_winner as f64), ("gflops", kc_best)],
+            );
+            matmul::pack_b(&w, &mut pack, k, n); // restore the default layout
+        }
 
         // mnist_cnn conv2: 26x26x8 -> 24x24x16, 3x3, stride 1, B=10
         let (b, h, wd, c, kk, cout) = (10, 26, 26, 8, 3, 16);
@@ -194,7 +256,7 @@ fn main() {
                 ah,
                 asq,
                 ahd,
-                Par::Serial,
+                Par::serial(),
             );
         });
         let at_flops = (bh * 2 * 2 * asq * asq * ahd) as f64;
@@ -202,6 +264,64 @@ fn main() {
             "attention_block_fwd",
             &[("median_ns", at.median_ns), ("gflops", at_flops / at.median_ns)],
         );
+
+        // the KV-blocked streaming forward over the same shape — bitwise
+        // identical output from a min(Bc,s)·s score scratch instead of
+        // s²-resident probs (what makes the S=256 manifests tractable) —
+        // plus the Bc block-width autotune sweep. `rows` is sized s·s so
+        // one buffer serves every candidate; each run touches only
+        // min(Bc,s)·s of it.
+        let mut rows = vec![0.0f32; asq * asq];
+        let st = bench(
+            &format!("attention_streaming_fwd_b10_h4_s64_hd8 (Bc={})", attn::ATTN_BC),
+            20,
+            || {
+                attn::attention_streaming_fwd(
+                    black_box(&heads),
+                    &mut rows,
+                    &mut o_heads,
+                    ab,
+                    ah,
+                    asq,
+                    ahd,
+                    attn::ATTN_BC,
+                    Par::serial(),
+                );
+            },
+        );
+        record_json(
+            "attention_streaming_fwd",
+            &[("median_ns", st.median_ns), ("gflops", at_flops / st.median_ns)],
+        );
+        {
+            let mut bc_winner = 0usize;
+            let mut bc_best = 0.0f64;
+            for bc in [16usize, 32, 64, 128] {
+                let r = bench(&format!("attention_streaming_bc{bc}_b10_h4_s64_hd8"), 10, || {
+                    attn::attention_streaming_fwd(
+                        black_box(&heads),
+                        &mut rows,
+                        &mut o_heads,
+                        ab,
+                        ah,
+                        asq,
+                        ahd,
+                        bc,
+                        Par::serial(),
+                    );
+                });
+                let gflops = at_flops / r.median_ns;
+                if gflops > bc_best {
+                    bc_best = gflops;
+                    bc_winner = bc;
+                }
+            }
+            println!("attention Bc autotune   : Bc={bc_winner} wins at {bc_best:.2} GFLOP/s");
+            record_json(
+                "autotune_attention_bc",
+                &[("bc_winner", bc_winner as f64), ("gflops", bc_best)],
+            );
+        }
 
         println!();
         println!(
@@ -230,12 +350,12 @@ fn main() {
         let t = threads::default_threads().max(2);
         let pool = WorkerPool::new(t - 1);
         let pool_d = bench(&format!("tile_dispatch_pool (t={t}, noop)"), 50, || {
-            Par::Pool(&pool).run(t, |tile| {
+            Par::pool(&pool).run(t, |tile| {
                 black_box(tile);
             });
         });
         let scoped_d = bench(&format!("tile_dispatch_scoped (t={t}, noop)"), 20, || {
-            Par::Scoped(t).run(t, |tile| {
+            Par::scoped(t).run(t, |tile| {
                 black_box(tile);
             });
         });

@@ -224,10 +224,15 @@ fn cmd_models() -> Result<()> {
         t.saturating_sub(1)
     );
     println!(
+        "kernel tier: {} (runtime-detected; scalar is the bitwise reference)",
+        dynavg::runtime::KernelTier::detect().label()
+    );
+    println!(
         "{:<16} {:>9}  {:<14} {:<8} {:<6} {:>12} {:>10} {:>10} executable",
         "model", "P", "x_shape", "metric", "ops", "workspace", "pack", "attn"
     );
     let mut fleet_rows: Vec<(String, u64)> = Vec::new();
+    let mut attn_rows: Vec<(String, usize, usize)> = Vec::new();
     for (name, m) in &rt.manifest.models {
         let executable = if rt.supports_model(name) {
             "yes"
@@ -257,14 +262,20 @@ fn cmd_models() -> Result<()> {
         let out_slots = train.map(|a| a.param_count + a.state_size + 2).unwrap_or(0);
         let (workspace, pack, attn) = match dynavg::runtime::ModelPlan::from_model(m) {
             Ok(p) => {
-                let ws_bytes = (p.workspace_bytes(train_batch) + 4 * out_slots) as u64;
+                let ws_bytes = (p.workspace_bytes(train_batch, t) + 4 * out_slots) as u64;
                 if rt.supports_model(name) && train.is_some() {
                     fleet_rows.push((name.clone(), ws_bytes));
+                }
+                if let (Some(streaming), Some(resident)) = (
+                    p.attn_scratch_bytes(train_batch, t),
+                    p.attn_scratch_bytes_resident(train_batch),
+                ) {
+                    attn_rows.push((name.clone(), resident, streaming));
                 }
                 (
                     format!("{ws_bytes} B"),
                     format!("{} B", p.pack_bytes(train_batch)),
-                    p.attn_scratch_bytes(train_batch)
+                    p.attn_scratch_bytes(train_batch, t)
                         .map(|b| format!("{b} B"))
                         .unwrap_or_else(|| "-".to_string()),
                 )
@@ -275,6 +286,25 @@ fn cmd_models() -> Result<()> {
             "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {workspace:>12} {pack:>10} {attn:>10} {executable}",
             name, m.param_count, m.metric,
         );
+    }
+    // attention scratch delta: what the KV-blocked streaming forward +
+    // per-stripe backward score slots save over the retired S²-resident
+    // per-(batch, head) plan at this machine's thread budget
+    if !attn_rows.is_empty() {
+        println!("\nattention scratch (train batch, threads={t}):");
+        println!(
+            "{:<16} {:>14} {:>14} {:>9}",
+            "model", "S2-resident", "streaming", "ratio"
+        );
+        for (name, resident, streaming) in &attn_rows {
+            println!(
+                "{:<16} {:>12} B {:>12} B {:>8.1}%",
+                name,
+                resident,
+                streaming,
+                *streaming as f64 / (*resident).max(1) as f64 * 100.0
+            );
+        }
     }
     // fleet amortization: the retired per-learner resource model stood up
     // one arena per learner (m × workspace); the fleet scheduler checks

@@ -40,7 +40,7 @@ pub mod xla;
 pub use backend::{Backend, Executable, Input, Kernel};
 pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo, OpSpec};
 pub use native::NativeBackend;
-pub use pool::{Par, WorkerPool};
+pub use pool::{KernelTier, Par, ParMode, WorkerPool};
 pub use step::{Batch, EvalStep, InferStep, StepStats, TrainStep};
 pub use tensor::{LayerGraph, ModelPlan, SeqGraph};
 pub use workspace::Workspace;

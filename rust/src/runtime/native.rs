@@ -287,10 +287,11 @@ impl Kernel for NativeKernel {
         let Workspace {
             outputs,
             threads,
+            tier,
             pool,
             scratch,
         } = ws;
-        let par = Par::new((*threads).max(1), pool.as_ref());
+        let par = Par::new((*threads).max(1), pool.as_ref(), *tier);
         match info.kind.as_str() {
             "train" => {
                 anyhow::ensure!(inputs.len() == 5, "train takes (params, opt_state, x, y, lr)");
@@ -363,7 +364,10 @@ impl Kernel for NativeKernel {
     /// already runs warm.
     fn workspace(&self, info: &ArtifactInfo) -> Workspace {
         let mut ws = Workspace::new();
-        self.plan.prepare_scratch(info.batch.max(1), &mut ws.scratch);
+        // sized for the construction-time thread budget; raising
+        // `ws.threads` later just grows the per-stripe score slots on the
+        // next prepare (capacities never shrink)
+        self.plan.prepare_scratch(info.batch.max(1), ws.threads.max(1), &mut ws.scratch);
         ws
     }
 }
@@ -564,6 +568,7 @@ impl SynthModel {
 /// | `mnist_cnn`      | c3x8-c3x16-pool-fc64-fc10           | `MnistLike`       | xent |
 /// | `driving_cnn`    | c5x8s2-c5x12s2-c3x16-fc64-fc16-fc1t | `DrivingStream`   | mse  |
 /// | `transformer_lm` | d32-h4-L2-ff128 byte LM, S=64       | `CorpusStream`    | xent |
+/// | `transformer_lm_s256` | same widths at S=256           | `CorpusStream`    | xent |
 ///
 /// `drift_mlp`, `mnist_cnn`, `driving_cnn` and `transformer_lm` match the
 /// architectures the python side lowers (`python/compile/models.py`)
@@ -633,6 +638,16 @@ pub fn synthetic_manifest() -> Manifest {
             0,
             "accuracy",
             SynthModel::transformer(128, 32, 2, 4, 64),
+        ),
+        // the same widths at a 4x sequence length — the manifest the
+        // KV-blocked streaming attention plan makes tractable (its score
+        // scratch follows min(threads, b·h)·S·Bc instead of b·h·S²)
+        (
+            "transformer_lm_s256",
+            &[257],
+            0,
+            "accuracy",
+            SynthModel::transformer(128, 32, 2, 4, 256),
         ),
     ];
     let mut models = std::collections::BTreeMap::new();
@@ -790,6 +805,9 @@ mod tests {
         assert_eq!(m.model("driving_cnn").unwrap().param_count, 39_277);
         assert_eq!(m.model("transformer_lm").unwrap().param_count, 35_680);
         assert_eq!(m.model("transformer_lm").unwrap().x_dtype, Dtype::I32);
+        // same widths + a 4x pos table (192 more d=32 rows): 35,680 + 6,144
+        assert_eq!(m.model("transformer_lm_s256").unwrap().param_count, 41_824);
+        assert_eq!(m.model("transformer_lm_s256").unwrap().x_shape, vec![257]);
         assert!(m.artifacts.contains_key("transformer_lm_adam_train"));
         assert!(m.artifacts.contains_key("transformer_lm_eval"));
         assert!(!m.artifacts.contains_key("transformer_lm_infer"));

@@ -22,13 +22,16 @@
 //! latch is a counter under the mutex), preserving the zero-alloc
 //! steady-state contract of `tests/zero_alloc.rs` with the pool active.
 //!
-//! [`Par`] is the scheduling mode the kernels take: `Serial` (the strict
-//! reference path), `Scoped` (the PR 3 per-call spawn behavior, kept so
-//! the determinism suite can pin pool == scoped == serial bitwise), and
-//! `Pool`. All three run the *same* tile closures over the same tile
-//! decomposition, and every tile owns disjoint output elements with
-//! unchanged per-element accumulation order — so results are bitwise
-//! identical across modes and thread counts.
+//! [`Par`] is the scheduling context the kernels take: a [`ParMode`]
+//! (`Serial` — the strict reference path; `Scoped` — the PR 3 per-call
+//! spawn behavior, kept so the determinism suite can pin pool == scoped
+//! == serial bitwise; `Pool`) plus a [`KernelTier`] selecting the
+//! microkernel implementation. All modes run the *same* tile closures
+//! over the same tile decomposition, and every tile owns disjoint output
+//! elements with unchanged per-element accumulation order — so within a
+//! tier, results are bitwise identical across modes and thread counts.
+//! Across tiers the contract weakens to tolerance equality: the SIMD
+//! tier's FMA fuses the multiply-add rounding step (see [`KernelTier`]).
 
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
@@ -256,12 +259,60 @@ fn worker_loop(shared: &Shared, worker: usize) {
     }
 }
 
+/// Which microkernel implementation the tensor kernels execute.
+///
+/// The tier is orthogonal to the scheduling mode: both tiers run the
+/// same tile decomposition, so each tier is individually deterministic
+/// across {serial, scoped, pool} × thread counts. Only `Scalar` is
+/// *bitwise* reproducible across machines — it is the reference the
+/// SIMD property tests compare against.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelTier {
+    /// The scalar 8-lane reference microkernels (`dot8`, `[MR×LANES]`
+    /// register tiles). Bitwise identical across modes, thread counts,
+    /// and targets; always available.
+    Scalar,
+    /// `core::arch` x86-64 AVX2/FMA f32x8 microkernels over the same
+    /// pack layout (build feature `simd`, runtime-detected). FMA fuses
+    /// the multiply-add rounding step, so results are tolerance-equal
+    /// (≤1e-5 relative, pinned by property tests) to the scalar
+    /// reference rather than bitwise — but stay deterministic across
+    /// thread counts within the tier.
+    Simd,
+}
+
+impl KernelTier {
+    /// `Scalar` unless the `simd` build feature is on **and** the CPU
+    /// reports AVX2+FMA at runtime. Every `unsafe` call into the
+    /// `target_feature` kernels relies on this check having passed, so
+    /// `Simd` must only ever be constructed through here (or in tests
+    /// gated on the same detection).
+    pub fn detect() -> KernelTier {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return KernelTier::Simd;
+            }
+        }
+        KernelTier::Scalar
+    }
+
+    /// Stable lowercase label for logs, `dynavg models`, and benches.
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Simd => "simd",
+        }
+    }
+}
+
 /// Scheduling mode of one tiled-kernel call. All modes execute the same
-/// tile decomposition with bitwise-identical results (tiles own disjoint
-/// output elements; per-element accumulation order never changes); they
-/// differ only in who runs the tiles and what a dispatch costs.
+/// tile decomposition with identical results within a [`KernelTier`]
+/// (tiles own disjoint output elements; per-element accumulation order
+/// never changes); they differ only in who runs the tiles and what a
+/// dispatch costs.
 #[derive(Clone, Copy)]
-pub enum Par<'a> {
+pub enum ParMode<'a> {
     /// One tile after another on the calling thread (the reference path).
     Serial,
     /// PR 3 behavior: per-call `std::thread::scope` spawn + join of
@@ -273,28 +324,57 @@ pub enum Par<'a> {
     Pool(&'a WorkerPool),
 }
 
+/// The execution context of one tiled-kernel call: a scheduling
+/// [`ParMode`] plus the [`KernelTier`] the inner loops dispatch on.
+#[derive(Clone, Copy)]
+pub struct Par<'a> {
+    pub mode: ParMode<'a>,
+    pub tier: KernelTier,
+}
+
 impl<'a> Par<'a> {
-    /// The mode a [`Workspace`](super::workspace::Workspace) configuration
-    /// implies: pooled when a pool sized for exactly this thread budget
-    /// exists, scoped when only a thread count does, serial otherwise.
-    /// The size check matters: a stale pool from a *larger* budget must
-    /// not widen the tiling beyond `threads` (the engine divides cores
-    /// across learners), so a mismatched pool is ignored until
-    /// `Workspace::enable_pool` rebuilds it for the current budget.
-    pub fn new(threads: usize, pool: Option<&'a WorkerPool>) -> Par<'a> {
-        match pool {
-            Some(p) if threads > 1 && p.threads() == threads => Par::Pool(p),
-            _ if threads > 1 => Par::Scoped(threads),
-            _ => Par::Serial,
-        }
+    /// Serial scalar execution — the strict reference context.
+    pub fn serial() -> Par<'static> {
+        Par { mode: ParMode::Serial, tier: KernelTier::Scalar }
+    }
+
+    /// Scoped-spawn scalar execution at the given thread budget.
+    pub fn scoped(threads: usize) -> Par<'static> {
+        Par { mode: ParMode::Scoped(threads), tier: KernelTier::Scalar }
+    }
+
+    /// Pooled scalar execution on the given worker pool.
+    pub fn pool(p: &WorkerPool) -> Par<'_> {
+        Par { mode: ParMode::Pool(p), tier: KernelTier::Scalar }
+    }
+
+    /// The context a [`Workspace`](super::workspace::Workspace)
+    /// configuration implies: pooled when a pool sized for exactly this
+    /// thread budget exists, scoped when only a thread count does, serial
+    /// otherwise. The size check matters: a stale pool from a *larger*
+    /// budget must not widen the tiling beyond `threads` (the engine
+    /// divides cores across learners), so a mismatched pool is ignored
+    /// until `Workspace::enable_pool` rebuilds it for the current budget.
+    pub fn new(threads: usize, pool: Option<&'a WorkerPool>, tier: KernelTier) -> Par<'a> {
+        let mode = match pool {
+            Some(p) if threads > 1 && p.threads() == threads => ParMode::Pool(p),
+            _ if threads > 1 => ParMode::Scoped(threads),
+            _ => ParMode::Serial,
+        };
+        Par { mode, tier }
+    }
+
+    /// The same scheduling mode with a different kernel tier.
+    pub fn with_tier(self, tier: KernelTier) -> Par<'a> {
+        Par { tier, ..self }
     }
 
     /// Tile slots a dispatch can use.
     pub fn threads(self) -> usize {
-        match self {
-            Par::Serial => 1,
-            Par::Scoped(n) => n.max(1),
-            Par::Pool(p) => p.threads(),
+        match self.mode {
+            ParMode::Serial => 1,
+            ParMode::Scoped(n) => n.max(1),
+            ParMode::Pool(p) => p.threads(),
         }
     }
 
@@ -306,8 +386,8 @@ impl<'a> Par<'a> {
     /// traffic for the im2col/col2im sweeps). Centralized here so the
     /// schedule-selection logic cannot diverge between kernels.
     pub fn tile_count(self, volume: usize, scoped_floor: usize, pool_floor: usize) -> usize {
-        let floor = match self {
-            Par::Pool(_) => pool_floor,
+        let floor = match self.mode {
+            ParMode::Pool(_) => pool_floor,
             _ => scoped_floor,
         };
         if volume < floor {
@@ -317,24 +397,29 @@ impl<'a> Par<'a> {
         }
     }
 
-    /// Run `f(0..tiles)`, tile 0 always on the calling thread.
+    /// Run `f(0..tiles)`, tile 0 always on the calling thread. Every tile
+    /// index in `0..tiles` runs **exactly once** in every mode (serial
+    /// loop, one scoped thread per tile, strided pool sets) — per-tile
+    /// scratch indexed by the tile id is therefore race-free, which is
+    /// what lets the attention kernels hold `tiles` score stripes instead
+    /// of one per (batch, head) cell.
     pub fn run(self, tiles: usize, f: impl Fn(usize) + Sync) {
         let tiles = tiles.max(1);
-        match self {
+        match self.mode {
             _ if tiles == 1 => f(0),
-            Par::Serial => {
+            ParMode::Serial => {
                 for t in 0..tiles {
                     f(t);
                 }
             }
-            Par::Scoped(_) => std::thread::scope(|scope| {
+            ParMode::Scoped(_) => std::thread::scope(|scope| {
                 for t in 1..tiles {
                     let f = &f;
                     scope.spawn(move || f(t));
                 }
                 f(0);
             }),
-            Par::Pool(p) => p.run(tiles, f),
+            ParMode::Pool(p) => p.run(tiles, f),
         }
     }
 }
@@ -423,24 +508,42 @@ mod tests {
     #[test]
     fn par_modes_agree_on_tile_coverage() {
         let pool = WorkerPool::new(3);
-        for par in [Par::Serial, Par::Scoped(4), Par::Pool(&pool)] {
+        for par in [Par::serial(), Par::scoped(4), Par::pool(&pool)] {
             let sum = AtomicUsize::new(0);
             par.run(4, |t| {
                 sum.fetch_add(t + 1, Ordering::Relaxed);
             });
             assert_eq!(sum.load(Ordering::Relaxed), 10);
         }
-        assert_eq!(Par::Serial.threads(), 1);
-        assert_eq!(Par::Scoped(4).threads(), 4);
-        assert_eq!(Par::Pool(&pool).threads(), 4);
+        assert_eq!(Par::serial().threads(), 1);
+        assert_eq!(Par::scoped(4).threads(), 4);
+        assert_eq!(Par::pool(&pool).threads(), 4);
         // Par::new picks the pool only when it matches the thread budget
-        assert!(matches!(Par::new(1, Some(&pool)), Par::Serial));
-        assert!(matches!(Par::new(3, None), Par::Scoped(3)));
-        assert!(matches!(Par::new(4, Some(&pool)), Par::Pool(_)));
+        let tier = KernelTier::Scalar;
+        assert!(matches!(Par::new(1, Some(&pool), tier).mode, ParMode::Serial));
+        assert!(matches!(Par::new(3, None, tier).mode, ParMode::Scoped(3)));
+        assert!(matches!(Par::new(4, Some(&pool), tier).mode, ParMode::Pool(_)));
         // a pool sized for a different budget must not widen the tiling:
         // the requested width wins, on scoped spawns, until the workspace
         // rebuilds the pool
-        assert!(matches!(Par::new(3, Some(&pool)), Par::Scoped(3)));
+        assert!(matches!(Par::new(3, Some(&pool), tier).mode, ParMode::Scoped(3)));
+    }
+
+    #[test]
+    fn tier_threads_through_the_context() {
+        // constructors default to the scalar reference tier; with_tier
+        // swaps the tier without touching the scheduling mode
+        assert_eq!(Par::serial().tier, KernelTier::Scalar);
+        assert_eq!(Par::scoped(4).tier, KernelTier::Scalar);
+        let simd = Par::scoped(4).with_tier(KernelTier::Simd);
+        assert_eq!(simd.tier, KernelTier::Simd);
+        assert!(matches!(simd.mode, ParMode::Scoped(4)));
+        // detect() can only ever report Simd when the build opted in
+        let detected = KernelTier::detect();
+        if !cfg!(feature = "simd") {
+            assert_eq!(detected, KernelTier::Scalar);
+        }
+        assert!(matches!(detected.label(), "scalar" | "simd"));
     }
 
     #[test]

@@ -17,15 +17,31 @@
 //!
 //! - embedding gather / LayerNorm / causal softmax partition by *row*
 //!   (each output row depends on one input row);
-//! - attention partitions by *(batch, head) cell* — a cell's score tile,
-//!   probability tile and output tile are private to its tile closure;
+//! - attention partitions by *(batch, head) cell* — a cell's score
+//!   scratch and output tile are private to its tile closure. Score
+//!   scratch is **per dispatch tile, not per cell**: every tile index
+//!   runs exactly once per dispatch (see `Par::run`), so tile `ti` can
+//!   own scratch stripe `ti` and reuse it across its cells — the
+//!   footprint follows `min(threads, b·h)` instead of `b·h`;
+//! - the streaming forward ([`attention_streaming_fwd`]) additionally
+//!   KV-blocks the score rows: a stripe holds one `Bc`-row block of the
+//!   `[s, s]` score matrix at a time (`Bc·s` floats, [`ATTN_BC`] rows by
+//!   default), so long sequences stop paying an S²-resident tile per
+//!   cell. Each score element, each row's softmax and each output row
+//!   accumulation performs the *exact* reference op sequence, so the
+//!   streaming forward stays **bitwise identical** to [`attention_fwd`]
+//!   at every `Bc` — unlike classic online-renormalization streaming,
+//!   which would trade the bitwise contract for no additional memory win;
 //! - the embedding **scatter-add** backward partitions by *output-row
 //!   ownership* (vocabulary rows for `dEmbed`, position rows for `dPos`):
 //!   every tile scans the token stream in ascending position order and
 //!   accumulates only the rows it owns, which is exactly the serial
 //!   per-element order;
 //! - the per-head `QKᵀ` / `P·V` products go through the scalar kernels of
-//!   `matmul.rs` (a cell is the parallel unit; its tiles stay serial).
+//!   `matmul.rs` (a cell is the parallel unit; its tiles stay serial —
+//!   and stay on the scalar tier in both kernel tiers, keeping attention
+//!   bitwise reproducible; the SIMD tier accelerates the projection/FFN
+//!   GEMM family around it).
 //!
 //! Cross-row reductions (LN gain gradient, loss) stay serial, like the
 //! dense bias gradients (`matmul::add_col_sums`) always have.
@@ -436,11 +452,170 @@ fn attention_fwd_t(
     });
 }
 
+/// Default KV-block width of the streaming attention forward: the score
+/// scratch holds `ATTN_BC` rows of the `[s, s]` score matrix at a time
+/// (`min(ATTN_BC, s)·s` floats per dispatch tile) instead of a resident
+/// `s·s` tile per (batch, head) cell. 64 rows × 4 B × S keeps a whole
+/// row block comfortably L2-resident through S≥1024 while amortizing the
+/// per-block loop overhead.
+pub const ATTN_BC: usize = 64;
+
+/// One (batch, head) cell of the KV-blocked streaming forward. `rows` is
+/// a `min(bc, s)·s` scratch block: scores materialize one `bc`-row block
+/// at a time, KV-blocked over `bc`-wide column tiles for K-panel
+/// locality, then each row runs the *exact* [`causal_softmax`] op
+/// sequence on its fully materialized live prefix and immediately folds
+/// into `O`. Every score element is `dot8(q_i, k_j) · rscale`, every
+/// softmax reduction walks ascending `j`, and the `O` row accumulates
+/// `Σ_j P[i,j]·V[j,:]` in ascending `j` over the full width (dead
+/// entries zeroed, contributing the same exact `+0.0` terms as the
+/// reference `P·V` GEMM) — so the streaming output is **bitwise
+/// identical** to [`attention_fwd`] at every `bc`.
+fn streaming_cell_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    rows: &mut [f32],
+    o: &mut [f32],
+    s: usize,
+    hd: usize,
+    bc: usize,
+    rscale: f32,
+) {
+    let br = bc.min(s).max(1);
+    debug_assert!(rows.len() >= br * s);
+    for i0 in (0..s).step_by(br) {
+        let ib = br.min(s - i0);
+        // Scores for query rows [i0, i0+ib), column tiles of width bc.
+        // Each element is independent (dot8 · rscale), so the tiling
+        // order cannot change its value.
+        for j0 in (0..i0 + ib).step_by(bc) {
+            let j1 = (i0 + ib).min(j0 + bc);
+            for li in 0..ib {
+                let i = i0 + li;
+                let jend = j1.min(i + 1);
+                if j0 >= jend {
+                    continue;
+                }
+                let qrow = &q[i * hd..(i + 1) * hd];
+                let row = &mut rows[li * s..(li + 1) * s];
+                for j in j0..jend {
+                    row[j] = matmul::dot8(qrow, &k[j * hd..(j + 1) * hd]) * rscale;
+                }
+            }
+        }
+        for li in 0..ib {
+            let i = i0 + li;
+            let row = &mut rows[li * s..(li + 1) * s];
+            // causal_softmax on this row's live prefix, verbatim
+            let (live, dead) = row.split_at_mut(i + 1);
+            let max = live.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let mut sum = 0.0f32;
+            for x in live.iter_mut() {
+                *x = (*x - max).exp();
+                sum += *x;
+            }
+            let inv = 1.0 / sum;
+            for x in live.iter_mut() {
+                *x *= inv;
+            }
+            dead.fill(0.0);
+            // O row: full-width ascending-j accumulation, matching the
+            // reference matmul(P, V) per-element order exactly
+            let orow = &mut o[i * hd..(i + 1) * hd];
+            orow.fill(0.0);
+            for (j, &pv) in rows[li * s..(li + 1) * s].iter().enumerate() {
+                let vrow = &v[j * hd..(j + 1) * hd];
+                for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                    *ov += pv * vv;
+                }
+            }
+        }
+    }
+}
+
+/// Multi-head causal SDPA forward with KV-blocked streaming scores:
+/// bitwise-identical outputs to [`attention_fwd`], but `scratch` only
+/// needs `min(threads, b·h) · min(bc, s)·s` floats instead of the
+/// `b·h·s·s` probability buffer — the score footprint the `SeqGraph`
+/// slot plan now sizes (`S·Bc` per stripe, not `S²` per cell). Tiles own
+/// scratch stripes (each tile index runs exactly once per dispatch);
+/// the tile count is additionally clamped to the stripes available.
+pub fn attention_streaming_fwd(
+    heads: &[f32],
+    scratch: &mut [f32],
+    o_heads: &mut [f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    hd: usize,
+    bc: usize,
+    par: Par,
+) {
+    let macs = b * h * 2 * s * s * hd;
+    let t = par.tile_count(macs, matmul::TILE_MIN_MACS, matmul::POOL_MIN_MACS);
+    attention_streaming_fwd_t(heads, scratch, o_heads, b, h, s, hd, bc, par, t)
+}
+
+fn attention_streaming_fwd_t(
+    heads: &[f32],
+    scratch: &mut [f32],
+    o_heads: &mut [f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    hd: usize,
+    bc: usize,
+    par: Par,
+    t: usize,
+) {
+    let bh = b * h;
+    let br = bc.min(s).max(1);
+    debug_assert_eq!(heads.len(), 3 * bh * s * hd);
+    debug_assert_eq!(o_heads.len(), bh * s * hd);
+    debug_assert!(scratch.len() >= br * s);
+    let t = t.min(bh).min(scratch.len() / (br * s)).max(1);
+    let chunk = bh.div_ceil(t);
+    let rscale = 1.0 / (hd as f32).sqrt();
+    let sc_ptr = SendPtr(scratch.as_mut_ptr());
+    let o_ptr = SendPtr(o_heads.as_mut_ptr());
+    par.run(t, |ti| {
+        let c0 = ti * chunk;
+        let c1 = bh.min(c0 + chunk);
+        if c0 >= c1 {
+            return;
+        }
+        // SAFETY: scratch stripe `ti` (br·s floats at ti·br·s, in bounds
+        // by the tile-count clamp) is private to this tile — every tile
+        // index runs exactly once per dispatch (see `Par::run`) — and
+        // cells own disjoint o_heads tiles; `par.run` returns before the
+        // &mut borrows end.
+        let rows = unsafe { std::slice::from_raw_parts_mut(sc_ptr.0.add(ti * br * s), br * s) };
+        for c in c0..c1 {
+            let o = unsafe { std::slice::from_raw_parts_mut(o_ptr.0.add(c * s * hd), s * hd) };
+            streaming_cell_fwd(
+                cell(heads, 0, bh, c, s, hd),
+                cell(heads, 1, bh, c, s, hd),
+                cell(heads, 2, bh, c, s, hd),
+                rows,
+                o,
+                s,
+                hd,
+                bc,
+                rscale,
+            );
+        }
+    });
+}
+
 /// Multi-head causal SDPA backward, recomputing the probabilities per
 /// cell (FlashAttention-style — no per-layer score storage): given the
 /// head-layout output gradient `d_o_heads`, writes `[dQ | dK | dV]` into
-/// `d_heads` (`3·b·h·s·hd`). `probs`/`dprobs` are `b·h·s·s` arena slots
-/// (P and dP are live simultaneously inside the softmax Jacobian).
+/// `d_heads` (`3·b·h·s·hd`). `probs`/`dprobs` are **per-stripe** arena
+/// slots — one `s·s` tile per dispatch tile, `min(threads, b·h)` stripes
+/// in total, reused sequentially across a tile's cells (P and dP are
+/// live simultaneously inside the softmax Jacobian; the tile count is
+/// clamped to the stripes the caller provisioned).
 /// Same cell partition — and the same per-element order — as forward.
 pub fn attention_bwd(
     heads: &[f32],
@@ -476,10 +651,14 @@ fn attention_bwd_t(
     let bh = b * h;
     debug_assert_eq!(heads.len(), 3 * bh * s * hd);
     debug_assert_eq!(d_o_heads.len(), bh * s * hd);
-    debug_assert_eq!(probs.len(), bh * s * s);
-    debug_assert_eq!(dprobs.len(), bh * s * s);
+    debug_assert!(probs.len() >= s * s);
+    debug_assert!(dprobs.len() >= s * s);
     debug_assert_eq!(d_heads.len(), 3 * bh * s * hd);
-    let t = t.min(bh).max(1);
+    let t = t
+        .min(bh)
+        .min(probs.len() / (s * s))
+        .min(dprobs.len() / (s * s))
+        .max(1);
     let chunk = bh.div_ceil(t);
     let rscale = 1.0 / (hd as f32).sqrt();
     let p_ptr = SendPtr(probs.as_mut_ptr());
@@ -488,6 +667,16 @@ fn attention_bwd_t(
     par.run(t, |ti| {
         let c0 = ti * chunk;
         let c1 = bh.min(c0 + chunk);
+        if c0 >= c1 {
+            return;
+        }
+        // SAFETY: probs/dprobs stripe `ti` (s·s floats each, in bounds by
+        // the tile-count clamp) is private to this tile — every tile index
+        // runs exactly once per dispatch (see `Par::run`) — and is fully
+        // overwritten per cell before use; `par.run` returns before the
+        // &mut borrows end.
+        let p = unsafe { std::slice::from_raw_parts_mut(p_ptr.0.add(ti * s * s), s * s) };
+        let dp = unsafe { std::slice::from_raw_parts_mut(dp_ptr.0.add(ti * s * s), s * s) };
         for c in c0..c1 {
             let (q, k, v) = (
                 cell(heads, 0, bh, c, s, hd),
@@ -495,11 +684,8 @@ fn attention_bwd_t(
                 cell(heads, 2, bh, c, s, hd),
             );
             let go = &d_o_heads[c * s * hd..(c + 1) * s * hd];
-            // SAFETY: cell `c` owns its probs/dprobs tiles and the dQ/dK/dV
-            // rows at (part·bh + c)·s·hd exclusively — cells partition all
-            // three buffers — and `par.run` returns before the borrows end.
-            let p = unsafe { std::slice::from_raw_parts_mut(p_ptr.0.add(c * s * s), s * s) };
-            let dp = unsafe { std::slice::from_raw_parts_mut(dp_ptr.0.add(c * s * s), s * s) };
+            // SAFETY: cell `c` owns the dQ/dK/dV rows at
+            // (part·bh + c)·s·hd exclusively — cells partition d_heads.
             let dq = unsafe { std::slice::from_raw_parts_mut(dh_ptr.0.add(c * s * hd), s * hd) };
             let dk = unsafe { std::slice::from_raw_parts_mut(dh_ptr.0.add((bh + c) * s * hd), s * hd) };
             let dv = unsafe { std::slice::from_raw_parts_mut(dh_ptr.0.add((2 * bh + c) * s * hd), s * hd) };
@@ -663,7 +849,7 @@ mod tests {
         let mut g = vec![0.0f32; d];
         let mut out = vec![f32::NAN; m * d];
         let mut stats = vec![f32::NAN; 2 * m];
-        layernorm_fwd(&x, &g, &mut out, &mut stats, m, d, Par::Serial);
+        layernorm_fwd(&x, &g, &mut out, &mut stats, m, d, Par::serial());
         for row in out.chunks_exact(d) {
             let mean: f32 = row.iter().sum::<f32>() / d as f32;
             let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
@@ -673,7 +859,7 @@ mod tests {
         // gain scales the normalized rows: g = 1 doubles them (1 + g = 2)
         g.fill(1.0);
         let mut out2 = vec![f32::NAN; m * d];
-        layernorm_fwd(&x, &g, &mut out2, &mut stats, m, d, Par::Serial);
+        layernorm_fwd(&x, &g, &mut out2, &mut stats, m, d, Par::serial());
         for (&a, &b) in out.iter().zip(&out2) {
             assert!((2.0 * a - b).abs() < 1e-5);
         }
@@ -704,11 +890,11 @@ mod tests {
         let tokens: Vec<i32> = (0..b * win).map(|_| rng.below(v) as i32).collect();
         let delta = rand_vec(&mut rng, b * s * d);
         let mut out = vec![f32::NAN; b * s * d];
-        embed_fwd(&embed, &pos, &tokens, win, &mut out, b, s, d, Par::Serial);
+        embed_fwd(&embed, &pos, &tokens, win, &mut out, b, s, d, Par::serial());
         let lhs: f64 = out.iter().zip(&delta).map(|(&o, &g)| f64::from(o) * f64::from(g)).sum();
         let mut de = vec![0.0f32; v * d];
         let mut dp = vec![0.0f32; s * d];
-        embed_bwd(&delta, &tokens, win, &mut de, &mut dp, b, s, d, v, Par::Serial);
+        embed_bwd(&delta, &tokens, win, &mut de, &mut dp, b, s, d, v, Par::serial());
         let rhs: f64 = de.iter().zip(&embed).map(|(&a, &e)| f64::from(a) * f64::from(e)).sum();
         assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
         // position gradient sums the batch: every pos row touched b times
@@ -744,7 +930,7 @@ mod tests {
         let mut heads = rand_vec(&mut rng, 3 * bh * s * hd);
         let mut probs = vec![f32::NAN; bh * s * s];
         let mut o1 = vec![f32::NAN; bh * s * hd];
-        attention_fwd(&heads, &mut probs, &mut o1, b, h, s, hd, Par::Serial);
+        attention_fwd(&heads, &mut probs, &mut o1, b, h, s, hd, Par::serial());
         for c in 0..bh {
             let v_last = (2 * bh + c) * s * hd + (s - 1) * hd;
             for j in 0..hd {
@@ -752,7 +938,7 @@ mod tests {
             }
         }
         let mut o2 = vec![f32::NAN; bh * s * hd];
-        attention_fwd(&heads, &mut probs, &mut o2, b, h, s, hd, Par::Serial);
+        attention_fwd(&heads, &mut probs, &mut o2, b, h, s, hd, Par::serial());
         for c in 0..bh {
             let cell1 = &o1[c * s * hd..(c + 1) * s * hd];
             let cell2 = &o2[c * s * hd..(c + 1) * s * hd];
@@ -771,7 +957,7 @@ mod tests {
         }
         let mut probs = vec![f32::NAN; s * s];
         let mut o = vec![f32::NAN; s * hd];
-        attention_fwd(&heads, &mut probs, &mut o, b, h, s, hd, Par::Serial);
+        attention_fwd(&heads, &mut probs, &mut o, b, h, s, hd, Par::serial());
         for i in 0..s {
             let want = (0..=i).map(|j| j as f32).sum::<f32>() / (i + 1) as f32;
             assert!((o[i * hd] - want).abs() < 1e-6, "row {i}: {} vs {want}", o[i * hd]);
@@ -814,24 +1000,24 @@ mod tests {
         let d_o = rand_vec(&mut rng, bh * s * hd);
 
         let mut e_ref = vec![f32::NAN; b * s * d];
-        embed_fwd_t(&embed, &posv, &tokens, win, &mut e_ref, b, s, d, Par::Serial, 1);
+        embed_fwd_t(&embed, &posv, &tokens, win, &mut e_ref, b, s, d, Par::serial(), 1);
         let mut ln_ref = vec![f32::NAN; b * s * d];
         let mut st_ref = vec![f32::NAN; 2 * b * s];
-        layernorm_fwd_t(&x, &g, &mut ln_ref, &mut st_ref, b * s, d, Par::Serial, 1);
+        layernorm_fwd_t(&x, &g, &mut ln_ref, &mut st_ref, b * s, d, Par::serial(), 1);
         let mut lb_ref = vec![f32::NAN; b * s * d];
-        layernorm_bwd_t(&delta, &x, &g, &st_ref, &mut lb_ref, b * s, d, Par::Serial, 1);
+        layernorm_bwd_t(&delta, &x, &g, &st_ref, &mut lb_ref, b * s, d, Par::serial(), 1);
         let mut de_ref = vec![0.1f32; v * d];
         let mut dp_ref = vec![0.2f32; s * d];
-        embed_bwd_t(&delta, &tokens, win, &mut de_ref, &mut dp_ref, b, s, d, v, Par::Serial, 1);
+        embed_bwd_t(&delta, &tokens, win, &mut de_ref, &mut dp_ref, b, s, d, v, Par::serial(), 1);
         let mut p_ref = vec![f32::NAN; bh * s * s];
         let mut o_ref = vec![f32::NAN; bh * s * hd];
-        attention_fwd(&heads, &mut p_ref, &mut o_ref, b, h, s, hd, Par::Serial);
+        attention_fwd(&heads, &mut p_ref, &mut o_ref, b, h, s, hd, Par::serial());
         let mut dpr = vec![f32::NAN; bh * s * s];
         let mut dh_ref = vec![f32::NAN; 3 * bh * s * hd];
-        attention_bwd(&heads, &d_o, &mut p_ref, &mut dpr, &mut dh_ref, b, h, s, hd, Par::Serial);
+        attention_bwd(&heads, &d_o, &mut p_ref, &mut dpr, &mut dh_ref, b, h, s, hd, Par::serial());
 
         for threads in [2usize, 3, 8] {
-            let modes: [(&str, Par); 2] = [("scoped", Par::Scoped(threads)), ("pool", Par::Pool(&pool))];
+            let modes: [(&str, Par); 2] = [("scoped", Par::scoped(threads)), ("pool", Par::pool(&pool))];
             for (mode, par) in modes {
                 let mut out = vec![f32::NAN; b * s * d];
                 embed_fwd_t(&embed, &posv, &tokens, win, &mut out, b, s, d, par, threads);
@@ -863,7 +1049,49 @@ mod tests {
                 attention_bwd_t(&heads, &d_o, &mut p, &mut dp2, &mut dh, b, h, s, hd, par, threads);
                 assert_eq!(o, o_ref, "attention_fwd {mode} t{threads}");
                 assert_eq!(dh, dh_ref, "attention_bwd {mode} t{threads}");
+
+                // streaming forward with per-stripe Bc-row scratch
+                let br = 3usize.min(s);
+                let mut rows = vec![f32::NAN; threads.min(bh) * br * s];
+                let mut so = vec![f32::NAN; bh * s * hd];
+                attention_streaming_fwd_t(&heads, &mut rows, &mut so, b, h, s, hd, 3, par, threads);
+                assert_eq!(so, o_ref, "attention_streaming_fwd {mode} t{threads}");
+
+                // backward on stripe-count scratch (fewer stripes than cells)
+                let nst = threads.min(bh);
+                let mut ps = vec![f32::NAN; nst * s * s];
+                let mut dps = vec![f32::NAN; nst * s * s];
+                let mut dh2 = vec![f32::NAN; 3 * bh * s * hd];
+                attention_bwd_t(&heads, &d_o, &mut ps, &mut dps, &mut dh2, b, h, s, hd, par, threads);
+                assert_eq!(dh2, dh_ref, "attention_bwd stripes {mode} t{threads}");
             }
+        }
+    }
+
+    /// The KV-blocked streaming forward is bitwise identical to the
+    /// reference resident-score forward at every block width — including
+    /// `s % bc != 0`, `bc == s` and `bc > s` — because it performs the
+    /// exact reference op sequence per element (see `streaming_cell_fwd`).
+    #[test]
+    fn streaming_forward_is_bitwise_identical_to_reference() {
+        let mut rng = Rng::new(7);
+        for (b, h, s, hd, bc) in [
+            (1usize, 1usize, 6usize, 4usize, 4usize), // s % bc != 0
+            (2, 2, 10, 4, 3),                         // multi-cell, ragged tail
+            (1, 2, 16, 8, 16),                        // bc == s
+            (1, 1, 5, 4, 64),                         // bc > s (degenerates to resident)
+            (2, 1, 7, 6, 1),                          // bc = 1 (one row at a time)
+        ] {
+            let bh = b * h;
+            let heads = rand_vec(&mut rng, 3 * bh * s * hd);
+            let mut probs = vec![f32::NAN; bh * s * s];
+            let mut o_ref = vec![f32::NAN; bh * s * hd];
+            attention_fwd(&heads, &mut probs, &mut o_ref, b, h, s, hd, Par::serial());
+            let br = bc.min(s);
+            let mut rows = vec![f32::NAN; br * s];
+            let mut o = vec![f32::NAN; bh * s * hd];
+            attention_streaming_fwd(&heads, &mut rows, &mut o, b, h, s, hd, bc, Par::serial());
+            assert_eq!(o, o_ref, "b{b} h{h} s{s} hd{hd} bc{bc}");
         }
     }
 }

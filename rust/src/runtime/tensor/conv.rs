@@ -20,7 +20,9 @@
 //! `matmul.rs`): the weight operand is packed once per call into the
 //! caller's `pack` slice, then each row tile fuses im2col with the packed
 //! product. Tiling is dispatched through a [`Par`] mode — serial, scoped
-//! spawns, or the persistent per-`Workspace` `WorkerPool`.
+//! spawns, or the persistent per-`Workspace` `WorkerPool` — and the
+//! fused product follows the context's kernel tier (the AVX2/FMA f32x8
+//! microkernels under `--features simd`, tolerance-equal to scalar).
 
 use crate::runtime::pool::{Par, SendPtr};
 
@@ -310,7 +312,7 @@ fn forward_into_t(
         } else {
             let pack = &mut pack[..matmul::packed_len(k, cout)];
             matmul::pack_b(wt, pack, k, cout);
-            matmul::bias_acc_packed(patches, pack, bias, out, m, k, cout);
+            matmul::bias_acc_packed(patches, pack, bias, out, m, k, cout, par.tier);
         }
         return;
     }
@@ -332,7 +334,7 @@ fn forward_into_t(
         let pat = unsafe { std::slice::from_raw_parts_mut(pat_ptr.0.add(r0 * k), rows * k) };
         let tile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r0 * cout), rows * cout) };
         im2col_rows(x, pat, (h, w, c), (kh, kw), stride, r0);
-        matmul::bias_acc_packed(pat, pack, bias, tile, rows, k, cout);
+        matmul::bias_acc_packed(pat, pack, bias, tile, rows, k, cout, par.tier);
     });
 }
 
@@ -369,7 +371,7 @@ pub fn conv2d_forward(
         cout,
         stride,
         &mut pack,
-        Par::Serial,
+        Par::serial(),
     );
     out
 }
@@ -473,7 +475,7 @@ mod tests {
             let bias: Vec<f32> = (0..cout).map(|_| rng.normal_f32()).collect();
             let p: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
             for threads in [2usize, 3, 7] {
-                let modes: [(&str, Par); 2] = [("scoped", Par::Scoped(threads)), ("pool", Par::Pool(&pool))];
+                let modes: [(&str, Par); 2] = [("scoped", Par::scoped(threads)), ("pool", Par::pool(&pool))];
                 for (mode, par) in modes {
                     // the _t variants take the tile count directly,
                     // bypassing the volume floor so real tiles run at
@@ -487,7 +489,7 @@ mod tests {
                         let mut pack = vec![f32::NAN; matmul::packed_len(k, cout)];
                         forward_into_t(&x, &wt, &bias, o, pt, b, (h, w, c), (kh, kw), cout, stride, &mut pack, pr, t);
                     };
-                    run(&mut serial_out, &mut serial_pat, Par::Serial, 1);
+                    run(&mut serial_out, &mut serial_pat, Par::serial(), 1);
                     run(&mut tiled_out, &mut tiled_pat, par, threads);
                     assert_eq!(serial_out, tiled_out, "forward {mode} b{b} t{threads}");
                     assert_eq!(serial_pat, tiled_pat, "patches {mode} b{b} t{threads}");

@@ -578,7 +578,7 @@ impl LayerGraph {
     /// benches and one-shot callers; the hot path holds a `Workspace`.
     pub fn forward(&self, params: &[f32], x: &[f32], b: usize) -> ForwardPass {
         let mut s = Scratch::new();
-        self.forward_into(params, x, b, &mut s, Par::Serial);
+        self.forward_into(params, x, b, &mut s, Par::serial());
         ForwardPass {
             acts: std::mem::take(&mut s.acts),
         }
@@ -659,7 +659,7 @@ impl LayerGraph {
     /// Loss + metric only (allocating convenience over [`LayerGraph::eval_into`]).
     pub fn eval(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32) {
         let mut s = Scratch::new();
-        self.eval_into(params, x, y, b, &mut s, Par::Serial)
+        self.eval_into(params, x, y, b, &mut s, Par::serial())
     }
 
     /// Loss, metric and the full flat gradient (reverse-mode by hand),
@@ -773,7 +773,7 @@ impl LayerGraph {
     /// tests and one-shot callers; the hot path holds a `Workspace`.
     pub fn loss_grad(&self, params: &[f32], x: &[f32], y: &[f32], b: usize) -> (f32, f32, Vec<f32>) {
         let mut s = Scratch::new();
-        let (loss, metric) = self.loss_grad_into(params, x, y, b, &mut s, Par::Serial);
+        let (loss, metric) = self.loss_grad_into(params, x, y, b, &mut s, Par::serial());
         (loss, metric, std::mem::take(&mut s.grad))
     }
 }
@@ -1005,10 +1005,10 @@ mod tests {
             let (l0, m0, g0) = graph.loss_grad(&params, &x, &y, 4);
             let mut s = crate::runtime::workspace::Scratch::new();
             let modes: [(&str, Par); 4] = [
-                ("serial", Par::Serial),
-                ("scoped2", Par::Scoped(2)),
-                ("scoped5", Par::Scoped(5)),
-                ("pool", Par::Pool(&wp)),
+                ("serial", Par::serial()),
+                ("scoped2", Par::scoped(2)),
+                ("scoped5", Par::scoped(5)),
+                ("pool", Par::pool(&wp)),
             ];
             for (mode, par) in modes {
                 let (l, m) = graph.loss_grad_into(&params, &x, &y, 4, &mut s, par);
@@ -1018,10 +1018,10 @@ mod tests {
             // batch-size change in the same arena (shrink, then regrow)
             let (x1, y1) = batch(&info, 23, 1);
             let (l1, m1, g1) = graph.loss_grad(&params, &x1, &y1, 1);
-            let (l, m) = graph.loss_grad_into(&params, &x1, &y1, 1, &mut s, Par::Scoped(2));
+            let (l, m) = graph.loss_grad_into(&params, &x1, &y1, 1, &mut s, Par::scoped(2));
             assert_eq!((l, m), (l1, m1), "{} b=1", info.name);
             assert_eq!(s.grad, g1, "{} b=1 gradient", info.name);
-            let (l, m) = graph.loss_grad_into(&params, &x, &y, 4, &mut s, Par::Pool(&wp));
+            let (l, m) = graph.loss_grad_into(&params, &x, &y, 4, &mut s, Par::pool(&wp));
             assert_eq!((l, m), (l0, m0), "{} regrown", info.name);
             assert_eq!(s.grad, g0, "{} regrown gradient", info.name);
         }

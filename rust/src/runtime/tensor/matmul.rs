@@ -31,11 +31,27 @@
 //! scalar kernels' — so packed results are **bitwise identical** to the
 //! scalar reference, and the one shared `Scratch.pack` arena slot (sized
 //! at plan-compile time, see `graph.rs`) keeps the packing zero-alloc.
+//!
+//! The packed drivers additionally dispatch on a
+//! [`KernelTier`](super::super::pool::KernelTier): the `Simd` tier runs
+//! the same pack layout and loop structure through explicit AVX2/FMA
+//! f32x8 intrinsics (`simd.rs`, feature `simd`, runtime-detected).
+//! Because FMA fuses the multiply-add rounding, SIMD results are
+//! tolerance-equal (≤1e-5 relative) to the scalar reference rather than
+//! bitwise — the scalar tier stays the reference and the fallback.
+//! Panel heights are `kc`-parameterized (`pack_b_kc` + the `_kc`
+//! drivers) so `bench_hot_paths` can autotune the panel size per shape;
+//! the default [`KC`] path is what the interpreter runs.
 
-use super::super::pool::{Par, SendPtr};
+use super::super::pool::{KernelTier, Par, SendPtr};
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use super::simd;
 
-/// K-panel height: `KC · N · 4` bytes of B per panel (≤ 64 KiB at N=64).
-const KC: usize = 256;
+/// Default K-panel height: `KC · N · 4` bytes of B per panel (≤ 64 KiB at
+/// N=64). The `_kc` driver variants take the height as a parameter for
+/// the bench autotune sweep; changing it never changes results (the
+/// per-element k order is panel-independent).
+pub(crate) const KC: usize = 256;
 
 /// SIMD register width the packed microkernel blocks on: 8 f32 lanes
 /// (one AVX2 `ymm` / two NEON `q` registers).
@@ -129,7 +145,7 @@ pub fn matmul_at_b_acc(a: &[f32], g: &[f32], out: &mut [f32], m: usize, k: usize
 /// remainder elements are appended scalar-wise. Plain `a * b + c`
 /// (separate rounding), no `mul_add` — see the module docs.
 #[inline]
-fn dot8(x: &[f32], y: &[f32]) -> f32 {
+pub(crate) fn dot8(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
     let mut lanes = [0.0f32; LANES];
     let xq = x.chunks_exact(LANES);
@@ -189,12 +205,21 @@ pub fn packed_len(k: usize, n: usize) -> usize {
 /// stored back). Offsets: panel starting at row `k0` lives at
 /// `k0 · pad_n`, block `jb` within it at `jb · kc · LANES`.
 pub fn pack_b(b: &[f32], pack: &mut [f32], k: usize, n: usize) {
+    pack_b_kc(b, pack, k, n, KC);
+}
+
+/// [`pack_b`] with an explicit panel height — the bench autotune sweep's
+/// entry point (`packed_len` is panel-height independent, so one pack
+/// buffer serves every candidate). Not part of the stable API.
+#[doc(hidden)]
+pub fn pack_b_kc(b: &[f32], pack: &mut [f32], k: usize, n: usize, kc_max: usize) {
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(pack.len(), packed_len(k, n));
+    debug_assert!(kc_max > 0);
     let pad_n = n.div_ceil(LANES) * LANES;
     let mut k0 = 0;
     while k0 < k {
-        let kc = KC.min(k - k0);
+        let kc = kc_max.min(k - k0);
         let panel = &mut pack[k0 * pad_n..(k0 + kc) * pad_n];
         for (jb, block) in panel.chunks_exact_mut(kc * LANES).enumerate() {
             let j0 = jb * LANES;
@@ -241,14 +266,33 @@ fn microkernel<const R: usize>(
     }
 }
 
-/// `out += a · b` with `b` pre-packed ([`pack_b`]) — bitwise identical to
-/// [`acc_panels`] (same per-element k order), register-tiled.
-fn acc_panels_packed(a: &[f32], bpack: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+/// `out += a · b` with `b` pre-packed ([`pack_b`]) — the scalar tier is
+/// bitwise identical to [`acc_panels`] (same per-element k order),
+/// register-tiled; the SIMD tier runs the same loops through AVX2/FMA
+/// (tolerance-equal, see the module docs).
+fn acc_panels_packed(
+    a: &[f32],
+    bpack: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kc_max: usize,
+    tier: KernelTier,
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if tier == KernelTier::Simd {
+        // SAFETY: `KernelTier::Simd` is only ever constructed after
+        // `KernelTier::detect` verified AVX2+FMA on this CPU.
+        unsafe { simd::acc_panels_packed(a, bpack, out, m, k, n, kc_max) };
+        return;
+    }
+    let _ = tier;
     let pad_n = n.div_ceil(LANES) * LANES;
     let nb = n.div_ceil(LANES);
     let mut k0 = 0;
     while k0 < k {
-        let kc = KC.min(k - k0);
+        let kc = kc_max.min(k - k0);
         let panel = &bpack[k0 * pad_n..(k0 + kc) * pad_n];
         for jb in 0..nb {
             let block = &panel[jb * kc * LANES..(jb + 1) * kc * LANES];
@@ -271,11 +315,38 @@ fn acc_panels_packed(a: &[f32], bpack: &[f32], out: &mut [f32], m: usize, k: usi
 /// Bias-seeded packed forward product: `out[i,:] = bias + a[i,:] · B`
 /// with `B` pre-packed. Shared by the dense forward and the fused
 /// im2col+matmul conv tiles (`conv::forward_into`).
-pub(crate) fn bias_acc_packed(a: &[f32], bpack: &[f32], bias: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+pub(crate) fn bias_acc_packed(
+    a: &[f32],
+    bpack: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tier: KernelTier,
+) {
+    bias_acc_packed_kc(a, bpack, bias, out, m, k, n, KC, tier);
+}
+
+/// [`bias_acc_packed`] with an explicit panel height (pack with the same
+/// `kc_max` via [`pack_b_kc`]) — the autotune sweep's compute entry
+/// point. Not part of the stable API.
+#[doc(hidden)]
+pub fn bias_acc_packed_kc(
+    a: &[f32],
+    bpack: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kc_max: usize,
+    tier: KernelTier,
+) {
     for row in out.chunks_exact_mut(n) {
         row.copy_from_slice(bias);
     }
-    acc_panels_packed(a, bpack, out, m, k, n);
+    acc_panels_packed(a, bpack, out, m, k, n, kc_max, tier);
 }
 
 /// `out[kk - k_lo, :] += Σ_i a[i, kk] · g[i, :]` for the dW row range
@@ -284,7 +355,24 @@ pub(crate) fn bias_acc_packed(a: &[f32], bpack: &[f32], bias: &[f32], out: &mut 
 /// panel ascending) — the same per-element order as [`matmul_at_b_acc`],
 /// hence bitwise equal. The coefficient walk `a[i·k + kk]` is strided;
 /// the packed `g` panel it multiplies is the contiguous stream.
-fn at_b_acc_packed_rows(a: &[f32], gpack: &[f32], out: &mut [f32], m: usize, k: usize, n: usize, k_lo: usize) {
+fn at_b_acc_packed_rows(
+    a: &[f32],
+    gpack: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    k_lo: usize,
+    tier: KernelTier,
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if tier == KernelTier::Simd {
+        // SAFETY: `KernelTier::Simd` is only ever constructed after
+        // `KernelTier::detect` verified AVX2+FMA on this CPU.
+        unsafe { simd::at_b_acc_packed_rows(a, gpack, out, m, k, n, k_lo) };
+        return;
+    }
+    let _ = tier;
     let kr = out.len() / n;
     debug_assert_eq!(out.len(), kr * n);
     debug_assert!(k_lo + kr <= k);
@@ -394,7 +482,7 @@ fn matmul_bias_tiled_t(
         } else {
             let pack = &mut pack[..packed_len(k, n)];
             pack_b(w, pack, k, n);
-            bias_acc_packed(a, pack, bias, out, m, k, n);
+            bias_acc_packed(a, pack, bias, out, m, k, n, par.tier);
         }
         return;
     }
@@ -412,7 +500,7 @@ fn matmul_bias_tiled_t(
         // SAFETY: tiles own the disjoint row ranges [i0, i1) of `out`,
         // and `par.run` returns before the `out` borrow ends.
         let tile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * n), (i1 - i0) * n) };
-        bias_acc_packed(&a[i0 * k..i1 * k], pack, bias, tile, i1 - i0, k, n);
+        bias_acc_packed(&a[i0 * k..i1 * k], pack, bias, tile, i1 - i0, k, n, par.tier);
     });
 }
 
@@ -456,7 +544,7 @@ fn matmul_at_b_acc_tiled_t(
         } else {
             let pack = &mut pack[..packed_len(m, n)];
             pack_b(g, pack, m, n);
-            at_b_acc_packed_rows(a, pack, out, m, k, n, 0);
+            at_b_acc_packed_rows(a, pack, out, m, k, n, 0, par.tier);
         }
         return;
     }
@@ -474,7 +562,7 @@ fn matmul_at_b_acc_tiled_t(
         // SAFETY: tiles own the disjoint dW row ranges [lo, hi) of `out`,
         // and `par.run` returns before the `out` borrow ends.
         let tile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo * n), (hi - lo) * n) };
-        at_b_acc_packed_rows(a, pack, tile, m, k, n, lo);
+        at_b_acc_packed_rows(a, pack, tile, m, k, n, lo, par.tier);
     });
 }
 
@@ -485,13 +573,28 @@ pub fn matmul_a_bt_tiled(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usi
     matmul_a_bt_tiled_t(g, w, out, m, n, k, par, gemm_tile_threads(m, n, k, par));
 }
 
+/// Tier dispatch for one `A·Bᵀ` row range: the SIMD tier replaces the
+/// scalar [`dot8`] row products with fused f32x8 dots (same lane split
+/// and reduction tree, fused rounding).
+fn a_bt_rows(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize, tier: KernelTier) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if tier == KernelTier::Simd {
+        // SAFETY: `KernelTier::Simd` is only ever constructed after
+        // `KernelTier::detect` verified AVX2+FMA on this CPU.
+        unsafe { simd::matmul_a_bt(g, w, out, m, n, k) };
+        return;
+    }
+    let _ = tier;
+    matmul_a_bt(g, w, out, m, n, k);
+}
+
 fn matmul_a_bt_tiled_t(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize, par: Par, t: usize) {
     debug_assert_eq!(g.len(), m * n, "G is [m,n]");
     debug_assert_eq!(w.len(), k * n, "W is [k,n]");
     debug_assert_eq!(out.len(), m * k, "out is [m,k]");
     let t = t.min(m).max(1);
     if t <= 1 {
-        matmul_a_bt(g, w, out, m, n, k);
+        a_bt_rows(g, w, out, m, n, k, par.tier);
         return;
     }
     let chunk = m.div_ceil(t);
@@ -505,7 +608,7 @@ fn matmul_a_bt_tiled_t(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize
         // SAFETY: tiles own the disjoint row ranges [i0, i1) of `out`,
         // and `par.run` returns before the `out` borrow ends.
         let tile = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * k), (i1 - i0) * k) };
-        matmul_a_bt(&g[i0 * n..i1 * n], w, tile, i1 - i0, n, k);
+        a_bt_rows(&g[i0 * n..i1 * n], w, tile, i1 - i0, n, k, par.tier);
     });
 }
 
@@ -648,7 +751,7 @@ mod tests {
             let mut packed = vec![f32::NAN; m * n];
             let mut pack = vec![f32::NAN; packed_len(k, n)];
             pack_b(&w, &mut pack, k, n);
-            bias_acc_packed(&a, &pack, &bias, &mut packed, m, k, n);
+            bias_acc_packed(&a, &pack, &bias, &mut packed, m, k, n, KernelTier::Scalar);
             assert_eq!(scalar, packed, "matmul_bias m{m} k{k} n{n}");
 
             let mut scalar = vec![0.25; k * n];
@@ -656,8 +759,103 @@ mod tests {
             let mut packed = vec![0.25; k * n];
             let mut pack = vec![f32::NAN; packed_len(m, n)];
             pack_b(&g, &mut pack, m, n);
-            at_b_acc_packed_rows(&a, &pack, &mut packed, m, k, n, 0);
+            at_b_acc_packed_rows(&a, &pack, &mut packed, m, k, n, 0, KernelTier::Scalar);
             assert_eq!(scalar, packed, "matmul_at_b_acc m{m} k{k} n{n}");
+        }
+    }
+
+    /// Panel height is a pure scheduling knob: every `kc` candidate the
+    /// autotune sweep tries must be bitwise identical to the default
+    /// (per-element k order is panel-independent — k ascending within a
+    /// panel, panels ascending, and panel edges never reorder elements).
+    #[test]
+    fn panel_height_candidates_are_bitwise_identical() {
+        let mut rng = Rng::new(11);
+        for (m, k, n) in [(9, 513, 20), (16, 300, 9), (5, 64, 3)] {
+            let a = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, k * n);
+            let bias = rand_vec(&mut rng, n);
+            let mut reference = vec![f32::NAN; m * n];
+            let mut pack = vec![f32::NAN; packed_len(k, n)];
+            pack_b(&w, &mut pack, k, n);
+            bias_acc_packed(&a, &pack, &bias, &mut reference, m, k, n, KernelTier::Scalar);
+            for kc in [16usize, 64, 128, 512] {
+                let mut out = vec![f32::NAN; m * n];
+                pack_b_kc(&w, &mut pack, k, n, kc);
+                bias_acc_packed_kc(&a, &pack, &bias, &mut out, m, k, n, kc, KernelTier::Scalar);
+                assert_eq!(reference, out, "kc{kc} m{m} k{k} n{n}");
+            }
+        }
+    }
+
+    /// SIMD-tier property test: the AVX2/FMA kernels must agree with the
+    /// scalar reference to ≤1e-5 relative across the GEMM family (FMA
+    /// fuses rounding, so bitwise equality is not expected). Runs only
+    /// when the build opted into `simd` *and* the CPU has the features —
+    /// otherwise the tier cannot be constructed and the test is vacuous.
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_tier_matches_scalar_within_tolerance() {
+        if KernelTier::detect() != KernelTier::Simd {
+            eprintln!("skipping: CPU lacks AVX2+FMA");
+            return;
+        }
+        let simd = Par::serial().with_tier(KernelTier::Simd);
+        let mut rng = Rng::new(12);
+        for (m, k, n) in [(4, 257, 8), (7, 300, 9), (10, 512, 64), (9, 513, 20), (300, 20, 9), (64, 2304, 64)] {
+            let a = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, k * n);
+            let g = rand_vec(&mut rng, m * n);
+            let bias = rand_vec(&mut rng, n);
+
+            let mut reference = vec![0.0; m * n];
+            matmul_bias(&a, &w, &bias, &mut reference, m, k, n);
+            let mut out = vec![f32::NAN; m * n];
+            let mut pack = vec![f32::NAN; packed_len(k, n)];
+            matmul_bias_tiled(&a, &w, &bias, &mut out, m, k, n, &mut pack, simd);
+            assert_close(&out, &reference, 1e-5, "simd matmul_bias");
+
+            let mut reference = vec![0.25; k * n];
+            matmul_at_b_acc(&a, &g, &mut reference, m, k, n);
+            let mut out = vec![0.25; k * n];
+            let mut pack = vec![f32::NAN; packed_len(m, n)];
+            matmul_at_b_acc_tiled(&a, &g, &mut out, m, k, n, &mut pack, simd);
+            assert_close(&out, &reference, 1e-5, "simd matmul_at_b_acc");
+
+            let mut reference = vec![0.0; m * k];
+            matmul_a_bt(&g, &w, &mut reference, m, n, k);
+            let mut out = vec![f32::NAN; m * k];
+            matmul_a_bt_tiled(&g, &w, &mut out, m, n, k, simd);
+            assert_close(&out, &reference, 1e-5, "simd matmul_a_bt");
+        }
+    }
+
+    /// The SIMD tier's determinism contract: identical results across
+    /// {serial, scoped, pool} × thread counts *within* the tier.
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_tier_is_deterministic_across_modes() {
+        if KernelTier::detect() != KernelTier::Simd {
+            eprintln!("skipping: CPU lacks AVX2+FMA");
+            return;
+        }
+        let mut rng = Rng::new(13);
+        let pool = WorkerPool::new(2);
+        let (m, k, n) = (16, 300, 9);
+        let a = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let bias = rand_vec(&mut rng, n);
+        let mut reference = vec![f32::NAN; m * n];
+        let mut pack = vec![f32::NAN; packed_len(k, n)];
+        let serial = Par::serial().with_tier(KernelTier::Simd);
+        matmul_bias_tiled_t(&a, &w, &bias, &mut reference, m, k, n, &mut pack, serial, 1);
+        for threads in [2usize, 3, 8] {
+            for par in [Par::scoped(threads), Par::pool(&pool)] {
+                let simd = par.with_tier(KernelTier::Simd);
+                let mut out = vec![f32::NAN; m * n];
+                matmul_bias_tiled_t(&a, &w, &bias, &mut out, m, k, n, &mut pack, simd, threads);
+                assert_eq!(reference, out, "simd determinism t{threads}");
+            }
         }
     }
 
@@ -677,7 +875,7 @@ mod tests {
                 // the _t variants take the tile count directly, bypassing
                 // the volume floor so real tiles run at these toy sizes;
                 // scoped and pooled dispatch run the same tiles
-                let modes: [(&str, Par); 2] = [("scoped", Par::Scoped(threads)), ("pool", Par::Pool(&pool))];
+                let modes: [(&str, Par); 2] = [("scoped", Par::scoped(threads)), ("pool", Par::pool(&pool))];
                 for (mode, par) in modes {
                     let mut serial = vec![0.0; m * n];
                     matmul_bias(&a, &w, &bias, &mut serial, m, k, n);

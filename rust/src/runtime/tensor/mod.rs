@@ -32,11 +32,15 @@
 //! (`runtime/workspace.rs`), whose slots the plans size at compile time —
 //! steady-state training performs **zero heap allocations**, including
 //! with thread tiling active. The hot loops take a
-//! [`Par`](crate::runtime::pool::Par) scheduling mode (serial / scoped
-//! spawns / the workspace's persistent `WorkerPool`); tiles own disjoint
-//! output elements with unchanged per-element accumulation order, so
-//! tiled results are bitwise identical to serial at any thread count and
-//! under every mode.
+//! [`Par`](crate::runtime::pool::Par) execution context: a scheduling
+//! mode (serial / scoped spawns / the workspace's persistent
+//! `WorkerPool`) plus a [`KernelTier`](crate::runtime::pool::KernelTier)
+//! selecting the microkernel implementation ([`simd`] holds the AVX2/FMA
+//! f32x8 tier, feature-gated and runtime-detected; the scalar tier is
+//! the reference). Tiles own disjoint output elements with unchanged
+//! per-element accumulation order, so within a tier, tiled results are
+//! identical to serial at any thread count and under every mode — and
+//! the scalar tier is bitwise reproducible everywhere.
 //!
 //! Everything here is plain data + `&self`-free functions, callable
 //! concurrently from the engine's per-learner worker threads. The only
@@ -55,6 +59,8 @@ pub mod graph;
 pub mod matmul;
 pub mod pool;
 pub mod seq;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub(crate) mod simd;
 
 pub use graph::{Act, LayerGraph};
 pub use seq::SeqGraph;
@@ -87,11 +93,14 @@ impl ModelPlan {
         }
     }
 
-    /// Steady-state scratch footprint of one train/eval step at batch `b`.
-    pub fn workspace_bytes(&self, b: usize) -> usize {
+    /// Steady-state scratch footprint of one train/eval step at batch `b`
+    /// under an intra-step thread budget of `threads` (the attention
+    /// score stripes scale with `min(threads, b·heads)` — see
+    /// [`SeqGraph::prepare_scratch`]; image/dense graphs ignore it).
+    pub fn workspace_bytes(&self, b: usize, threads: usize) -> usize {
         match self {
             ModelPlan::Layer(g) => g.workspace_bytes(b),
-            ModelPlan::Seq(g) => g.workspace_bytes(b),
+            ModelPlan::Seq(g) => g.workspace_bytes(b, threads),
         }
     }
 
@@ -103,12 +112,24 @@ impl ModelPlan {
         }
     }
 
-    /// Bytes of the attention-specific scratch (scores, head-layout
-    /// gradients, staging) — `None` for image/dense graphs.
-    pub fn attn_scratch_bytes(&self, b: usize) -> Option<usize> {
+    /// Bytes of the attention-specific scratch (score stripes, head-layout
+    /// gradients, staging) at the given thread budget — `None` for
+    /// image/dense graphs.
+    pub fn attn_scratch_bytes(&self, b: usize, threads: usize) -> Option<usize> {
         match self {
             ModelPlan::Layer(_) => None,
-            ModelPlan::Seq(g) => Some(g.attn_scratch_bytes(b)),
+            ModelPlan::Seq(g) => Some(g.attn_scratch_bytes(b, threads)),
+        }
+    }
+
+    /// What the attention scratch would cost with the retired S²-resident
+    /// per-(batch, head) score plan — the baseline the KV-blocked
+    /// streaming forward + per-stripe backward are measured against
+    /// (`dynavg models` prints the delta).
+    pub fn attn_scratch_bytes_resident(&self, b: usize) -> Option<usize> {
+        match self {
+            ModelPlan::Layer(_) => None,
+            ModelPlan::Seq(g) => Some(g.attn_scratch_bytes_resident(b)),
         }
     }
 
@@ -121,11 +142,12 @@ impl ModelPlan {
         }
     }
 
-    /// Size every arena slot for batch `b` (idempotent warm-up).
-    pub(crate) fn prepare_scratch(&self, b: usize, s: &mut Scratch) {
+    /// Size every arena slot for batch `b` at the given intra-step thread
+    /// budget (idempotent warm-up; slots only grow).
+    pub(crate) fn prepare_scratch(&self, b: usize, threads: usize, s: &mut Scratch) {
         match self {
             ModelPlan::Layer(g) => g.prepare_scratch(b, s),
-            ModelPlan::Seq(g) => g.prepare_scratch(b, s),
+            ModelPlan::Seq(g) => g.prepare_scratch(b, threads, s),
         }
     }
 }
@@ -147,10 +169,29 @@ mod tests {
         ));
         let plan = ModelPlan::from_model(manifest.model("transformer_lm").unwrap()).unwrap();
         assert_eq!(plan.param_count(), 35_680);
-        assert!(plan.attn_scratch_bytes(10).is_some());
-        assert!(plan.attn_scratch_bytes(10).unwrap() < plan.workspace_bytes(10));
+        assert!(plan.attn_scratch_bytes(10, 1).is_some());
+        assert!(plan.attn_scratch_bytes(10, 1).unwrap() < plan.workspace_bytes(10, 1));
         let plan = ModelPlan::from_model(manifest.model("mnist_cnn").unwrap()).unwrap();
-        assert!(plan.attn_scratch_bytes(10).is_none());
+        assert!(plan.attn_scratch_bytes(10, 1).is_none());
+        assert!(plan.attn_scratch_bytes_resident(10).is_none());
         assert!(plan.train_flops(10) > 0.0);
+    }
+
+    /// The acceptance bar of the KV-blocked streaming plan: at S=256 the
+    /// attention scratch must cost ≤35% of the retired S²-resident plan
+    /// (and strictly shrink with the sequence squared term gone), at
+    /// thread budgets up to 8.
+    #[test]
+    fn streaming_attn_scratch_beats_resident_plan_at_s256() {
+        let manifest = crate::runtime::native::synthetic_manifest();
+        let plan = ModelPlan::from_model(manifest.model("transformer_lm_s256").unwrap()).unwrap();
+        let resident = plan.attn_scratch_bytes_resident(10).unwrap() as f64;
+        for threads in [1usize, 4, 8] {
+            let streaming = plan.attn_scratch_bytes(10, threads).unwrap() as f64;
+            assert!(
+                streaming <= 0.35 * resident,
+                "t={threads}: streaming {streaming} vs resident {resident}"
+            );
+        }
     }
 }

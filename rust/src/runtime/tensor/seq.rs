@@ -31,8 +31,13 @@
 //! `x1 = x0 + attn(ln(x0))`), so at most one residual delta is in flight
 //! at any point of the reverse sweep. Attention probabilities are
 //! rematerialized per (batch, head) cell rather than stored per layer —
-//! the same choice as the python custom VJP — which caps the score
-//! memory at `2·b·h·s²` floats for the whole model.
+//! the same choice as the python custom VJP — and the score slots are
+//! sized **per dispatch stripe, not per cell**: the forward streams
+//! KV-blocked `Bc`-row score blocks ([`attn::attention_streaming_fwd`],
+//! bitwise identical to the resident-score reference), the backward
+//! reuses one `s²` P/dP stripe per tile, so the whole model's score
+//! memory is `2·min(threads, b·h)·s²` floats instead of `2·b·h·s²` —
+//! what lets the `transformer_lm_s256` manifest train in a modest arena.
 
 use anyhow::{Context, Result};
 
@@ -406,9 +411,18 @@ impl SeqGraph {
         fixed.max(matmul::packed_len(b * self.s, n_max))
     }
 
-    /// Size every [`Scratch`] slot for batch `b`. Idempotent; capacities
-    /// only grow, so steady state allocates nothing.
-    pub(crate) fn prepare_scratch(&self, b: usize, s: &mut Scratch) {
+    /// Attention score stripes provisioned for batch `b` under an
+    /// intra-step thread budget of `threads`: one stripe per dispatch
+    /// tile, and the attention kernels never tile wider than
+    /// `min(threads, b·heads)` cells.
+    fn score_stripes(&self, b: usize, threads: usize) -> usize {
+        threads.min(b * self.heads).max(1)
+    }
+
+    /// Size every [`Scratch`] slot for batch `b` at an intra-step thread
+    /// budget of `threads`. Idempotent; capacities only grow, so steady
+    /// state allocates nothing.
+    pub(crate) fn prepare_scratch(&self, b: usize, threads: usize, s: &mut Scratch) {
         let n = self.n_acts();
         if s.acts.len() != n {
             s.acts.resize_with(n, Vec::new);
@@ -423,10 +437,13 @@ impl SeqGraph {
         for st in s.stats.iter_mut() {
             sized(st, 2 * b * self.s);
         }
-        let bh = b * self.heads;
+        // Score slots are per dispatch stripe, not per (batch, head) cell:
+        // the streaming forward uses min(ATTN_BC, s)·s of each attn_p
+        // stripe, the backward one full s·s P/dP stripe per tile.
+        let nst = self.score_stripes(b, threads);
         sized(&mut s.wide, b * self.wide_unit());
-        sized(&mut s.attn_p, bh * self.s * self.s);
-        sized(&mut s.attn_dp, bh * self.s * self.s);
+        sized(&mut s.attn_p, nst * self.s * self.s);
+        sized(&mut s.attn_dp, nst * self.s * self.s);
         sized(&mut s.dheads, 4 * b * self.s * self.d);
         sized(&mut s.resid, b * self.s * self.d);
         sized(&mut s.delta, b * self.delta_unit());
@@ -440,21 +457,30 @@ impl SeqGraph {
         4 * self.pack_len(b)
     }
 
-    /// Bytes of the attention-specific scratch at batch `b`: score +
-    /// score-gradient tiles, head-layout gradients, the staging buffer and
-    /// the pending-residual buffer (surfaced by `dynavg models`).
-    pub fn attn_scratch_bytes(&self, b: usize) -> usize {
+    /// Bytes of the attention-specific scratch at batch `b` under a
+    /// thread budget of `threads`: per-stripe score + score-gradient
+    /// slots, head-layout gradients, the staging buffer and the
+    /// pending-residual buffer (surfaced by `dynavg models`).
+    pub fn attn_scratch_bytes(&self, b: usize, threads: usize) -> usize {
+        let nst = self.score_stripes(b, threads);
+        4 * (2 * nst * self.s * self.s + 4 * b * self.s * self.d + b * self.wide_unit() + b * self.s * self.d)
+    }
+
+    /// What the attention scratch would cost with the retired S²-resident
+    /// plan (one score + one score-gradient tile per (batch, head) cell) —
+    /// the baseline `dynavg models` prints the streaming delta against.
+    pub fn attn_scratch_bytes_resident(&self, b: usize) -> usize {
         let bh = b * self.heads;
         4 * (2 * bh * self.s * self.s + 4 * b * self.s * self.d + b * self.wide_unit() + b * self.s * self.d)
     }
 
-    /// Steady-state scratch footprint of one train/eval step at batch `b`,
-    /// in bytes (the whole per-learner arena).
-    pub fn workspace_bytes(&self, b: usize) -> usize {
+    /// Steady-state scratch footprint of one train/eval step at batch `b`
+    /// and thread budget `threads`, in bytes (the whole per-learner arena).
+    pub fn workspace_bytes(&self, b: usize, threads: usize) -> usize {
         let acts: usize = (0..self.n_acts()).map(|i| b * self.act_unit(i)).sum();
         let stats = (2 * self.blocks.len() + 1) * 2 * b * self.s;
         4 * (acts + stats + 2 * b * self.delta_unit() + self.pack_len(b) + self.param_count)
-            + self.attn_scratch_bytes(b)
+            + self.attn_scratch_bytes(b, threads)
     }
 
     /// Approximate FLOPs of one train step at batch `b`: 2·M·K·N per GEMM
@@ -477,13 +503,13 @@ impl SeqGraph {
 
     /// Run the plan forward into the scratch arena: activations land in
     /// `s.acts` (site indices above), LN stats in `s.stats`, attention
-    /// probabilities in `s.attn_p`. `tokens` is the flat `[b, win]`
-    /// window batch (validated by [`SeqGraph::check_tokens`]); only
-    /// positions `0..s` feed the model.
+    /// scores stream through the per-stripe `s.attn_p` slot. `tokens` is
+    /// the flat `[b, win]` window batch (validated by
+    /// [`SeqGraph::check_tokens`]); only positions `0..s` feed the model.
     pub(crate) fn forward_into(&self, params: &[f32], tokens: &[i32], b: usize, sc: &mut Scratch, par: Par) {
         debug_assert_eq!(params.len(), self.param_count);
         debug_assert_eq!(tokens.len(), b * self.win);
-        self.prepare_scratch(b, sc);
+        self.prepare_scratch(b, par.threads(), sc);
         let (d, s, ff, v, heads) = (self.d, self.s, self.ff, self.v, self.heads);
         let hd = d / heads;
         let m = b * s;
@@ -538,9 +564,20 @@ impl SeqGraph {
                 let (_, rest) = acts.split_at_mut(base + 1);
                 attn::split_qkv_heads(&wide[..m * 3 * d], &mut rest[0], b, heads, s, hd);
             }
-            // per-cell causal SDPA into `wide` (head layout), merged to o
+            // per-cell causal SDPA into `wide` (head layout), merged to o —
+            // KV-blocked streaming scores, bitwise equal to the resident path
             {
-                attn::attention_fwd(&acts[base + 1], attn_p, &mut wide[..m * d], b, heads, s, hd, par);
+                attn::attention_streaming_fwd(
+                    &acts[base + 1],
+                    attn_p,
+                    &mut wide[..m * d],
+                    b,
+                    heads,
+                    s,
+                    hd,
+                    attn::ATTN_BC,
+                    par,
+                );
                 let (_, rest) = acts.split_at_mut(base + 2);
                 attn::merge_heads(&wide[..m * d], &mut rest[0], b, heads, s, hd);
             }
@@ -827,14 +864,14 @@ impl SeqGraph {
     /// and one-shot callers; the hot path holds a `Workspace`.
     pub fn loss_grad(&self, params: &[f32], tokens: &[i32], b: usize) -> (f32, f32, Vec<f32>) {
         let mut sc = Scratch::new();
-        let (loss, metric) = self.loss_grad_into(params, tokens, b, &mut sc, Par::Serial);
+        let (loss, metric) = self.loss_grad_into(params, tokens, b, &mut sc, Par::serial());
         (loss, metric, std::mem::take(&mut sc.grad))
     }
 
     /// Loss + metric only (allocating convenience over [`SeqGraph::eval_into`]).
     pub fn eval(&self, params: &[f32], tokens: &[i32], b: usize) -> (f32, f32) {
         let mut sc = Scratch::new();
-        self.eval_into(params, tokens, b, &mut sc, Par::Serial)
+        self.eval_into(params, tokens, b, &mut sc, Par::serial())
     }
 }
 
@@ -982,10 +1019,10 @@ mod tests {
         let (l0, m0, g0) = graph.loss_grad(&params, &tokens, 4);
         let mut sc = Scratch::new();
         let modes: [(&str, Par); 4] = [
-            ("serial", Par::Serial),
-            ("scoped2", Par::Scoped(2)),
-            ("scoped5", Par::Scoped(5)),
-            ("pool", Par::Pool(&wp)),
+            ("serial", Par::serial()),
+            ("scoped2", Par::scoped(2)),
+            ("scoped5", Par::scoped(5)),
+            ("pool", Par::pool(&wp)),
         ];
         for (mode, par) in modes {
             let (l, m) = graph.loss_grad_into(&params, &tokens, 4, &mut sc, par);
@@ -995,10 +1032,10 @@ mod tests {
         // batch-size change in the same arena (shrink, then regrow)
         let t1 = token_windows(&graph, 23, 1);
         let (l1, m1, g1) = graph.loss_grad(&params, &t1, 1);
-        let (l, m) = graph.loss_grad_into(&params, &t1, 1, &mut sc, Par::Scoped(3));
+        let (l, m) = graph.loss_grad_into(&params, &t1, 1, &mut sc, Par::scoped(3));
         assert_eq!((l, m), (l1, m1), "b=1");
         assert_eq!(sc.grad, g1, "b=1 gradient");
-        let (l, m) = graph.loss_grad_into(&params, &tokens, 4, &mut sc, Par::Pool(&wp));
+        let (l, m) = graph.loss_grad_into(&params, &tokens, 4, &mut sc, Par::pool(&wp));
         assert_eq!((l, m), (l0, m0), "regrown");
         assert_eq!(sc.grad, g0, "regrown gradient");
     }
@@ -1012,11 +1049,11 @@ mod tests {
         let params = init_params(&graph, 3);
         let mut sc = Scratch::new();
         let mut tokens = token_windows(&graph, 4, 1);
-        graph.forward_into(&params, &tokens, 1, &mut sc, Par::Serial);
+        graph.forward_into(&params, &tokens, 1, &mut sc, Par::serial());
         let logits_a = sc.acts.last().unwrap().clone();
         let (_, _, _, s, _, _) = graph.dims();
         tokens[s] = (tokens[s] + 1) % 13; // last input token (position s-1)
-        graph.forward_into(&params, &tokens, 1, &mut sc, Par::Serial);
+        graph.forward_into(&params, &tokens, 1, &mut sc, Par::serial());
         let logits_b = sc.acts.last().unwrap().clone();
         let v = 13;
         assert_eq!(
@@ -1062,10 +1099,15 @@ mod tests {
         let info = tiny_lm();
         let graph = SeqGraph::from_model(&info).unwrap();
         assert_eq!(graph.param_count, 1133, "tiny P matches the mirror");
-        let ws1 = graph.workspace_bytes(1);
-        assert!(ws1 > 0 && graph.workspace_bytes(8) > 4 * ws1, "footprint scales with b");
+        let ws1 = graph.workspace_bytes(1, 1);
+        assert!(ws1 > 0 && graph.workspace_bytes(8, 1) > 4 * ws1, "footprint scales with b");
         assert!(graph.pack_bytes(1) > 0);
-        assert!(graph.attn_scratch_bytes(1) > 0);
+        assert!(graph.attn_scratch_bytes(1, 1) > 0);
+        // score stripes follow the thread budget, capped at b·heads cells
+        let (_, _, h, _, _, _) = graph.dims();
+        assert!(graph.attn_scratch_bytes(1, 2) > graph.attn_scratch_bytes(1, 1));
+        assert_eq!(graph.attn_scratch_bytes(1, h), graph.attn_scratch_bytes(1, h + 5));
+        assert_eq!(graph.attn_scratch_bytes_resident(1), graph.attn_scratch_bytes(1, usize::MAX));
         // flops: every dense GEMM counts 3 passes, attention 7 cell GEMMs
         let (v, d, h, s, ff, _) = graph.dims();
         let m = 2 * s;

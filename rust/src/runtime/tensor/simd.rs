@@ -1,0 +1,196 @@
+//! Explicit AVX2/FMA f32x8 microkernels — the `KernelTier::Simd` tier.
+//!
+//! Same pack layout ([`super::matmul::pack_b`]), same loop structure, same tile
+//! decomposition as the scalar reference in `matmul.rs`; only the inner
+//! multiply-accumulate runs through `core::arch` intrinsics with
+//! `_mm256_fmadd_ps`. FMA fuses the multiply-add rounding step the
+//! scalar kernels perform separately, so this tier is **tolerance-equal**
+//! (≤1e-5 relative, pinned by the property tests in `matmul.rs`) to the
+//! scalar reference, not bitwise — but per-output-element accumulation
+//! order is unchanged, so results stay deterministic across {serial,
+//! scoped, pool} × thread counts *within* the tier.
+//!
+//! Compiled only under `--features simd` on x86-64 (see `tensor/mod.rs`).
+//!
+//! # Safety
+//!
+//! Every function here carries `#[target_feature(enable = "avx2",
+//! enable = "fma")]` and is `unsafe` to call: the caller must guarantee
+//! the CPU supports both feature sets. The only callers are the tier
+//! dispatch branches in `matmul.rs`/`conv.rs` via `KernelTier::Simd`,
+//! which is only ever constructed after
+//! [`KernelTier::detect`](super::super::pool::KernelTier::detect)
+//! verified the features at runtime. Partial-width column blocks use
+//! `vmaskmovps` loads/stores (`_mm256_maskload_ps`/`_mm256_maskstore_ps`),
+//! which suppress access to masked-off lanes — so edge blocks never read
+//! or write past the end of the output slice.
+
+use std::arch::x86_64::{
+    __m256i, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_loadu_si256, _mm256_maskload_ps,
+    _mm256_maskstore_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+};
+
+use super::matmul::{KC, LANES, MR};
+
+/// Lane mask for a column block of width `w` (`-1` = lane active):
+/// `vmaskmovps` touches only the active lanes.
+#[inline(always)]
+fn lane_mask(w: usize) -> __m256i {
+    let lanes: [i32; LANES] = std::array::from_fn(|l| if l < w { -1 } else { 0 });
+    // SAFETY: `lanes` is a live, aligned-enough (loadu) [i32; 8].
+    unsafe { _mm256_loadu_si256(lanes.as_ptr().cast()) }
+}
+
+/// The f32x8 register block: `acc[r] = fma(coeff[r·rstride + dk·dstride],
+/// block[dk·8..], acc[r])` over `R` output rows, seeded from / stored to
+/// the `mask`-active lanes of each output row. Mirrors
+/// `matmul::microkernel` with the two rounding steps fused.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn microkernel_f32x8<const R: usize>(
+    coeff: *const f32,
+    rstride: usize,
+    dstride: usize,
+    block: &[f32],
+    out: *mut f32,
+    ostride: usize,
+    mask: __m256i,
+) {
+    let mut acc = [_mm256_setzero_ps(); R];
+    for r in 0..R {
+        acc[r] = _mm256_maskload_ps(out.add(r * ostride), mask);
+    }
+    for (dk, bv) in block.chunks_exact(LANES).enumerate() {
+        let bv = _mm256_loadu_ps(bv.as_ptr());
+        for r in 0..R {
+            let av = _mm256_set1_ps(*coeff.add(r * rstride + dk * dstride));
+            acc[r] = _mm256_fmadd_ps(av, bv, acc[r]);
+        }
+    }
+    for r in 0..R {
+        _mm256_maskstore_ps(out.add(r * ostride), mask, acc[r]);
+    }
+}
+
+/// `out += a · b` with `b` pre-packed — the SIMD twin of the scalar
+/// `acc_panels_packed` (same panel walk, `kc_max`-parameterized for the
+/// autotune sweep).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn acc_panels_packed(
+    a: &[f32],
+    bpack: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kc_max: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    let pad_n = n.div_ceil(LANES) * LANES;
+    let nb = n.div_ceil(LANES);
+    let out = out.as_mut_ptr();
+    let a = a.as_ptr();
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = kc_max.min(k - k0);
+        let panel = &bpack[k0 * pad_n..(k0 + kc) * pad_n];
+        for jb in 0..nb {
+            let block = &panel[jb * kc * LANES..(jb + 1) * kc * LANES];
+            let j0 = jb * LANES;
+            let w = LANES.min(n - j0);
+            let mask = lane_mask(w);
+            let mut i = 0;
+            while i + MR <= m {
+                microkernel_f32x8::<MR>(a.add(i * k + k0), k, 1, block, out.add(i * n + j0), n, mask);
+                i += MR;
+            }
+            while i < m {
+                microkernel_f32x8::<1>(a.add(i * k + k0), k, 1, block, out.add(i * n + j0), n, mask);
+                i += 1;
+            }
+        }
+        k0 += kc;
+    }
+}
+
+/// `out[kk - k_lo, :] += Σ_i a[i, kk] · g[i, :]` with `g` pre-packed over
+/// M panels — the SIMD twin of the scalar `at_b_acc_packed_rows`.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn at_b_acc_packed_rows(
+    a: &[f32],
+    gpack: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    k_lo: usize,
+) {
+    let kr = out.len() / n;
+    debug_assert_eq!(out.len(), kr * n);
+    debug_assert!(k_lo + kr <= k);
+    let pad_n = n.div_ceil(LANES) * LANES;
+    let nb = n.div_ceil(LANES);
+    let out = out.as_mut_ptr();
+    let a = a.as_ptr();
+    let mut m0 = 0;
+    while m0 < m {
+        let mc = KC.min(m - m0);
+        let panel = &gpack[m0 * pad_n..(m0 + mc) * pad_n];
+        for jb in 0..nb {
+            let block = &panel[jb * mc * LANES..(jb + 1) * mc * LANES];
+            let j0 = jb * LANES;
+            let w = LANES.min(n - j0);
+            let mask = lane_mask(w);
+            let mut r = 0;
+            while r + MR <= kr {
+                microkernel_f32x8::<MR>(a.add(m0 * k + k_lo + r), 1, k, block, out.add(r * n + j0), n, mask);
+                r += MR;
+            }
+            while r < kr {
+                microkernel_f32x8::<1>(a.add(m0 * k + k_lo + r), 1, k, block, out.add(r * n + j0), n, mask);
+                r += 1;
+            }
+        }
+        m0 += mc;
+    }
+}
+
+/// Fused f32x8 dot product: one FMA accumulator over the lane-aligned
+/// prefix, reduced in the scalar `dot8` tree order
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, remainder appended scalar.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot8_f32x8(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let q = x.len() / LANES * LANES;
+    let mut acc = _mm256_setzero_ps();
+    let mut j = 0;
+    while j < q {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+        acc = _mm256_fmadd_ps(xv, yv, acc);
+        j += LANES;
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut sum = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3])) + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    for jj in q..x.len() {
+        sum += x[jj] * y[jj];
+    }
+    sum
+}
+
+/// `out = g · wᵀ` — the SIMD twin of the scalar `matmul_a_bt` (row dots
+/// through [`dot8_f32x8`]).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn matmul_a_bt(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (kk, o) in orow.iter_mut().enumerate() {
+            *o = dot8_f32x8(grow, &w[kk * n..(kk + 1) * n]);
+        }
+    }
+}

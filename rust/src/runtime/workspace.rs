@@ -23,7 +23,7 @@
 //! retained, so after warm-up at the largest batch a caller uses, no
 //! further allocation happens.
 
-use super::pool::WorkerPool;
+use super::pool::{KernelTier, WorkerPool};
 
 /// Per-caller execution arena: output slots (all backends) plus the native
 /// interpreter's scratch tensors and (optionally) a persistent worker
@@ -42,6 +42,12 @@ pub struct Workspace {
     /// to stand up persistent workers instead — same results, dispatch
     /// cost paid once per run, and zero steady-state allocations.
     pub threads: usize,
+    /// Microkernel tier the tiled kernels dispatch on
+    /// ([`KernelTier::detect`] at construction: the AVX2/FMA f32x8 path
+    /// when the `simd` feature is on and the CPU supports it, the scalar
+    /// bitwise reference otherwise). Callers pinning the cross-machine
+    /// bitwise contract set it back to [`KernelTier::Scalar`].
+    pub tier: KernelTier,
     /// Persistent tile workers ([`WorkerPool`]), owned by this workspace
     /// and shut down when it drops. `None` until `enable_pool`.
     pub(crate) pool: Option<WorkerPool>,
@@ -56,6 +62,7 @@ impl Workspace {
         Workspace {
             outputs: Vec::new(),
             threads: 1,
+            tier: KernelTier::detect(),
             pool: None,
             scratch: Scratch::new(),
         }
@@ -130,11 +137,14 @@ pub struct Scratch {
     /// token-major merge (forward), the merged dQKV and the FFN hidden
     /// gradient (backward). All uses are live at different times.
     pub(crate) wide: Vec<f32>,
-    /// Per-(batch, head) causal attention probabilities, `b·h·s·s`
-    /// (forward, and the FlashAttention-style recompute in backward).
+    /// Causal attention score stripes, `min(threads, b·h)·s·s`: each
+    /// dispatch tile owns one stripe (tile indices run exactly once per
+    /// dispatch — see [`Par::run`](super::pool::Par::run)), so the
+    /// footprint follows the thread budget instead of the cell count.
+    /// The streaming forward uses only `s·Bc` of each stripe.
     pub(crate) attn_p: Vec<f32>,
-    /// Backward score-space gradient `dP`/`dS`, `b·h·s·s` (needed
-    /// alongside `attn_p`: the softmax Jacobian reads both).
+    /// Backward score-space gradient `dP`/`dS`, one `s·s` stripe per
+    /// tile like `attn_p` (the softmax Jacobian reads both).
     pub(crate) attn_dp: Vec<f32>,
     /// Head-layout gradients, `4·b·s·d`: \[dO heads | dQ | dK | dV\].
     pub(crate) dheads: Vec<f32>,
@@ -240,24 +250,25 @@ mod tests {
 
     #[test]
     fn pool_follows_the_thread_budget() {
-        // the mode the native kernel derives from a workspace (the same
-        // expression NativeKernel::run_into builds after destructuring)
-        let mode = |ws: &Workspace| Par::new(ws.threads.max(1), ws.pool.as_ref());
+        use super::super::pool::ParMode;
+        // the context the native kernel derives from a workspace (the
+        // same expression NativeKernel::run_into builds)
+        let mode = |ws: &Workspace| Par::new(ws.threads.max(1), ws.pool.as_ref(), ws.tier).mode;
         let mut ws = Workspace::new();
         ws.enable_pool(); // threads == 1: nothing to pool
         assert_eq!(ws.pool_workers(), 0);
-        assert!(matches!(mode(&ws), Par::Serial));
+        assert!(matches!(mode(&ws), ParMode::Serial));
         ws.threads = 3;
-        assert!(matches!(mode(&ws), Par::Scoped(3)), "no pool yet: scoped spawns");
+        assert!(matches!(mode(&ws), ParMode::Scoped(3)), "no pool yet: scoped spawns");
         ws.enable_pool();
         assert_eq!(ws.pool_workers(), 2, "caller thread runs tile 0 itself");
-        assert!(matches!(mode(&ws), Par::Pool(_)));
+        assert!(matches!(mode(&ws), ParMode::Pool(_)));
         ws.enable_pool(); // idempotent at the same budget
         assert_eq!(ws.pool_workers(), 2);
         // a budget change without enable_pool must not widen the tiling:
         // the stale pool is ignored until rebuilt
         ws.threads = 5;
-        assert!(matches!(mode(&ws), Par::Scoped(5)));
+        assert!(matches!(mode(&ws), ParMode::Scoped(5)));
         ws.enable_pool(); // rebuilds for the new budget
         assert_eq!(ws.pool_workers(), 4);
         ws.disable_pool();

@@ -271,6 +271,38 @@ fn transformer_artifact_next_byte_learning() {
     assert!(stats.loss.is_finite() && (0.0..=1.0).contains(&stats.metric));
 }
 
+/// The S=256 manifest the KV-blocked streaming attention makes tractable:
+/// train steps run end-to-end at a small batch, the loss starts near
+/// ln(V) and moves downhill. (The bitwise streaming-vs-resident and
+/// scratch-ratio contracts are pinned in the tensor unit tests; this is
+/// the plumbing check that the long-sequence model actually trains.)
+#[test]
+fn transformer_s256_trains_with_streaming_attention() {
+    let rt = rt();
+    if rt.backend_name() != "native" {
+        return;
+    }
+    let mrt = ModelRuntime::load(rt, "transformer_lm_s256", "adam").unwrap();
+    let mut params = rt.init_params("transformer_lm_s256").unwrap();
+    let mut state = vec![0.0; mrt.train.exe.info.state_size];
+    let batch = dynavg::data::Stream::next_batch(
+        &mut dynavg::data::corpus::CorpusStream::new(4, 257),
+        2,
+    );
+    let mut ws = mrt.train.workspace();
+    let first = mrt.train.step(&mut params, &mut state, &batch, 0.002, &mut ws).unwrap();
+    assert!(
+        (3.0..6.5).contains(&first.loss),
+        "initial S=256 LM loss ~ln(V): {}",
+        first.loss
+    );
+    let mut last = first;
+    for _ in 0..3 {
+        last = mrt.train.step(&mut params, &mut state, &batch, 0.002, &mut ws).unwrap();
+    }
+    assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+}
+
 // ---- artifact-backend-only cases (driving CNN infer) --------------------
 
 #[cfg(feature = "backend-xla")]

@@ -74,13 +74,16 @@ fn steady_state_steps_allocate_nothing() {
 
     // train: the paper's CNN (the step the ROADMAP flagged), the driving
     // CNN (strided convs, no pool), a dense stack for the general claim,
-    // and the transformer LM (attention scratch, i32 windows, the
-    // precomputed dummy-y placeholder)
-    let cases: [(&str, fn() -> Batch); 4] = [
+    // the transformer LM (attention scratch, i32 windows, the
+    // precomputed dummy-y placeholder), and the S=256 LM (the KV-blocked
+    // streaming forward + per-stripe backward score slots must hold the
+    // contract too — a smaller arena is only a win if it stays warm)
+    let cases: [(&str, fn() -> Batch); 5] = [
         ("mnist_cnn", || MnistLike::new(5, 1).next_batch(10)),
         ("driving_cnn", || DrivingStream::new(5, 1, false).next_batch(10)),
         ("mnist_mlp", || MnistLike::new(5, 2).next_batch(10)),
         ("transformer_lm", || CorpusStream::new(5, 65).next_batch(10)),
+        ("transformer_lm_s256", || CorpusStream::new(5, 257).next_batch(2)),
     ];
     for (model, make_batch) in cases {
         let mrt = ModelRuntime::load(&rt, model, "sgd").unwrap();
