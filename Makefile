@@ -2,7 +2,7 @@
 # and must pass hermetically (no Python, no XLA, no artifacts, default
 # features — the native backend).
 
-.PHONY: verify build test fmt clippy xla-check simd-check bench-smoke bench-baseline bench-report mirror-check serve-smoke fleet-smoke ci artifacts
+.PHONY: verify build test fmt clippy xla-check simd-check bench-smoke bench-baseline bench-report mirror-check serve-smoke chaos-smoke fleet-smoke ci artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -67,6 +67,7 @@ mirror-check:
 	python3 python/tools/native_mirror.py fixed_batch
 	python3 python/tools/native_mirror.py wire_protocol
 	python3 python/tools/native_mirror.py fleet_protocol
+	python3 python/tools/native_mirror.py quorum_sync
 
 # Loopback coordinator end-to-end: serve + 4 clients, dense then int8;
 # the server fails unless measured wire bytes equal NetStats exactly.
@@ -83,6 +84,27 @@ serve-smoke: build
 	  wait; \
 	done; rm -f port.txt
 
+# Chaos smoke: the loopback coordinator with every accepted connection
+# wrapped in a seeded FaultyStream (drops, duplicates, per-op delays) and
+# quorum degradation armed. Stock clients reconnect and resume; the server
+# process itself fails unless the measured charged wire bytes equal the
+# NetStats accounting exactly, and the grep re-asserts the verdict line.
+chaos-smoke: build
+	@rm -f port.txt chaos.log; \
+	./target/release/dynavg serve --model mnist_logistic --m 4 --rounds 20 \
+	  --encoding dense --port 0 --port-file port.txt \
+	  --chaos-drop 0.01 --chaos-duplicate 0.02 --chaos-delay-ms 1 --chaos-seed 7 \
+	  --quorum 0.5 --round-deadline-secs 30 --dead-after-secs 60 \
+	  > chaos.log & serve=$$!; \
+	while [ ! -s port.txt ]; do sleep 0.1; done; \
+	for i in 1 2 3 4; do \
+	  ./target/release/dynavg connect --addr 127.0.0.1:$$(cat port.txt) || true & \
+	done; \
+	wait $$serve || { cat chaos.log; exit 1; }; \
+	wait; \
+	grep -q "charged == NetStats: verified" chaos.log || { cat chaos.log; exit 1; }; \
+	cat chaos.log; rm -f port.txt chaos.log
+
 # Fleet-scale smoke: m=256 dynamic-vs-periodic with C=0.25 sampling and
 # 5% dropout through the shared scheduler. The experiment driver itself
 # asserts the >=5x byte reduction and the arena-pool memory bound, so a
@@ -90,7 +112,7 @@ serve-smoke: build
 fleet-smoke: build
 	./target/release/dynavg exp fleet --scale small
 
-ci: fmt clippy xla-check simd-check verify serve-smoke fleet-smoke mirror-check bench-smoke
+ci: fmt clippy xla-check simd-check verify serve-smoke chaos-smoke fleet-smoke mirror-check bench-smoke
 
 # XLA artifact build (requires python + jax; NOT needed for tier-1).
 # Produces artifacts/manifest.json + HLO text for the conv/attention

@@ -924,18 +924,51 @@ def wire_protocol(m, rounds, lr, delta, check, seed):
     return bad
 
 
+class NetMirror:
+    """Deterministic slice of the rust link fault model (netsim/mod.rs):
+    fixed latency + serialization delay per link, and the deadline ->
+    rounds-late rule that turns a slow delivery into a net straggler.
+    The random knobs (drop / corrupt / jitter / duplicate) are
+    deliberately absent here — their draw-order parity is pinned on the
+    rust side (rust/tests/netsim.rs thread-count determinism); this
+    mirror pins the delay arithmetic the quorum scenario depends on.
+    Profiles are `(latency_ms, bandwidth_kbps)`, 0 bandwidth = infinite."""
+
+    def __init__(self, deadline_ms, default=(0.0, 0.0), overrides=None):
+        self.deadline = deadline_ms
+        self.default = default
+        self.overrides = dict(overrides or {})
+        self.shortfalls = 0
+
+    def transfer(self, link, frame_bytes):
+        """Rounds of lateness for one logical frame over `link`
+        (0 = arrives within the round deadline)."""
+        lat, bw = self.overrides.get(link, self.default)
+        delay = lat + (frame_bytes * 8.0 / bw if bw > 0.0 else 0.0)
+        if self.deadline <= 0.0 or delay <= self.deadline:
+            return 0
+        return int(np.ceil(delay / self.deadline)) - 1
+
+
 def fleet_schedule(m, rounds, seed, participation, dropout=0.0, straggle=0.0,
-                   straggle_rounds=1, forced=(), async_merge=True):
+                   straggle_rounds=1, forced=(), forced_drop=(), async_merge=True,
+                   net=None, frame_bytes=0):
     """Exact mirror of the rust fleet round bookkeeping (sim/engine.rs +
-    fleet/cohort.rs + fleet/faults.rs): per round, (active, participants,
-    dropped, straggled) under seeded cohort sampling (seed ^ 0xC0F07) and
-    fault injection (seed ^ 0xFA17). The schedule is protocol-independent
-    — the fleet rngs are separate streams — so one schedule serves every
-    protocol run at the same (m, rounds, seed, knobs). Draw orders are
-    part of the contract: Fisher-Yates cohort shuffle only when the
-    target undershoots availability; per sampled learner the dropout coin
-    first (when dropout > 0), then the forced list, then the straggle
-    coin."""
+    fleet/cohort.rs + fleet/faults.rs + netsim/mod.rs): per round,
+    (active, participants, dropped, straggled) under seeded cohort
+    sampling (seed ^ 0xC0F07) and fault injection (seed ^ 0xFA17). The
+    schedule is protocol-independent — the fleet rngs are separate
+    streams — so one schedule serves every protocol run at the same
+    (m, rounds, seed, knobs). Draw orders are part of the contract:
+    Fisher-Yates cohort shuffle only when the target undershoots
+    availability; per sampled learner the forced-dropout list first
+    (`forced_drop` = [(id, from_round)], no draw — a dead learner must
+    not perturb the survivors' coin stream), then the dropout coin (when
+    dropout > 0), then the forced-straggler list, then the straggle
+    coin. When `net` (a NetMirror) is given, each on-time active then
+    ships one `frame_bytes` frame over its own link in ascending id
+    order; a delivery past the deadline straggles `rounds_late` rounds
+    and counts as a quorum shortfall."""
     crng = Rng((seed ^ 0xC0F07) & M64)
     frng = Rng((seed ^ 0xFA17) & M64)
     forced = set(forced)
@@ -953,20 +986,33 @@ def fleet_schedule(m, rounds, seed, participation, dropout=0.0, straggle=0.0,
             else:
                 sampled = sorted(avail[j] for j in crng.sample_indices(len(avail), k))
         active, straggled = [], []
+        until = {}
         dropped = 0
         for i in sampled:
-            if dropout > 0.0 and frng.bernoulli(dropout):
+            if any(i == d and t >= r for d, r in forced_drop):
+                dropped += 1
+            elif dropout > 0.0 and frng.bernoulli(dropout):
                 dropped += 1
             elif i in forced or (straggle > 0.0 and frng.bernoulli(straggle)):
                 active.append(i)
                 straggled.append(i)
+                until[i] = t + max(straggle_rounds, 1)
             else:
                 active.append(i)
+        if net is not None:
+            for i in active:
+                if i in until:
+                    continue
+                late = net.transfer(i, frame_bytes)
+                if late > 0:
+                    straggled.append(i)
+                    until[i] = t + late
+                    net.shortfalls += 1
         participants = [i for i in active if i not in straggled]
         if async_merge and arrivals:
             participants = sorted(set(participants) | set(arrivals))
         for i in straggled:
-            busy[i] = t + max(straggle_rounds, 1)
+            busy[i] = until[i]
         sched.append((active, participants, dropped, straggled))
     return sched
 
@@ -1070,6 +1116,87 @@ def fleet_protocol(m, rounds, lr, delta, check, seed, participation=0.25, dropou
             print(f"  FAIL {what}")
     if not bad:
         print("  OK  all fleet gates hold")
+    return bad
+
+
+def quorum_sync(m, rounds, lr, delta, check, seed):
+    """Validates the wire-coordinator degradation semantics (rust:
+    wire/serve.rs quorum rounds + rust/tests/wire_chaos.rs +
+    rust/tests/netsim.rs) in the numpy mirror. Two runs at full
+    participation, both with learner m-1 impaired:
+
+    (a) dead learner: m-1 is a forced dropout from round 1 — the exact
+        schedule the rust chaos test pins a dead wire client to. The
+        survivors' dynamic-averaging gates must hold.
+    (b) slow link: m-1's uplink is capped at 256 kbps. The dense
+        mnist_logistic frame (16 + 4*7850 = 31416 B) serializes in
+        981.75 ms against the 500 ms round deadline, so every upload is
+        deterministically 1 round late: m-1 misses quorum every round
+        (shortfalls == rounds, exactly) and merges as a late arrival —
+        the run degrades but never wedges, and every other learner
+        stays on time.
+
+    Gates (measured across seeds {1, 7, 42, 2024} at m=8, rounds=60,
+    lr=0.05, delta=1.0, check=5 — dead: ratio 7.0-12.0x, loss ratio
+    1.023-1.032, accs 0.992-1.000; slow: ratio 7.4-12.0x, loss ratio
+    1.022-1.033, accs 0.996-1.000, shortfalls 60/60 every seed):
+    reduction >= 5x in both runs, dyn cum_loss <= 1.1x periodic's, all
+    eval accs >= 0.8, the dead learner never active, slow-run
+    shortfalls == rounds. Returns the number of failed gates (nonzero
+    fails CI)."""
+    model = MnistLogistic()
+    p_len = glorot_slots(model.SLOTS, "mnist_logistic").shape[0]
+    frame = HEADER + DENSE.nbytes(p_len, None)
+    print(f"seed {seed}: m={m} rounds={rounds} impaired learner {m - 1}, "
+          f"dense frame {frame} B -> {frame * 8.0 / 256.0:.2f} ms at 256 kbps "
+          f"(deadline 500 ms)")
+    checks = []
+
+    # (a) dead learner from round 1 at full participation
+    sched = fleet_schedule(m, rounds, seed, 1.0, forced_drop=[(m - 1, 1)])
+    data = fleet_batches(m, seed, sched)
+    dyn = run_fleet(model, "mnist_logistic", Dynamic(delta, check, m), m, rounds, lr, seed, sched, data)
+    per = run_fleet(model, "mnist_logistic", Periodic(check), m, rounds, lr, seed, sched, data)
+    ratio = per["comm"] / max(dyn["comm"], 1)
+    loss_ratio = dyn["cum_loss"] / per["cum_loss"]
+    checks += [
+        ("dead learner never active", all(m - 1 not in a for a, _, _, _ in sched)),
+        ("dead: reduction >= 5x", ratio >= 5.0),
+        ("dead: loss ratio <= 1.1", loss_ratio <= 1.1),
+        ("dead: dyn acc >= 0.8", dyn["eval_acc"] >= 0.8),
+        ("dead: per acc >= 0.8", per["eval_acc"] >= 0.8),
+    ]
+    print(f"  dead: comm dyn {dyn['comm']} per {per['comm']} ratio {ratio:.1f}x | "
+          f"cum_loss dyn {dyn['cum_loss']:.2f} per {per['cum_loss']:.2f} ({loss_ratio:.3f}) | "
+          f"acc dyn {dyn['eval_acc']:.3f} per {per['eval_acc']:.3f}")
+
+    # (b) 256 kbps uplink for m-1, 500 ms round deadline
+    net = NetMirror(500.0, overrides={m - 1: (0.0, 256.0)})
+    sched = fleet_schedule(m, rounds, seed, 1.0, net=net, frame_bytes=frame)
+    data = fleet_batches(m, seed, sched)
+    dyn = run_fleet(model, "mnist_logistic", Dynamic(delta, check, m), m, rounds, lr, seed, sched, data)
+    per = run_fleet(model, "mnist_logistic", Periodic(check), m, rounds, lr, seed, sched, data)
+    ratio = per["comm"] / max(dyn["comm"], 1)
+    loss_ratio = dyn["cum_loss"] / per["cum_loss"]
+    late = sum(1 for _, p, _, _ in sched if m - 1 in p)
+    checks += [
+        ("slow: shortfalls == rounds", net.shortfalls == rounds),
+        ("slow: reduction >= 5x", ratio >= 5.0),
+        ("slow: loss ratio <= 1.1", loss_ratio <= 1.1),
+        ("slow: dyn acc >= 0.8", dyn["eval_acc"] >= 0.8),
+        ("slow: per acc >= 0.8", per["eval_acc"] >= 0.8),
+    ]
+    print(f"  slow: comm dyn {dyn['comm']} per {per['comm']} ratio {ratio:.1f}x | "
+          f"cum_loss dyn {dyn['cum_loss']:.2f} per {per['cum_loss']:.2f} ({loss_ratio:.3f}) | "
+          f"acc dyn {dyn['eval_acc']:.3f} per {per['eval_acc']:.3f} | "
+          f"shortfalls {net.shortfalls}/{rounds}, {late} late merges")
+
+    bad = sum(not ok for _, ok in checks)
+    for what, ok in checks:
+        if not ok:
+            print(f"  FAIL {what}")
+    if not bad:
+        print("  OK  all quorum gates hold")
     return bad
 
 
@@ -1247,6 +1374,7 @@ def main():
             "transformer_fd",
             "wire_protocol",
             "fleet_protocol",
+            "quorum_sync",
         ],
     )
     ap.add_argument("--seed", type=int, default=2024)
@@ -1282,6 +1410,11 @@ def main():
         if fleet_protocol(64 if args.m == 4 else args.m, 80 if args.rounds == 40 else args.rounds,
                           0.05 if args.lr is None else args.lr,
                           1.0 if args.delta is None else args.delta, args.check, args.seed):
+            raise SystemExit(1)
+    elif args.scenario == "quorum_sync":
+        if quorum_sync(8 if args.m == 4 else args.m, 60 if args.rounds == 40 else args.rounds,
+                       0.05 if args.lr is None else args.lr,
+                       1.0 if args.delta is None else args.delta, args.check, args.seed):
             raise SystemExit(1)
     else:
         compare(MnistLogistic(), "mnist_logistic", 8, 150, 0.05,

@@ -22,25 +22,39 @@ pub struct Faults {
     dropout: f64,
     straggle: f64,
     forced: Vec<usize>,
+    /// `(id, from_round)`: permanently offline from `from_round` on.
+    dead: Vec<(usize, u64)>,
     rng: Rng,
 }
 
 impl Faults {
     /// `seed` is the engine's fleet-fault stream (`cfg.seed ^ 0xFA17`).
-    pub fn new(dropout: f64, straggle: f64, forced: Vec<usize>, seed: u64) -> Faults {
+    pub fn new(
+        dropout: f64,
+        straggle: f64,
+        forced: Vec<usize>,
+        dead: Vec<(usize, u64)>,
+        seed: u64,
+    ) -> Faults {
         Faults {
             dropout,
             straggle,
             forced,
+            dead,
             rng: Rng::new(seed),
         }
     }
 
-    /// Classify one sampled learner. Draw order is fixed: the dropout
-    /// coin first (whenever dropout > 0), then the forced-straggler list
-    /// (no draw), then the straggle coin. With every knob zero this
+    /// Classify one sampled learner at round `round`. Draw order is
+    /// fixed: the forced-dropout list first (no draw — a dead learner
+    /// must not perturb the survivors' coin stream), then the dropout
+    /// coin (whenever dropout > 0), then the forced-straggler list (no
+    /// draw), then the straggle coin. With every knob zero this
     /// consumes no rng state.
-    pub fn classify(&mut self, id: usize) -> Fate {
+    pub fn classify(&mut self, id: usize, round: u64) -> Fate {
+        if self.dead.iter().any(|&(d, from)| d == id && round >= from) {
+            return Fate::Dropped;
+        }
         if self.dropout > 0.0 && self.rng.bernoulli(self.dropout) {
             return Fate::Dropped;
         }
@@ -60,38 +74,53 @@ mod tests {
 
     #[test]
     fn forced_stragglers_always_straggle() {
-        let mut f = Faults::new(0.0, 0.0, vec![2, 5], 1);
-        for _ in 0..10 {
-            assert_eq!(f.classify(2), Fate::Straggled);
-            assert_eq!(f.classify(5), Fate::Straggled);
-            assert_eq!(f.classify(0), Fate::OnTime);
+        let mut f = Faults::new(0.0, 0.0, vec![2, 5], Vec::new(), 1);
+        for t in 1..=10 {
+            assert_eq!(f.classify(2, t), Fate::Straggled);
+            assert_eq!(f.classify(5, t), Fate::Straggled);
+            assert_eq!(f.classify(0, t), Fate::OnTime);
         }
     }
 
     #[test]
     fn fault_free_config_draws_no_randomness() {
         // classify() with all knobs zero must not advance the rng
-        let mut a = Faults::new(0.0, 0.0, Vec::new(), 9);
+        let mut a = Faults::new(0.0, 0.0, Vec::new(), Vec::new(), 9);
         for id in 0..100 {
-            assert_eq!(a.classify(id), Fate::OnTime);
+            assert_eq!(a.classify(id, 1), Fate::OnTime);
         }
         let mut fresh = Rng::new(9);
         assert_eq!(a.rng.next_u64(), fresh.next_u64());
     }
 
     #[test]
+    fn forced_dropouts_kill_from_their_round_without_drawing() {
+        let mut f = Faults::new(0.0, 0.0, Vec::new(), vec![(3, 5)], 9);
+        for t in 1..5 {
+            assert_eq!(f.classify(3, t), Fate::OnTime, "alive before round 5");
+        }
+        for t in 5..20 {
+            assert_eq!(f.classify(3, t), Fate::Dropped);
+            assert_eq!(f.classify(0, t), Fate::OnTime);
+        }
+        // neither the dead learner nor the survivors drew a coin
+        let mut fresh = Rng::new(9);
+        assert_eq!(f.rng.next_u64(), fresh.next_u64());
+    }
+
+    #[test]
     fn dropout_rate_is_roughly_honored() {
-        let mut f = Faults::new(0.25, 0.0, Vec::new(), 42);
-        let dropped = (0..4000).filter(|&id| f.classify(id) == Fate::Dropped).count();
+        let mut f = Faults::new(0.25, 0.0, Vec::new(), Vec::new(), 42);
+        let dropped = (0..4000).filter(|&id| f.classify(id, 1) == Fate::Dropped).count();
         assert!((800..1200).contains(&dropped), "dropped {dropped} of 4000 at p=0.25");
     }
 
     #[test]
     fn same_seed_same_fates() {
-        let mut a = Faults::new(0.3, 0.2, vec![7], 11);
-        let mut b = Faults::new(0.3, 0.2, vec![7], 11);
+        let mut a = Faults::new(0.3, 0.2, vec![7], Vec::new(), 11);
+        let mut b = Faults::new(0.3, 0.2, vec![7], Vec::new(), 11);
         for id in 0..200 {
-            assert_eq!(a.classify(id), b.classify(id));
+            assert_eq!(a.classify(id, 3), b.classify(id, 3));
         }
     }
 }

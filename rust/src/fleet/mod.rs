@@ -56,6 +56,12 @@ pub struct FleetConfig {
     /// Learner ids that *always* straggle when sampled — deterministic
     /// fault injection for tests.
     pub forced_stragglers: Vec<usize>,
+    /// `(learner id, from round)` pairs that are permanently offline
+    /// starting at `from round` — the in-process equivalent of a wire
+    /// client dying mid-run. Checked before any fault coin, so with
+    /// otherwise-zero knobs the surviving learners' rng streams are
+    /// untouched and match the clean run bit for bit.
+    pub forced_dropouts: Vec<(usize, u64)>,
     /// Merge straggled updates into the sync of their arrival round
     /// (async rounds). `false` silently returns stragglers to the pool.
     pub async_merge: bool,
@@ -69,6 +75,7 @@ impl Default for FleetConfig {
             straggle: 0.0,
             straggle_rounds: 1,
             forced_stragglers: Vec::new(),
+            forced_dropouts: Vec::new(),
             async_merge: true,
         }
     }
@@ -82,6 +89,7 @@ impl FleetConfig {
             && self.dropout <= 0.0
             && self.straggle <= 0.0
             && self.forced_stragglers.is_empty()
+            && self.forced_dropouts.is_empty()
     }
 }
 
@@ -107,5 +115,10 @@ mod tests {
             ..FleetConfig::default()
         };
         assert!(!forced.is_full());
+        let dead = FleetConfig {
+            forced_dropouts: vec![(2, 1)],
+            ..FleetConfig::default()
+        };
+        assert!(!dead.is_full());
     }
 }

@@ -37,6 +37,7 @@ pub mod experiments;
 pub mod fleet;
 pub mod metrics;
 pub mod model;
+pub mod netsim;
 pub mod network;
 pub mod runtime;
 pub mod sim;

@@ -27,7 +27,7 @@ use dynavg::sim::SimConfig;
 use dynavg::util::cli::Args;
 use dynavg::wire::client::run_client;
 use dynavg::wire::serve::{ServeConfig, WireServer};
-use dynavg::wire::Encoding;
+use dynavg::wire::{ChaosProfile, Encoding};
 
 fn main() {
     if let Err(e) = run() {
@@ -61,8 +61,14 @@ fn print_usage() {
     println!("  dynavg run --model M --protocol SPEC [--optimizer O] [--m N] [--rounds T] [--lr F]");
     println!("             [--threads N] [--participation C] [--dropout P] [--straggle P]");
     println!("             [--straggle-rounds K] [--no-async-merge]");
+    println!("             [--latency-ms L] [--jitter-ms J] [--bandwidth-kbps B] [--loss P]");
+    println!("             [--deadline-ms D]");
     println!("  dynavg serve --model M [--m N] [--rounds T] [--encoding dense|int8|int16|topk:F]");
     println!("               [--port P] [--port-file PATH] [--delta D] [--check B] [--final-eval]");
+    println!("               [--quorum Q] [--round-deadline-secs S] [--dead-after-secs S]");
+    println!("               [--chaos-drop P] [--chaos-corrupt P] [--chaos-duplicate P]");
+    println!("               [--chaos-disconnect P] [--chaos-delay-ms L] [--chaos-jitter-ms J]");
+    println!("               [--chaos-disconnect-after-ops K] [--chaos-seed N]");
     println!("  dynavg connect --addr HOST:PORT [--timeout-secs S]");
     println!("  dynavg list | models | info");
 }
@@ -109,6 +115,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.fleet.straggle = args.get_f64("straggle", 0.0);
     cfg.fleet.straggle_rounds = args.get_usize("straggle-rounds", 1) as u64;
     cfg.fleet.async_merge = !args.has("no-async-merge");
+    // link-level network model: per-message latency, serialization delay,
+    // and loss on every learner<->coordinator link, plus the round
+    // deadline that turns slow deliveries into async arrivals (defaults
+    // keep every link ideal — zero draws, bitwise-identical runs)
+    cfg.net.default.latency_ms = args.get_f64("latency-ms", 0.0);
+    cfg.net.default.jitter_ms = args.get_f64("jitter-ms", 0.0);
+    cfg.net.default.bandwidth_kbps = args.get_f64("bandwidth-kbps", 0.0);
+    cfg.net.default.drop = args.get_f64("loss", 0.0);
+    cfg.net.deadline_ms = args.get_f64("deadline-ms", 0.0);
     let harness = experiments::Harness::new(&rt, cfg, dataset, "custom");
     harness.run_all(&[spec], args.has("serial"))?;
     Ok(())
@@ -126,6 +141,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.check_every = args.get_usize("check", cfg.check_every as usize) as u64;
     cfg.encoding = Encoding::parse(&args.get_str("encoding", "dense"))?;
     cfg.timeout = Duration::from_secs(args.get_usize("timeout-secs", 120) as u64);
+    // robustness knobs: quorum rounds + dead-client sweeping (defaults —
+    // full quorum, generous deadlines — reproduce the in-process run)
+    cfg.quorum = args.get_f64("quorum", cfg.quorum);
+    cfg.round_deadline =
+        Duration::from_secs_f64(args.get_f64("round-deadline-secs", cfg.round_deadline.as_secs_f64()));
+    cfg.dead_after =
+        Duration::from_secs_f64(args.get_f64("dead-after-secs", cfg.dead_after.as_secs_f64()));
+    // server-side fault injection: wrap every accepted connection in a
+    // seeded FaultyStream (the CI chaos-smoke path)
+    let chaos = ChaosProfile {
+        drop: args.get_f64("chaos-drop", 0.0),
+        corrupt: args.get_f64("chaos-corrupt", 0.0),
+        duplicate: args.get_f64("chaos-duplicate", 0.0),
+        disconnect: args.get_f64("chaos-disconnect", 0.0),
+        delay_ms: args.get_f64("chaos-delay-ms", 0.0),
+        jitter_ms: args.get_f64("chaos-jitter-ms", 0.0),
+        disconnect_after_ops: args.get_usize("chaos-disconnect-after-ops", 0) as u64,
+    };
+    if !chaos.is_off() {
+        cfg.chaos = Some((chaos, args.get_usize("chaos-seed", 7) as u64));
+    }
     cfg.final_eval = args.has("final-eval");
     cfg.debug_wire = args.has("debug-wire");
     let port = args.get_usize("port", 7070) as u16;
@@ -161,6 +197,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "  syncs            events={} full={}",
         net.sync_events, net.full_syncs
+    );
+    println!(
+        "  robustness       retransmits={}B/{}msg shortfalls={} late_merges={} reconnects={} dead={:?}",
+        net.retrans_bytes, net.retrans_msgs, report.shortfalls, report.late_merges, report.reconnects, report.dead
     );
     println!("  cumulative loss  {:.6}", report.cumulative_loss);
     if let Some((loss, metric)) = report.eval {

@@ -29,6 +29,15 @@ pub struct RoundRecord {
     pub dropped: usize,
     /// sampled learners whose update arrives in a later round
     pub straggled: usize,
+    /// straggled updates from earlier rounds merged into this round's
+    /// sync (async arrival)
+    pub late_merges: usize,
+    /// learners the round proceeded without: netsim deadline misses in
+    /// the engine, `enrolled - reported` quorum gaps on the wire
+    pub shortfall: usize,
+    /// cumulative retransmitted bytes up to and including this round
+    /// (itemized outside `cum_bytes` — see `NetStats::retransmit`)
+    pub retrans_bytes: u64,
 }
 
 /// Recorder for one protocol run.
@@ -78,6 +87,13 @@ impl Recorder {
         })
     }
 
+    /// Total (late merges, quorum shortfalls) across the run.
+    pub fn robust_totals(&self) -> (u64, u64) {
+        self.rows.iter().fold((0, 0), |(l, q), r| {
+            (l + r.late_merges as u64, q + r.shortfall as u64)
+        })
+    }
+
     /// Write the time series as CSV.
     pub fn write_csv(&self, path: &Path, label: &str) -> Result<()> {
         if let Some(dir) = path.parent() {
@@ -87,14 +103,14 @@ impl Recorder {
             .with_context(|| format!("creating {path:?}"))?;
         writeln!(
             f,
-            "protocol,round,loss_sum,cum_loss,metric_mean,cum_bytes,synced,drifted,cohort,dropped,straggled"
+            "protocol,round,loss_sum,cum_loss,metric_mean,cum_bytes,synced,drifted,cohort,dropped,straggled,late_merges,shortfall,retrans_bytes"
         )?;
         let mut cum = 0.0;
         for r in &self.rows {
             cum += r.loss_sum;
             writeln!(
                 f,
-                "{label},{},{:.6},{:.6},{:.6},{},{},{},{},{},{}",
+                "{label},{},{:.6},{:.6},{:.6},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.loss_sum,
                 cum,
@@ -104,7 +120,10 @@ impl Recorder {
                 r.drifted as u8,
                 r.cohort,
                 r.dropped,
-                r.straggled
+                r.straggled,
+                r.late_merges,
+                r.shortfall,
+                r.retrans_bytes
             )?;
         }
         Ok(())
@@ -127,12 +146,20 @@ pub struct Summary {
     /// high-water mark of resident fleet-arena bytes (bounded by
     /// `min(threads, m)` arenas, not the population m)
     pub peak_ws_bytes: u64,
+    /// retransmitted bytes (link retries, duplicates, replays) —
+    /// itemized outside `comm_bytes`
+    pub retrans_bytes: u64,
+    /// straggled/late updates merged into a later round's sync
+    pub late_merges: u64,
+    /// learner-rounds the run proceeded without (deadline misses or
+    /// quorum gaps)
+    pub shortfalls: u64,
 }
 
 impl Summary {
     pub fn table_header() -> String {
         format!(
-            "{:<22} {:<9} {:>14} {:>14} {:>12} {:>11} {:>11} {:>7} {:>6} {:>9}",
+            "{:<22} {:<9} {:>14} {:>14} {:>12} {:>11} {:>11} {:>7} {:>6} {:>9} {:>9} {:>5} {:>6}",
             "protocol",
             "enc",
             "cum_loss",
@@ -142,13 +169,16 @@ impl Summary {
             "eval_metric",
             "syncs",
             "full",
-            "ws_MB"
+            "ws_MB",
+            "retransB",
+            "late",
+            "short"
         )
     }
 
     pub fn table_row(&self) -> String {
         format!(
-            "{:<22} {:<9} {:>14.2} {:>14} {:>12.2} {:>11.4} {:>11} {:>7} {:>6} {:>9.2}",
+            "{:<22} {:<9} {:>14.2} {:>14} {:>12.2} {:>11.4} {:>11} {:>7} {:>6} {:>9.2} {:>9} {:>5} {:>6}",
             self.protocol,
             self.encoding,
             self.cumulative_loss,
@@ -160,7 +190,10 @@ impl Summary {
                 .unwrap_or_else(|| "-".into()),
             self.sync_events,
             self.full_syncs,
-            self.peak_ws_bytes as f64 / 1e6
+            self.peak_ws_bytes as f64 / 1e6,
+            self.retrans_bytes,
+            self.late_merges,
+            self.shortfalls
         )
     }
 }
@@ -173,12 +206,12 @@ pub fn write_summary_csv(path: &Path, rows: &[Summary]) -> Result<()> {
     let mut f = std::fs::File::create(path)?;
     writeln!(
         f,
-        "protocol,encoding,cum_loss,comm_bytes,tail_metric,eval_loss,eval_metric,sync_events,full_syncs,peak_ws_bytes"
+        "protocol,encoding,cum_loss,comm_bytes,tail_metric,eval_loss,eval_metric,sync_events,full_syncs,peak_ws_bytes,retrans_bytes,late_merges,shortfalls"
     )?;
     for s in rows {
         writeln!(
             f,
-            "{},{},{:.6},{},{:.6},{},{},{},{},{}",
+            "{},{},{:.6},{},{:.6},{},{},{},{},{},{},{},{}",
             s.protocol,
             s.encoding,
             s.cumulative_loss,
@@ -188,7 +221,10 @@ pub fn write_summary_csv(path: &Path, rows: &[Summary]) -> Result<()> {
             s.eval_metric.map(|v| format!("{v:.6}")).unwrap_or_default(),
             s.sync_events,
             s.full_syncs,
-            s.peak_ws_bytes
+            s.peak_ws_bytes,
+            s.retrans_bytes,
+            s.late_merges,
+            s.shortfalls
         )?;
     }
     Ok(())
@@ -209,6 +245,9 @@ mod tests {
             cohort: 4,
             dropped: 0,
             straggled: 0,
+            late_merges: 0,
+            shortfall: 0,
+            retrans_bytes: 0,
         }
     }
 
@@ -246,6 +285,23 @@ mod tests {
         r.record(b);
         assert!((r.mean_cohort() - 3.0).abs() < 1e-9);
         assert_eq!(r.fault_totals(), (1, 2));
+    }
+
+    #[test]
+    fn robust_stats_aggregate() {
+        let mut r = Recorder::new();
+        let mut a = row(1, 0.0, 0);
+        a.late_merges = 2;
+        a.shortfall = 1;
+        a.retrans_bytes = 64;
+        let mut b = row(2, 0.0, 0);
+        b.late_merges = 1;
+        b.shortfall = 3;
+        b.retrans_bytes = 128;
+        r.record(a);
+        r.record(b);
+        assert_eq!(r.robust_totals(), (3, 4));
+        assert_eq!(r.rows.last().unwrap().retrans_bytes, 128);
     }
 
     #[test]

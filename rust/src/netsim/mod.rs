@@ -1,0 +1,350 @@
+//! Deterministic link-level network fault model.
+//!
+//! `NetSim` converts each message's exact frame bytes into a delivery
+//! time over a seeded per-link channel (`LinkProfile`: fixed latency,
+//! uniform jitter, bandwidth cap, drop/corrupt/duplicate
+//! probabilities). Lossy links retransmit until a attempt survives both
+//! the drop and the corruption coin (capped at [`MAX_ATTEMPTS`]), so
+//! the delivery time of one logical message is
+//!
+//! ```text
+//! delay_ms = attempts * (latency_ms + bytes * 8 / bandwidth_kbps) + sum(jitter)
+//! ```
+//!
+//! and every attempt past the first — plus the optional duplicate —
+//! is charged to `NetStats::retransmit` by the caller.
+//!
+//! Determinism contract (mirrored by `python/tools/native_mirror.py`):
+//!
+//! * the rng stream is derived `seed ^ 0x11F7` (the `fleet::Faults`
+//!   convention), then split per link as
+//!   `base.wrapping_add((link + 1) * 0x9E3779B97F4A7C15)` — link i's
+//!   draws never depend on other links' traffic;
+//! * per message the draw order is: per attempt `[drop coin (if
+//!   drop > 0), corrupt coin (if corrupt > 0), jitter (if
+//!   jitter_ms > 0)]`, then one duplicate coin (if duplicate > 0);
+//! * a probability/jitter knob at exactly zero draws nothing, so the
+//!   full-default (ideal) profile consumes no randomness at all and
+//!   the engine's bitwise contract vs. the netsim-free path holds.
+
+use crate::util::rng::Rng;
+
+/// Seed tag for the netsim rng stream (`cfg.seed ^ NETSIM_SEED_TAG`),
+/// following the `fleet::Faults` (`0xFA17`) / cohort (`0xC0F07`)
+/// convention.
+pub const NETSIM_SEED_TAG: u64 = 0x11F7;
+
+/// Retransmission cap per logical message: a link that loses this many
+/// attempts in a row delivers on the capped attempt anyway (the engine
+/// is a simulator, not a liveness proof — unbounded retry would make
+/// worst-case round time unbounded).
+pub const MAX_ATTEMPTS: u32 = 32;
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Per-link channel model. The default is the ideal link: zero
+/// latency, infinite bandwidth, no faults — and, critically, zero rng
+/// draws.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkProfile {
+    /// Fixed one-way latency per attempt, in milliseconds.
+    pub latency_ms: f64,
+    /// Uniform extra delay in `[0, jitter_ms)` per attempt. Zero draws
+    /// nothing.
+    pub jitter_ms: f64,
+    /// Bandwidth cap in kilobits/second; `0.0` means infinite (no
+    /// serialization delay).
+    pub bandwidth_kbps: f64,
+    /// Per-attempt probability the message is lost in transit.
+    pub drop: f64,
+    /// Per-attempt probability the message arrives corrupted (detected
+    /// by the frame checksum, so it costs a retransmission like a
+    /// drop).
+    pub corrupt: f64,
+    /// Per-message probability the final delivery is duplicated (the
+    /// duplicate is charged as a retransmission; dedup is the
+    /// receiver's job).
+    pub duplicate: f64,
+}
+
+impl Default for LinkProfile {
+    fn default() -> LinkProfile {
+        LinkProfile {
+            latency_ms: 0.0,
+            jitter_ms: 0.0,
+            bandwidth_kbps: 0.0,
+            drop: 0.0,
+            corrupt: 0.0,
+            duplicate: 0.0,
+        }
+    }
+}
+
+impl LinkProfile {
+    /// True when this link delays nothing and draws nothing.
+    pub fn is_ideal(&self) -> bool {
+        self.latency_ms == 0.0
+            && self.jitter_ms == 0.0
+            && self.bandwidth_kbps == 0.0
+            && self.drop == 0.0
+            && self.corrupt == 0.0
+            && self.duplicate == 0.0
+    }
+}
+
+/// Network profile for a whole fleet: one default link plus per-link
+/// overrides, and the round deadline that turns slow deliveries into
+/// stragglers.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetProfile {
+    pub default: LinkProfile,
+    /// `(link id, profile)` overrides; first match wins.
+    pub overrides: Vec<(usize, LinkProfile)>,
+    /// Round deadline in milliseconds. A sync message whose delivery
+    /// time exceeds it arrives `ceil(delay / deadline)` rounds late
+    /// (the existing `async_merge` arrival semantics). `0.0` disables
+    /// the deadline — every delivery lands in its own round.
+    pub deadline_ms: f64,
+}
+
+impl NetProfile {
+    /// True when every link is ideal — the whole profile draws no
+    /// randomness and adds no delay. The deadline is deliberately
+    /// excluded: with zero delay it can never trigger.
+    pub fn is_ideal(&self) -> bool {
+        self.default.is_ideal() && self.overrides.iter().all(|(_, p)| p.is_ideal())
+    }
+
+    pub fn link(&self, link: usize) -> &LinkProfile {
+        self.overrides
+            .iter()
+            .find(|(i, _)| *i == link)
+            .map(|(_, p)| p)
+            .unwrap_or(&self.default)
+    }
+}
+
+/// Outcome of one logical message crossing one link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Transit {
+    /// Total delivery time, including every retransmitted attempt.
+    pub delay_ms: f64,
+    /// Attempts taken (1 = clean first try).
+    pub attempts: u32,
+    /// Whether the final delivery was duplicated on the wire.
+    pub duplicated: bool,
+}
+
+impl Transit {
+    /// Extra full-frame copies that crossed the wire beyond the one
+    /// logical delivery (failed attempts + the duplicate).
+    pub fn extra_copies(&self) -> u64 {
+        (self.attempts as u64 - 1) + u64::from(self.duplicated)
+    }
+}
+
+/// Seeded per-link simulator. Lazily forks one rng per link so a link
+/// whose knobs are all zero never materializes (or advances) a stream.
+pub struct NetSim {
+    seed: u64,
+    profile: NetProfile,
+    rngs: Vec<Option<Rng>>,
+}
+
+impl NetSim {
+    pub fn new(profile: NetProfile, seed: u64) -> NetSim {
+        NetSim {
+            seed: seed ^ NETSIM_SEED_TAG,
+            profile,
+            rngs: Vec::new(),
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.profile.is_ideal()
+    }
+
+    pub fn deadline_ms(&self) -> f64 {
+        self.profile.deadline_ms
+    }
+
+    pub fn profile(&self) -> &NetProfile {
+        &self.profile
+    }
+
+    fn rng(&mut self, link: usize) -> &mut Rng {
+        if self.rngs.len() <= link {
+            self.rngs.resize_with(link + 1, || None);
+        }
+        let seed = self
+            .seed
+            .wrapping_add((link as u64 + 1).wrapping_mul(GOLDEN));
+        self.rngs[link].get_or_insert_with(|| Rng::new(seed))
+    }
+
+    /// Deliver one logical message of `frame_bytes` over `link`.
+    /// Draw order is part of the determinism contract (see module
+    /// docs).
+    pub fn transfer(&mut self, link: usize, frame_bytes: u64) -> Transit {
+        let p = *self.profile.link(link);
+        let tx_ms = if p.bandwidth_kbps > 0.0 {
+            frame_bytes as f64 * 8.0 / p.bandwidth_kbps
+        } else {
+            0.0
+        };
+        let mut attempts: u32 = 1;
+        let mut jitter = 0.0;
+        loop {
+            let mut lost = false;
+            if p.drop > 0.0 && self.rng(link).bernoulli(p.drop) {
+                lost = true;
+            }
+            if p.corrupt > 0.0 && self.rng(link).bernoulli(p.corrupt) {
+                lost = true;
+            }
+            if p.jitter_ms > 0.0 {
+                let j = self.rng(link).uniform() * p.jitter_ms;
+                jitter += j;
+            }
+            if !lost || attempts >= MAX_ATTEMPTS {
+                break;
+            }
+            attempts += 1;
+        }
+        let duplicated = p.duplicate > 0.0 && self.rng(link).bernoulli(p.duplicate);
+        Transit {
+            delay_ms: attempts as f64 * (p.latency_ms + tx_ms) + jitter,
+            attempts,
+            duplicated,
+        }
+    }
+
+    /// Rounds of lateness a delivery incurs under the profile's
+    /// deadline: `0` = arrives within the round, `k > 0` = merges `k`
+    /// rounds later (the async-arrival semantics).
+    pub fn rounds_late(&self, delay_ms: f64) -> u64 {
+        if self.profile.deadline_ms <= 0.0 || delay_ms <= self.profile.deadline_ms {
+            return 0;
+        }
+        (delay_ms / self.profile.deadline_ms).ceil() as u64 - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_is_ideal_and_draws_nothing() {
+        let mut sim = NetSim::new(NetProfile::default(), 42);
+        assert!(sim.is_ideal());
+        for link in 0..8 {
+            let t = sim.transfer(link, 1 << 20);
+            assert_eq!(t.delay_ms, 0.0);
+            assert_eq!(t.attempts, 1);
+            assert!(!t.duplicated);
+            assert_eq!(t.extra_copies(), 0);
+        }
+        // No rng was ever materialized: zero draws is structural, not
+        // just coincidental.
+        assert!(sim.rngs.iter().all(|r| r.is_none()));
+    }
+
+    #[test]
+    fn pure_delay_profile_is_deterministic_without_rng() {
+        let profile = NetProfile {
+            default: LinkProfile {
+                latency_ms: 40.0,
+                bandwidth_kbps: 256.0,
+                ..LinkProfile::default()
+            },
+            overrides: vec![(
+                2,
+                LinkProfile {
+                    latency_ms: 5.0,
+                    ..LinkProfile::default()
+                },
+            )],
+            deadline_ms: 500.0,
+        };
+        let mut sim = NetSim::new(profile, 7);
+        // 31416-byte dense frame at 256 kbps: 31416*8/256 = 981.75 ms tx.
+        let t = sim.transfer(0, 31_416);
+        assert!((t.delay_ms - (40.0 + 981.75)).abs() < 1e-9);
+        assert_eq!(t.attempts, 1);
+        // Override link: latency only, infinite bandwidth.
+        let t2 = sim.transfer(2, 31_416);
+        assert!((t2.delay_ms - 5.0).abs() < 1e-9);
+        assert!(sim.rngs.iter().all(|r| r.is_none()));
+        // 1021.75ms over a 500ms deadline -> ceil(2.04) - 1 = 2 rounds late.
+        assert_eq!(sim.rounds_late(t.delay_ms), 2);
+        assert_eq!(sim.rounds_late(t2.delay_ms), 0);
+        assert_eq!(sim.rounds_late(500.0), 0);
+    }
+
+    #[test]
+    fn lossy_link_retransmits_and_is_seed_reproducible() {
+        let lossy = NetProfile {
+            default: LinkProfile {
+                latency_ms: 10.0,
+                jitter_ms: 2.0,
+                drop: 0.4,
+                corrupt: 0.1,
+                duplicate: 0.2,
+                ..LinkProfile::default()
+            },
+            ..NetProfile::default()
+        };
+        let mut a = NetSim::new(lossy.clone(), 2024);
+        let mut b = NetSim::new(lossy, 2024);
+        let mut saw_retry = false;
+        let mut saw_dup = false;
+        for msg in 0..200 {
+            let ta = a.transfer(msg % 4, 1000);
+            let tb = b.transfer(msg % 4, 1000);
+            assert_eq!(ta, tb, "same seed must reproduce transit {msg}");
+            assert!(ta.attempts >= 1 && ta.attempts <= MAX_ATTEMPTS);
+            assert!(ta.delay_ms >= ta.attempts as f64 * 10.0);
+            saw_retry |= ta.attempts > 1;
+            saw_dup |= ta.duplicated;
+        }
+        assert!(saw_retry, "40% drop over 200 messages must retry");
+        assert!(saw_dup, "20% duplicate over 200 messages must duplicate");
+    }
+
+    #[test]
+    fn links_are_independent_streams() {
+        let lossy = NetProfile {
+            default: LinkProfile {
+                jitter_ms: 1.0,
+                ..LinkProfile::default()
+            },
+            ..NetProfile::default()
+        };
+        // Link 3's draws must not depend on how much traffic other
+        // links carried first.
+        let mut a = NetSim::new(lossy.clone(), 5);
+        for _ in 0..50 {
+            a.transfer(0, 64);
+            a.transfer(1, 64);
+        }
+        let ta = a.transfer(3, 64);
+        let mut b = NetSim::new(lossy, 5);
+        let tb = b.transfer(3, 64);
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn attempts_are_capped() {
+        let always_lost = NetProfile {
+            default: LinkProfile {
+                drop: 1.0,
+                ..LinkProfile::default()
+            },
+            ..NetProfile::default()
+        };
+        let mut sim = NetSim::new(always_lost, 1);
+        let t = sim.transfer(0, 8);
+        assert_eq!(t.attempts, MAX_ATTEMPTS);
+    }
+}

@@ -39,6 +39,13 @@ pub struct NetStats {
     pub sync_events: u64,
     /// number of *full* synchronizations (all m learners averaged)
     pub full_syncs: u64,
+    /// bytes that crossed a link beyond the first successful delivery
+    /// of each logical message: lossy-link retries, wire duplicates,
+    /// and post-reconnect replays. Itemized separately — `total_bytes`
+    /// stays the protocol's base cost, zero in fault-free runs.
+    pub retrans_bytes: u64,
+    /// count of retransmitted frames behind `retrans_bytes`
+    pub retrans_msgs: u64,
 }
 
 impl NetStats {
@@ -68,6 +75,15 @@ impl NetStats {
                 self.down_bytes += HEADER_BYTES + payload_bytes;
             }
         }
+    }
+
+    /// Record `frame_bytes` (header included) of retransmitted traffic:
+    /// a delivery of a logical message beyond its first successful one.
+    /// Kept out of `total_bytes` so the base accounting — and every
+    /// byte-reduction gate built on it — is unchanged by faults.
+    pub fn retransmit(&mut self, frame_bytes: u64) {
+        self.retrans_bytes += frame_bytes;
+        self.retrans_msgs += 1;
     }
 }
 
@@ -100,5 +116,18 @@ mod tests {
         n.send(MsgKind::ModelDownload, 40);
         assert_eq!(n.total_bytes(), 2 * (HEADER_BYTES + 40));
         assert_eq!(n.messages, 2);
+    }
+
+    #[test]
+    fn retransmissions_are_itemized_outside_base_bytes() {
+        let mut n = NetStats::new();
+        n.send(MsgKind::ModelUpload, 400);
+        let base = n.total_bytes();
+        n.retransmit(HEADER_BYTES + 400);
+        n.retransmit(HEADER_BYTES);
+        assert_eq!(n.total_bytes(), base, "retrans must not move base bytes");
+        assert_eq!(n.retrans_bytes, 2 * HEADER_BYTES + 400);
+        assert_eq!(n.retrans_msgs, 2);
+        assert_eq!(n.messages, 1, "retrans frames are not protocol messages");
     }
 }

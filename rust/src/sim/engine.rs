@@ -22,6 +22,7 @@ use crate::data::{DriftSchedule, Stream};
 use crate::fleet::{Cohort, Fate, Faults, FleetConfig, FleetScheduler};
 use crate::metrics::{Recorder, RoundRecord, Summary};
 use crate::model::InitPolicy;
+use crate::netsim::{NetProfile, NetSim};
 use crate::network::NetStats;
 use crate::runtime::{Batch, EvalStep, ModelRuntime, Runtime};
 use crate::util::rng::Rng;
@@ -64,6 +65,11 @@ pub struct SimConfig {
     /// fleet knobs: participation fraction, dropout, stragglers, async
     /// arrival (defaults = full participation, the paper's setting)
     pub fleet: FleetConfig,
+    /// link-level network model: per-link latency/jitter/bandwidth and
+    /// drop/corrupt/duplicate probabilities plus a round deadline.
+    /// The default (ideal) profile draws no randomness and leaves the
+    /// run bitwise identical to the netsim-free engine.
+    pub net: NetProfile,
     /// evaluate on a holdout stream at the end
     pub final_eval: bool,
     /// wire encoding for model transfers (dense reproduces the
@@ -94,6 +100,7 @@ impl SimConfig {
             sample_rates: Vec::new(),
             drift: DriftProb::None,
             fleet: FleetConfig::default(),
+            net: NetProfile::default(),
             final_eval: false,
             encoding: Encoding::Dense,
         }
@@ -189,24 +196,34 @@ impl<'a> Engine<'a> {
         let lr = self.cfg.lr;
 
         // fleet state: the scheduler (one global pool + arena pool) and
-        // the sampling/fault streams. Under full participation the
-        // cohort/fault rngs are never drawn, so the pre-fleet streams
-        // (proto, drift, init, data) are untouched bit for bit.
-        let full = self.cfg.fleet.is_full();
+        // the sampling/fault streams. Under full participation with an
+        // ideal network the cohort/fault/netsim rngs are never drawn,
+        // so the pre-fleet streams (proto, drift, init, data) are
+        // untouched bit for bit.
+        let net_active = !self.cfg.net.is_ideal();
+        let full = self.cfg.fleet.is_full() && !net_active;
+        let mut netsim = NetSim::new(self.cfg.net.clone(), self.cfg.seed);
         let mut sched = FleetScheduler::new(train, self.cfg.threads, m, self.intra_threads(), self.cfg.pool);
         let mut cohort = Cohort::new(self.cfg.fleet.participation, self.cfg.seed ^ 0xC0F07);
         let mut faults = Faults::new(
             self.cfg.fleet.dropout,
             self.cfg.fleet.straggle,
             self.cfg.fleet.forced_stragglers.clone(),
+            self.cfg.fleet.forced_dropouts.clone(),
             self.cfg.seed ^ 0xFA17,
         );
+        // model-sized frame each active learner ships to the sync point
+        // (header + this encoding's payload) — what netsim delays
+        let p_len = learners.first().map(|l| l.params.len()).unwrap_or(0);
+        let frame_bytes = crate::network::HEADER_BYTES as u64 + link.payload_bytes(p_len);
         // round-state buffers, reused across rounds
         let mut avail: Vec<usize> = Vec::with_capacity(m);
         let mut arrivals: Vec<usize> = Vec::new();
         let mut sampled: Vec<usize> = Vec::with_capacity(m);
         let mut active: Vec<usize> = Vec::with_capacity(m);
-        let mut straggled: Vec<usize> = Vec::new();
+        // `(id, arrival round)` of in-flight updates (fault stragglers
+        // and netsim-late deliveries)
+        let mut straggled: Vec<(usize, u64)> = Vec::new();
         let mut participants: Vec<usize> = Vec::with_capacity(m);
         let mut weights: Vec<f32> = Vec::with_capacity(m);
         // round-slot at which an in-flight straggler's update arrives
@@ -248,13 +265,40 @@ impl<'a> Engine<'a> {
                 }
                 cohort.sample(&avail, m, &mut sampled);
                 for &id in &sampled {
-                    match faults.classify(id) {
+                    match faults.classify(id, t) {
                         Fate::Dropped => dropped += 1,
                         Fate::Straggled => {
                             active.push(id);
-                            straggled.push(id);
+                            straggled.push((id, t + self.cfg.fleet.straggle_rounds.max(1)));
                         }
                         Fate::OnTime => active.push(id),
+                    }
+                }
+            }
+
+            // link-level transport: each on-time active learner ships a
+            // model-sized frame through its link (ascending id — the
+            // draw order the python mirror replicates). Lossy attempts
+            // and duplicates are charged as retransmissions; a delivery
+            // past the round deadline turns the learner into a net
+            // straggler whose update arrives `rounds_late` rounds later
+            // (the async-arrival path).
+            let mut net_straggled = 0usize;
+            if net_active {
+                for idx in 0..active.len() {
+                    let id = active[idx];
+                    if straggled.iter().any(|&(s, _)| s == id) {
+                        continue;
+                    }
+                    let transit = netsim.transfer(id, frame_bytes);
+                    let extra = transit.extra_copies();
+                    if extra > 0 {
+                        net.retransmit(extra * frame_bytes);
+                    }
+                    let late = netsim.rounds_late(transit.delay_ms);
+                    if late > 0 {
+                        straggled.push((id, t + late));
+                        net_straggled += 1;
                     }
                 }
             }
@@ -283,14 +327,24 @@ impl<'a> Engine<'a> {
             // updates arriving now when async merge is on (they join the
             // sync under the protocol's reference semantics)
             participants.clear();
-            participants.extend(active.iter().copied().filter(|id| !straggled.contains(id)));
+            participants.extend(
+                active
+                    .iter()
+                    .copied()
+                    .filter(|&id| !straggled.iter().any(|&(s, _)| s == id)),
+            );
+            let late_merges = if self.cfg.fleet.async_merge {
+                arrivals.len()
+            } else {
+                0
+            };
             if self.cfg.fleet.async_merge && !arrivals.is_empty() {
                 participants.extend(arrivals.iter().copied());
                 participants.sort_unstable();
                 participants.dedup();
             }
-            for &id in &straggled {
-                busy[id] = t + self.cfg.fleet.straggle_rounds.max(1);
+            for &(id, until) in &straggled {
+                busy[id] = until;
             }
             if let Some(&first) = participants.first().or(active.first()) {
                 eval_src = first;
@@ -331,6 +385,9 @@ impl<'a> Engine<'a> {
                 cohort: active.len(),
                 dropped,
                 straggled: straggled.len(),
+                late_merges,
+                shortfall: net_straggled,
+                retrans_bytes: net.retrans_bytes,
             });
         }
 
@@ -350,6 +407,7 @@ impl<'a> Engine<'a> {
             }
         }
 
+        let (late_merges, shortfalls) = recorder.robust_totals();
         let summary = Summary {
             protocol: protocol.name(),
             encoding: self.cfg.encoding.label(),
@@ -361,6 +419,9 @@ impl<'a> Engine<'a> {
             sync_events: net.sync_events,
             full_syncs: net.full_syncs,
             peak_ws_bytes: sched.peak_resident_bytes(),
+            retrans_bytes: net.retrans_bytes,
+            late_merges,
+            shortfalls,
         };
         Ok(RunResult {
             summary,

@@ -1,0 +1,337 @@
+//! Chaos harness: seeded byte-level fault injection for the loopback
+//! coordinator.
+//!
+//! [`FaultyStream`] wraps any [`super::WireStream`] and injects, per
+//! I/O operation and from a dedicated seeded rng:
+//!
+//! * **truncation** — a write delivers only a prefix, then the
+//!   connection poisons itself (`BrokenPipe`), like a TCP send cut
+//!   mid-frame;
+//! * **corruption** — one bit of a written or read buffer flips, which
+//!   the frame checksum surfaces at the receiver;
+//! * **duplication** — a write's bytes go out twice, desyncing the
+//!   receiver's framing;
+//! * **delay** — a fixed + jittered sleep per operation;
+//! * **disconnect** — the stream poisons itself spontaneously
+//!   (`ConnectionReset`), or deterministically after
+//!   `disconnect_after_ops` operations (the forced mid-round
+//!   disconnect the chaos tests rely on).
+//!
+//! Every fault is *recoverable* by the retry/resume machinery in
+//! `wire/client.rs` + `wire/serve.rs`: a poisoned or desynced
+//! connection is dropped, the client reconnects with backoff and
+//! replays its round, the receiver's [`super::RoundGate`] dedups — so
+//! the protocol result is bit-for-bit the clean run's, with the extra
+//! deliveries itemized as `NetStats` retransmissions.
+
+use std::io::{Error, ErrorKind, Read, Result, Write};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+use super::WireStream;
+
+/// Fault probabilities and delays, all per I/O operation. Defaults are
+/// all-off (transparent passthrough, zero rng draws).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChaosProfile {
+    /// Per-write probability of truncation + `BrokenPipe`.
+    pub drop: f64,
+    /// Per-operation probability of a single-bit flip (writes corrupt
+    /// the outgoing copy; reads corrupt what was received).
+    pub corrupt: f64,
+    /// Per-write probability the bytes are delivered twice.
+    pub duplicate: f64,
+    /// Per-operation probability of spontaneous poisoning.
+    pub disconnect: f64,
+    /// Fixed sleep per operation, milliseconds.
+    pub delay_ms: f64,
+    /// Uniform extra sleep in `[0, jitter_ms)` per operation.
+    pub jitter_ms: f64,
+    /// Poison deterministically after this many operations (reads +
+    /// writes); 0 disables. Forces one reproducible mid-run disconnect.
+    pub disconnect_after_ops: u64,
+}
+
+impl ChaosProfile {
+    pub fn is_off(&self) -> bool {
+        self.drop == 0.0
+            && self.corrupt == 0.0
+            && self.duplicate == 0.0
+            && self.disconnect == 0.0
+            && self.delay_ms == 0.0
+            && self.jitter_ms == 0.0
+            && self.disconnect_after_ops == 0
+    }
+}
+
+/// Counts of injected faults, for test assertions and logs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    pub drops: u64,
+    pub corrupts: u64,
+    pub duplicates: u64,
+    pub disconnects: u64,
+}
+
+pub struct FaultyStream<S: WireStream> {
+    inner: S,
+    profile: ChaosProfile,
+    rng: Rng,
+    ops: u64,
+    poisoned: bool,
+    pub stats: ChaosStats,
+}
+
+impl<S: WireStream> FaultyStream<S> {
+    pub fn new(inner: S, profile: ChaosProfile, seed: u64) -> FaultyStream<S> {
+        FaultyStream {
+            inner,
+            profile,
+            rng: Rng::new(seed),
+            ops: 0,
+            poisoned: false,
+            stats: ChaosStats::default(),
+        }
+    }
+
+    /// Poison check + op counting + spontaneous/forced disconnects,
+    /// shared by both directions. `Err` means the op must not proceed.
+    fn gate_op(&mut self) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::new(ErrorKind::BrokenPipe, "chaos: stream poisoned"));
+        }
+        self.ops += 1;
+        if self.profile.disconnect_after_ops > 0 && self.ops >= self.profile.disconnect_after_ops {
+            self.poisoned = true;
+            self.stats.disconnects += 1;
+            return Err(Error::new(
+                ErrorKind::ConnectionReset,
+                "chaos: forced disconnect",
+            ));
+        }
+        if self.profile.disconnect > 0.0 && self.rng.bernoulli(self.profile.disconnect) {
+            self.poisoned = true;
+            self.stats.disconnects += 1;
+            return Err(Error::new(
+                ErrorKind::ConnectionReset,
+                "chaos: injected disconnect",
+            ));
+        }
+        Ok(())
+    }
+
+    fn delay(&mut self) {
+        let mut ms = self.profile.delay_ms;
+        if self.profile.jitter_ms > 0.0 {
+            ms += self.rng.uniform() * self.profile.jitter_ms;
+        }
+        if ms > 0.0 {
+            std::thread::sleep(Duration::from_micros((ms * 1000.0) as u64));
+        }
+    }
+
+    fn flip_one_bit(&mut self, buf: &mut [u8]) {
+        if buf.is_empty() {
+            return;
+        }
+        let byte = self.rng.below(buf.len());
+        let bit = self.rng.below(8) as u8;
+        buf[byte] ^= 1 << bit;
+        self.stats.corrupts += 1;
+    }
+}
+
+impl<S: WireStream> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> Result<usize> {
+        if self.profile.is_off() {
+            return self.inner.read(buf);
+        }
+        self.gate_op()?;
+        self.delay();
+        let n = self.inner.read(buf)?;
+        if n > 0 && self.profile.corrupt > 0.0 && self.rng.bernoulli(self.profile.corrupt) {
+            self.flip_one_bit(&mut buf[..n]);
+        }
+        Ok(n)
+    }
+}
+
+impl<S: WireStream> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> Result<usize> {
+        if self.profile.is_off() {
+            return self.inner.write(buf);
+        }
+        self.gate_op()?;
+        if self.profile.drop > 0.0 && self.rng.bernoulli(self.profile.drop) {
+            // deliver a prefix, then die: the receiver sees a truncated
+            // frame and drops the connection
+            let cut = buf.len() / 2;
+            let _ = self.inner.write_all(&buf[..cut]);
+            let _ = self.inner.flush();
+            self.poisoned = true;
+            self.stats.drops += 1;
+            return Err(Error::new(
+                ErrorKind::BrokenPipe,
+                "chaos: write truncated in flight",
+            ));
+        }
+        self.delay();
+        if self.profile.corrupt > 0.0 && self.rng.bernoulli(self.profile.corrupt) {
+            let mut copy = buf.to_vec();
+            self.flip_one_bit(&mut copy);
+            self.inner.write_all(&copy)?;
+            return Ok(buf.len());
+        }
+        if self.profile.duplicate > 0.0 && self.rng.bernoulli(self.profile.duplicate) {
+            self.inner.write_all(buf)?;
+            self.inner.write_all(buf)?;
+            self.stats.duplicates += 1;
+            return Ok(buf.len());
+        }
+        self.inner.write_all(buf)?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::new(ErrorKind::BrokenPipe, "chaos: stream poisoned"));
+        }
+        self.inner.flush()
+    }
+}
+
+impl<S: WireStream> WireStream for FaultyStream<S> {
+    fn set_read_timeout(&mut self, dur: Option<Duration>) -> Result<()> {
+        self.inner.set_read_timeout(dur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    /// In-memory loopback half for unit tests.
+    #[derive(Default)]
+    struct MemPipe {
+        rx: VecDeque<u8>,
+        tx: Vec<u8>,
+    }
+
+    impl Read for MemPipe {
+        fn read(&mut self, buf: &mut [u8]) -> Result<usize> {
+            let n = buf.len().min(self.rx.len());
+            for slot in buf.iter_mut().take(n) {
+                *slot = self.rx.pop_front().unwrap();
+            }
+            Ok(n)
+        }
+    }
+    impl Write for MemPipe {
+        fn write(&mut self, buf: &[u8]) -> Result<usize> {
+            self.tx.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> Result<()> {
+            Ok(())
+        }
+    }
+    impl WireStream for MemPipe {
+        fn set_read_timeout(&mut self, _dur: Option<Duration>) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn off_profile_is_transparent() {
+        let mut s = FaultyStream::new(MemPipe::default(), ChaosProfile::default(), 1);
+        s.write_all(b"hello").unwrap();
+        assert_eq!(s.inner.tx, b"hello");
+        s.inner.rx.extend(b"world".iter());
+        let mut buf = [0u8; 5];
+        s.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"world");
+        assert_eq!(s.stats, ChaosStats::default());
+    }
+
+    #[test]
+    fn forced_disconnect_fires_exactly_at_the_op_count() {
+        let profile = ChaosProfile {
+            disconnect_after_ops: 3,
+            ..ChaosProfile::default()
+        };
+        let mut s = FaultyStream::new(MemPipe::default(), profile, 7);
+        assert!(s.write(b"a").is_ok());
+        assert!(s.write(b"b").is_ok());
+        let err = s.write(b"c").unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::ConnectionReset);
+        // poisoned forever after
+        assert_eq!(s.write(b"d").unwrap_err().kind(), ErrorKind::BrokenPipe);
+        assert_eq!(s.stats.disconnects, 1);
+    }
+
+    #[test]
+    fn truncating_drop_delivers_a_prefix_then_poisons() {
+        let profile = ChaosProfile {
+            drop: 1.0,
+            ..ChaosProfile::default()
+        };
+        let mut s = FaultyStream::new(MemPipe::default(), profile, 3);
+        let err = s.write(b"0123456789").unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::BrokenPipe);
+        assert_eq!(s.inner.tx, b"01234", "half the buffer crossed the wire");
+        assert_eq!(s.stats.drops, 1);
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_bit() {
+        let profile = ChaosProfile {
+            corrupt: 1.0,
+            ..ChaosProfile::default()
+        };
+        let mut s = FaultyStream::new(MemPipe::default(), profile, 11);
+        let orig = [0u8; 32];
+        s.write_all(&orig).unwrap();
+        let flipped: u32 = s
+            .inner
+            .tx
+            .iter()
+            .map(|&b| b.count_ones())
+            .sum();
+        assert_eq!(flipped, 1, "exactly one bit must differ");
+    }
+
+    #[test]
+    fn duplicate_writes_double_the_bytes() {
+        let profile = ChaosProfile {
+            duplicate: 1.0,
+            ..ChaosProfile::default()
+        };
+        let mut s = FaultyStream::new(MemPipe::default(), profile, 5);
+        assert_eq!(s.write(b"abc").unwrap(), 3);
+        assert_eq!(s.inner.tx, b"abcabc");
+        assert_eq!(s.stats.duplicates, 1);
+    }
+
+    #[test]
+    fn same_seed_same_fault_schedule() {
+        let profile = ChaosProfile {
+            drop: 0.3,
+            corrupt: 0.2,
+            duplicate: 0.2,
+            disconnect: 0.05,
+            ..ChaosProfile::default()
+        };
+        let run = |seed: u64| {
+            let mut s = FaultyStream::new(MemPipe::default(), profile, seed);
+            for _ in 0..50 {
+                if s.write(b"xyzw").is_err() {
+                    break;
+                }
+            }
+            (s.stats, s.inner.tx.clone())
+        };
+        assert_eq!(run(42), run(42));
+    }
+}

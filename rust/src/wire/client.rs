@@ -13,23 +13,38 @@
 //! tiling contract makes thread count irrelevant to the results), so m
 //! clients against `dynavg serve` reproduce the in-process run bit for
 //! bit.
+//!
+//! Fault tolerance: all I/O goes through a [`Session`] that survives
+//! connection loss. A read or write failure (reset, truncation, checksum
+//! corruption) drops the connection and `recover()`s: jittered
+//! exponential backoff, a fresh connection from the caller-supplied
+//! connector, a `Hello {resume: id, round}` handshake, then a replay of
+//! every frame sent this round with `FLAG_RETRANSMIT` set — the server
+//! cannot know which of them survived the dying connection, and its
+//! [`RoundGate`] dedups the ones that did. Symmetrically the client's
+//! own gate dedups the server's replays, and `Resolved` catch-up is by
+//! round comparison, so a resumed round is processed exactly once no
+//! matter how many times either side retransmits it.
 
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::experiments::Dataset;
 use crate::model::params;
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::sim::Learner;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::wire::encoding::Encoding;
-use crate::wire::frame::{Frame, FrameKind, FLAG_FULL_SYNC};
+use crate::wire::frame::{flags_gen, gen_flags, Frame, FrameKind, FLAG_FULL_SYNC, FLAG_RETRANSMIT};
+use crate::wire::gate::RoundGate;
+use crate::wire::WireStream;
 
 /// What one client run produced.
 pub struct ClientReport {
-    /// Learner id the coordinator assigned (its accept order).
+    /// Learner id the coordinator assigned (its hello order).
     pub id: usize,
     /// Final local parameters after the last round.
     pub params: Vec<f32>,
@@ -37,36 +52,301 @@ pub struct ClientReport {
     pub losses: Vec<f32>,
     pub metrics: Vec<f32>,
     /// Total frame bytes this client sent / received (including uncharged
-    /// transport — the per-client view of the server's tally).
+    /// transport and replays — the per-client view of the server's tally).
     pub sent_bytes: u64,
     pub received_bytes: u64,
+    /// Successful resume handshakes after losing the connection.
+    pub reconnects: u64,
 }
 
-/// Connect to a `dynavg serve` coordinator and run the full protocol.
-/// Retries the connect briefly (the server may still be binding), then
-/// trains until the coordinator's `Done`.
-pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientReport> {
-    let mut stream = connect_with_retry(addr, timeout)?;
-    stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(timeout))?;
-    stream.set_write_timeout(Some(timeout))?;
+/// Produces a fresh connection per attempt (0 = the initial connect,
+/// then 1, 2, … for reconnects). Tests swap in
+/// [`crate::wire::FaultyStream`]-wrapped streams here.
+pub type Connector<'a> = dyn FnMut(u64) -> Result<Box<dyn WireStream>> + 'a;
 
-    let mut sent_bytes = 0u64;
-    let mut received_bytes = 0u64;
+/// Retry/backoff knobs for [`run_client_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct ClientOptions {
+    /// Per-read deadline and initial-connect budget: a coordinator
+    /// silent this long fails the client rather than hanging it.
+    pub timeout: Duration,
+    /// Reconnect attempts per recovery before giving up.
+    pub max_reconnects: u32,
+    /// First backoff sleep; doubles per attempt up to `backoff_cap`,
+    /// plus a uniform jitter of up to one backoff so a cohort of
+    /// clients does not reconnect in lockstep.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Seed for the backoff jitter (protocol results never depend on it).
+    pub seed: u64,
+}
 
-    // --- handshake --------------------------------------------------------
-    let mut hello = Frame::control(FrameKind::Hello, 0, 0);
-    hello.payload = Json::obj(vec![("proto", Json::num(1.0))]).to_string().into_bytes();
-    send(&mut stream, &hello, &mut sent_bytes)?;
-    let config = recv(&mut stream, &mut received_bytes)?;
-    if config.kind != FrameKind::Config {
-        bail!("expected config from coordinator, got {}", config.kind.name());
+impl Default for ClientOptions {
+    fn default() -> ClientOptions {
+        ClientOptions {
+            timeout: Duration::from_secs(120),
+            max_reconnects: 16,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            seed: 0x7E57,
+        }
     }
+}
+
+/// Connect to a `dynavg serve` coordinator over TCP and run the full
+/// protocol. Retries the connect briefly (the server may still be
+/// binding), then trains until the coordinator's `Done`, reconnecting
+/// with backoff if the connection drops mid-run.
+pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientReport> {
+    let addr = addr.to_string();
+    let opts = ClientOptions {
+        timeout,
+        ..ClientOptions::default()
+    };
+    let mut connector = move |_attempt: u64| -> Result<Box<dyn WireStream>> {
+        let s = TcpStream::connect(&addr).with_context(|| format!("connecting to coordinator at {addr}"))?;
+        s.set_nodelay(true)?;
+        s.set_read_timeout(Some(timeout))?;
+        s.set_write_timeout(Some(timeout))?;
+        Ok(Box::new(s))
+    };
+    run_client_with(rt, &mut connector, opts)
+}
+
+/// One client's connection state across disconnects: the protocol
+/// identity (assigned id + current round), the round's sent-frame log
+/// for replay, and the dedup gate for the server's replays.
+struct Session<'a, 'b> {
+    connector: &'a mut Connector<'b>,
+    conn: Option<Box<dyn WireStream>>,
+    opts: ClientOptions,
+    jitter: Rng,
+    /// Assigned learner id, once the first Config arrived.
+    id: Option<usize>,
+    /// Protocol round for resume hellos (0 before the first check round).
+    round_marker: u32,
+    /// Frames sent since the round started; replayed on resume.
+    sent_log: Vec<Frame>,
+    gate: RoundGate,
+    /// First Config payload, to verify a resumed coordinator is the
+    /// same run.
+    config_payload: Option<Vec<u8>>,
+    /// The Config frame from the initial handshake, for the caller.
+    first_config: Option<Frame>,
+    reconnects: u64,
+    sent_bytes: u64,
+    received_bytes: u64,
+}
+
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    })
+}
+
+impl<'a, 'b> Session<'a, 'b> {
+    fn new(connector: &'a mut Connector<'b>, opts: ClientOptions) -> Session<'a, 'b> {
+        Session {
+            connector,
+            conn: None,
+            jitter: Rng::new(opts.seed ^ 0xBACC_0FF),
+            opts,
+            id: None,
+            round_marker: 0,
+            sent_log: Vec::new(),
+            gate: RoundGate::new(),
+            config_payload: None,
+            first_config: None,
+            reconnects: 0,
+            sent_bytes: 0,
+            received_bytes: 0,
+        }
+    }
+
+    /// Initial connect + fresh hello, retried until `opts.timeout` (the
+    /// coordinator may not be listening yet).
+    fn connect_first(&mut self) -> Result<()> {
+        let deadline = Instant::now() + self.opts.timeout;
+        loop {
+            let res = (self.connector)(0).and_then(|conn| {
+                self.conn = Some(conn);
+                self.handshake(false)
+            });
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    self.conn = None;
+                    if Instant::now() > deadline {
+                        return Err(e).context("connecting to coordinator");
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Reconnect with jittered exponential backoff, resume-handshake,
+    /// and replay of this round's sent frames.
+    fn recover(&mut self) -> Result<()> {
+        self.conn = None;
+        let mut backoff = self.opts.backoff_base;
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 1..=self.opts.max_reconnects {
+            let sleep = backoff + backoff.mul_f64(self.jitter.uniform());
+            std::thread::sleep(sleep);
+            backoff = (backoff * 2).min(self.opts.backoff_cap);
+            let res = (self.connector)(attempt as u64).and_then(|conn| {
+                self.conn = Some(conn);
+                self.handshake(true)
+            });
+            match res {
+                Ok(()) => {
+                    self.reconnects += 1;
+                    return Ok(());
+                }
+                Err(e) => {
+                    self.conn = None;
+                    last = Some(e);
+                }
+            }
+        }
+        let id = self.id.map(|i| i.to_string()).unwrap_or_else(|| "?".into());
+        match last {
+            Some(e) => Err(e).with_context(|| {
+                format!(
+                    "client {id}: reconnect budget exhausted after {} attempts in round {}",
+                    self.opts.max_reconnects, self.round_marker
+                )
+            }),
+            None => bail!("client {id}: reconnect budget is zero"),
+        }
+    }
+
+    /// Hello/Config exchange on a fresh connection. Resumes identify
+    /// themselves and replay the round's sent frames with
+    /// `FLAG_RETRANSMIT`; the server's gate dedups what already landed.
+    fn handshake(&mut self, resume: bool) -> Result<()> {
+        let src = self.id.unwrap_or(0) as u16;
+        let mut hello = Frame::control(FrameKind::Hello, src, self.round_marker);
+        let mut fields = vec![("proto", Json::num(1.0))];
+        if resume {
+            let Some(id) = self.id else {
+                bail!("cannot resume before the first config assigned an id");
+            };
+            fields.push(("resume", Json::num(id as f64)));
+            fields.push(("round", Json::num(self.round_marker as f64)));
+        }
+        hello.payload = Json::obj(fields).to_string().into_bytes();
+        let conn = self.conn.as_mut().ok_or_else(|| anyhow!("no connection"))?;
+        hello.write_to(conn).context("sending hello")?;
+        self.sent_bytes += hello.wire_bytes();
+        let config = Frame::read_from(conn).context("awaiting config")?;
+        self.received_bytes += config.wire_bytes();
+        if config.kind != FrameKind::Config {
+            bail!("expected config from coordinator, got {}", config.kind.name());
+        }
+        match &self.config_payload {
+            Some(orig) => {
+                if *orig != config.payload {
+                    bail!("coordinator answered the resume with a different run config");
+                }
+            }
+            None => {
+                self.config_payload = Some(config.payload.clone());
+                self.first_config = Some(config);
+            }
+        }
+        if resume {
+            for i in 0..self.sent_log.len() {
+                let mut f = self.sent_log[i].clone();
+                f.flags |= FLAG_RETRANSMIT;
+                let conn = self.conn.as_mut().ok_or_else(|| anyhow!("no connection"))?;
+                f.write_to(conn)
+                    .with_context(|| format!("replaying {}", f.kind.name()))?;
+                self.sent_bytes += f.wire_bytes();
+            }
+        }
+        Ok(())
+    }
+
+    /// Send one protocol frame, logging it for replay. A write failure
+    /// triggers recovery, whose replay delivers the frame.
+    fn send(&mut self, f: Frame) -> Result<()> {
+        self.sent_log.push(f.clone());
+        match self.conn.as_mut() {
+            Some(conn) => match f.write_to(conn) {
+                Ok(()) => {
+                    self.sent_bytes += f.wire_bytes();
+                    Ok(())
+                }
+                Err(_) => self.recover(),
+            },
+            None => self.recover(),
+        }
+    }
+
+    /// Receive one frame. Connection errors (including in-flight
+    /// corruption surfaced by the checksum) recover and retry; a clean
+    /// read timeout means the coordinator is gone — fail, don't spin.
+    fn recv(&mut self) -> Result<Frame> {
+        loop {
+            let Some(conn) = self.conn.as_mut() else {
+                self.recover()?;
+                continue;
+            };
+            match Frame::read_from(conn) {
+                Ok(f) => {
+                    self.received_bytes += f.wire_bytes();
+                    return Ok(f);
+                }
+                Err(e) => {
+                    if is_timeout(&e) {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "round {}: coordinator silent past the timeout",
+                                self.round_marker
+                            )
+                        });
+                    }
+                    self.recover()?;
+                }
+            }
+        }
+    }
+
+    /// Enter protocol round `round`: advance the dedup gate and drop the
+    /// previous round's replay log.
+    fn begin_round(&mut self, round: u32) {
+        self.round_marker = round;
+        self.gate.begin_round(round);
+        self.sent_log.clear();
+    }
+}
+
+/// Run the full client protocol over connections produced by
+/// `connector` — the transport-agnostic core of [`run_client`], and the
+/// entry point chaos tests use to inject [`crate::wire::FaultyStream`]
+/// faults client-side.
+pub fn run_client_with(
+    rt: &Runtime,
+    connector: &mut Connector<'_>,
+    opts: ClientOptions,
+) -> Result<ClientReport> {
+    let mut session = Session::new(connector, opts);
+    session.connect_first()?;
+    let config = session
+        .first_config
+        .take()
+        .ok_or_else(|| anyhow!("handshake finished without a config"))?;
+
     let j = Json::parse(std::str::from_utf8(&config.payload)?)?;
     let get_num = |key: &str| -> Result<f64> {
         j.req(key)?
             .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("config: {key} is not a number"))
+            .ok_or_else(|| anyhow!("config: {key} is not a number"))
     };
     let id = get_num("id")? as usize;
     let rounds = get_num("rounds")? as u64;
@@ -80,6 +360,7 @@ pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientR
     if check_every == 0 || rounds == 0 {
         bail!("config: rounds and check period must be positive");
     }
+    session.id = Some(id);
 
     // --- rebuild the engine's learner for this id -------------------------
     if !rt.supports_model(&model) {
@@ -98,6 +379,8 @@ pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientR
     let mut learner = Learner::new(id, init, state_size, factory(id), rate);
 
     let mut reference: Option<Vec<f32>> = None;
+    // reference generation (compared mod 64 — the frame flag width)
+    let mut ref_gen: u64 = 0;
     let mut losses = Vec::with_capacity(rounds as usize);
     let mut metrics = Vec::with_capacity(rounds as usize);
     let mut buf: Vec<u8> = Vec::new();
@@ -107,7 +390,9 @@ pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientR
         if let Some(err) = &learner.last_err {
             bail!("local step failed at round {t}: {err}");
         }
-        let stats = learner.last.expect("step succeeded");
+        let stats = learner
+            .last
+            .ok_or_else(|| anyhow!("client {id}: local step at round {t} produced no stats"))?;
         losses.push(stats.loss);
         metrics.push(stats.metric);
 
@@ -115,72 +400,115 @@ pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientR
             continue;
         }
         let round = t as u32;
+        session.begin_round(round);
 
-        // reference bootstrap: client 0 ships its model dense, everyone
+        // reference bootstrap: the lowest enrolled client ships its model
+        // dense (id 0 proactively, anyone else on RefRequest), everyone
         // adopts the coordinator's broadcast
         if reference.is_none() {
             if id == 0 {
-                let mut f = Frame::control(FrameKind::RefModel, id as u16, round);
-                f.encoding_tag = Encoding::Dense.tag();
-                Encoding::Dense.encode(&learner.params, None, &mut buf);
-                f.payload = buf.clone();
-                send(&mut stream, &f, &mut sent_bytes)?;
+                session.send(ref_model_frame(id, round, &learner.params, &mut buf))?;
             }
-            let f = recv(&mut stream, &mut received_bytes)?;
-            if f.kind != FrameKind::SetReference {
-                bail!("round {t}: expected set_reference, got {}", f.kind.name());
+            loop {
+                let f = session.recv()?;
+                match f.kind {
+                    FrameKind::SetReference => {
+                        let mut r = Vec::new();
+                        Encoding::Dense.decode(&f.payload, None, &mut r)?;
+                        if r.len() != p {
+                            bail!("set_reference carries {} params, model has {p}", r.len());
+                        }
+                        ref_gen = flags_gen(f.flags);
+                        reference = Some(r);
+                        break;
+                    }
+                    FrameKind::RefRequest => {
+                        if session.gate.admit(f.kind, f.round).accepted() {
+                            session.send(ref_model_frame(id, round, &learner.params, &mut buf))?;
+                        }
+                    }
+                    // replays of a round we already left; drop silently
+                    _ => {}
+                }
             }
-            let mut r = Vec::new();
-            Encoding::Dense.decode(&f.payload, None, &mut r)?;
-            if r.len() != p {
-                bail!("set_reference carries {} params, model has {p}", r.len());
-            }
-            reference = Some(r);
         }
-        let r = reference.as_ref().expect("reference set above").clone();
+        let mut r = match reference.as_ref() {
+            Some(r) => r.clone(),
+            None => bail!("round {t}: reference vanished (internal invariant)"),
+        };
 
         // local condition check — exactly the coordinator's comparison
         if params::sq_dist(&learner.params, &r) > delta {
             let mut f = Frame::control(FrameKind::Violation, id as u16, round);
             f.encoding_tag = enc.tag();
+            f.flags = gen_flags(ref_gen);
             enc.encode(&learner.params, Some(&r), &mut buf);
             f.payload = buf.clone();
-            send(&mut stream, &f, &mut sent_bytes)?;
+            session.send(f)?;
         } else {
-            send(
-                &mut stream,
-                &Frame::control(FrameKind::CheckOk, id as u16, round),
-                &mut sent_bytes,
-            )?;
+            session.send(Frame::control(FrameKind::CheckOk, id as u16, round))?;
         }
 
-        // serve the coordinator until the round resolves
+        // serve the coordinator until the round resolves; the gate makes
+        // every server frame process-once under replays
         loop {
-            let f = recv(&mut stream, &mut received_bytes)?;
+            let f = session.recv()?;
             match f.kind {
-                FrameKind::Resolved => break,
+                FrameKind::Resolved => {
+                    if f.round >= round {
+                        session.gate.record(FrameKind::Resolved, f.round);
+                        break;
+                    }
+                    // a replayed Resolved for a round we already left
+                }
                 FrameKind::Query => {
-                    let mut up = Frame::control(FrameKind::Upload, id as u16, round);
-                    up.encoding_tag = enc.tag();
-                    enc.encode(&learner.params, Some(&r), &mut buf);
-                    up.payload = buf.clone();
-                    send(&mut stream, &up, &mut sent_bytes)?;
+                    if session.gate.admit(f.kind, f.round).accepted() {
+                        let mut up = Frame::control(FrameKind::Upload, id as u16, round);
+                        up.encoding_tag = enc.tag();
+                        up.flags = gen_flags(ref_gen);
+                        enc.encode(&learner.params, Some(&r), &mut buf);
+                        up.payload = buf.clone();
+                        session.send(up)?;
+                    }
                 }
                 FrameKind::Download => {
-                    enc.decode(&f.payload, Some(&r), &mut learner.params)?;
-                    if learner.params.len() != p {
-                        bail!("round {t}: download carries {} params, model has {p}", learner.params.len());
-                    }
-                    if f.flags & FLAG_FULL_SYNC != 0 {
-                        reference = Some(learner.params.clone());
+                    if session.gate.admit(f.kind, f.round).accepted() {
+                        enc.decode(&f.payload, Some(&r), &mut learner.params)?;
+                        if learner.params.len() != p {
+                            bail!("round {t}: download carries {} params, model has {p}", learner.params.len());
+                        }
+                        if f.flags & FLAG_FULL_SYNC != 0 {
+                            reference = Some(learner.params.clone());
+                            ref_gen = flags_gen(f.flags) + 1;
+                        }
                     }
                 }
-                other => bail!("round {t}: unexpected {} from coordinator", other.name()),
+                FrameKind::SetReference => {
+                    // a full sync this client was not part of (quorum
+                    // degradation): adopt the pushed reference. Dedup is
+                    // by generation — the bootstrap SetReference may
+                    // share this round's tag
+                    let g = flags_gen(f.flags);
+                    if g != ref_gen % 64 {
+                        let mut newr = Vec::new();
+                        Encoding::Dense.decode(&f.payload, None, &mut newr)?;
+                        if newr.len() != p {
+                            bail!("set_reference carries {} params, model has {p}", newr.len());
+                        }
+                        ref_gen = g;
+                        r.clone_from(&newr);
+                        reference = Some(newr);
+                    }
+                }
+                // resume artifacts: a replayed Config, a Done from a
+                // coordinator already finished, bootstrap leftovers
+                _ => {}
             }
         }
     }
 
     // --- final report: model + per-round losses and metrics ---------------
+    session.begin_round(rounds as u32);
     let mut flat = Vec::with_capacity(p + 2 * rounds as usize);
     flat.extend_from_slice(&learner.params);
     flat.extend_from_slice(&losses);
@@ -189,10 +517,13 @@ pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientR
     report.encoding_tag = Encoding::Dense.tag();
     Encoding::Dense.encode(&flat, None, &mut buf);
     report.payload = buf;
-    send(&mut stream, &report, &mut sent_bytes)?;
-    let done = recv(&mut stream, &mut received_bytes)?;
-    if done.kind != FrameKind::Done {
-        bail!("expected done from coordinator, got {}", done.kind.name());
+    session.send(report)?;
+    loop {
+        let f = session.recv()?;
+        if f.kind == FrameKind::Done {
+            break;
+        }
+        // late SetReference pushes or replayed Resolveds; drop silently
     }
 
     Ok(ClientReport {
@@ -200,35 +531,18 @@ pub fn run_client(rt: &Runtime, addr: &str, timeout: Duration) -> Result<ClientR
         params: learner.params,
         losses,
         metrics,
-        sent_bytes,
-        received_bytes,
+        sent_bytes: session.sent_bytes,
+        received_bytes: session.received_bytes,
+        reconnects: session.reconnects,
     })
 }
 
-fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
-    let deadline = Instant::now() + timeout;
-    loop {
-        match TcpStream::connect(addr) {
-            Ok(s) => return Ok(s),
-            Err(e) => {
-                if Instant::now() > deadline {
-                    return Err(e).with_context(|| format!("connecting to coordinator at {addr}"));
-                }
-                std::thread::sleep(Duration::from_millis(50));
-            }
-        }
-    }
-}
-
-fn send(stream: &mut TcpStream, f: &Frame, sent: &mut u64) -> Result<()> {
-    f.write_to(stream)
-        .with_context(|| format!("sending {} to coordinator", f.kind.name()))?;
-    *sent += f.wire_bytes();
-    Ok(())
-}
-
-fn recv(stream: &mut TcpStream, received: &mut u64) -> Result<Frame> {
-    let f = Frame::read_from(stream).context("receiving from coordinator")?;
-    *received += f.wire_bytes();
-    Ok(f)
+/// Dense, uncharged snapshot of this client's model for the reference
+/// bootstrap.
+fn ref_model_frame(id: usize, round: u32, params: &[f32], buf: &mut Vec<u8>) -> Frame {
+    let mut f = Frame::control(FrameKind::RefModel, id as u16, round);
+    f.encoding_tag = Encoding::Dense.tag();
+    Encoding::Dense.encode(params, None, buf);
+    f.payload = buf.clone();
+    f
 }

@@ -7,11 +7,12 @@
 //! | bytes | field       | contents                                   |
 //! |-------|-------------|--------------------------------------------|
 //! | 0     | magic       | `0xDA`                                     |
-//! | 1     | version     | `1`                                        |
+//! | 1     | version     | `2`                                        |
 //! | 2     | kind        | [`FrameKind`] discriminant                 |
 //! | 3     | encoding    | [`Encoding::tag`], `0` for control frames  |
-//! | 4     | flags       | bit 0: full sync (on `Download`)           |
-//! | 5     | reserved    | `0`                                        |
+//! | 4     | flags       | bit 0: full sync; bit 1: retransmit;       |
+//! |       |             | bits 2..8: reference generation mod 64     |
+//! | 5     | checksum    | XOR of every other frame byte              |
 //! | 6..8  | source      | `u16` LE learner id; `0xFFFF` = coordinator|
 //! | 8..12 | round       | `u32` LE                                   |
 //! | 12..16| payload len | `u32` LE                                   |
@@ -30,7 +31,7 @@ use crate::network::MsgKind;
 use crate::util::json::Json;
 
 pub const MAGIC: u8 = 0xDA;
-pub const VERSION: u8 = 1;
+pub const VERSION: u8 = 2;
 pub const HEADER_LEN: usize = 16;
 /// Sender id used by the coordinator.
 pub const COORDINATOR: u16 = 0xFFFF;
@@ -41,6 +42,24 @@ pub const MAX_PAYLOAD: u32 = 1 << 28;
 /// Full-sync flag on a `Download` frame: the receiver must also adopt the
 /// payload as its new reference.
 pub const FLAG_FULL_SYNC: u8 = 1;
+/// This frame is a replay of one already sent (post-reconnect resume or
+/// duplicate delivery). Receivers dedup on `(kind, round)`, never on
+/// this flag — it exists for byte accounting and logging.
+pub const FLAG_RETRANSMIT: u8 = 1 << 1;
+
+/// Pack a reference generation into flags bits 2..8 (mod 64). Lossy
+/// delta encodings decode against the reference of a specific
+/// generation; tagging model frames with the generation the sender
+/// held lets a quorum-degrading coordinator decode late reports against
+/// the right (possibly superseded) reference.
+pub fn gen_flags(generation: u64) -> u8 {
+    ((generation & 0x3F) as u8) << 2
+}
+
+/// Extract the reference generation (mod 64) from a flags byte.
+pub fn flags_gen(flags: u8) -> u64 {
+    (flags >> 2) as u64
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FrameKind {
@@ -58,6 +77,9 @@ pub enum FrameKind {
     RefModel = 21,
     FinalReport = 22,
     Done = 23,
+    /// coordinator -> lowest surviving client: ship your current model
+    /// as the reference (bootstrap fallback when client 0 is dead)
+    RefRequest = 24,
 }
 
 impl FrameKind {
@@ -75,6 +97,7 @@ impl FrameKind {
             21 => FrameKind::RefModel,
             22 => FrameKind::FinalReport,
             23 => FrameKind::Done,
+            24 => FrameKind::RefRequest,
             _ => bail!("unknown frame kind {b}"),
         })
     }
@@ -93,6 +116,7 @@ impl FrameKind {
             FrameKind::RefModel => "ref_model",
             FrameKind::FinalReport => "final_report",
             FrameKind::Done => "done",
+            FrameKind::RefRequest => "ref_request",
         }
     }
 
@@ -118,7 +142,7 @@ impl FrameKind {
     }
 }
 
-const ALL_KINDS: [FrameKind; 12] = [
+pub const ALL_KINDS: [FrameKind; 13] = [
     FrameKind::Violation,
     FrameKind::Query,
     FrameKind::Upload,
@@ -131,6 +155,7 @@ const ALL_KINDS: [FrameKind; 12] = [
     FrameKind::RefModel,
     FrameKind::FinalReport,
     FrameKind::Done,
+    FrameKind::RefRequest,
 ];
 
 #[derive(Clone, Debug, PartialEq)]
@@ -166,6 +191,23 @@ impl Frame {
         self.kind.msg_kind().is_some()
     }
 
+    /// XOR checksum over the header (byte 5 excluded) and payload.
+    /// One flipped bit anywhere in the frame changes it, so in-flight
+    /// corruption is detected at the receiver instead of being decoded
+    /// into garbage model deltas.
+    fn checksum(header: &[u8; HEADER_LEN], payload: &[u8]) -> u8 {
+        let mut x = 0u8;
+        for (i, &b) in header.iter().enumerate() {
+            if i != 5 {
+                x ^= b;
+            }
+        }
+        for &b in payload {
+            x ^= b;
+        }
+        x
+    }
+
     pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
         let mut header = [0u8; HEADER_LEN];
         header[0] = MAGIC;
@@ -176,6 +218,7 @@ impl Frame {
         header[6..8].copy_from_slice(&self.source.to_le_bytes());
         header[8..12].copy_from_slice(&self.round.to_le_bytes());
         header[12..16].copy_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        header[5] = Frame::checksum(&header, &self.payload);
         w.write_all(&header)?;
         w.write_all(&self.payload)
     }
@@ -199,6 +242,14 @@ impl Frame {
         let mut payload = vec![0u8; len as usize];
         r.read_exact(&mut payload)
             .with_context(|| format!("reading {len}-byte {} payload", kind.name()))?;
+        let want = Frame::checksum(&header, &payload);
+        if header[5] != want {
+            bail!(
+                "frame checksum mismatch on {} (got 0x{:02x}, computed 0x{want:02x}) — corrupt in flight",
+                kind.name(),
+                header[5]
+            );
+        }
         Ok(Frame {
             kind,
             encoding_tag: header[3],
@@ -335,6 +386,41 @@ mod tests {
         let mut bad = buf.clone();
         bad[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(Frame::read_from(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn checksum_catches_single_bit_flips_anywhere() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        for byte in 0..buf.len() {
+            for bit in 0..8 {
+                let mut bad = buf.clone();
+                bad[byte] ^= 1 << bit;
+                assert!(
+                    Frame::read_from(&mut &bad[..]).is_err(),
+                    "flip of byte {byte} bit {bit} must be detected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gen_flags_roundtrip_and_compose() {
+        for generation in [0u64, 1, 5, 63, 64, 130] {
+            let flags = gen_flags(generation) | FLAG_FULL_SYNC | FLAG_RETRANSMIT;
+            assert_eq!(flags_gen(flags), generation % 64);
+            assert_eq!(flags & FLAG_FULL_SYNC, FLAG_FULL_SYNC);
+            assert_eq!(flags & FLAG_RETRANSMIT, FLAG_RETRANSMIT);
+        }
+    }
+
+    #[test]
+    fn ref_request_is_uncharged_transport() {
+        assert_eq!(FrameKind::from_byte(24).unwrap(), FrameKind::RefRequest);
+        assert_eq!(FrameKind::RefRequest.msg_kind(), None);
+        assert_eq!(FrameKind::from_name("ref_request").unwrap(), FrameKind::RefRequest);
+        assert!(ALL_KINDS.contains(&FrameKind::RefRequest));
     }
 
     #[test]

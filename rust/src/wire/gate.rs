@@ -1,0 +1,158 @@
+//! Idempotent round resume: dedup of replayed, stale, and out-of-order
+//! frames, keyed on the frame header's existing `round` tag.
+//!
+//! After a reconnect, the peer replays everything it sent this round
+//! (it cannot know which frames survived the dying connection), so
+//! every receiver must treat frames as at-least-once deliveries. A
+//! [`RoundGate`] keeps one high-water mark per [`FrameKind`] and admits
+//! a frame only when its round is strictly above that kind's mark —
+//! giving exactly-once *acceptance* on top of at-least-once delivery:
+//!
+//! * per kind, the sequence of accepted rounds is strictly increasing;
+//! * a `(kind, round)` pair is accepted at most once; replays come back
+//!   [`Admit::Duplicate`] (same round as the mark) or [`Admit::Stale`]
+//!   (below it) and are dropped silently, never an error;
+//! * frames from a round the receiver hasn't reached yet come back
+//!   [`Admit::Future`] without moving the mark — the caller decides
+//!   whether to consume them (e.g. a coordinator's `Resolved` for a
+//!   round it already closed) and then [`RoundGate::record`]s them.
+
+use super::frame::FrameKind;
+
+/// Admission verdict for one incoming frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// First sighting for this kind in the current round — process it.
+    Accept,
+    /// First sighting, but from an earlier round than the receiver's
+    /// current one (a late arrival) — process under late semantics.
+    AcceptLate,
+    /// Same round as this kind's last accepted frame — a replay; drop.
+    Duplicate,
+    /// Below this kind's last accepted round — long-obsolete; drop.
+    Stale,
+    /// Beyond the receiver's current round; the mark is untouched.
+    Future,
+}
+
+impl Admit {
+    /// Did the gate pass the frame through for processing?
+    pub fn accepted(&self) -> bool {
+        matches!(self, Admit::Accept | Admit::AcceptLate)
+    }
+}
+
+/// Highest kind discriminant tracked ([`FrameKind::RefRequest`] = 24).
+const KIND_SLOTS: usize = 32;
+
+pub struct RoundGate {
+    current: u32,
+    /// Last accepted round per kind discriminant; -1 = none yet.
+    hi: [i64; KIND_SLOTS],
+}
+
+impl Default for RoundGate {
+    fn default() -> RoundGate {
+        RoundGate::new()
+    }
+}
+
+impl RoundGate {
+    pub fn new() -> RoundGate {
+        RoundGate {
+            current: 0,
+            hi: [-1; KIND_SLOTS],
+        }
+    }
+
+    /// Advance the receiver's notion of the current round. Marks are
+    /// deliberately *not* reset — they are what makes last round's
+    /// replays recognizable as duplicates.
+    pub fn begin_round(&mut self, round: u32) {
+        self.current = round;
+    }
+
+    pub fn current(&self) -> u32 {
+        self.current
+    }
+
+    /// Admit or reject a frame of `kind` tagged `round`. Accepting
+    /// moves the kind's mark; `Duplicate`/`Stale`/`Future` leave all
+    /// state untouched.
+    pub fn admit(&mut self, kind: FrameKind, round: u32) -> Admit {
+        let slot = kind as usize % KIND_SLOTS;
+        let r = round as i64;
+        if r <= self.hi[slot] {
+            return if r == self.hi[slot] {
+                Admit::Duplicate
+            } else {
+                Admit::Stale
+            };
+        }
+        if round > self.current {
+            return Admit::Future;
+        }
+        self.hi[slot] = r;
+        if round == self.current {
+            Admit::Accept
+        } else {
+            Admit::AcceptLate
+        }
+    }
+
+    /// Record an out-of-band acceptance (e.g. a consumed `Future`
+    /// frame) so its replays dedup like any other.
+    pub fn record(&mut self, kind: FrameKind, round: u32) {
+        let slot = kind as usize % KIND_SLOTS;
+        self.hi[slot] = self.hi[slot].max(round as i64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_once_then_dedups() {
+        let mut g = RoundGate::new();
+        g.begin_round(5);
+        assert_eq!(g.admit(FrameKind::Violation, 5), Admit::Accept);
+        assert_eq!(g.admit(FrameKind::Violation, 5), Admit::Duplicate);
+        assert_eq!(g.admit(FrameKind::Violation, 3), Admit::Stale);
+        // other kinds have independent marks
+        assert_eq!(g.admit(FrameKind::CheckOk, 5), Admit::Accept);
+    }
+
+    #[test]
+    fn late_and_future_rounds() {
+        let mut g = RoundGate::new();
+        g.begin_round(10);
+        assert_eq!(g.admit(FrameKind::Upload, 7), Admit::AcceptLate);
+        // the late accept moved the mark: its replay dedups
+        assert_eq!(g.admit(FrameKind::Upload, 7), Admit::Duplicate);
+        assert_eq!(g.admit(FrameKind::Upload, 15), Admit::Future);
+        // Future left the mark alone: round 10 still accepts
+        assert_eq!(g.admit(FrameKind::Upload, 10), Admit::Accept);
+    }
+
+    #[test]
+    fn record_marks_consumed_futures() {
+        let mut g = RoundGate::new();
+        g.begin_round(5);
+        assert_eq!(g.admit(FrameKind::Resolved, 8), Admit::Future);
+        g.record(FrameKind::Resolved, 8);
+        g.begin_round(8);
+        assert_eq!(g.admit(FrameKind::Resolved, 8), Admit::Duplicate);
+    }
+
+    #[test]
+    fn marks_survive_round_boundaries() {
+        let mut g = RoundGate::new();
+        g.begin_round(5);
+        assert_eq!(g.admit(FrameKind::Violation, 5), Admit::Accept);
+        g.begin_round(10);
+        // last round's replay is still a duplicate, not stale-panic fodder
+        assert_eq!(g.admit(FrameKind::Violation, 5), Admit::Duplicate);
+        assert_eq!(g.admit(FrameKind::Violation, 10), Admit::Accept);
+    }
+}

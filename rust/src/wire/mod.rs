@@ -5,24 +5,57 @@
 //! into *measured bytes on the wire*:
 //!
 //! - [`frame`] — length-prefixed binary frames (16-byte header, equal to
-//!   [`crate::network::HEADER_BYTES`]) plus a JSON debug codec.
+//!   [`crate::network::HEADER_BYTES`], with an XOR corruption checksum)
+//!   plus a JSON debug codec.
 //! - [`encoding`] — dense f32, per-chunk-quantized int8/int16, and
 //!   top-k-sparse delta encodings with exact `encoded_bytes()` accounting.
 //! - [`link`] — the in-process transport: protocols charge `NetStats`
 //!   with encoded payload sizes and lossy transfers roundtrip values,
 //!   so a simulated run matches a socket run byte for byte.
 //! - [`serve`] / [`client`] — the loopback coordinator on
-//!   `std::net::TcpListener`: `dynavg serve` hosts dynamic averaging,
-//!   learner clients connect and trade encoded deltas, reproducing the
-//!   in-process protocol bit for bit (asserted in `tests/wire_loopback.rs`
-//!   and the CI serve-smoke step).
+//!   `std::net::TcpListener`: `dynavg serve` hosts dynamic averaging
+//!   with quorum rounds (proceed on ≥Q of the enrolled cohort within a
+//!   deadline, merge late reports into the next round), learner clients
+//!   reconnect with jittered exponential backoff and resume their round
+//!   idempotently, reproducing the in-process protocol bit for bit on
+//!   the clean path (asserted in `tests/wire_loopback.rs` and the CI
+//!   serve-smoke step) and degrading like the fleet fault model under
+//!   faults (`tests/wire_chaos.rs`, CI chaos-smoke).
+//! - [`gate`] — per-kind round watermarks giving exactly-once acceptance
+//!   over at-least-once (replayed) delivery.
+//! - [`chaos`] — the seeded `FaultyStream` fault injector (truncation,
+//!   corruption, duplication, delays, mid-round disconnects) wrapped
+//!   around any [`WireStream`].
 
+pub mod chaos;
 pub mod client;
 pub mod encoding;
 pub mod frame;
+pub mod gate;
 pub mod link;
 pub mod serve;
 
+pub use chaos::{ChaosProfile, FaultyStream};
 pub use encoding::Encoding;
 pub use frame::{Frame, FrameKind};
+pub use gate::{Admit, RoundGate};
 pub use link::Link;
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// A bidirectional byte stream the coordinator and clients can run
+/// over: `TcpStream` in production, [`FaultyStream`]-wrapped streams
+/// under chaos testing.
+pub trait WireStream: Read + Write + Send {
+    /// Set (or clear) the blocking-read timeout, `TcpStream` semantics:
+    /// a timed-out `read` returns `WouldBlock`/`TimedOut` having
+    /// consumed nothing.
+    fn set_read_timeout(&mut self, dur: Option<Duration>) -> std::io::Result<()>;
+}
+
+impl WireStream for std::net::TcpStream {
+    fn set_read_timeout(&mut self, dur: Option<Duration>) -> std::io::Result<()> {
+        std::net::TcpStream::set_read_timeout(self, dur)
+    }
+}

@@ -10,46 +10,94 @@
 //! (asserted in `tests/wire_loopback.rs`). Protocol over the socket:
 //!
 //! 1. handshake: each client sends `Hello`, receives a `Config` frame
-//!    (JSON payload) assigning its learner id and the full run config.
+//!    (JSON payload) assigning its learner id and the full run config. A
+//!    `Hello` carrying `resume: id` instead re-attaches a reconnecting
+//!    client to its existing slot and replays the round.
 //! 2. clients free-run local SGD between check rounds. At the first check
-//!    round, client 0 ships its model dense (`RefModel`, uncharged) and
-//!    the server broadcasts it back as the shared reference
+//!    round the lowest enrolled client ships its model dense (`RefModel`,
+//!    uncharged; solicited by `RefRequest` when that client is not id 0)
+//!    and the server broadcasts it back as the shared reference
 //!    (`SetReference`) — Algorithm 1's `r := f^0`.
 //! 3. at every check round each client reports either `CheckOk`
 //!    (uncharged) or `Violation` with its encoded delta (charged). The
-//!    server balances exactly like the in-process coordinator — polling
-//!    extra models with charged `Query`/`Upload` pairs when the violation
-//!    counter forces a full sync or the balancing loop augments the set —
-//!    then distributes the average (`Download`, charged, `FLAG_FULL_SYNC`
-//!    when all m participate) and ends the round with `Resolved`.
+//!    round closes when every *enrolled* client reported, or — past the
+//!    per-round deadline — when at least `ceil(quorum · enrolled)` did
+//!    (a quorum shortfall). Reports that miss the cut merge into the
+//!    next round they arrive in, mirroring the fleet scheduler's
+//!    `async_merge` arrivals. The server then balances exactly like the
+//!    in-process coordinator over this round's participants — polling
+//!    extra models with charged `Query`/`Upload` pairs when the
+//!    violation counter forces a full sync or the balancing loop
+//!    augments the set — and distributes the average (`Download`,
+//!    charged, `FLAG_FULL_SYNC` when all participants sync). A full
+//!    sync among fewer than all enrolled clients pushes the new
+//!    reference to the others (`SetReference`, uncharged, generation
+//!    bits bumped) before `Resolved` ends the round.
 //! 4. after the last round every client ships a `FinalReport` (model +
 //!    per-round losses/metrics, uncharged bookkeeping) and receives `Done`.
+//!
+//! Fault tolerance: the server is a single-threaded poll loop over
+//! non-blocking accepts and short-read-timeout connections. A broken,
+//! truncated, or corrupt connection never fails the run — the slot's
+//! connection is dropped, the client reconnects with backoff and a
+//! `resume` hello, and the server replays its undelivered outbox (plus
+//! a synthesized `Resolved`/`Done` where the original already left the
+//! outbox). Replayed frames carry `FLAG_RETRANSMIT` and are charged to
+//! [`NetStats::retransmit`], never to the base byte accounting; each
+//! slot's [`RoundGate`] dedups the client's replays the same way. A
+//! client silent for `dead_after` is unenrolled and the run degrades to
+//! the survivors, like an engine run with a forced dropout
+//! (`tests/wire_chaos.rs`).
 //!
 //! Byte accounting: charged frames are tallied both through
 //! [`NetStats::send`] (the simulation-side accounting) and by summing the
 //! actual frame bytes written/read; [`WireServer::run`] fails unless the
-//! two agree exactly — the invariant the CI serve-smoke step gates.
+//! two agree exactly — base bytes by direction *and* retransmitted bytes
+//! — the invariant the CI serve-smoke and chaos-smoke steps gate.
 //!
 //! Hosting restrictions (by construction, not oversight): the dynamic
 //! protocol with `Random` augmentation only — the coordinator cannot use
 //! `FarthestFirst` because it never holds non-member models before
 //! querying them — homogeneous init, equal sample rates, no drift.
+//! Known divergence from the engine under faults: a client that dies
+//! *mid-balancing* (after reporting) is dropped from the participant set
+//! without rewinding the augmentation rng, and a late `Violation` merges
+//! with the model it encoded at its own check, not a fresh one.
 
-use std::io::Write as _;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener};
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::experiments::Dataset;
 use crate::model::params;
-use crate::network::{MsgKind, NetStats};
+use crate::network::NetStats;
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::wire::chaos::ChaosProfile;
 use crate::wire::encoding::Encoding;
-use crate::wire::frame::{Frame, FrameKind, COORDINATOR, FLAG_FULL_SYNC};
+use crate::wire::frame::{
+    flags_gen, gen_flags, Frame, FrameKind, COORDINATOR, FLAG_FULL_SYNC, FLAG_RETRANSMIT,
+    HEADER_LEN, MAX_PAYLOAD,
+};
+use crate::wire::gate::{Admit, RoundGate};
+use crate::wire::{FaultyStream, WireStream};
+
+/// Blocking-read timeout per connection poll: long enough to batch
+/// bytes, short enough that one silent client cannot stall the loop.
+const POLL_READ: Duration = Duration::from_millis(1);
+/// Idle sleep between poll passes when nothing is ready.
+const POLL_SLEEP: Duration = Duration::from_millis(1);
+/// Per-pass read chunk per connection.
+const READ_CHUNK: usize = 16 * 1024;
+/// Reference generations kept for decoding late violations.
+const REF_HISTORY: usize = 8;
+/// Per-connection chaos seed spacing (golden-ratio multiplier).
+const CONN_SEED_STEP: u64 = 0x9E37_79B9_7F4A_7C15;
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -64,10 +112,23 @@ pub struct ServeConfig {
     /// Local-condition check period b.
     pub check_every: u64,
     pub encoding: Encoding,
-    /// Per-socket read/write timeout plus the accept deadline (bounds how
-    /// long the coordinator waits on a slow or dead client before failing
-    /// the run instead of hanging CI).
+    /// Hard per-phase deadline (enrollment, one round, finals): the run
+    /// fails rather than hangs if a phase cannot complete within it.
     pub timeout: Duration,
+    /// Fraction of the *enrolled* cohort whose reports let a check round
+    /// close once `round_deadline` passed (1.0 = wait for everyone).
+    pub quorum: f64,
+    /// How long a check round waits for stragglers before closing on a
+    /// quorum of reports; late reports merge into the next round.
+    pub round_deadline: Duration,
+    /// A client silent this long is unenrolled: the run degrades to the
+    /// survivors instead of waiting forever.
+    pub dead_after: Duration,
+    /// Server-side fault injection: wrap every accepted connection in a
+    /// [`FaultyStream`] with this profile, seeded per connection from
+    /// the given seed (the CI chaos-smoke path — stock `dynavg connect`
+    /// clients then exercise the recovery machinery).
+    pub chaos: Option<(ChaosProfile, u64)>,
     /// Evaluate the final averaged model on a holdout stream.
     pub final_eval: bool,
     /// Log every frame (compact JSON) to stderr.
@@ -87,6 +148,10 @@ impl ServeConfig {
             check_every: 5,
             encoding: Encoding::Dense,
             timeout: Duration::from_secs(120),
+            quorum: 1.0,
+            round_deadline: Duration::from_secs(10),
+            dead_after: Duration::from_secs(30),
+            chaos: None,
             final_eval: false,
             debug_wire: false,
         }
@@ -104,16 +169,29 @@ pub struct ServeReport {
     /// verified these equal `net.up_bytes` / `net.down_bytes`.
     pub wire_up_bytes: u64,
     pub wire_down_bytes: u64,
+    /// Measured bytes of charged frames delivered beyond their first
+    /// successful delivery (replays and deduped duplicates); verified
+    /// equal to `net.retrans_bytes`.
+    pub wire_retrans_bytes: u64,
     /// Measured bytes of *all* frames, including the uncharged
     /// handshake/bookkeeping transport.
     pub wire_transport_bytes: u64,
-    /// Final per-learner models (id order) and their average.
+    /// Final per-learner models (id order); empty for a client that died
+    /// unrecoverably. `averaged` spans the survivors.
     pub models: Vec<Vec<f32>>,
     pub averaged: Vec<f32>,
-    /// Σ_t Σ_i loss — summed in the engine's order for bitwise parity
-    /// with [`crate::metrics::Recorder`]'s cumulative loss.
+    /// Σ_t Σ_i loss over surviving learners — summed in the engine's
+    /// order for bitwise parity with [`crate::metrics::Recorder`].
     pub cumulative_loss: f64,
     pub eval: Option<(f64, f64)>,
+    /// Check rounds that closed on a quorum below full enrollment.
+    pub shortfalls: u64,
+    /// Reports that missed their round's cut and merged into a later one.
+    pub late_merges: u64,
+    /// Successful resume handshakes across all clients.
+    pub reconnects: u64,
+    /// Ids unenrolled for silence and never heard from again.
+    pub dead: Vec<usize>,
 }
 
 pub struct WireServer {
@@ -121,10 +199,528 @@ pub struct WireServer {
     listener: TcpListener,
 }
 
-/// One accepted client connection; accept order assigns learner ids.
-struct Conn {
-    stream: TcpStream,
-    id: u16,
+/// Parse complete frames off an accumulating per-connection byte buffer.
+/// Returns `Ok(None)` while the front frame is still partial; errors on
+/// garbage (bad magic/length/checksum), which poisons the connection.
+fn pop_frame(buf: &mut Vec<u8>) -> Result<Option<Frame>> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]);
+    if len > MAX_PAYLOAD {
+        bail!("frame payload length {len} exceeds limit {MAX_PAYLOAD}");
+    }
+    let total = HEADER_LEN + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let f = Frame::read_from(&mut &buf[..total])?;
+    buf.drain(..total);
+    Ok(Some(f))
+}
+
+/// One non-blocking-ish read into `buf`. `Ok(0)` means no data ready;
+/// `Err` means the connection is gone (EOF included).
+fn read_available(stream: &mut dyn WireStream, buf: &mut Vec<u8>) -> std::io::Result<usize> {
+    let mut tmp = [0u8; READ_CHUNK];
+    match stream.read(&mut tmp) {
+        Ok(0) => Err(std::io::Error::new(
+            ErrorKind::UnexpectedEof,
+            "peer closed the connection",
+        )),
+        Ok(n) => {
+            buf.extend_from_slice(&tmp[..n]);
+            Ok(n)
+        }
+        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => Ok(0),
+        Err(e) => Err(e),
+    }
+}
+
+/// Measured byte counters: charged frames by direction (first
+/// deliveries), retransmitted charged bytes, and total transport
+/// including uncharged frames.
+#[derive(Default)]
+struct Tally {
+    up: u64,
+    down: u64,
+    retrans_up: u64,
+    retrans_down: u64,
+    transport: u64,
+}
+
+impl Tally {
+    fn recv_base(&mut self, f: &Frame) {
+        self.transport += f.wire_bytes();
+        if f.is_charged() {
+            self.up += f.wire_bytes();
+        }
+    }
+    fn recv_retrans(&mut self, f: &Frame) {
+        self.transport += f.wire_bytes();
+        if f.is_charged() {
+            self.retrans_up += f.wire_bytes();
+        }
+    }
+    fn sent_base(&mut self, f: &Frame) {
+        self.transport += f.wire_bytes();
+        if f.is_charged() {
+            self.down += f.wire_bytes();
+        }
+    }
+    fn sent_retrans(&mut self, f: &Frame) {
+        self.transport += f.wire_bytes();
+        if f.is_charged() {
+            self.retrans_down += f.wire_bytes();
+        }
+    }
+}
+
+/// One learner slot: the protocol identity a physical connection attaches
+/// to. Slots survive disconnects; connections come and go.
+struct Slot {
+    /// Live connection, if any.
+    conn: Option<Box<dyn WireStream>>,
+    /// Bytes read but not yet parsed into frames.
+    inbuf: Vec<u8>,
+    /// Gate-accepted frames awaiting the round logic.
+    inbox: VecDeque<Frame>,
+    /// Frames sent this round, for replay on resume. `true` = the write
+    /// succeeded at least once (replays are retransmissions).
+    outbox: Vec<(Frame, bool)>,
+    /// Per-kind round watermarks deduping the client's replays.
+    gate: RoundGate,
+    /// A physical client was ever assigned this id.
+    claimed: bool,
+    /// Counted toward quorum and broadcast targets.
+    enrolled: bool,
+    last_seen: Instant,
+    reconnects: u64,
+    /// Raw `FinalReport` payload once received.
+    final_raw: Option<Vec<u8>>,
+}
+
+impl Slot {
+    fn new(now: Instant) -> Slot {
+        Slot {
+            conn: None,
+            inbuf: Vec::new(),
+            inbox: VecDeque::new(),
+            outbox: Vec::new(),
+            gate: RoundGate::new(),
+            claimed: false,
+            enrolled: false,
+            last_seen: now,
+            reconnects: 0,
+            final_raw: None,
+        }
+    }
+}
+
+/// An accepted connection still awaiting its `Hello`.
+struct Pending {
+    conn: Box<dyn WireStream>,
+    inbuf: Vec<u8>,
+    since: Instant,
+    peer: String,
+}
+
+/// Connection hub: slots, pending handshakes, and the paired
+/// measured-vs-simulated byte accounting. All I/O goes through here so
+/// charging stays coupled to actual delivery.
+struct Hub {
+    cfg: ServeConfig,
+    listener: TcpListener,
+    slots: Vec<Slot>,
+    pending: Vec<Pending>,
+    tally: Tally,
+    net: NetStats,
+    conn_seq: u64,
+    /// Round of the last `Resolved` broadcast (0 = none yet; real rounds
+    /// start at `check_every` ≥ 1). Synthesized on resume when the
+    /// original left the outbox.
+    last_resolved: u32,
+    done: bool,
+    /// Last structured handshake failure, surfaced by enrollment timeouts.
+    last_hs_error: Option<String>,
+}
+
+impl Hub {
+    fn new(cfg: ServeConfig, listener: TcpListener) -> Result<Hub> {
+        listener.set_nonblocking(true)?;
+        let now = Instant::now();
+        let m = cfg.m;
+        Ok(Hub {
+            cfg,
+            listener,
+            slots: (0..m).map(|_| Slot::new(now)).collect(),
+            pending: Vec::new(),
+            tally: Tally::default(),
+            net: NetStats::new(),
+            conn_seq: 0,
+            last_resolved: 0,
+            done: false,
+            last_hs_error: None,
+        })
+    }
+
+    fn all_claimed(&self) -> bool {
+        self.slots.iter().all(|s| s.claimed)
+    }
+
+    fn enrolled_ids(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.slots[i].enrolled).collect()
+    }
+
+    /// One poll pass: accept new connections, progress pending
+    /// handshakes, drain readable bytes from every attached slot and
+    /// gate the parsed frames into inboxes. Never blocks for more than
+    /// the per-connection read timeout; connection failures poison the
+    /// one connection, never the run.
+    fn pump(&mut self) -> Result<()> {
+        // accept — reconnects arrive as fresh TCP connections all run long
+        loop {
+            match self.listener.accept() {
+                Ok((tcp, addr)) => {
+                    tcp.set_nodelay(true)?;
+                    tcp.set_read_timeout(Some(POLL_READ))?;
+                    tcp.set_write_timeout(Some(self.cfg.timeout))?;
+                    let conn: Box<dyn WireStream> = match &self.cfg.chaos {
+                        Some((profile, seed)) => {
+                            self.conn_seq += 1;
+                            let s = seed ^ self.conn_seq.wrapping_mul(CONN_SEED_STEP);
+                            Box::new(FaultyStream::new(tcp, *profile, s))
+                        }
+                        None => Box::new(tcp),
+                    };
+                    self.pending.push(Pending {
+                        conn,
+                        inbuf: Vec::new(),
+                        since: Instant::now(),
+                        peer: addr.to_string(),
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e).context("accepting client connection"),
+            }
+        }
+
+        // pending handshakes: read until one Hello frame parses
+        let mut pi = 0;
+        while pi < self.pending.len() {
+            let p = &mut self.pending[pi];
+            let dead = match read_available(p.conn.as_mut(), &mut p.inbuf) {
+                Ok(_) => false,
+                Err(_) => true,
+            };
+            let frame = if dead { Ok(None) } else { pop_frame(&mut p.inbuf) };
+            match frame {
+                Ok(Some(f)) => {
+                    // handle_hello consumes pending[pi]; do not advance
+                    if let Err(e) = self.handle_hello(pi, f) {
+                        if !self.all_claimed() {
+                            // a bad handshake during enrollment is a
+                            // config error: fail fast and loud
+                            return Err(e);
+                        }
+                        eprintln!("serve: rejected connection: {e:#}");
+                        self.last_hs_error = Some(format!("{e:#}"));
+                    }
+                }
+                Ok(None) => {
+                    if dead || p.since.elapsed() > self.cfg.timeout {
+                        self.pending.swap_remove(pi);
+                    } else {
+                        pi += 1;
+                    }
+                }
+                Err(e) => {
+                    self.last_hs_error = Some(format!("{}: {e:#}", p.peer));
+                    self.pending.swap_remove(pi);
+                }
+            }
+        }
+
+        // attached slots: parse buffered frames (a resume can attach
+        // leftover bytes), then drain whatever is readable
+        for i in 0..self.slots.len() {
+            loop {
+                loop {
+                    match pop_frame(&mut self.slots[i].inbuf) {
+                        Ok(Some(f)) => self.route(i, f),
+                        Ok(None) => break,
+                        Err(e) => {
+                            self.poison(i, &format!("parse: {e:#}"));
+                            break;
+                        }
+                    }
+                }
+                let slot = &mut self.slots[i];
+                let Some(conn) = slot.conn.as_mut() else { break };
+                match read_available(conn.as_mut(), &mut slot.inbuf) {
+                    Ok(0) => break,
+                    Ok(_) => {}
+                    Err(e) => {
+                        self.poison(i, &format!("read: {e}"));
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Gate one parsed frame from slot `i` into its inbox, charging
+    /// accepted frames as base traffic and dedupable replays as
+    /// retransmissions. Client→server charged kinds (`Violation`,
+    /// `Upload`) hit [`NetStats::send`] here — exactly once per accepted
+    /// frame — so measured and simulated accounting cannot drift apart.
+    fn route(&mut self, i: usize, f: Frame) {
+        if self.cfg.debug_wire {
+            eprintln!("wire: <- {} {}", i, f.summary_json());
+        }
+        let slot = &mut self.slots[i];
+        slot.last_seen = Instant::now();
+        if !slot.enrolled && slot.claimed && slot.final_raw.is_none() {
+            // a frame from a presumed-dead client: welcome it back
+            slot.enrolled = true;
+        }
+        let admit = slot.gate.admit(f.kind, f.round);
+        match admit {
+            Admit::Accept | Admit::AcceptLate => {
+                self.tally.recv_base(&f);
+                if let Some(kind) = f.kind.msg_kind() {
+                    self.net.send(kind, f.payload.len() as u64);
+                }
+                self.slots[i].inbox.push_back(f);
+            }
+            Admit::Future => {
+                // ahead of our round clock (cannot happen with a
+                // lock-step client, but never drop real progress)
+                self.slots[i].gate.record(f.kind, f.round);
+                self.tally.recv_base(&f);
+                if let Some(kind) = f.kind.msg_kind() {
+                    self.net.send(kind, f.payload.len() as u64);
+                }
+                self.slots[i].inbox.push_back(f);
+            }
+            Admit::Duplicate | Admit::Stale => {
+                self.tally.recv_retrans(&f);
+                if f.is_charged() {
+                    self.net.retransmit(f.wire_bytes());
+                }
+            }
+        }
+    }
+
+    /// Drop slot `i`'s connection (with its unparsed bytes); the client
+    /// is expected to reconnect and resume.
+    fn poison(&mut self, i: usize, why: &str) {
+        let slot = &mut self.slots[i];
+        if slot.conn.take().is_some() && self.cfg.debug_wire {
+            eprintln!("serve: dropped connection of client {i}: {why}");
+        }
+        slot.inbuf.clear();
+    }
+
+    /// Unenroll clients silent past `dead_after`; the run degrades to
+    /// the survivors. A later frame from the slot re-enrolls it.
+    fn sweep_dead(&mut self, now: Instant) {
+        for i in 0..self.slots.len() {
+            let slot = &mut self.slots[i];
+            if slot.enrolled
+                && slot.final_raw.is_none()
+                && now.duration_since(slot.last_seen) > self.cfg.dead_after
+            {
+                slot.enrolled = false;
+                eprintln!(
+                    "serve: client {i} silent for {:.1}s — unenrolled, degrading to survivors",
+                    now.duration_since(slot.last_seen).as_secs_f64()
+                );
+            }
+        }
+    }
+
+    /// Process one `Hello` from `pending[pi]`, consuming the pending
+    /// entry: fresh hellos claim the next free slot, `resume` hellos
+    /// re-attach to their existing slot and replay the outbox.
+    fn handle_hello(&mut self, pi: usize, f: Frame) -> Result<()> {
+        let p = self.pending.swap_remove(pi);
+        let peer = p.peer;
+        if f.kind != FrameKind::Hello {
+            bail!("client at {peer}: expected hello, got {}", f.kind.name());
+        }
+        self.tally.recv_base(&f);
+        let text = std::str::from_utf8(&f.payload)
+            .map_err(|_| anyhow!("client at {peer}: hello payload is not UTF-8"))?;
+        let j = Json::parse(text).map_err(|e| anyhow!("client at {peer}: hello is not JSON: {e}"))?;
+        let pv = j
+            .req("proto")
+            .map_err(|_| anyhow!("client at {peer}: hello {text:?} lacks a \"proto\" field"))?;
+        let proto = pv.as_usize().ok_or_else(|| {
+            anyhow!("client at {peer}: hello proto field is {pv:?}, expected the integer 1")
+        })?;
+        if proto != 1 {
+            bail!("client at {peer}: speaks wire protocol {proto}, server speaks 1");
+        }
+        let resume = j.get("resume").and_then(|v| v.as_usize());
+        let i = match resume {
+            Some(i) => {
+                if i >= self.slots.len() || !self.slots[i].claimed {
+                    bail!("client at {peer}: resume for unknown client id {i}");
+                }
+                self.slots[i].reconnects += 1;
+                i
+            }
+            None => match (0..self.slots.len()).find(|&i| !self.slots[i].claimed) {
+                Some(i) => {
+                    self.slots[i].claimed = true;
+                    i
+                }
+                None => bail!("client at {peer}: all {} learner slots are taken", self.slots.len()),
+            },
+        };
+        let slot = &mut self.slots[i];
+        slot.conn = Some(p.conn);
+        slot.inbuf = p.inbuf;
+        slot.enrolled = true;
+        slot.last_seen = Instant::now();
+
+        // (re-)send Config, then replay the outbox; a resuming client's
+        // RoundGate dedups whatever it already processed
+        let config = self.build_config(i);
+        self.write_direct(i, &config, resume.is_some());
+        if resume.is_some() {
+            self.replay_outbox(i);
+            if self.last_resolved > 0 {
+                // the Resolved that closed the last round may have been
+                // retained out of the outbox — synthesize it
+                let r = Frame::control(FrameKind::Resolved, COORDINATOR, self.last_resolved);
+                self.write_direct(i, &r, true);
+            }
+            if self.done {
+                let d = Frame::control(FrameKind::Done, COORDINATOR, self.cfg.rounds as u32);
+                self.write_direct(i, &d, true);
+            }
+        }
+        Ok(())
+    }
+
+    fn build_config(&self, i: usize) -> Frame {
+        let cfg = &self.cfg;
+        let config = Json::obj(vec![
+            ("id", Json::num(i as f64)),
+            ("m", Json::num(cfg.m as f64)),
+            ("model", Json::str(cfg.model.clone())),
+            ("optimizer", Json::str(cfg.optimizer.clone())),
+            ("rounds", Json::num(cfg.rounds as f64)),
+            ("lr", Json::num(cfg.lr as f64)),
+            ("seed", Json::num(cfg.seed as f64)),
+            ("delta", Json::num(cfg.delta)),
+            ("check_every", Json::num(cfg.check_every as f64)),
+            ("encoding", Json::str(cfg.encoding.label())),
+        ]);
+        let mut f = Frame::control(FrameKind::Config, COORDINATOR, 0);
+        f.payload = config.to_string().into_bytes();
+        f
+    }
+
+    /// Write a frame outside the outbox (Config, synthesized
+    /// Resolved/Done): best-effort, uncharged kinds only.
+    fn write_direct(&mut self, i: usize, f: &Frame, retransmit: bool) {
+        debug_assert!(!f.is_charged());
+        if self.cfg.debug_wire {
+            eprintln!("wire: -> {} {}", i, f.summary_json());
+        }
+        let mut out = f.clone();
+        if retransmit {
+            out.flags |= FLAG_RETRANSMIT;
+        }
+        let ok = match self.slots[i].conn.as_mut() {
+            Some(conn) => out.write_to(conn).is_ok(),
+            None => false,
+        };
+        if ok {
+            if retransmit {
+                self.tally.sent_retrans(&out);
+            } else {
+                self.tally.sent_base(&out);
+            }
+        } else {
+            self.poison(i, "write failed");
+        }
+    }
+
+    /// Queue `f` for slot `i` and attempt delivery now. Charged kinds
+    /// hit [`NetStats::send`] on their *first successful* write (here or
+    /// in a later replay), so a frame never delivered is never charged.
+    fn send_slot(&mut self, i: usize, f: Frame) {
+        self.slots[i].outbox.push((f, false));
+        let ei = self.slots[i].outbox.len() - 1;
+        self.deliver_entry(i, ei);
+    }
+
+    /// Write outbox entry `ei` of slot `i` if connected. First
+    /// successful delivery charges base traffic; repeats charge
+    /// retransmissions and carry `FLAG_RETRANSMIT`.
+    fn deliver_entry(&mut self, i: usize, ei: usize) {
+        let delivered = self.slots[i].outbox[ei].1;
+        let mut out = self.slots[i].outbox[ei].0.clone();
+        if delivered {
+            out.flags |= FLAG_RETRANSMIT;
+        }
+        if self.cfg.debug_wire {
+            eprintln!("wire: -> {} {}", i, out.summary_json());
+        }
+        let ok = match self.slots[i].conn.as_mut() {
+            Some(conn) => out.write_to(conn).is_ok(),
+            None => false,
+        };
+        if !ok {
+            self.poison(i, "write failed");
+            return;
+        }
+        if delivered {
+            self.tally.sent_retrans(&out);
+            if out.is_charged() {
+                self.net.retransmit(out.wire_bytes());
+            }
+        } else {
+            self.slots[i].outbox[ei].1 = true;
+            self.tally.sent_base(&out);
+            if let Some(kind) = out.kind.msg_kind() {
+                self.net.send(kind, out.payload.len() as u64);
+            }
+        }
+    }
+
+    /// Replay every retained outbox entry to a resumed client.
+    fn replay_outbox(&mut self, i: usize) {
+        for ei in 0..self.slots[i].outbox.len() {
+            if self.slots[i].conn.is_none() {
+                break;
+            }
+            self.deliver_entry(i, ei);
+        }
+    }
+
+    /// Send a payload-less control frame to every enrolled client.
+    fn broadcast_enrolled(&mut self, kind: FrameKind, round: u32) {
+        for i in 0..self.slots.len() {
+            if self.slots[i].enrolled {
+                self.send_slot(i, Frame::control(kind, COORDINATOR, round));
+            }
+        }
+    }
+
+    /// Start a new protocol round: advance every slot's gate and drop
+    /// delivered outbox entries (undelivered ones stay for replay).
+    fn begin_round(&mut self, round: u32) {
+        for slot in self.slots.iter_mut() {
+            slot.gate.begin_round(round);
+            slot.outbox.retain(|e| !e.1);
+        }
+    }
 }
 
 impl WireServer {
@@ -136,6 +732,9 @@ impl WireServer {
         }
         if cfg.rounds == 0 || cfg.check_every == 0 {
             bail!("rounds and check period must be positive");
+        }
+        if !(cfg.quorum > 0.0 && cfg.quorum <= 1.0) {
+            bail!("quorum {} out of (0, 1]", cfg.quorum);
         }
         let listener = TcpListener::bind(("127.0.0.1", port)).context("binding loopback listener")?;
         Ok(WireServer { cfg, listener })
@@ -149,41 +748,15 @@ impl WireServer {
     /// ephemeral `--port 0` choice race-free.
     pub fn write_port_file(&self, path: &Path) -> Result<()> {
         let mut f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        use std::io::Write as _;
         writeln!(f, "{}", self.local_addr()?.port())?;
         Ok(())
     }
 
-    fn accept_clients(&self) -> Result<Vec<Conn>> {
-        self.listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + self.cfg.timeout;
-        let mut conns = Vec::with_capacity(self.cfg.m);
-        while conns.len() < self.cfg.m {
-            match self.listener.accept() {
-                Ok((stream, _)) => {
-                    stream.set_nonblocking(false)?;
-                    stream.set_nodelay(true)?;
-                    stream.set_read_timeout(Some(self.cfg.timeout))?;
-                    stream.set_write_timeout(Some(self.cfg.timeout))?;
-                    conns.push(Conn {
-                        stream,
-                        id: conns.len() as u16,
-                    });
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if Instant::now() > deadline {
-                        bail!("only {}/{} clients connected within the timeout", conns.len(), self.cfg.m);
-                    }
-                    std::thread::sleep(Duration::from_millis(10));
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
-        self.listener.set_nonblocking(false)?;
-        Ok(conns)
-    }
-
-    /// Host one full dynamic-averaging run; returns once all m clients
-    /// completed `rounds` rounds and shipped their final reports.
+    /// Host one full dynamic-averaging run; returns once every enrolled
+    /// client completed `rounds` rounds and shipped its final report
+    /// (clients that die unrecoverably are unenrolled and the run
+    /// degrades to the survivors).
     pub fn run(self, rt: &Runtime) -> Result<ServeReport> {
         let cfg = self.cfg.clone();
         if !rt.supports_model(&cfg.model) {
@@ -193,113 +766,214 @@ impl WireServer {
         let p = mrt.model.param_count;
         let m = cfg.m;
         let enc = cfg.encoding;
+        let mut hub = Hub::new(self.cfg, self.listener)?;
 
-        let mut conns = self.accept_clients()?;
-        let mut tally = Tally::default();
-
-        // --- handshake ----------------------------------------------------
-        for conn in conns.iter_mut() {
-            let hello = recv(conn, &cfg, &mut tally)?;
-            if hello.kind != FrameKind::Hello {
-                bail!("expected hello from client, got {}", hello.kind.name());
+        // --- enrollment ---------------------------------------------------
+        let enroll_deadline = Instant::now() + cfg.timeout;
+        while !hub.all_claimed() {
+            hub.pump()?;
+            if hub.all_claimed() {
+                break;
             }
-            let j = Json::parse(std::str::from_utf8(&hello.payload)?)?;
-            let proto = j.req("proto")?.as_usize().unwrap_or(0);
-            if proto != 1 {
-                bail!("client speaks wire protocol {proto}, server speaks 1");
+            if Instant::now() > enroll_deadline {
+                let n = hub.slots.iter().filter(|s| s.claimed).count();
+                let extra = hub
+                    .last_hs_error
+                    .take()
+                    .map(|e| format!(" (last handshake error: {e})"))
+                    .unwrap_or_default();
+                bail!("only {n}/{m} clients connected within the timeout{extra}");
             }
-            let config = Json::obj(vec![
-                ("id", Json::num(conn.id as f64)),
-                ("m", Json::num(m as f64)),
-                ("model", Json::str(cfg.model.clone())),
-                ("optimizer", Json::str(cfg.optimizer.clone())),
-                ("rounds", Json::num(cfg.rounds as f64)),
-                ("lr", Json::num(cfg.lr as f64)),
-                ("seed", Json::num(cfg.seed as f64)),
-                ("delta", Json::num(cfg.delta)),
-                ("check_every", Json::num(cfg.check_every as f64)),
-                ("encoding", Json::str(cfg.encoding.label())),
-            ]);
-            let mut f = Frame::control(FrameKind::Config, COORDINATOR, 0);
-            f.payload = config.to_string().into_bytes();
-            send(conn, &f, &cfg, &mut tally)?;
+            std::thread::sleep(POLL_SLEEP);
         }
 
         // --- protocol state (mirrors coordinator::DynamicAveraging) -------
-        let mut net = NetStats::new();
         let mut proto_rng = Rng::new(cfg.seed ^ 0xABCD);
         let mut reference: Option<Vec<f32>> = None;
+        let mut ref_gen: u64 = 0;
+        // past reference generations, for decoding late violations
+        let mut ref_history: Vec<(u64, Vec<f32>)> = Vec::new();
         let mut violations_seen = 0usize;
         // latest decoded model per participating learner — the server-side
         // counterpart of the coordinator's view of `ctx.models`
         let mut latest: Vec<Vec<f32>> = vec![Vec::new(); m];
         let mut scratch = vec![0.0f32; p];
         let mut payload_buf: Vec<u8> = Vec::new();
+        let mut late_merges = 0u64;
+        let mut shortfalls = 0u64;
 
         let mut t = cfg.check_every;
         while t <= cfg.rounds {
             let round = t as u32;
-            // first check round: adopt client 0's model as the reference
-            // (Algorithm 1 init; uncharged — in-process this is a clone)
+            hub.begin_round(round);
+            let round_start = Instant::now();
+            let hard = round_start + cfg.timeout;
+
+            // first check round: adopt the lowest enrolled client's model
+            // as the reference (Algorithm 1 init; uncharged — in-process
+            // this is a clone). Client 0 ships proactively; anyone else
+            // is solicited with RefRequest.
             if reference.is_none() {
-                let f = recv(&mut conns[0], &cfg, &mut tally)?;
-                if f.kind != FrameKind::RefModel {
-                    bail!("round {t}: expected ref_model from client 0, got {}", f.kind.name());
-                }
+                let mut requested: Option<usize> = None;
+                let raw = loop {
+                    hub.pump()?;
+                    hub.sweep_dead(Instant::now());
+                    let mut got: Option<Vec<u8>> = None;
+                    for i in 0..m {
+                        let inbox = &mut hub.slots[i].inbox;
+                        if let Some(pos) = inbox.iter().position(|f| f.kind == FrameKind::RefModel) {
+                            if let Some(f) = inbox.remove(pos) {
+                                got = Some(f.payload);
+                            }
+                            break;
+                        }
+                    }
+                    if let Some(raw) = got {
+                        break raw;
+                    }
+                    let enrolled = hub.enrolled_ids();
+                    let Some(&low) = enrolled.first() else {
+                        bail!("round {t}: every client died before a reference model was set");
+                    };
+                    if low != 0 && requested != Some(low) {
+                        hub.send_slot(low, Frame::control(FrameKind::RefRequest, COORDINATOR, round));
+                        requested = Some(low);
+                    }
+                    if Instant::now() > hard {
+                        bail!("round {t}: no reference model within the timeout");
+                    }
+                    std::thread::sleep(POLL_SLEEP);
+                };
                 let mut r = Vec::new();
-                Encoding::Dense.decode(&f.payload, None, &mut r)?;
+                Encoding::Dense.decode(&raw, None, &mut r)?;
                 if r.len() != p {
                     bail!("ref_model carries {} params, model has {p}", r.len());
                 }
                 let mut set = Frame::control(FrameKind::SetReference, COORDINATOR, round);
                 set.encoding_tag = Encoding::Dense.tag();
-                set.payload = f.payload;
-                for conn in conns.iter_mut() {
-                    send(conn, &set, &cfg, &mut tally)?;
+                set.flags = gen_flags(0);
+                set.payload = raw;
+                for i in hub.enrolled_ids() {
+                    hub.send_slot(i, set.clone());
                 }
+                ref_history.push((0, r.clone()));
                 reference = Some(r);
             }
-            let r = reference.as_ref().expect("reference set above").clone();
+            let r = match reference.as_ref() {
+                Some(r) => r.clone(),
+                None => bail!("round {t}: reference vanished (internal invariant)"),
+            };
 
-            // collect all m check reports in id order — the order the
-            // in-process check loop visits learners
-            let mut in_b = vec![false; m];
-            let mut selected: Vec<usize> = Vec::new();
-            for i in 0..m {
-                let f = recv(&mut conns[i], &cfg, &mut tally)?;
-                match f.kind {
-                    FrameKind::CheckOk => {}
-                    FrameKind::Violation => {
-                        if f.encoding_tag != enc.tag() {
-                            bail!("client {i} used encoding tag {}, negotiated {}", f.encoding_tag, enc.tag());
+            // --- collect check reports: all enrolled, or quorum past the
+            // deadline; late reports merge like fleet async arrivals -----
+            let mut reported = vec![false; m];
+            let mut violated = vec![false; m];
+            let collect_deadline = round_start + cfg.round_deadline;
+            loop {
+                hub.pump()?;
+                hub.sweep_dead(Instant::now());
+                for i in 0..m {
+                    while let Some(f) = hub.slots[i].inbox.pop_front() {
+                        match f.kind {
+                            FrameKind::CheckOk => {
+                                // a late CheckOk carries no model: nothing to merge
+                                if f.round == round {
+                                    reported[i] = true;
+                                }
+                            }
+                            FrameKind::Violation => {
+                                if f.encoding_tag != enc.tag() {
+                                    bail!(
+                                        "client {i} used encoding tag {}, negotiated {}",
+                                        f.encoding_tag,
+                                        enc.tag()
+                                    );
+                                }
+                                let g = flags_gen(f.flags);
+                                let base = if g == ref_gen % 64 {
+                                    reference.as_ref()
+                                } else {
+                                    ref_history.iter().rev().find(|(hg, _)| hg % 64 == g).map(|(_, v)| v)
+                                };
+                                match base {
+                                    Some(base) => {
+                                        enc.decode(&f.payload, Some(base), &mut latest[i])?;
+                                        reported[i] = true;
+                                        violated[i] = true;
+                                        if f.round != round {
+                                            late_merges += 1;
+                                        }
+                                    }
+                                    None => eprintln!(
+                                        "serve: dropped a violation from client {i} against forgotten reference generation {g}"
+                                    ),
+                                }
+                            }
+                            FrameKind::FinalReport => {
+                                if hub.slots[i].final_raw.is_none() {
+                                    hub.slots[i].final_raw = Some(f.payload);
+                                }
+                            }
+                            // replay artifacts (RefModel, Upload) — already
+                            // charged consistently at the gate; nothing to do
+                            _ => {}
                         }
-                        enc.decode(&f.payload, Some(&r), &mut latest[i])?;
-                        net.send(MsgKind::ViolationWithModel, f.payload.len() as u64);
-                        in_b[i] = true;
-                        selected.push(i);
                     }
-                    other => bail!("round {t}: client {i} sent {}", other.name()),
                 }
+                let enrolled = hub.enrolled_ids();
+                if enrolled.is_empty() {
+                    bail!("round {t}: every client is dead");
+                }
+                if enrolled.iter().all(|&i| reported[i]) {
+                    break;
+                }
+                let need = ((cfg.quorum * enrolled.len() as f64).ceil() as usize).max(1);
+                let n_rep = reported.iter().filter(|&&b| b).count();
+                let now = Instant::now();
+                if now >= collect_deadline && n_rep >= need {
+                    shortfalls += 1;
+                    break;
+                }
+                if now > hard {
+                    bail!(
+                        "round {t}: only {n_rep} of {} enrolled clients reported (quorum {need}) within the hard timeout",
+                        enrolled.len()
+                    );
+                }
+                std::thread::sleep(POLL_SLEEP);
             }
 
+            // this round's cohort: exactly the reporters, in id order —
+            // the protocol sizes its violation threshold from them, which
+            // is precisely the engine's participant-subset semantics
+            let mut participants: Vec<usize> = (0..m).filter(|&i| reported[i]).collect();
+            let mut in_b = violated.clone();
+            let mut selected: Vec<usize> = (0..m).filter(|&i| violated[i]).collect();
+
             if selected.is_empty() {
-                broadcast_control(&mut conns, FrameKind::Resolved, round, &cfg, &mut tally)?;
+                hub.broadcast_enrolled(FrameKind::Resolved, round);
+                hub.last_resolved = round;
                 t += cfg.check_every;
                 continue;
             }
-            net.sync_events += 1;
+            hub.net.sync_events += 1;
 
             // violation counter may force a full sync: poll the remaining
-            // learners in index order
+            // participants in index order
             violations_seen += selected.len();
-            if violations_seen >= m {
-                for i in 0..m {
-                    if !in_b[i] {
-                        query_upload(&mut conns[i], round, enc, &r, &mut latest[i], &cfg, &mut net, &mut tally)?;
+            let mut m_eff = participants.len();
+            if violations_seen >= m_eff {
+                let targets: Vec<usize> =
+                    participants.iter().copied().filter(|&i| !in_b[i]).collect();
+                for i in targets {
+                    if query_upload(&mut hub, i, round, enc, ref_gen, &ref_history, &r, &mut latest[i], hard)? {
                         in_b[i] = true;
                         selected.push(i);
+                    } else {
+                        participants.retain(|&x| x != i);
                     }
                 }
+                m_eff = participants.len();
                 violations_seen = 0;
             }
 
@@ -308,198 +982,276 @@ impl WireServer {
             loop {
                 params::average_into(&latest, &selected, &mut scratch);
                 let balanced = params::sq_dist(&scratch, &r) <= cfg.delta;
-                if balanced || selected.len() == m {
+                if balanced || selected.len() >= m_eff {
                     break;
                 }
-                let candidates: Vec<usize> = (0..m).filter(|&i| !in_b[i]).collect();
+                let candidates: Vec<usize> =
+                    participants.iter().copied().filter(|&i| !in_b[i]).collect();
+                if candidates.is_empty() {
+                    break;
+                }
                 let next = candidates[proto_rng.below(candidates.len())];
-                query_upload(&mut conns[next], round, enc, &r, &mut latest[next], &cfg, &mut net, &mut tally)?;
-                in_b[next] = true;
-                selected.push(next);
+                if query_upload(&mut hub, next, round, enc, ref_gen, &ref_history, &r, &mut latest[next], hard)? {
+                    in_b[next] = true;
+                    selected.push(next);
+                } else {
+                    participants.retain(|&x| x != next);
+                    m_eff = participants.len();
+                }
             }
 
             // distribute the (partial) average: encoded once, one charged
             // frame per participant; what everyone then holds — including
             // the reference after a full sync — is the *decoded* copy
-            let full = selected.len() == m;
+            let full = selected.len() >= m_eff;
             enc.encode(&scratch, Some(&r), &mut payload_buf);
             enc.decode(&payload_buf, Some(&r), &mut scratch)?;
             let down = Frame {
                 kind: FrameKind::Download,
                 encoding_tag: enc.tag(),
-                flags: if full { FLAG_FULL_SYNC } else { 0 },
+                flags: (if full { FLAG_FULL_SYNC } else { 0 }) | gen_flags(ref_gen),
                 source: COORDINATOR,
                 round,
                 payload: payload_buf.clone(),
             };
             for &i in &selected {
-                send(&mut conns[i], &down, &cfg, &mut tally)?;
-                net.send(MsgKind::ModelDownload, down.payload.len() as u64);
+                hub.send_slot(i, down.clone());
                 latest[i].clone_from(&scratch);
             }
             if full {
+                ref_gen += 1;
                 reference = Some(scratch.clone());
+                ref_history.push((ref_gen, scratch.clone()));
+                if ref_history.len() > REF_HISTORY {
+                    ref_history.remove(0);
+                }
                 violations_seen = 0;
-                net.full_syncs += 1;
+                hub.net.full_syncs += 1;
+                // a full sync among a quorum-degraded subset: push the
+                // new reference to the enrolled clients outside it, or
+                // their next checks would race a reference they never saw
+                let mut set = Frame::control(FrameKind::SetReference, COORDINATOR, round);
+                set.encoding_tag = Encoding::Dense.tag();
+                set.flags = gen_flags(ref_gen);
+                Encoding::Dense.encode(&scratch, None, &mut payload_buf);
+                set.payload = payload_buf.clone();
+                for i in hub.enrolled_ids() {
+                    if !in_b[i] {
+                        hub.send_slot(i, set.clone());
+                    }
+                }
             }
-            broadcast_control(&mut conns, FrameKind::Resolved, round, &cfg, &mut tally)?;
+            hub.broadcast_enrolled(FrameKind::Resolved, round);
+            hub.last_resolved = round;
             t += cfg.check_every;
         }
 
         // --- final reports (uncharged bookkeeping) ------------------------
-        let mut models: Vec<Vec<f32>> = vec![Vec::new(); m];
-        let mut losses: Vec<Vec<f32>> = Vec::with_capacity(m);
-        for i in 0..m {
-            let f = recv(&mut conns[i], &cfg, &mut tally)?;
-            if f.kind != FrameKind::FinalReport {
-                bail!("expected final_report from client {i}, got {}", f.kind.name());
+        hub.begin_round(cfg.rounds as u32);
+        let fin_deadline = Instant::now() + cfg.timeout;
+        loop {
+            hub.pump()?;
+            hub.sweep_dead(Instant::now());
+            for i in 0..m {
+                let mut stray_check = false;
+                while let Some(f) = hub.slots[i].inbox.pop_front() {
+                    match f.kind {
+                        FrameKind::FinalReport => {
+                            if hub.slots[i].final_raw.is_none() {
+                                hub.slots[i].final_raw = Some(f.payload);
+                            }
+                        }
+                        // a straggler still catching up on check rounds the
+                        // quorum already closed: re-send the final Resolved
+                        // (a retransmit — the broadcast copy was lost on it)
+                        // so it can run out its remaining rounds and report
+                        FrameKind::CheckOk | FrameKind::Violation => stray_check = true,
+                        _ => {}
+                    }
+                }
+                if stray_check {
+                    let r = Frame::control(FrameKind::Resolved, COORDINATOR, cfg.rounds as u32);
+                    hub.write_direct(i, &r, true);
+                }
             }
+            let missing: Vec<usize> = (0..m)
+                .filter(|&i| hub.slots[i].enrolled && hub.slots[i].final_raw.is_none())
+                .collect();
+            if missing.is_empty() {
+                break;
+            }
+            if Instant::now() > fin_deadline {
+                bail!("no final report from clients {missing:?} within the timeout");
+            }
+            std::thread::sleep(POLL_SLEEP);
+        }
+        hub.done = true;
+        hub.broadcast_enrolled(FrameKind::Done, cfg.rounds as u32);
+
+        // --- assemble the report over the survivors -----------------------
+        let mut models: Vec<Vec<f32>> = vec![Vec::new(); m];
+        let mut losses: Vec<Option<Vec<f32>>> = vec![None; m];
+        for i in 0..m {
+            let Some(raw) = &hub.slots[i].final_raw else { continue };
             let mut flat = Vec::new();
-            Encoding::Dense.decode(&f.payload, None, &mut flat)?;
+            Encoding::Dense.decode(raw, None, &mut flat)?;
             let want = p + 2 * cfg.rounds as usize;
             if flat.len() != want {
                 bail!("final_report from client {i}: {} f32s (expected {want})", flat.len());
             }
             models[i] = flat[..p].to_vec();
-            losses.push(flat[p..p + cfg.rounds as usize].to_vec());
+            losses[i] = Some(flat[p..p + cfg.rounds as usize].to_vec());
         }
-        broadcast_control(&mut conns, FrameKind::Done, cfg.rounds as u32, &cfg, &mut tally)?;
+        let survivors: Vec<usize> = (0..m).filter(|&i| losses[i].is_some()).collect();
+        let dead: Vec<usize> = (0..m).filter(|&i| losses[i].is_none()).collect();
+        let Some(&eval_src) = survivors.first() else {
+            bail!("no client survived to a final report");
+        };
 
         // Σ_t Σ_i loss with the learner index innermost — the engine's f64
-        // summation order, so cumulative loss matches bitwise
+        // summation order over the survivors, so cumulative loss matches
+        // a fleet run with the dead learners force-dropped, bitwise
         let mut cumulative_loss = 0.0f64;
         for ti in 0..cfg.rounds as usize {
-            let round_sum: f64 = losses.iter().map(|l| l[ti] as f64).sum();
+            let mut round_sum = 0.0f64;
+            for &i in &survivors {
+                if let Some(l) = &losses[i] {
+                    round_sum += l[ti] as f64;
+                }
+            }
             cumulative_loss += round_sum;
         }
 
         let mut averaged = vec![0.0f32; p];
-        let idx: Vec<usize> = (0..m).collect();
-        params::average_into(&models, &idx, &mut averaged);
+        params::average_into(&models, &survivors, &mut averaged);
 
         let eval = if cfg.final_eval {
-            holdout_eval(&mrt, &cfg, &averaged)?
+            holdout_eval(&mrt, &cfg, &averaged, eval_src)?
         } else {
             None
         };
 
         // the tentpole invariant: measured charged wire bytes must equal
-        // the simulation-side NetStats accounting exactly
-        if tally.up != net.up_bytes || tally.down != net.down_bytes {
+        // the simulation-side NetStats accounting exactly — base bytes by
+        // direction and retransmitted bytes
+        let wire_retrans = hub.tally.retrans_up + hub.tally.retrans_down;
+        if hub.tally.up != hub.net.up_bytes
+            || hub.tally.down != hub.net.down_bytes
+            || wire_retrans != hub.net.retrans_bytes
+        {
             bail!(
-                "wire bytes diverge from NetStats: wire up/down {}/{} vs netstats {}/{}",
-                tally.up,
-                tally.down,
-                net.up_bytes,
-                net.down_bytes
+                "wire bytes diverge from NetStats: wire up/down/retrans {}/{}/{} vs netstats {}/{}/{}",
+                hub.tally.up,
+                hub.tally.down,
+                wire_retrans,
+                hub.net.up_bytes,
+                hub.net.down_bytes,
+                hub.net.retrans_bytes
             );
         }
 
+        let reconnects: u64 = hub.slots.iter().map(|s| s.reconnects).sum();
         Ok(ServeReport {
-            net,
-            wire_up_bytes: tally.up,
-            wire_down_bytes: tally.down,
-            wire_transport_bytes: tally.transport,
+            net: hub.net,
+            wire_up_bytes: hub.tally.up,
+            wire_down_bytes: hub.tally.down,
+            wire_retrans_bytes: wire_retrans,
+            wire_transport_bytes: hub.tally.transport,
             models,
             averaged,
             cumulative_loss,
             eval,
+            shortfalls,
+            late_merges,
+            reconnects,
+            dead,
         })
     }
 }
 
-/// Measured byte counters: charged frames by direction, plus the total
-/// including uncharged transport.
-#[derive(Default)]
-struct Tally {
-    up: u64,
-    down: u64,
-    transport: u64,
-}
-
-impl Tally {
-    fn count(&mut self, f: &Frame, server_sent: bool) {
-        let bytes = f.wire_bytes();
-        self.transport += bytes;
-        if f.is_charged() {
-            if server_sent {
-                self.down += bytes;
-            } else {
-                self.up += bytes;
-            }
-        }
-    }
-}
-
-fn send(conn: &mut Conn, f: &Frame, cfg: &ServeConfig, tally: &mut Tally) -> Result<()> {
-    if cfg.debug_wire {
-        eprintln!("wire: -> {} {}", conn.id, f.summary_json());
-    }
-    f.write_to(&mut conn.stream)
-        .with_context(|| format!("sending {} to client {}", f.kind.name(), conn.id))?;
-    tally.count(f, true);
-    Ok(())
-}
-
-fn recv(conn: &mut Conn, cfg: &ServeConfig, tally: &mut Tally) -> Result<Frame> {
-    let f = Frame::read_from(&mut conn.stream).with_context(|| format!("receiving from client {}", conn.id))?;
-    if cfg.debug_wire {
-        eprintln!("wire: <- {} {}", conn.id, f.summary_json());
-    }
-    tally.count(&f, false);
-    Ok(f)
-}
-
-fn broadcast_control(
-    conns: &mut [Conn],
-    kind: FrameKind,
-    round: u32,
-    cfg: &ServeConfig,
-    tally: &mut Tally,
-) -> Result<()> {
-    let f = Frame::control(kind, COORDINATOR, round);
-    for conn in conns.iter_mut() {
-        send(conn, &f, cfg, tally)?;
-    }
-    Ok(())
-}
-
-/// Charged query/upload pair: ask one learner for its model, decode the
-/// encoded reply into `latest`.
+/// Charged query/upload pair: ask one learner for its model and await the
+/// encoded reply. `Ok(false)` means the client died mid-balancing and the
+/// caller must drop it from the sync (without rewinding the rng — the
+/// documented divergence from the engine).
 #[allow(clippy::too_many_arguments)]
 fn query_upload(
-    conn: &mut Conn,
+    hub: &mut Hub,
+    i: usize,
     round: u32,
     enc: Encoding,
+    ref_gen: u64,
+    ref_history: &[(u64, Vec<f32>)],
     r: &[f32],
     latest: &mut Vec<f32>,
-    cfg: &ServeConfig,
-    net: &mut NetStats,
-    tally: &mut Tally,
-) -> Result<()> {
-    let q = Frame::control(FrameKind::Query, COORDINATOR, round);
-    send(conn, &q, cfg, tally)?;
-    net.send(MsgKind::QueryModel, 0);
-    let f = recv(conn, cfg, tally)?;
-    if f.kind != FrameKind::Upload {
-        bail!("round {round}: expected upload from client {}, got {}", conn.id, f.kind.name());
+    hard: Instant,
+) -> Result<bool> {
+    hub.send_slot(i, Frame::control(FrameKind::Query, COORDINATOR, round));
+    loop {
+        hub.pump()?;
+        hub.sweep_dead(Instant::now());
+        while let Some(f) = hub.slots[i].inbox.pop_front() {
+            match f.kind {
+                FrameKind::Upload => {
+                    if f.encoding_tag != enc.tag() {
+                        bail!(
+                            "client {i} used encoding tag {}, negotiated {}",
+                            f.encoding_tag,
+                            enc.tag()
+                        );
+                    }
+                    let g = flags_gen(f.flags);
+                    let base = if g == ref_gen % 64 {
+                        Some(r)
+                    } else {
+                        ref_history
+                            .iter()
+                            .rev()
+                            .find(|(hg, _)| hg % 64 == g)
+                            .map(|(_, v)| v.as_slice())
+                    };
+                    let Some(base) = base else {
+                        bail!("round {round}: upload from client {i} against forgotten reference generation {g}");
+                    };
+                    enc.decode(&f.payload, Some(base), latest)?;
+                    return Ok(true);
+                }
+                FrameKind::FinalReport => {
+                    if hub.slots[i].final_raw.is_none() {
+                        hub.slots[i].final_raw = Some(f.payload);
+                    }
+                }
+                _ => {}
+            }
+        }
+        if !hub.slots[i].enrolled {
+            eprintln!("serve: client {i} died mid-balancing in round {round} — dropped from this sync");
+            return Ok(false);
+        }
+        if Instant::now() > hard {
+            bail!("round {round}: no upload from client {i} within the hard timeout");
+        }
+        std::thread::sleep(POLL_SLEEP);
     }
-    enc.decode(&f.payload, Some(r), latest)?;
-    net.send(MsgKind::ModelUpload, f.payload.len() as u64);
-    Ok(())
 }
 
-/// Recreate the engine's holdout evaluation: learner 0's stream advanced
-/// past the training prefix (the synthetic streams draw per sample, so
-/// consuming `rounds` training batches lands on the same position), then
-/// 5 fresh eval batches on the averaged model.
-fn holdout_eval(mrt: &ModelRuntime, cfg: &ServeConfig, averaged: &[f32]) -> Result<Option<(f64, f64)>> {
+/// Recreate the engine's holdout evaluation: the eval-source learner's
+/// stream advanced past the training prefix (the synthetic streams draw
+/// per sample, so consuming `rounds` training batches lands on the same
+/// position), then 5 fresh eval batches on the averaged model. The
+/// source is the lowest surviving id — the engine's `eval_src` for a
+/// full-participation cohort with the same dead learners dropped.
+fn holdout_eval(
+    mrt: &ModelRuntime,
+    cfg: &ServeConfig,
+    averaged: &[f32],
+    src: usize,
+) -> Result<Option<(f64, f64)>> {
     let Some(ev) = &mrt.eval else {
         return Ok(None);
     };
     let dataset = Dataset::for_model(&cfg.model)?;
     let factory = dataset.factory(cfg.seed);
-    let mut stream = factory(0);
+    let mut stream = factory(src);
     let rate = mrt.train.exe.info.batch;
     for _ in 0..cfg.rounds {
         let _ = stream.next_batch(rate);

@@ -1,0 +1,117 @@
+//! Engine-level tests of the deterministic link fault model
+//! (`dynavg::netsim`): the per-link profile drives retransmission
+//! charges and deadline-late arrivals inside `Engine::run`, and because
+//! every draw comes from seeded per-link rngs on the staging thread,
+//! the whole faulty run is bitwise reproducible — including across
+//! fleet-scheduler thread counts.
+
+use std::sync::OnceLock;
+
+use dynavg::coordinator::ProtocolSpec;
+use dynavg::experiments::Dataset;
+use dynavg::netsim::{LinkProfile, NetProfile};
+use dynavg::runtime::Runtime;
+use dynavg::sim::engine::{Engine, RunResult};
+use dynavg::sim::SimConfig;
+
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| Runtime::new(dynavg::artifacts_dir()).expect("runtime"))
+}
+
+const SEED: u64 = 2024;
+const M: usize = 4;
+const ROUNDS: u64 = 30;
+
+fn engine_run(mutate: impl FnOnce(&mut SimConfig)) -> RunResult {
+    let mut cfg = SimConfig::new("mnist_logistic", "sgd", M, ROUNDS, 0.05);
+    cfg.seed = SEED;
+    cfg.final_eval = false;
+    mutate(&mut cfg);
+    let spec = ProtocolSpec::Dynamic {
+        delta: 1.0,
+        check_every: 5,
+    };
+    let engine = Engine::new(rt(), cfg).expect("engine");
+    let factory = Dataset::MnistLike.factory(SEED);
+    engine.run(&spec, &factory).expect("engine run")
+}
+
+fn assert_same_run(tag: &str, a: &RunResult, b: &RunResult) {
+    for (i, (ma, mb)) in a.models.iter().zip(&b.models).enumerate() {
+        assert_eq!(ma.len(), mb.len(), "{tag}: model {i} length");
+        for (j, (x, y)) in ma.iter().zip(mb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: model {i} entry {j} ({x} vs {y})");
+        }
+    }
+    for (j, (x, y)) in a.averaged.iter().zip(&b.averaged).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: averaged entry {j}");
+    }
+    assert_eq!(
+        a.summary.cumulative_loss.to_bits(),
+        b.summary.cumulative_loss.to_bits(),
+        "{tag}: cumulative loss {} vs {}",
+        a.summary.cumulative_loss,
+        b.summary.cumulative_loss
+    );
+    assert_eq!(a.net, b.net, "{tag}: NetStats diverge");
+}
+
+/// An all-zero link profile draws no randomness and adds no delay: the
+/// run is bitwise the default run, even with a round deadline armed
+/// (zero delay can never exceed it).
+#[test]
+fn ideal_profile_is_bitwise_the_default_run() {
+    let base = engine_run(|_| {});
+    let ideal = engine_run(|cfg| {
+        cfg.net = NetProfile {
+            default: LinkProfile::default(),
+            overrides: Vec::new(),
+            deadline_ms: 100.0,
+        };
+    });
+    assert_same_run("ideal-vs-default", &base, &ideal);
+    assert_eq!(ideal.net.retrans_bytes, 0, "an ideal link never retransmits");
+}
+
+/// A lossy, slow profile (drops, duplicates, latency + serialization
+/// past the round deadline) charges retransmissions and turns slow
+/// deliveries into late arrivals — and stays bitwise deterministic
+/// across fleet-scheduler thread counts, because every fault draw
+/// happens on the staging thread from per-link seeded rngs.
+#[test]
+fn lossy_profile_is_deterministic_across_thread_counts() {
+    let lossy = |cfg: &mut SimConfig| {
+        cfg.net = NetProfile {
+            default: LinkProfile {
+                latency_ms: 50.0,
+                jitter_ms: 20.0,
+                bandwidth_kbps: 2048.0,
+                drop: 0.05,
+                corrupt: 0.02,
+                duplicate: 0.05,
+            },
+            overrides: Vec::new(),
+            deadline_ms: 100.0,
+        };
+    };
+    let one = engine_run(|cfg| {
+        lossy(cfg);
+        cfg.threads = 1;
+    });
+    let four = engine_run(|cfg| {
+        lossy(cfg);
+        cfg.threads = 4;
+    });
+    assert_same_run("threads-1-vs-4", &one, &four);
+
+    // the profile actually bit: lossy attempts were charged as
+    // retransmissions, and slow deliveries arrived rounds late
+    assert!(one.net.retrans_bytes > 0, "no retransmissions under a 5% drop link");
+    assert!(one.net.retrans_msgs > 0);
+    let (late_merges, shortfalls) = one.recorder.robust_totals();
+    assert!(
+        shortfalls > 0,
+        "a ~170 ms delivery against a 100 ms deadline must go late (late_merges={late_merges})"
+    );
+}

@@ -177,7 +177,7 @@ fn truncated_payloads_error_never_panic() {
 
 #[test]
 fn frames_roundtrip_and_reject_truncation() {
-    const KINDS: [FrameKind; 12] = [
+    const KINDS: [FrameKind; 13] = [
         FrameKind::Violation,
         FrameKind::Query,
         FrameKind::Upload,
@@ -190,6 +190,7 @@ fn frames_roundtrip_and_reject_truncation() {
         FrameKind::RefModel,
         FrameKind::FinalReport,
         FrameKind::Done,
+        FrameKind::RefRequest,
     ];
     let gen_frame = |rng: &mut Rng| Frame {
         kind: KINDS[rng.below(KINDS.len())],
@@ -212,6 +213,92 @@ fn frames_roundtrip_and_reject_truncation() {
         for cut in [0, HEADER_LEN / 2, buf.len() - 1] {
             if cut < buf.len() && Frame::read_from(&mut &buf[..cut]).is_ok() {
                 return Err(format!("accepted a {cut}-byte prefix of {}", buf.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The resume-dedup contract of [`RoundGate`]: over any operation
+/// sequence (admits interleaved with round advances), acceptance is
+/// exactly-once per `(kind, round)`, per-kind accepted rounds are
+/// strictly increasing, an immediate replay of any frame repeats a
+/// non-accepting verdict (`Accept`/`AcceptLate` → `Duplicate`; the
+/// others are idempotent), and `Future` never moves a mark. The gate
+/// never panics, whatever the interleaving.
+#[test]
+fn round_gate_gives_exactly_once_acceptance_under_replay() {
+    use std::collections::{HashMap, HashSet};
+
+    use dynavg::wire::{Admit, RoundGate};
+
+    const GKINDS: [FrameKind; 4] = [
+        FrameKind::Violation,
+        FrameKind::CheckOk,
+        FrameKind::Upload,
+        FrameKind::Resolved,
+    ];
+    // op encoding: (kind index, round) admits a frame; (255, step)
+    // advances the receiver's round. Small ranges force collisions.
+    let gen_ops = |rng: &mut Rng| -> Vec<(u8, u32)> {
+        (0..100)
+            .map(|_| {
+                if rng.bernoulli(0.15) {
+                    (255u8, rng.below(3) as u32)
+                } else {
+                    (rng.below(GKINDS.len()) as u8, rng.below(10) as u32)
+                }
+            })
+            .collect()
+    };
+    forall_check(cfg(200, 0x88), gen_ops, |ops| {
+        let mut gate = RoundGate::new();
+        let mut current = 0u32;
+        let mut accepted: HashSet<(u8, u32)> = HashSet::new();
+        let mut hi: HashMap<u8, u32> = HashMap::new();
+        for &(op, round) in ops {
+            if op == 255 {
+                current += round;
+                gate.begin_round(current);
+                continue;
+            }
+            let kind = GKINDS[op as usize];
+            let verdict = gate.admit(kind, round);
+            let replay = gate.admit(kind, round);
+            match verdict {
+                Admit::Accept | Admit::AcceptLate => {
+                    if !accepted.insert((op, round)) {
+                        return Err(format!("{kind:?} round {round} accepted twice"));
+                    }
+                    if let Some(&h) = hi.get(&op) {
+                        if round <= h {
+                            return Err(format!("{kind:?}: accepted round {round} after {h}"));
+                        }
+                    }
+                    hi.insert(op, round);
+                    if verdict == Admit::Accept && round != current {
+                        return Err(format!("{kind:?}: Accept for round {round} at current {current}"));
+                    }
+                    if verdict == Admit::AcceptLate && round >= current {
+                        return Err(format!("{kind:?}: AcceptLate for round {round} at current {current}"));
+                    }
+                    if replay != Admit::Duplicate {
+                        return Err(format!("{kind:?} round {round}: replay admitted as {replay:?}"));
+                    }
+                }
+                Admit::Future => {
+                    if round <= current {
+                        return Err(format!("{kind:?}: Future for round {round} at current {current}"));
+                    }
+                    if replay != Admit::Future {
+                        return Err(format!("{kind:?} round {round}: Future replay became {replay:?}"));
+                    }
+                }
+                Admit::Duplicate | Admit::Stale => {
+                    if replay != verdict {
+                        return Err(format!("{kind:?} round {round}: {verdict:?} replay became {replay:?}"));
+                    }
+                }
             }
         }
         Ok(())
