@@ -2,7 +2,7 @@
 # and must pass hermetically (no Python, no XLA, no artifacts, default
 # features — the native backend).
 
-.PHONY: verify build test fmt clippy xla-check simd-check bench-smoke bench-baseline bench-report mirror-check serve-smoke chaos-smoke fleet-smoke ci artifacts
+.PHONY: verify build test fmt clippy xla-check simd-check bench-smoke bench-baseline bench-report mirror-check serve-smoke chaos-smoke fleet-smoke trace-smoke ci artifacts
 
 verify:
 	cargo build --release && cargo test -q
@@ -70,31 +70,39 @@ mirror-check:
 	python3 python/tools/native_mirror.py quorum_sync
 
 # Loopback coordinator end-to-end: serve + 4 clients, dense then int8;
-# the server fails unless measured wire bytes equal NetStats exactly.
+# the server fails unless measured wire bytes equal NetStats exactly,
+# and the verdict is re-asserted from the machine-readable summary.
 serve-smoke: build
 	@for enc in dense int8; do \
-	  rm -f port.txt; \
+	  rm -f port.txt serve_summary.json; \
 	  ./target/release/dynavg serve --model mnist_logistic --m 4 --rounds 20 \
-	    --encoding $$enc --port 0 --port-file port.txt & serve=$$!; \
+	    --encoding $$enc --port 0 --port-file port.txt \
+	    --summary-json serve_summary.json & serve=$$!; \
 	  while [ ! -s port.txt ]; do sleep 0.1; done; \
 	  for i in 1 2 3 4; do \
 	    ./target/release/dynavg connect --addr 127.0.0.1:$$(cat port.txt) & \
 	  done; \
 	  wait $$serve || exit 1; \
 	  wait; \
-	done; rm -f port.txt
+	  python3 -c "import json; d=json.load(open('serve_summary.json')); \
+	assert d['wire_verified'], 'wire bytes unverified'; \
+	assert d['up_bytes'] == d['wire_up_bytes'] and d['down_bytes'] == d['wire_down_bytes'], d" \
+	    || exit 1; \
+	done; rm -f port.txt serve_summary.json
 
 # Chaos smoke: the loopback coordinator with every accepted connection
 # wrapped in a seeded FaultyStream (drops, duplicates, per-op delays) and
 # quorum degradation armed. Stock clients reconnect and resume; the server
 # process itself fails unless the measured charged wire bytes equal the
-# NetStats accounting exactly, and the grep re-asserts the verdict line.
+# NetStats accounting exactly, and the machine-readable summary
+# re-asserts the verdict (replacing the old stdout grep).
 chaos-smoke: build
-	@rm -f port.txt chaos.log; \
+	@rm -f port.txt chaos.log chaos_summary.json; \
 	./target/release/dynavg serve --model mnist_logistic --m 4 --rounds 20 \
 	  --encoding dense --port 0 --port-file port.txt \
 	  --chaos-drop 0.01 --chaos-duplicate 0.02 --chaos-delay-ms 1 --chaos-seed 7 \
 	  --quorum 0.5 --round-deadline-secs 30 --dead-after-secs 60 \
+	  --summary-json chaos_summary.json \
 	  > chaos.log & serve=$$!; \
 	while [ ! -s port.txt ]; do sleep 0.1; done; \
 	for i in 1 2 3 4; do \
@@ -102,8 +110,11 @@ chaos-smoke: build
 	done; \
 	wait $$serve || { cat chaos.log; exit 1; }; \
 	wait; \
-	grep -q "charged == NetStats: verified" chaos.log || { cat chaos.log; exit 1; }; \
-	cat chaos.log; rm -f port.txt chaos.log
+	python3 -c "import json; d=json.load(open('chaos_summary.json')); \
+	assert d['wire_verified'], 'wire bytes unverified'; \
+	assert d['retrans_bytes'] == d['wire_retrans_bytes'], d" \
+	  || { cat chaos.log; exit 1; }; \
+	cat chaos.log; rm -f port.txt chaos.log chaos_summary.json
 
 # Fleet-scale smoke: m=256 dynamic-vs-periodic with C=0.25 sampling and
 # 5% dropout through the shared scheduler. The experiment driver itself
@@ -112,7 +123,47 @@ chaos-smoke: build
 fleet-smoke: build
 	./target/release/dynavg exp fleet --scale small
 
-ci: fmt clippy xla-check simd-check verify serve-smoke chaos-smoke fleet-smoke mirror-check bench-smoke
+# Observability smoke: (1) a traced engine run must emit well-formed
+# Chrome trace JSON with compute/sync spans and nonzero always-on phase
+# ns columns in --summary-json; (2) a traced serve run must answer a
+# Prometheus scrape mid-run (during enrollment, before clients attach)
+# and trace wire codec spans + round-close instants.
+trace-smoke: build
+	@rm -f trace_run.json run_summary.json; \
+	./target/release/dynavg run --model mnist_logistic --protocol dynamic:1.0:5 \
+	  --m 4 --rounds 20 --trace trace_run.json --summary-json run_summary.json \
+	  || exit 1; \
+	python3 python/tools/trace_check.py trace_run.json \
+	  --expect round.compute --expect round.sync || exit 1; \
+	python3 -c "import json; d=json.load(open('run_summary.json')); s=d['summaries'][0]; \
+	assert s['compute_ns'] > 0, 'compute_ns not measured'; \
+	assert s['sync_ns'] > 0, 'sync_ns not measured'" || exit 1; \
+	rm -f trace_run.json run_summary.json; \
+	rm -f port.txt metrics_port.txt trace_serve.json serve_summary.json; \
+	./target/release/dynavg serve --model mnist_logistic --m 4 --rounds 20 \
+	  --encoding int8 --port 0 --port-file port.txt \
+	  --metrics-port 0 --metrics-port-file metrics_port.txt \
+	  --trace trace_serve.json --summary-json serve_summary.json & serve=$$!; \
+	while [ ! -s metrics_port.txt ]; do sleep 0.1; done; \
+	python3 -c "import urllib.request; \
+	port = open('metrics_port.txt').read().strip(); \
+	body = urllib.request.urlopen('http://127.0.0.1:%s/metrics' % port, timeout=10).read().decode(); \
+	assert 'dynavg_rounds_total' in body, body; \
+	assert 'dynavg_clients_enrolled' in body, body; \
+	assert 'dynavg_quorum_fraction' in body, body; \
+	print('metrics scrape OK (%d bytes)' % len(body))" || exit 1; \
+	for i in 1 2 3 4; do \
+	  ./target/release/dynavg connect --addr 127.0.0.1:$$(cat port.txt) & \
+	done; \
+	wait $$serve || exit 1; \
+	wait; \
+	python3 python/tools/trace_check.py trace_serve.json \
+	  --expect wire.decode --expect serve.round_close || exit 1; \
+	python3 -c "import json; d=json.load(open('serve_summary.json')); \
+	assert d['wire_verified'], 'wire bytes unverified'" || exit 1; \
+	rm -f port.txt metrics_port.txt trace_serve.json serve_summary.json
+
+ci: fmt clippy xla-check simd-check verify serve-smoke chaos-smoke fleet-smoke trace-smoke mirror-check bench-smoke
 
 # XLA artifact build (requires python + jax; NOT needed for tier-1).
 # Produces artifacts/manifest.json + HLO text for the conv/attention

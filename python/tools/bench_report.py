@@ -11,9 +11,11 @@ the autotune-winner rows (autotune_gemm_kc / autotune_attention_bc,
 {name, kc_winner|bc_winner, gflops}), the wire-codec encode/decode GB/s rows
 (wire_encode_*/wire_decode_*, {name, gbps, median_ns}), the fleet
 round-dispatch rows (fleet_round_dispatch_m*, {name, median_ns, cohort,
-threads}) and the fleet resident-memory amortization row
+threads}), the fleet resident-memory amortization row
 (fleet_resident_ws_m1000, {name, fleet_mb, amortization_x, ...};
-amortization is diffed higher-is-better). CI uploads each
+amortization is diffed higher-is-better) and the per-phase round
+breakdown (round_phase_breakdown, {name, compute_ns, sync_ns, wire_ns,
+rounds}; each phase is diffed lower-is-better). CI uploads each
 run's file; committed snapshots live at the repo root as BENCH_<tag>.json.
 
 Modes (stdlib only, no dependencies):
@@ -106,6 +108,10 @@ def cell(rec):
     # amortization factor vs the retired per-learner resource model
     if "amortization_x" in rec:
         return f"{rec.get('fleet_mb', 0.0):.2f} MB ({rec['amortization_x']:.0f}x amortized)"
+    # per-phase round breakdown: the always-on engine ns columns
+    if "compute_ns" in rec:
+        return (f"c {fmt_ns(rec['compute_ns'])} | s {fmt_ns(rec.get('sync_ns', 0.0))}"
+                f" | w {fmt_ns(rec.get('wire_ns', 0.0))}")
     if "median_ns" in rec:
         return fmt_ns(rec["median_ns"])
     pairs = [
@@ -166,7 +172,8 @@ def diff(old_path, new_path, threshold, strict):
             continue
         # lower-is-better timing, higher-is-better throughput
         checks = []
-        lower_better = ["median_ns"] + [k for pair in NS_PAIRS for k in pair]
+        lower_better = (["median_ns", "compute_ns", "sync_ns", "wire_ns"]
+                        + [k for pair in NS_PAIRS for k in pair])
         for key in lower_better:
             if key in new_rec and key in old_rec and old_rec[key] > 0:
                 what = "median" if key == "median_ns" else key

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file written by `dynavg --trace`.
+
+Stdlib-only (CI gate: `make trace-smoke`). Checks the structural
+contract Perfetto/chrome://tracing rely on:
+
+  * top-level object with a non-empty ``traceEvents`` list;
+  * every event carries ``name``/``ph``, with ``ph`` one of X/i/M;
+  * complete (``X``) events carry numeric ``ts`` and ``dur >= 0``, and
+    at least one exists (a trace of only metadata is vacuous);
+  * ``otherData.dropped`` (overflow telemetry) parses as an integer.
+
+Usage: trace_check.py TRACE.json [--expect PHASE_NAME ...]
+
+``--expect`` additionally asserts that a span/instant with that exact
+name appears (e.g. ``--expect round.compute --expect wire.decode``).
+Exits nonzero with a one-line reason on the first violation.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"trace_check: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument(
+        "--expect",
+        action="append",
+        default=[],
+        metavar="NAME",
+        help="require an event with this exact name (repeatable)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{args.trace}: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level is not an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents is missing, not a list, or empty")
+
+    n_complete = 0
+    names = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"event {i} is not an object")
+        name, ph = ev.get("name"), ev.get("ph")
+        if not isinstance(name, str) or not name:
+            fail(f"event {i} lacks a name")
+        if ph not in ("X", "i", "M"):
+            fail(f"event {i} ({name!r}) has unsupported ph {ph!r}")
+        if ph in ("X", "i"):
+            names.add(name)
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                fail(f"event {i} ({name!r}) has bad ts {ts!r}")
+        if ph == "X":
+            n_complete += 1
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(f"event {i} ({name!r}) has bad dur {dur!r}")
+
+    if n_complete == 0:
+        fail("no complete (ph=X) span events recorded")
+    for want in args.expect:
+        if want not in names:
+            fail(f"expected an event named {want!r}; saw {sorted(names)}")
+
+    dropped = doc.get("otherData", {}).get("dropped", "0")
+    try:
+        n_dropped = int(dropped)
+    except (TypeError, ValueError):
+        fail(f"otherData.dropped is not an integer: {dropped!r}")
+
+    print(
+        f"trace_check: OK: {len(events)} events, {n_complete} spans, "
+        f"{len(names)} distinct names, {n_dropped} dropped"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -583,6 +583,40 @@ fn main() {
             }
         }
 
+        // per-phase round breakdown: the always-on compute/sync/wire ns
+        // columns from a short engine run, recorded so bench_report.py
+        // can track where round wall-time goes across commits
+        {
+            let rounds = if dynavg::util::bench::smoke() { 10 } else { 50 };
+            let mut cfg =
+                dynavg::sim::SimConfig::new("mnist_logistic", "sgd", 8, rounds, 0.05);
+            cfg.seed = 11;
+            let spec = dynavg::coordinator::ProtocolSpec::Dynamic {
+                delta: 1.0,
+                check_every: 5,
+            };
+            let factory = dynavg::experiments::Dataset::MnistLike.factory(11);
+            let engine = dynavg::sim::engine::Engine::new(&rt, cfg).unwrap();
+            let res = engine.run(&spec, &factory).unwrap();
+            let s = &res.summary;
+            println!();
+            println!(
+                "round phase breakdown   : compute {} | sync {} | wire {} over {rounds} rounds (m=8)",
+                dynavg::util::bench::fmt_ns(s.compute_ns as f64),
+                dynavg::util::bench::fmt_ns(s.sync_ns as f64),
+                dynavg::util::bench::fmt_ns(s.wire_ns as f64),
+            );
+            record_json(
+                "round_phase_breakdown",
+                &[
+                    ("compute_ns", s.compute_ns as f64),
+                    ("sync_ns", s.sync_ns as f64),
+                    ("wire_ns", s.wire_ns as f64),
+                    ("rounds", rounds as f64),
+                ],
+            );
+        }
+
         // ablation: XLA-side sync statistics (L1 reduce kernels) vs the
         // L3-native scan above — quantifies the host<->PJRT round-trip
         if let Ok(exe) = rt.load("sync_stats_m10_mnist") {

@@ -136,18 +136,18 @@ impl<'a> Harness<'a> {
     /// Run all specs (+ optional serial/nosync baselines), print the table.
     pub fn run_all(&self, specs: &[ProtocolSpec], with_serial: bool) -> Result<Vec<RunResult>> {
         let mut results = Vec::new();
-        println!("== {} (m={}, rounds={}, model={}/{}, lr={}) ==",
+        crate::log_info!("== {} (m={}, rounds={}, model={}/{}, lr={}) ==",
             self.experiment, self.cfg.m, self.cfg.rounds, self.cfg.model,
             self.cfg.optimizer, self.cfg.lr);
-        println!("{}", Summary::table_header());
+        crate::log_info!("{}", Summary::table_header());
         for spec in specs {
             let r = self.run_protocol(spec)?;
-            println!("{}", r.summary.table_row());
+            crate::log_info!("{}", r.summary.table_row());
             results.push(r);
         }
         if with_serial {
             let r = self.run_serial()?;
-            println!("{}", r.summary.table_row());
+            crate::log_info!("{}", r.summary.table_row());
             results.push(r);
         }
         let summaries: Vec<Summary> = results.iter().map(|r| r.summary.clone()).collect();
@@ -170,7 +170,7 @@ pub fn image_model(rt: &Runtime) -> &'static str {
             if name != "mnist_cnn" {
                 static WARN_ONCE: std::sync::Once = std::sync::Once::new();
                 WARN_ONCE.call_once(|| {
-                    eprintln!(
+                    crate::log_warn!(
                         "warning: mnist_cnn is not executable on the {} backend over \
                          this manifest; substituting {name} (protocol shapes hold, \
                          absolute accuracies differ — see `dynavg models`)",

@@ -22,6 +22,6 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
         ProtocolSpec::NoSync,
     ];
     let results = harness.run_all(&specs, true)?;
-    println!("drift forced at round {}", rounds / 2);
+    crate::log_info!("drift forced at round {}", rounds / 2);
     Ok(results)
 }

@@ -63,8 +63,8 @@ pub fn print_relative(results: &[RunResult]) {
     else {
         return;
     };
-    println!("\n-- fig5_3: dynamic vs best FedAvg ({}) --", best_fed.protocol);
-    println!(
+    crate::log_info!("\n-- fig5_3: dynamic vs best FedAvg ({}) --", best_fed.protocol);
+    crate::log_info!(
         "{:<22} {:>12} {:>12} {:>12}",
         "protocol", "comm_vs_fed", "loss_vs_fed", "acc_delta"
     );
@@ -76,7 +76,7 @@ pub fn print_relative(results: &[RunResult]) {
         let loss = s.cumulative_loss / best_fed.cumulative_loss;
         let acc = s.eval_metric.unwrap_or(s.tail_metric)
             - best_fed.eval_metric.unwrap_or(best_fed.tail_metric);
-        println!(
+        crate::log_info!(
             "{:<22} {:>11.1}% {:>11.1}% {:>+12.4}",
             s.protocol,
             100.0 * comm,

@@ -55,7 +55,7 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
             .filter(|row| row.drifted)
             .map(|row| row.round)
             .collect();
-        println!("concept drifts at rounds: {drifts:?}");
+        crate::log_info!("concept drifts at rounds: {drifts:?}");
     }
     Ok(results)
 }

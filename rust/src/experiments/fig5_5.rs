@@ -59,14 +59,14 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<DrivingOutcome>>
         all_stats.push(stats);
     }
     let losses = custom_loss(&all_stats);
-    println!("\n-- fig5_5 closed-loop driving evaluation (L_dd) --");
-    println!(
+    crate::log_info!("\n-- fig5_5 closed-loop driving evaluation (L_dd) --");
+    crate::log_info!(
         "{:<22} {:>12} {:>10} {:>10} {:>10} {:>9} {:>9}",
         "protocol", "comm_MB", "L_dd", "time_s", "laps", "crossings", "line_s"
     );
     let mut outcomes = Vec::new();
     for ((r, s), l) in results.iter().zip(&all_stats).zip(&losses) {
-        println!(
+        crate::log_info!(
             "{:<22} {:>12.2} {:>10.4} {:>10.1} {:>10.2} {:>9} {:>9.1}",
             r.summary.protocol,
             r.summary.comm_bytes as f64 / 1e6,

@@ -61,13 +61,13 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<ScaleOutRow>> {
             });
         }
     }
-    println!("\n-- fig6_1 scale-out (loss normalized per learner) --");
-    println!(
+    crate::log_info!("\n-- fig6_1 scale-out (loss normalized per learner) --");
+    crate::log_info!(
         "{:<6} {:<22} {:>16} {:>14} {:>12}",
         "m", "protocol", "loss/learner", "comm_MB", "eval_metric"
     );
     for r in &rows {
-        println!(
+        crate::log_info!(
             "{:<6} {:<22} {:>16.2} {:>14.2} {:>12}",
             r.m,
             r.protocol,

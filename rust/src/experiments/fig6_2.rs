@@ -75,25 +75,25 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64, dynamic: bool) -> Result<Vec<H
             });
         }
     }
-    println!(
+    crate::log_info!(
         "\n-- fig6_2 heterogeneous init ({}) : relative accuracy vs (eps=0,b/B=1) --",
         if dynamic { "dynamic" } else { "periodic" }
     );
-    print!("{:<8}", "eps\\b/B");
+    let mut header = format!("{:<8}", "eps\\b/B");
     for &p in &periods {
-        print!(" {p:>8}");
+        header.push_str(&format!(" {p:>8}"));
     }
-    println!();
+    crate::log_info!("{header}");
     for &eps in &eps_grid {
-        print!("{eps:<8}");
+        let mut line = format!("{eps:<8}");
         for &p in &periods {
             let r = rows
                 .iter()
                 .find(|r| r.eps == eps && r.period == p)
                 .unwrap();
-            print!(" {:>8.3}", r.relative);
+            line.push_str(&format!(" {:>8.3}", r.relative));
         }
-        println!();
+        crate::log_info!("{line}");
     }
     write_rows(&rows, dynamic)?;
     Ok(rows)

@@ -30,7 +30,7 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
         let n = r.recorder.rows.len();
         let early = r.recorder.rows[n / 4].cum_bytes;
         let total = r.recorder.final_bytes();
-        println!(
+        crate::log_info!(
             "{}: {:.0}% of communication in the first quarter of training",
             r.summary.protocol,
             100.0 * early as f64 / total.max(1) as f64

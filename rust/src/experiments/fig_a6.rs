@@ -31,7 +31,7 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<(String, Summary
                 check_every: 10,
             },
         ];
-        println!("\n--- optimizer: {opt} (lr={lr}) ---");
+        crate::log_info!("\n--- optimizer: {opt} (lr={lr}) ---");
         let results = harness.run_all(&specs, false)?;
         for r in results {
             out.push((opt.to_string(), r.summary));

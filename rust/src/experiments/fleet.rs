@@ -54,7 +54,7 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<FleetRow>> {
     cfg.fleet.dropout = dropout;
     let harness = Harness::new(rt, cfg.clone(), Dataset::MnistLike, "fleet");
 
-    println!(
+    crate::log_info!(
         "== fleet (m={m}, rounds={rounds}, C={participation}, dropout={dropout}, \
          threads={}) ==",
         cfg.threads
@@ -82,16 +82,16 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<FleetRow>> {
     let slots = cfg.threads.max(1).min(m);
     let per_arena = rows[0].peak_ws_bytes as f64 / slots as f64;
     let reduction = rows[1].comm_bytes as f64 / rows[0].comm_bytes.max(1) as f64;
-    println!(
+    crate::log_info!(
         "\n-- fleet: dynamic(delta={delta},b={check_every}) vs periodic(b={check_every}) \
          under C={participation}, dropout={dropout} --"
     );
-    println!(
+    crate::log_info!(
         "{:<22} {:>14} {:>12} {:>11} {:>11} {:>8} {:>9} {:>10}",
         "protocol", "comm_bytes", "cum_loss", "eval_metric", "mean_cohort", "dropped", "straggled", "peak_ws_MB"
     );
     for r in &rows {
-        println!(
+        crate::log_info!(
             "{:<22} {:>14} {:>12.2} {:>11.4} {:>11.1} {:>8} {:>9} {:>10.2}",
             r.protocol,
             r.comm_bytes,
@@ -103,7 +103,7 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<FleetRow>> {
             r.peak_ws_bytes as f64 / 1e6
         );
     }
-    println!(
+    crate::log_info!(
         "reduction: {reduction:.1}x | resident arenas: {slots} x {:.1} KB = {:.2} MB \
          (per-learner model would hold {:.2} MB at m={m}, {:.0}x more)",
         per_arena / 1e3,

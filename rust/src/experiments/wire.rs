@@ -71,13 +71,13 @@ pub fn run(rt: &Runtime, scale: Scale, seed: u64) -> Result<Vec<WireRow>> {
 
     let dense_dyn_bytes = rows[0].dynamic_bytes.max(1);
     let dense_dyn_loss = rows[0].dynamic_loss.max(1e-12);
-    println!("\n-- wire: measured frame bytes, dynamic(delta={delta},b={check_every}) vs periodic(b={check_every}) --");
-    println!(
+    crate::log_info!("\n-- wire: measured frame bytes, dynamic(delta={delta},b={check_every}) vs periodic(b={check_every}) --");
+    crate::log_info!(
         "{:<10} {:>14} {:>14} {:>10} {:>12} {:>12} {:>10} {:>10}",
         "encoding", "dyn_bytes", "per_bytes", "reduction", "dyn_loss", "per_loss", "vs_dense", "loss_rat"
     );
     for r in &rows {
-        println!(
+        crate::log_info!(
             "{:<10} {:>14} {:>14} {:>9.1}x {:>12.2} {:>12.2} {:>9.2}x {:>10.4}",
             r.encoding,
             r.dynamic_bytes,

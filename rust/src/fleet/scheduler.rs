@@ -123,14 +123,22 @@ impl FleetScheduler {
                 // mutated by exactly one thread. Both borrows end before
                 // run() returns the latch.
                 let ws = unsafe { &mut *arenas_ptr.0.add(slot) };
+                // slot span on every dispatched thread (not just claim
+                // winners), so each fleet worker registers its trace ring
+                // during warm rounds — keeping later rounds alloc-free
+                // with tracing active (`tests/zero_alloc.rs`)
+                let slot_span = crate::trace::span(crate::trace::Phase::FleetSlot);
                 loop {
                     let k = next.fetch_add(1, Ordering::Relaxed);
                     if k >= active.len() {
                         break;
                     }
                     let l = unsafe { &mut *learners_ptr.0.add(active[k]) };
+                    let step_span = crate::trace::span(crate::trace::Phase::FleetStep);
                     l.local_step(train, lr, ws);
+                    drop(step_span);
                 }
+                drop(slot_span);
             });
         }
         let resident: u64 = self.arenas.iter().map(|w| w.bytes() as u64).sum();

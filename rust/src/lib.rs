@@ -42,6 +42,7 @@ pub mod network;
 pub mod runtime;
 pub mod sim;
 pub mod testing;
+pub mod trace;
 pub mod util;
 pub mod wire;
 

@@ -25,19 +25,27 @@ use dynavg::experiments::{self, Scale};
 use dynavg::runtime::Runtime;
 use dynavg::sim::SimConfig;
 use dynavg::util::cli::Args;
+use dynavg::util::json::Json;
 use dynavg::wire::client::run_client;
 use dynavg::wire::serve::{ServeConfig, WireServer};
 use dynavg::wire::{ChaosProfile, Encoding};
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        dynavg::log_error!("error: {e:#}");
         std::process::exit(1);
     }
 }
 
 fn run() -> Result<()> {
     let args = Args::from_env();
+    // verbosity first, so every subcommand's output is gated the same
+    // way: -q/--quiet wins, then -v/--verbose or --debug-wire
+    if args.has("quiet") {
+        dynavg::util::log::set_level(dynavg::util::log::ERROR);
+    } else if args.has("verbose") || args.has("debug-wire") {
+        dynavg::util::log::set_level(dynavg::util::log::DEBUG);
+    }
     match args.subcommand.as_deref() {
         Some("exp") => cmd_exp(&args),
         Some("run") => cmd_run(&args),
@@ -55,22 +63,25 @@ fn run() -> Result<()> {
 }
 
 fn print_usage() {
-    println!("dynavg — dynamic model averaging for decentralized deep learning");
-    println!("usage:");
-    println!("  dynavg exp <id> [--scale tiny|small|medium|paper] [--seed N]");
-    println!("  dynavg run --model M --protocol SPEC [--optimizer O] [--m N] [--rounds T] [--lr F]");
-    println!("             [--threads N] [--participation C] [--dropout P] [--straggle P]");
-    println!("             [--straggle-rounds K] [--no-async-merge]");
-    println!("             [--latency-ms L] [--jitter-ms J] [--bandwidth-kbps B] [--loss P]");
-    println!("             [--deadline-ms D]");
-    println!("  dynavg serve --model M [--m N] [--rounds T] [--encoding dense|int8|int16|topk:F]");
-    println!("               [--port P] [--port-file PATH] [--delta D] [--check B] [--final-eval]");
-    println!("               [--quorum Q] [--round-deadline-secs S] [--dead-after-secs S]");
-    println!("               [--chaos-drop P] [--chaos-corrupt P] [--chaos-duplicate P]");
-    println!("               [--chaos-disconnect P] [--chaos-delay-ms L] [--chaos-jitter-ms J]");
-    println!("               [--chaos-disconnect-after-ops K] [--chaos-seed N]");
-    println!("  dynavg connect --addr HOST:PORT [--timeout-secs S]");
-    println!("  dynavg list | models | info");
+    dynavg::log_info!("dynavg — dynamic model averaging for decentralized deep learning");
+    dynavg::log_info!("usage:");
+    dynavg::log_info!("  dynavg exp <id> [--scale tiny|small|medium|paper] [--seed N]");
+    dynavg::log_info!("  dynavg run --model M --protocol SPEC [--optimizer O] [--m N] [--rounds T] [--lr F]");
+    dynavg::log_info!("             [--threads N] [--participation C] [--dropout P] [--straggle P]");
+    dynavg::log_info!("             [--straggle-rounds K] [--no-async-merge]");
+    dynavg::log_info!("             [--latency-ms L] [--jitter-ms J] [--bandwidth-kbps B] [--loss P]");
+    dynavg::log_info!("             [--deadline-ms D] [--trace OUT.json] [--summary-json OUT.json]");
+    dynavg::log_info!("  dynavg serve --model M [--m N] [--rounds T] [--encoding dense|int8|int16|topk:F]");
+    dynavg::log_info!("               [--port P] [--port-file PATH] [--delta D] [--check B] [--final-eval]");
+    dynavg::log_info!("               [--quorum Q] [--round-deadline-secs S] [--dead-after-secs S]");
+    dynavg::log_info!("               [--chaos-drop P] [--chaos-corrupt P] [--chaos-duplicate P]");
+    dynavg::log_info!("               [--chaos-disconnect P] [--chaos-delay-ms L] [--chaos-jitter-ms J]");
+    dynavg::log_info!("               [--chaos-disconnect-after-ops K] [--chaos-seed N]");
+    dynavg::log_info!("               [--trace OUT.json] [--summary-json OUT.json]");
+    dynavg::log_info!("               [--metrics-port P] [--metrics-port-file PATH]");
+    dynavg::log_info!("  dynavg connect --addr HOST:PORT [--timeout-secs S]");
+    dynavg::log_info!("  dynavg list | models | info");
+    dynavg::log_info!("global: -q/--quiet errors only, -v/--verbose debug logging");
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
@@ -85,13 +96,17 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    if args.has("trace") {
+        dynavg::trace::enable();
+    }
     // config-file mode: dynavg run --config configs/table2_mnist.json
     if let Some(path) = args.get("config") {
         let cfg = dynavg::config::ExperimentConfig::load(path)?;
         let rt = Runtime::new(dynavg::artifacts_dir())?;
         let harness =
             experiments::Harness::new(&rt, cfg.sim.clone(), cfg.dataset, &cfg.name);
-        harness.run_all(&cfg.protocols, cfg.with_serial)?;
+        let results = harness.run_all(&cfg.protocols, cfg.with_serial)?;
+        finish_run(args, &cfg.name, &results)?;
         return Ok(());
     }
     let model = args.get_str("model", "drift_mlp");
@@ -125,7 +140,27 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.net.default.drop = args.get_f64("loss", 0.0);
     cfg.net.deadline_ms = args.get_f64("deadline-ms", 0.0);
     let harness = experiments::Harness::new(&rt, cfg, dataset, "custom");
-    harness.run_all(&[spec], args.has("serial"))?;
+    let results = harness.run_all(&[spec], args.has("serial"))?;
+    finish_run(args, "custom", &results)?;
+    Ok(())
+}
+
+/// Shared `--trace` / `--summary-json` epilogue for the run paths.
+fn finish_run(args: &Args, experiment: &str, results: &[dynavg::sim::RunResult]) -> Result<()> {
+    if let Some(path) = args.get("trace") {
+        dynavg::trace::export_chrome(std::path::Path::new(path))?;
+        dynavg::log_info!("trace written to {path}");
+    }
+    if let Some(path) = args.get("summary-json") {
+        let summaries: Vec<Json> = results.iter().map(|r| r.summary.to_json()).collect();
+        let doc = Json::obj(vec![
+            ("experiment", Json::str(experiment)),
+            ("summaries", Json::Arr(summaries)),
+        ]);
+        std::fs::write(path, format!("{doc}\n"))
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        dynavg::log_info!("summary written to {path}");
+    }
     Ok(())
 }
 
@@ -164,6 +199,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.final_eval = args.has("final-eval");
     cfg.debug_wire = args.has("debug-wire");
+    if let Some(v) = args.get("metrics-port") {
+        let p: u16 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--metrics-port expects a port number, got {v:?}"))?;
+        cfg.metrics_port = Some(p);
+    }
+    if args.has("trace") {
+        dynavg::trace::enable();
+    }
     let port = args.get_usize("port", 7070) as u16;
 
     let rt = Runtime::new(dynavg::artifacts_dir())?;
@@ -172,7 +216,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(path) = args.get("port-file") {
         server.write_port_file(std::path::Path::new(path))?;
     }
-    println!(
+    if let Some(maddr) = server.metrics_addr()? {
+        dynavg::log_info!("metrics endpoint on http://{maddr}/metrics");
+    }
+    if let Some(path) = args.get("metrics-port-file") {
+        server.write_metrics_port_file(std::path::Path::new(path))?;
+    }
+    dynavg::log_info!(
         "serving dynamic averaging on {addr} (model={model}, m={m}, rounds={rounds}, \
          delta={}, check={}, encoding={})",
         cfg.delta,
@@ -181,8 +231,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let report = server.run(&rt)?;
     let net = &report.net;
-    println!("run complete:");
-    println!(
+    dynavg::log_info!("run complete:");
+    dynavg::log_info!(
         "  protocol bytes   up={} down={} total={} (messages={}, models_sent={})",
         net.up_bytes,
         net.down_bytes,
@@ -190,21 +240,64 @@ fn cmd_serve(args: &Args) -> Result<()> {
         net.messages,
         net.models_sent
     );
-    println!(
+    dynavg::log_info!(
         "  wire bytes       up={} down={} transport_total={} (charged == NetStats: verified)",
         report.wire_up_bytes, report.wire_down_bytes, report.wire_transport_bytes
     );
-    println!(
+    dynavg::log_info!(
         "  syncs            events={} full={}",
         net.sync_events, net.full_syncs
     );
-    println!(
+    dynavg::log_info!(
         "  robustness       retransmits={}B/{}msg shortfalls={} late_merges={} reconnects={} dead={:?}",
         net.retrans_bytes, net.retrans_msgs, report.shortfalls, report.late_merges, report.reconnects, report.dead
     );
-    println!("  cumulative loss  {:.6}", report.cumulative_loss);
+    dynavg::log_info!("  cumulative loss  {:.6}", report.cumulative_loss);
     if let Some((loss, metric)) = report.eval {
-        println!("  holdout eval     loss={loss:.6} metric={metric:.6}");
+        dynavg::log_info!("  holdout eval     loss={loss:.6} metric={metric:.6}");
+    }
+    if let Some(path) = args.get("trace") {
+        dynavg::trace::export_chrome(std::path::Path::new(path))?;
+        dynavg::log_info!("trace written to {path}");
+    }
+    if let Some(path) = args.get("summary-json") {
+        // wire_verified: run() already bailed unless measured charged
+        // bytes equalled NetStats exactly, so reaching here proves it
+        let doc = Json::obj(vec![
+            ("wire_verified", Json::Bool(true)),
+            ("model", Json::str(model)),
+            ("m", Json::num(m as f64)),
+            ("rounds", Json::num(rounds as f64)),
+            ("up_bytes", Json::num(net.up_bytes as f64)),
+            ("down_bytes", Json::num(net.down_bytes as f64)),
+            ("retrans_bytes", Json::num(net.retrans_bytes as f64)),
+            ("wire_up_bytes", Json::num(report.wire_up_bytes as f64)),
+            ("wire_down_bytes", Json::num(report.wire_down_bytes as f64)),
+            ("wire_retrans_bytes", Json::num(report.wire_retrans_bytes as f64)),
+            ("transport_bytes", Json::num(report.wire_transport_bytes as f64)),
+            ("messages", Json::num(net.messages as f64)),
+            ("sync_events", Json::num(net.sync_events as f64)),
+            ("full_syncs", Json::num(net.full_syncs as f64)),
+            ("shortfalls", Json::num(report.shortfalls as f64)),
+            ("late_merges", Json::num(report.late_merges as f64)),
+            ("reconnects", Json::num(report.reconnects as f64)),
+            (
+                "dead",
+                Json::Arr(report.dead.iter().map(|&i| Json::num(i as f64)).collect()),
+            ),
+            ("cumulative_loss", Json::num(report.cumulative_loss)),
+            (
+                "eval_loss",
+                report.eval.map(|(l, _)| Json::num(l)).unwrap_or(Json::Null),
+            ),
+            (
+                "eval_metric",
+                report.eval.map(|(_, x)| Json::num(x)).unwrap_or(Json::Null),
+            ),
+        ]);
+        std::fs::write(path, format!("{doc}\n"))
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        dynavg::log_info!("summary written to {path}");
     }
     Ok(())
 }
@@ -215,7 +308,7 @@ fn cmd_connect(args: &Args) -> Result<()> {
     let rt = Runtime::new(dynavg::artifacts_dir())?;
     let report = run_client(&rt, &addr, timeout)?;
     let final_loss = report.losses.last().copied().unwrap_or(f32::NAN);
-    println!(
+    dynavg::log_info!(
         "client {} done: rounds={} final_loss={final_loss:.6} sent={}B received={}B",
         report.id,
         report.losses.len(),
@@ -226,20 +319,20 @@ fn cmd_connect(args: &Args) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    println!("experiments (dynavg exp <id>):");
+    dynavg::log_info!("experiments (dynavg exp <id>):");
     for (id, desc) in experiments::EXPERIMENTS {
-        println!("  {id:<10} {desc}");
+        dynavg::log_info!("  {id:<10} {desc}");
     }
     if let Ok(rt) = Runtime::new(dynavg::artifacts_dir()) {
-        println!("\nartifacts ({} backend):", rt.backend_name());
+        dynavg::log_info!("\nartifacts ({} backend):", rt.backend_name());
         for (name, a) in &rt.manifest.artifacts {
-            println!(
+            dynavg::log_info!(
                 "  {name:<28} kind={:<6} model={:<15} B={:<4} P={}",
                 a.kind, a.model, a.batch, a.param_count
             );
         }
     } else {
-        println!("\n(manifest unreadable — re-run `make artifacts`)");
+        dynavg::log_info!("\n(manifest unreadable — re-run `make artifacts`)");
     }
     Ok(())
 }
@@ -254,20 +347,20 @@ fn cmd_list() -> Result<()> {
 /// gradients, staging) that footprint includes.
 fn cmd_models() -> Result<()> {
     let rt = Runtime::new(dynavg::artifacts_dir())?;
-    println!("backend: {}", rt.backend_name());
+    dynavg::log_info!("backend: {}", rt.backend_name());
     // the intra-step tile pool a solo workspace would stand up at this
     // machine's budget (the fleet scheduler divides this across its
     // arenas; each arena's tile pool is its workspace's threads - 1)
     let t = dynavg::util::threads::default_threads();
-    println!(
+    dynavg::log_info!(
         "tile pool: {} worker(s) + dispatching thread at default_threads={t}",
         t.saturating_sub(1)
     );
-    println!(
+    dynavg::log_info!(
         "kernel tier: {} (runtime-detected; scalar is the bitwise reference)",
         dynavg::runtime::KernelTier::detect().label()
     );
-    println!(
+    dynavg::log_info!(
         "{:<16} {:>9}  {:<14} {:<8} {:<6} {:>12} {:>10} {:>10} executable",
         "model", "P", "x_shape", "metric", "ops", "workspace", "pack", "attn"
     );
@@ -322,7 +415,7 @@ fn cmd_models() -> Result<()> {
             }
             Err(_) => ("-".to_string(), "-".to_string(), "-".to_string()),
         };
-        println!(
+        dynavg::log_info!(
             "{:<16} {:>9}  {x_shape:<14} {:<8} {ops:<6} {workspace:>12} {pack:>10} {attn:>10} {executable}",
             name, m.param_count, m.metric,
         );
@@ -331,13 +424,13 @@ fn cmd_models() -> Result<()> {
     // per-stripe backward score slots save over the retired S²-resident
     // per-(batch, head) plan at this machine's thread budget
     if !attn_rows.is_empty() {
-        println!("\nattention scratch (train batch, threads={t}):");
-        println!(
+        dynavg::log_info!("\nattention scratch (train batch, threads={t}):");
+        dynavg::log_info!(
             "{:<16} {:>14} {:>14} {:>9}",
             "model", "S2-resident", "streaming", "ratio"
         );
         for (name, resident, streaming) in &attn_rows {
-            println!(
+            dynavg::log_info!(
                 "{:<16} {:>12} B {:>12} B {:>8.1}%",
                 name,
                 resident,
@@ -352,13 +445,13 @@ fn cmd_models() -> Result<()> {
     // scale with the active cohort, not the population
     let fleet_m = 1000usize;
     let slots = t.max(1).min(fleet_m);
-    println!("\nfleet amortization (m={fleet_m}, {slots} arena(s) at threads={t}):");
-    println!(
+    dynavg::log_info!("\nfleet amortization (m={fleet_m}, {slots} arena(s) at threads={t}):");
+    dynavg::log_info!(
         "{:<16} {:>16} {:>16} {:>14}",
         "model", "per-learner", "fleet resident", "amortization"
     );
     for (name, ws) in &fleet_rows {
-        println!(
+        dynavg::log_info!(
             "{:<16} {:>13.1} MB {:>13.1} MB {:>13.1}x",
             name,
             (ws * fleet_m as u64) as f64 / 1e6,
@@ -371,17 +464,17 @@ fn cmd_models() -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     let rt = Runtime::new(dynavg::artifacts_dir())?;
-    println!("backend: {}", rt.backend_name());
-    println!("artifacts dir: {:?}", dynavg::artifacts_dir());
-    println!("manifest seed: {}", rt.manifest.seed);
-    println!("models:");
+    dynavg::log_info!("backend: {}", rt.backend_name());
+    dynavg::log_info!("artifacts dir: {:?}", dynavg::artifacts_dir());
+    dynavg::log_info!("manifest seed: {}", rt.manifest.seed);
+    dynavg::log_info!("models:");
     for (name, m) in &rt.manifest.models {
-        println!(
+        dynavg::log_info!(
             "  {name:<16} P={:<8} x{:?} metric={}",
             m.param_count, m.x_shape, m.metric
         );
         for (tname, shape) in &m.tensors {
-            println!("      {tname:<14} {shape:?}");
+            dynavg::log_info!("      {tname:<14} {shape:?}");
         }
     }
     Ok(())

@@ -38,6 +38,14 @@ pub struct RoundRecord {
     /// cumulative retransmitted bytes up to and including this round
     /// (itemized outside `cum_bytes` — see `NetStats::retransmit`)
     pub retrans_bytes: u64,
+    /// wall-clock ns this round spent draining local steps (the
+    /// scheduler's `run_round`) — always measured, see `trace::timed`
+    pub compute_ns: u64,
+    /// wall-clock ns this round spent in the protocol's sync operator
+    pub sync_ns: u64,
+    /// wall-clock ns this round spent in wire encode/decode (delta of
+    /// `trace::wire_ns_total`; 0 when no codec ran)
+    pub wire_ns: u64,
 }
 
 /// Recorder for one protocol run.
@@ -94,6 +102,14 @@ impl Recorder {
         })
     }
 
+    /// Total (compute_ns, sync_ns, wire_ns) across the run — the
+    /// phase breakdown of where wall-clock went.
+    pub fn phase_totals(&self) -> (u64, u64, u64) {
+        self.rows.iter().fold((0, 0, 0), |(c, s, w), r| {
+            (c + r.compute_ns, s + r.sync_ns, w + r.wire_ns)
+        })
+    }
+
     /// Write the time series as CSV.
     pub fn write_csv(&self, path: &Path, label: &str) -> Result<()> {
         if let Some(dir) = path.parent() {
@@ -103,14 +119,14 @@ impl Recorder {
             .with_context(|| format!("creating {path:?}"))?;
         writeln!(
             f,
-            "protocol,round,loss_sum,cum_loss,metric_mean,cum_bytes,synced,drifted,cohort,dropped,straggled,late_merges,shortfall,retrans_bytes"
+            "protocol,round,loss_sum,cum_loss,metric_mean,cum_bytes,synced,drifted,cohort,dropped,straggled,late_merges,shortfall,retrans_bytes,compute_ns,sync_ns,wire_ns"
         )?;
         let mut cum = 0.0;
         for r in &self.rows {
             cum += r.loss_sum;
             writeln!(
                 f,
-                "{label},{},{:.6},{:.6},{:.6},{},{},{},{},{},{},{},{},{}",
+                "{label},{},{:.6},{:.6},{:.6},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.loss_sum,
                 cum,
@@ -123,7 +139,10 @@ impl Recorder {
                 r.straggled,
                 r.late_merges,
                 r.shortfall,
-                r.retrans_bytes
+                r.retrans_bytes,
+                r.compute_ns,
+                r.sync_ns,
+                r.wire_ns
             )?;
         }
         Ok(())
@@ -154,12 +173,18 @@ pub struct Summary {
     /// learner-rounds the run proceeded without (deadline misses or
     /// quorum gaps)
     pub shortfalls: u64,
+    /// run-total wall-clock ns draining local steps (Σ per-round)
+    pub compute_ns: u64,
+    /// run-total wall-clock ns in the sync operator
+    pub sync_ns: u64,
+    /// run-total wall-clock ns in wire encode/decode
+    pub wire_ns: u64,
 }
 
 impl Summary {
     pub fn table_header() -> String {
         format!(
-            "{:<22} {:<9} {:>14} {:>14} {:>12} {:>11} {:>11} {:>7} {:>6} {:>9} {:>9} {:>5} {:>6}",
+            "{:<22} {:<9} {:>14} {:>14} {:>12} {:>11} {:>11} {:>7} {:>6} {:>9} {:>9} {:>5} {:>6} {:>9} {:>8} {:>8}",
             "protocol",
             "enc",
             "cum_loss",
@@ -172,13 +197,16 @@ impl Summary {
             "ws_MB",
             "retransB",
             "late",
-            "short"
+            "short",
+            "comp_ms",
+            "sync_ms",
+            "wire_ms"
         )
     }
 
     pub fn table_row(&self) -> String {
         format!(
-            "{:<22} {:<9} {:>14.2} {:>14} {:>12.2} {:>11.4} {:>11} {:>7} {:>6} {:>9.2} {:>9} {:>5} {:>6}",
+            "{:<22} {:<9} {:>14.2} {:>14} {:>12.2} {:>11.4} {:>11} {:>7} {:>6} {:>9.2} {:>9} {:>5} {:>6} {:>9.1} {:>8.1} {:>8.1}",
             self.protocol,
             self.encoding,
             self.cumulative_loss,
@@ -193,8 +221,39 @@ impl Summary {
             self.peak_ws_bytes as f64 / 1e6,
             self.retrans_bytes,
             self.late_merges,
-            self.shortfalls
+            self.shortfalls,
+            self.compute_ns as f64 / 1e6,
+            self.sync_ns as f64 / 1e6,
+            self.wire_ns as f64 / 1e6
         )
+    }
+
+    /// One machine-readable object per summary row (`--summary-json`).
+    /// Byte/count fields ride the shared f64-backed Json — all values
+    /// involved are far below 2^53.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("protocol", Json::str(self.protocol.clone())),
+            ("encoding", Json::str(self.encoding.clone())),
+            ("cumulative_loss", Json::num(self.cumulative_loss)),
+            ("comm_bytes", Json::num(self.comm_bytes as f64)),
+            ("tail_metric", Json::num(self.tail_metric)),
+            ("eval_loss", self.eval_loss.map(Json::num).unwrap_or(Json::Null)),
+            (
+                "eval_metric",
+                self.eval_metric.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("sync_events", Json::num(self.sync_events as f64)),
+            ("full_syncs", Json::num(self.full_syncs as f64)),
+            ("peak_ws_bytes", Json::num(self.peak_ws_bytes as f64)),
+            ("retrans_bytes", Json::num(self.retrans_bytes as f64)),
+            ("late_merges", Json::num(self.late_merges as f64)),
+            ("shortfalls", Json::num(self.shortfalls as f64)),
+            ("compute_ns", Json::num(self.compute_ns as f64)),
+            ("sync_ns", Json::num(self.sync_ns as f64)),
+            ("wire_ns", Json::num(self.wire_ns as f64)),
+        ])
     }
 }
 
@@ -206,12 +265,12 @@ pub fn write_summary_csv(path: &Path, rows: &[Summary]) -> Result<()> {
     let mut f = std::fs::File::create(path)?;
     writeln!(
         f,
-        "protocol,encoding,cum_loss,comm_bytes,tail_metric,eval_loss,eval_metric,sync_events,full_syncs,peak_ws_bytes,retrans_bytes,late_merges,shortfalls"
+        "protocol,encoding,cum_loss,comm_bytes,tail_metric,eval_loss,eval_metric,sync_events,full_syncs,peak_ws_bytes,retrans_bytes,late_merges,shortfalls,compute_ns,sync_ns,wire_ns"
     )?;
     for s in rows {
         writeln!(
             f,
-            "{},{},{:.6},{},{:.6},{},{},{},{},{},{},{},{}",
+            "{},{},{:.6},{},{:.6},{},{},{},{},{},{},{},{},{},{},{}",
             s.protocol,
             s.encoding,
             s.cumulative_loss,
@@ -224,7 +283,10 @@ pub fn write_summary_csv(path: &Path, rows: &[Summary]) -> Result<()> {
             s.peak_ws_bytes,
             s.retrans_bytes,
             s.late_merges,
-            s.shortfalls
+            s.shortfalls,
+            s.compute_ns,
+            s.sync_ns,
+            s.wire_ns
         )?;
     }
     Ok(())
@@ -248,6 +310,9 @@ mod tests {
             late_merges: 0,
             shortfall: 0,
             retrans_bytes: 0,
+            compute_ns: 0,
+            sync_ns: 0,
+            wire_ns: 0,
         }
     }
 
@@ -302,6 +367,22 @@ mod tests {
         r.record(b);
         assert_eq!(r.robust_totals(), (3, 4));
         assert_eq!(r.rows.last().unwrap().retrans_bytes, 128);
+    }
+
+    #[test]
+    fn phase_totals_aggregate() {
+        let mut r = Recorder::new();
+        let mut a = row(1, 0.0, 0);
+        a.compute_ns = 100;
+        a.sync_ns = 10;
+        a.wire_ns = 1;
+        let mut b = row(2, 0.0, 0);
+        b.compute_ns = 200;
+        b.sync_ns = 20;
+        b.wire_ns = 2;
+        r.record(a);
+        r.record(b);
+        assert_eq!(r.phase_totals(), (300, 30, 3));
     }
 
     #[test]

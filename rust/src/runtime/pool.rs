@@ -149,6 +149,11 @@ impl WorkerPool {
             }
             return;
         }
+        // caller-side span over the whole latch round-trip (real
+        // dispatches only — the serial fallback above is not a dispatch);
+        // disarmed this is one atomic load, armed it is a preallocated
+        // ring write, so the zero-alloc dispatch contract holds either way
+        let dispatch_span = crate::trace::span(crate::trace::Phase::KernelDispatch);
         {
             let mut s = self.shared.state.lock().unwrap();
             // hard assert, not debug: WorkerPool is Sync, so overlapping
@@ -180,6 +185,7 @@ impl WorkerPool {
             t += step;
         }
         drop(guard);
+        drop(dispatch_span);
         let panicked = self.shared.state.lock().unwrap().panicked.take();
         if let Some(payload) = panicked {
             panic::resume_unwind(payload);

@@ -797,7 +797,7 @@ mod tests {
     #[test]
     fn simd_tier_matches_scalar_within_tolerance() {
         if KernelTier::detect() != KernelTier::Simd {
-            eprintln!("skipping: CPU lacks AVX2+FMA");
+            crate::log_warn!("skipping: CPU lacks AVX2+FMA");
             return;
         }
         let simd = Par::serial().with_tier(KernelTier::Simd);
@@ -836,7 +836,7 @@ mod tests {
     #[test]
     fn simd_tier_is_deterministic_across_modes() {
         if KernelTier::detect() != KernelTier::Simd {
-            eprintln!("skipping: CPU lacks AVX2+FMA");
+            crate::log_warn!("skipping: CPU lacks AVX2+FMA");
             return;
         }
         let mut rng = Rng::new(13);

@@ -25,6 +25,7 @@ use crate::model::InitPolicy;
 use crate::netsim::{NetProfile, NetSim};
 use crate::network::NetStats;
 use crate::runtime::{Batch, EvalStep, ModelRuntime, Runtime};
+use crate::trace::{self, Phase};
 use crate::util::rng::Rng;
 use crate::util::threads;
 use crate::wire::{Encoding, Link};
@@ -245,8 +246,13 @@ impl<'a> Engine<'a> {
                 false
             };
 
+            // per-round wire-codec time is the delta of the process-wide
+            // encode/decode total (charged inside Encoding itself)
+            let wire_ns0 = trace::wire_ns_total();
+
             // cohort selection + fault injection (ascending id order —
             // the draw order the python mirror replicates)
+            let sample_span = trace::span(Phase::RoundSample);
             active.clear();
             straggled.clear();
             arrivals.clear();
@@ -302,14 +308,18 @@ impl<'a> Engine<'a> {
                     }
                 }
             }
+            drop(sample_span);
 
             // local mini-batch steps: batches are staged in ascending id
             // order on this thread (deterministic stream order), then the
             // fleet scheduler drains the work items
+            let stage_span = trace::span(Phase::RoundStage);
             for &id in &active {
                 learners[id].stage();
             }
-            sched.run_round(learners, &active, train, lr);
+            drop(stage_span);
+            let ((), compute_ns) =
+                trace::timed(Phase::RoundCompute, || sched.run_round(learners, &active, train, lr));
             if let Some(err) = active.iter().find_map(|&id| learners[id].last_err.clone()) {
                 anyhow::bail!("local step failed: {err}");
             }
@@ -352,8 +362,8 @@ impl<'a> Engine<'a> {
 
             // synchronization operator on the participating subset, with
             // the weight vector rebuilt from this round's cohort
-            let report = if participants.is_empty() {
-                SyncReport::default()
+            let (report, sync_ns) = if participants.is_empty() {
+                (SyncReport::default(), 0)
             } else {
                 weights.clear();
                 weights.extend(participants.iter().map(|&id| learners[id].sample_rate as f32));
@@ -361,18 +371,20 @@ impl<'a> Engine<'a> {
                     .iter()
                     .map(|&id| std::mem::take(&mut learners[id].params))
                     .collect();
-                let report = protocol.sync(&mut SyncCtx {
-                    round: t,
-                    models: &mut models,
-                    weights: &weights,
-                    net: &mut net,
-                    rng: &mut proto_rng,
-                    link: &mut link,
+                let (report, sync_ns) = trace::timed(Phase::RoundSync, || {
+                    protocol.sync(&mut SyncCtx {
+                        round: t,
+                        models: &mut models,
+                        weights: &weights,
+                        net: &mut net,
+                        rng: &mut proto_rng,
+                        link: &mut link,
+                    })
                 });
                 for (&id, p) in participants.iter().zip(models) {
                     learners[id].params = p;
                 }
-                report
+                (report, sync_ns)
             };
 
             recorder.record(RoundRecord {
@@ -388,6 +400,9 @@ impl<'a> Engine<'a> {
                 late_merges,
                 shortfall: net_straggled,
                 retrans_bytes: net.retrans_bytes,
+                compute_ns,
+                sync_ns,
+                wire_ns: trace::wire_ns_total() - wire_ns0,
             });
         }
 
@@ -408,6 +423,7 @@ impl<'a> Engine<'a> {
         }
 
         let (late_merges, shortfalls) = recorder.robust_totals();
+        let (compute_ns, sync_ns, wire_ns) = recorder.phase_totals();
         let summary = Summary {
             protocol: protocol.name(),
             encoding: self.cfg.encoding.label(),
@@ -422,6 +438,9 @@ impl<'a> Engine<'a> {
             retrans_bytes: net.retrans_bytes,
             late_merges,
             shortfalls,
+            compute_ns,
+            sync_ns,
+            wire_ns,
         };
         Ok(RunResult {
             summary,

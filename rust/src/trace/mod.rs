@@ -1,0 +1,324 @@
+//! Zero-alloc-steady-state tracing: phase spans + Chrome-trace export.
+//!
+//! The repo's end-of-run CSVs say how many bytes dynamic averaging
+//! saved; this layer says where a round's *wall-clock* goes. Every
+//! recording thread owns one preallocated fixed-capacity [`Ring`] of
+//! spans (registered lazily, which the instrumented paths reach during
+//! warm-up), so recording a span in steady state is an `Instant`
+//! read + a ring write — no heap traffic, pinned with tracing ACTIVE
+//! by `tests/zero_alloc.rs`. Overflow past the ring capacity is
+//! counted and dropped, never reallocated.
+//!
+//! Contracts:
+//! - recording is **disabled by default** and bitwise-invisible to
+//!   numerics: instrumentation only reads clocks, it never touches
+//!   model state or rng draws (`tests/trace_invariance.rs`);
+//! - `timed` measures **unconditionally** — the per-phase ns columns
+//!   (`compute_ns`/`sync_ns`/`wire_ns` in `RoundRecord`/`Summary`)
+//!   are always on, tracing only adds the span record;
+//! - [`export_chrome`] writes Chrome trace-event JSON (the
+//!   `--trace out.json` flag on `dynavg run`/`serve`), viewable in
+//!   Perfetto / `chrome://tracing` and validated by
+//!   `python/tools/trace_check.py` in `make trace-smoke`.
+
+pub mod ring;
+
+pub use ring::{Ring, Span};
+
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Spans retained per thread before overflow counting kicks in.
+/// 16 Ki spans x 24 B = 384 KiB per recording thread, allocated once
+/// at that thread's first recorded span.
+pub const RING_CAPACITY: usize = 16 * 1024;
+
+/// Everything the instrumentation distinguishes. Span phases nest
+/// round.* > fleet.* > kernel.*; serve.* phases are coordinator
+/// instant events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Cohort sampling + fault classification on the coordinator.
+    RoundSample,
+    /// Staging active learners' batches for the round.
+    RoundStage,
+    /// The scheduler draining the round's local steps.
+    RoundCompute,
+    /// The protocol's synchronization operator.
+    RoundSync,
+    /// One fleet worker draining the claim queue for a round.
+    FleetSlot,
+    /// One learner's local step inside a fleet slot.
+    FleetStep,
+    /// One tiled kernel dispatch through the worker pool (caller side).
+    KernelDispatch,
+    /// Encoding a model delta for the wire.
+    WireEncode,
+    /// Decoding a wire payload.
+    WireDecode,
+    /// Coordinator opened a check round.
+    ServeRoundOpen,
+    /// Coordinator resolved + broadcast a check round.
+    ServeRoundClose,
+    /// A round closed on quorum instead of full attendance.
+    ServeShortfall,
+    /// A straggler's violation merged against a resolved generation.
+    ServeLateMerge,
+    /// A silent client was swept as dead.
+    ServeDeadSweep,
+    /// A known client re-enrolled after a disconnect.
+    ServeReconnect,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::RoundSample => "round.sample",
+            Phase::RoundStage => "round.stage",
+            Phase::RoundCompute => "round.compute",
+            Phase::RoundSync => "round.sync",
+            Phase::FleetSlot => "fleet.slot",
+            Phase::FleetStep => "fleet.step",
+            Phase::KernelDispatch => "kernel.dispatch",
+            Phase::WireEncode => "wire.encode",
+            Phase::WireDecode => "wire.decode",
+            Phase::ServeRoundOpen => "serve.round_open",
+            Phase::ServeRoundClose => "serve.round_close",
+            Phase::ServeShortfall => "serve.quorum_shortfall",
+            Phase::ServeLateMerge => "serve.late_merge",
+            Phase::ServeDeadSweep => "serve.dead_sweep",
+            Phase::ServeReconnect => "serve.reconnect",
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Cumulative ns spent in wire encode/decode, process-wide. Always on
+/// (like `timed`): the engine reads per-round deltas for the
+/// `wire_ns` column whether or not spans are recorded.
+static WIRE_NS: AtomicU64 = AtomicU64::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// All registered rings, in registration order; the index is the
+/// exported Chrome `tid`. Thread names are captured at registration.
+#[allow(clippy::type_complexity)]
+static REGISTRY: Mutex<Vec<(String, Arc<Mutex<Ring>>)>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL_RING: Arc<Mutex<Ring>> = register_thread();
+}
+
+fn register_thread() -> Arc<Mutex<Ring>> {
+    let ring = Arc::new(Mutex::new(Ring::new(RING_CAPACITY)));
+    let mut reg = REGISTRY.lock().unwrap();
+    let name = std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("thread-{}", reg.len()));
+    reg.push((name, Arc::clone(&ring)));
+    ring
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Arm span recording. Pins the trace epoch on first call; idempotent.
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn record(phase: Phase, start_ns: u64, dur_ns: u64) {
+    LOCAL_RING.with(|r| {
+        r.lock().unwrap().push(Span {
+            phase,
+            start_ns,
+            dur_ns,
+        })
+    });
+}
+
+/// RAII span: records on drop. Disarmed (a no-op holding one atomic
+/// load) when tracing is off, so instrumented hot paths pay nothing.
+pub struct SpanGuard {
+    phase: Phase,
+    start_ns: u64,
+    armed: bool,
+}
+
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    let armed = enabled();
+    SpanGuard {
+        phase,
+        start_ns: if armed { now_ns() } else { 0 },
+        armed,
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let dur = now_ns().saturating_sub(self.start_ns);
+            // dur 0 would render as an instant event; clamp up.
+            record(self.phase, self.start_ns, dur.max(1));
+        }
+    }
+}
+
+/// Time `f` unconditionally and return `(result, elapsed_ns)`; when
+/// tracing is enabled, additionally record the span. This is what
+/// feeds the always-on per-phase ns columns.
+pub fn timed<T>(phase: Phase, f: impl FnOnce() -> T) -> (T, u64) {
+    let armed = enabled();
+    let start_ns = if armed { now_ns() } else { 0 };
+    let t0 = Instant::now();
+    let out = f();
+    let dur = (t0.elapsed().as_nanos() as u64).max(1);
+    if armed {
+        record(phase, start_ns, dur);
+    }
+    (out, dur)
+}
+
+/// Record a zero-duration instant event (coordinator happenings).
+pub fn instant(phase: Phase) {
+    if enabled() {
+        record(phase, now_ns(), 0);
+    }
+}
+
+/// Charge `ns` to the process-wide wire encode/decode total.
+pub fn add_wire_ns(ns: u64) {
+    WIRE_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+/// Cumulative wire encode/decode ns; callers take per-round deltas.
+pub fn wire_ns_total() -> u64 {
+    WIRE_NS.load(Ordering::Relaxed)
+}
+
+/// Spans counted-and-dropped across all rings (overflow telemetry).
+pub fn dropped_total() -> u64 {
+    REGISTRY
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(_, r)| r.lock().unwrap().dropped())
+        .sum()
+}
+
+/// Keep exported thread names JSON-trivial: drop anything that would
+/// need escaping rather than implement an escaper for rust thread
+/// names that are ascii identifiers in practice.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .filter(|c| (c.is_ascii_graphic() || *c == ' ') && *c != '"' && *c != '\\')
+        .collect()
+}
+
+/// Write every registered ring as Chrome trace-event JSON
+/// (<https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU>):
+/// one `pid`, one `tid` per registered thread (with a `thread_name`
+/// metadata event), `ts`/`dur` in microseconds. Load the file in
+/// Perfetto or `chrome://tracing` as-is.
+pub fn export_chrome(path: &Path) -> Result<()> {
+    let file = File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    write!(w, "{{\"traceEvents\":[")?;
+    let reg = REGISTRY.lock().unwrap();
+    let mut dropped = 0u64;
+    let mut first = true;
+    for (tid, (name, ring)) in reg.iter().enumerate() {
+        if !first {
+            write!(w, ",")?;
+        }
+        first = false;
+        write!(
+            w,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            sanitize(name)
+        )?;
+        let ring = ring.lock().unwrap();
+        dropped += ring.dropped();
+        for s in ring.spans() {
+            let ts = s.start_ns as f64 / 1e3;
+            if s.dur_ns == 0 {
+                write!(
+                    w,
+                    ",{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\
+                     \"tid\":{tid},\"ts\":{ts:.3}}}",
+                    s.phase.name()
+                )?;
+            } else {
+                write!(
+                    w,
+                    ",{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{tid},\
+                     \"ts\":{ts:.3},\"dur\":{:.3}}}",
+                    s.phase.name(),
+                    s.dur_ns as f64 / 1e3
+                )?;
+            }
+        }
+    }
+    write!(w, "],\"otherData\":{{\"dropped\":\"{dropped}\"}}}}")?;
+    w.flush().context("flushing trace file")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Lib tests run in parallel and ENABLED is process-global, so this
+    // test only ever *enables* (harmless to every other test — spans
+    // are numerics-invisible) and asserts its own spans end-to-end.
+    #[test]
+    fn spans_record_and_export() {
+        enable();
+        let (v, ns) = timed(Phase::RoundCompute, || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(ns >= 1);
+        {
+            let _g = span(Phase::RoundSync);
+            std::hint::black_box(0u64);
+        }
+        instant(Phase::ServeShortfall);
+        let before = wire_ns_total();
+        add_wire_ns(7);
+        assert!(wire_ns_total() >= before + 7);
+
+        let out = std::env::temp_dir().join("dynavg_trace_test.json");
+        export_chrome(&out).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.starts_with("{\"traceEvents\":["));
+        assert!(text.contains("\"round.compute\""));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"serve.quorum_shortfall\""));
+        assert!(text.contains("\"ph\":\"i\""));
+        assert!(text.contains("\"thread_name\""));
+        assert!(text.ends_with('}'));
+        std::fs::remove_file(&out).ok();
+    }
+}

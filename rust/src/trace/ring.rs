@@ -1,0 +1,128 @@
+//! Fixed-capacity span storage.
+//!
+//! A `Ring` is preallocated once (at thread registration, which the
+//! instrumented code paths reach during warm-up) and `push` never
+//! allocates afterwards: when full, further spans are *counted and
+//! dropped*, keeping the earliest `capacity` spans in arrival order. A
+//! truncated trace with an honest drop count beats a silently
+//! rewritten one — and it keeps the steady-state zero-allocation
+//! contract (`tests/zero_alloc.rs`) intact with tracing active.
+
+use crate::trace::Phase;
+
+/// One recorded event. `dur_ns == 0` renders as an instant event in
+/// the Chrome export; anything else is a complete ("X") span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub phase: Phase,
+    /// Start time in ns since the trace epoch (set at `trace::enable`).
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Preallocated, drop-when-full span buffer (one per recording thread).
+pub struct Ring {
+    spans: Box<[Span]>,
+    len: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    pub fn new(capacity: usize) -> Self {
+        let zero = Span {
+            phase: Phase::RoundCompute,
+            start_ns: 0,
+            dur_ns: 0,
+        };
+        Ring {
+            spans: vec![zero; capacity].into_boxed_slice(),
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Record a span; alloc-free. Once full, the span is counted in
+    /// `dropped` and discarded.
+    pub fn push(&mut self, s: Span) {
+        if self.len < self.spans.len() {
+            self.spans[self.len] = s;
+            self.len += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Spans counted-and-dropped after the buffer filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The retained spans, in arrival order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans[..self.len]
+    }
+
+    /// Forget all recorded spans and the drop count; capacity is kept.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(i: u64) -> Span {
+        Span {
+            phase: Phase::RoundCompute,
+            start_ns: i,
+            dur_ns: 1,
+        }
+    }
+
+    /// Property: for any (capacity, pushes) pair, the ring keeps the
+    /// first `capacity` spans in order, counts exactly the overflow,
+    /// and retained start times stay monotonic.
+    #[test]
+    fn overflow_is_counted_and_dropped() {
+        for cap in [1usize, 2, 3, 7, 64, 1000] {
+            for n in [0usize, 1, cap / 2, cap, cap + 1, 2 * cap, 3 * cap + 5] {
+                let mut r = Ring::new(cap);
+                for i in 0..n {
+                    r.push(span(i as u64));
+                }
+                assert_eq!(r.len(), n.min(cap), "cap={cap} n={n}");
+                assert_eq!(r.dropped(), n.saturating_sub(cap) as u64, "cap={cap} n={n}");
+                for (i, s) in r.spans().iter().enumerate() {
+                    assert_eq!(s.start_ns, i as u64, "cap={cap} n={n} slot {i}");
+                }
+                for w in r.spans().windows(2) {
+                    assert!(w[0].start_ns <= w[1].start_ns);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clear_resets_len_and_drop_count() {
+        let mut r = Ring::new(4);
+        for i in 0..9 {
+            r.push(span(i));
+        }
+        assert_eq!((r.len(), r.dropped()), (4, 5));
+        r.clear();
+        assert_eq!((r.len(), r.dropped()), (0, 0));
+        assert!(r.is_empty());
+        r.push(span(42));
+        assert_eq!(r.spans(), &[span(42)]);
+    }
+}

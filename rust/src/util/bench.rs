@@ -28,7 +28,7 @@ pub struct BenchResult {
 
 impl BenchResult {
     pub fn report(&self) {
-        println!(
+        crate::log_info!(
             "bench {:<44} {:>12} {:>12} {:>12}  ({} iters)",
             self.name,
             fmt_ns(self.median_ns),
@@ -52,7 +52,7 @@ pub fn fmt_ns(ns: f64) -> String {
 }
 
 pub fn header() {
-    println!(
+    crate::log_info!(
         "bench {:<44} {:>12} {:>12} {:>12}",
         "name", "median", "mean", "min"
     );

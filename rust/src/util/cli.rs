@@ -19,12 +19,20 @@ impl Args {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--") && n != "-v" && n != "-q")
+                    .unwrap_or(false)
+                {
                     let v = it.next().unwrap();
                     out.flags.insert(key.to_string(), v);
                 } else {
                     out.flags.insert(key.to_string(), "true".to_string());
                 }
+            } else if a == "-v" {
+                out.flags.insert("verbose".to_string(), "true".to_string());
+            } else if a == "-q" {
+                out.flags.insert("quiet".to_string(), "true".to_string());
             } else if out.subcommand.is_none() {
                 out.subcommand = Some(a);
             } else {
@@ -93,5 +101,16 @@ mod tests {
         let a = parse("run");
         assert_eq!(a.get_usize("m", 7), 7);
         assert_eq!(a.get_str("name", "x"), "x");
+    }
+
+    #[test]
+    fn short_verbosity_flags_never_consume_as_values() {
+        let a = parse("run -v --trace out.json");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("trace"), Some("out.json"));
+        // a short flag right after a bare --flag must not become its value
+        let b = parse("serve --final-eval -q");
+        assert_eq!(b.get("final-eval"), Some("true"));
+        assert!(b.has("quiet"));
     }
 }

@@ -1,0 +1,88 @@
+//! Leveled logging for the CLI and drivers — a gate, not a framework.
+//!
+//! The repo's ~90 `println!`/`eprintln!` sites become `log_info!` /
+//! `log_warn!` / … calls that keep their exact message text (smoke
+//! scripts now parse `--summary-json` instead of grepping stdout, but
+//! humans still read these lines) and gain a single global level:
+//! `--quiet`/`-q` drops everything below errors, `-v`/`--verbose`
+//! turns on debug. Info goes to stdout (tables, verdicts); error /
+//! warn / debug go to stderr, matching the sites they replaced.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::SeqCst);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+#[inline]
+pub fn enabled(level: u8) -> bool {
+    level <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// stderr, always-on unless someone sets a level below `ERROR`.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::ERROR) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// stderr, suppressed by `--quiet`.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::WARN) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// stdout — the default human surface (tables, summaries, verdicts).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::INFO) {
+            println!($($arg)*);
+        }
+    };
+}
+
+/// stderr, off unless `-v`/`--verbose` (or `--debug-wire` on serve).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::DEBUG) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gates_nest() {
+        // Parallel lib tests share the global level; only restore INFO.
+        set_level(DEBUG);
+        assert!(enabled(ERROR) && enabled(WARN) && enabled(INFO) && enabled(DEBUG));
+        set_level(ERROR);
+        assert!(enabled(ERROR) && !enabled(WARN) && !enabled(INFO) && !enabled(DEBUG));
+        set_level(INFO);
+        assert!(enabled(WARN) && enabled(INFO) && !enabled(DEBUG));
+        assert_eq!(level(), INFO);
+    }
+}

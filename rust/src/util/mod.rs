@@ -4,5 +4,6 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod rng;
 pub mod threads;

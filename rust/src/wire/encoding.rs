@@ -106,20 +106,25 @@ impl Encoding {
 
     /// Encode `v` (against `reference` for lossy encodings) into `out`.
     /// `out` is cleared first; its final length equals `encoded_bytes(v.len())`.
+    /// Codec time is charged to the process-wide `trace` wire total (the
+    /// `wire_ns` round/summary column) and spanned when tracing is on.
     pub fn encode(&self, v: &[f32], reference: Option<&[f32]>, out: &mut Vec<u8>) {
-        out.clear();
-        let reference = reference.filter(|r| r.len() == v.len());
-        match self {
-            Encoding::Dense => {
-                out.reserve(4 * v.len());
-                for &x in v {
-                    out.extend_from_slice(&x.to_le_bytes());
+        let ((), ns) = crate::trace::timed(crate::trace::Phase::WireEncode, || {
+            out.clear();
+            let reference = reference.filter(|r| r.len() == v.len());
+            match self {
+                Encoding::Dense => {
+                    out.reserve(4 * v.len());
+                    for &x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
                 }
+                Encoding::Int8 => encode_quantized(v, reference, 127.0, out),
+                Encoding::Int16 => encode_quantized(v, reference, 32767.0, out),
+                Encoding::TopK { fraction } => encode_top_k(v, reference, *fraction, out),
             }
-            Encoding::Int8 => encode_quantized(v, reference, 127.0, out),
-            Encoding::Int16 => encode_quantized(v, reference, 32767.0, out),
-            Encoding::TopK { fraction } => encode_top_k(v, reference, *fraction, out),
-        }
+        });
+        crate::trace::add_wire_ns(ns);
     }
 
     /// Decode a payload into `out` (resized to the encoded length). Lossy
@@ -128,7 +133,7 @@ impl Encoding {
     /// reference state agree. Corrupt or truncated payloads return an
     /// error — they never panic.
     pub fn decode(&self, payload: &[u8], reference: Option<&[f32]>, out: &mut Vec<f32>) -> Result<()> {
-        match self {
+        let (res, ns) = crate::trace::timed(crate::trace::Phase::WireDecode, || match self {
             Encoding::Dense => {
                 if payload.len() % 4 != 0 {
                     bail!("dense payload length {} is not a multiple of 4", payload.len());
@@ -143,7 +148,9 @@ impl Encoding {
             Encoding::Int8 => decode_quantized(payload, reference, 1, out),
             Encoding::Int16 => decode_quantized(payload, reference, 2, out),
             Encoding::TopK { .. } => decode_top_k(payload, reference, out),
-        }
+        });
+        crate::trace::add_wire_ns(ns);
+        res
     }
 }
 

@@ -133,6 +133,11 @@ pub struct ServeConfig {
     pub final_eval: bool,
     /// Log every frame (compact JSON) to stderr.
     pub debug_wire: bool,
+    /// Expose a plain-text Prometheus metrics endpoint on this loopback
+    /// port (0 = ephemeral), scraped from the same poll loop that pumps
+    /// the coordinator — rounds, charged/retransmitted bytes,
+    /// enrolled/dead clients, the quorum gauge, and shortfalls.
+    pub metrics_port: Option<u16>,
 }
 
 impl ServeConfig {
@@ -154,6 +159,7 @@ impl ServeConfig {
             chaos: None,
             final_eval: false,
             debug_wire: false,
+            metrics_port: None,
         }
     }
 }
@@ -197,6 +203,9 @@ pub struct ServeReport {
 pub struct WireServer {
     cfg: ServeConfig,
     listener: TcpListener,
+    /// Bound when `cfg.metrics_port` is set: the Prometheus scrape
+    /// endpoint, answered from the same poll loop as the protocol.
+    metrics: Option<TcpListener>,
 }
 
 /// Parse complete frames off an accumulating per-connection byte buffer.
@@ -331,6 +340,9 @@ struct Pending {
 struct Hub {
     cfg: ServeConfig,
     listener: TcpListener,
+    /// Optional Prometheus scrape listener, polled alongside the
+    /// protocol listener so metrics stay live mid-round.
+    metrics: Option<TcpListener>,
     slots: Vec<Slot>,
     pending: Vec<Pending>,
     tally: Tally,
@@ -340,25 +352,38 @@ struct Hub {
     /// start at `check_every` ≥ 1). Synthesized on resume when the
     /// original left the outbox.
     last_resolved: u32,
+    /// Check rounds resolved so far (the `dynavg_rounds_total` counter).
+    rounds_done: u64,
+    /// Check rounds closed on a quorum below full enrollment.
+    shortfalls: u64,
+    /// Reports that missed their round's cut and merged into a later one.
+    late_merges: u64,
     done: bool,
     /// Last structured handshake failure, surfaced by enrollment timeouts.
     last_hs_error: Option<String>,
 }
 
 impl Hub {
-    fn new(cfg: ServeConfig, listener: TcpListener) -> Result<Hub> {
+    fn new(cfg: ServeConfig, listener: TcpListener, metrics: Option<TcpListener>) -> Result<Hub> {
         listener.set_nonblocking(true)?;
+        if let Some(mx) = &metrics {
+            mx.set_nonblocking(true)?;
+        }
         let now = Instant::now();
         let m = cfg.m;
         Ok(Hub {
             cfg,
             listener,
+            metrics,
             slots: (0..m).map(|_| Slot::new(now)).collect(),
             pending: Vec::new(),
             tally: Tally::default(),
             net: NetStats::new(),
             conn_seq: 0,
             last_resolved: 0,
+            rounds_done: 0,
+            shortfalls: 0,
+            late_merges: 0,
             done: false,
             last_hs_error: None,
         })
@@ -423,7 +448,7 @@ impl Hub {
                             // config error: fail fast and loud
                             return Err(e);
                         }
-                        eprintln!("serve: rejected connection: {e:#}");
+                        crate::log_warn!("serve: rejected connection: {e:#}");
                         self.last_hs_error = Some(format!("{e:#}"));
                     }
                 }
@@ -467,7 +492,116 @@ impl Hub {
                 }
             }
         }
+
+        self.pump_metrics();
         Ok(())
+    }
+
+    /// Answer any queued metrics scrapes: one-shot HTTP/1.0 responses
+    /// carrying the Prometheus plain-text body. Best-effort — a broken
+    /// scraper connection never touches the run.
+    fn pump_metrics(&self) {
+        let Some(listener) = &self.metrics else { return };
+        loop {
+            match listener.accept() {
+                Ok((mut tcp, _)) => {
+                    use std::io::Write as _;
+                    // drain the request line best-effort so the peer's
+                    // write cannot RST our response
+                    let _ = tcp.set_read_timeout(Some(POLL_READ));
+                    let mut req = [0u8; 1024];
+                    let _ = tcp.read(&mut req);
+                    let body = self.render_metrics();
+                    let _ = write!(
+                        tcp,
+                        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                        body.len(),
+                        body
+                    );
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// The Prometheus plain-text exposition body: live coordinator
+    /// gauges and counters, rendered fresh per scrape.
+    fn render_metrics(&self) -> String {
+        let enrolled = self.slots.iter().filter(|s| s.enrolled).count();
+        let dead = self
+            .slots
+            .iter()
+            .filter(|s| s.claimed && !s.enrolled && s.final_raw.is_none())
+            .count();
+        let mut b = String::with_capacity(1024);
+        let mut put = |name: &str, help: &str, kind: &str, val: String| {
+            b.push_str("# HELP ");
+            b.push_str(name);
+            b.push(' ');
+            b.push_str(help);
+            b.push_str("\n# TYPE ");
+            b.push_str(name);
+            b.push(' ');
+            b.push_str(kind);
+            b.push('\n');
+            b.push_str(&val);
+            b.push('\n');
+        };
+        put(
+            "dynavg_rounds_total",
+            "Check rounds resolved by the coordinator.",
+            "counter",
+            format!("dynavg_rounds_total {}", self.rounds_done),
+        );
+        put(
+            "dynavg_charged_bytes_total",
+            "Charged protocol bytes by direction (first deliveries).",
+            "counter",
+            format!(
+                "dynavg_charged_bytes_total{{direction=\"up\"}} {}\ndynavg_charged_bytes_total{{direction=\"down\"}} {}",
+                self.tally.up, self.tally.down
+            ),
+        );
+        put(
+            "dynavg_retransmitted_bytes_total",
+            "Charged bytes delivered beyond their first delivery.",
+            "counter",
+            format!(
+                "dynavg_retransmitted_bytes_total {}",
+                self.tally.retrans_up + self.tally.retrans_down
+            ),
+        );
+        put(
+            "dynavg_clients_enrolled",
+            "Clients currently counted toward quorum.",
+            "gauge",
+            format!("dynavg_clients_enrolled {enrolled}"),
+        );
+        put(
+            "dynavg_clients_dead",
+            "Claimed slots unenrolled for silence, no final report yet.",
+            "gauge",
+            format!("dynavg_clients_dead {dead}"),
+        );
+        put(
+            "dynavg_quorum_fraction",
+            "Configured fraction of enrolled reports that closes a round.",
+            "gauge",
+            format!("dynavg_quorum_fraction {}", self.cfg.quorum),
+        );
+        put(
+            "dynavg_quorum_shortfalls_total",
+            "Check rounds closed below full enrollment.",
+            "counter",
+            format!("dynavg_quorum_shortfalls_total {}", self.shortfalls),
+        );
+        put(
+            "dynavg_late_merges_total",
+            "Reports merged into a later round than they targeted.",
+            "counter",
+            format!("dynavg_late_merges_total {}", self.late_merges),
+        );
+        b
     }
 
     /// Gate one parsed frame from slot `i` into its inbox, charging
@@ -477,7 +611,7 @@ impl Hub {
     /// frame — so measured and simulated accounting cannot drift apart.
     fn route(&mut self, i: usize, f: Frame) {
         if self.cfg.debug_wire {
-            eprintln!("wire: <- {} {}", i, f.summary_json());
+            crate::log_debug!("wire: <- {} {}", i, f.summary_json());
         }
         let slot = &mut self.slots[i];
         slot.last_seen = Instant::now();
@@ -518,7 +652,7 @@ impl Hub {
     fn poison(&mut self, i: usize, why: &str) {
         let slot = &mut self.slots[i];
         if slot.conn.take().is_some() && self.cfg.debug_wire {
-            eprintln!("serve: dropped connection of client {i}: {why}");
+            crate::log_debug!("serve: dropped connection of client {i}: {why}");
         }
         slot.inbuf.clear();
     }
@@ -533,7 +667,8 @@ impl Hub {
                 && now.duration_since(slot.last_seen) > self.cfg.dead_after
             {
                 slot.enrolled = false;
-                eprintln!(
+                crate::trace::instant(crate::trace::Phase::ServeDeadSweep);
+                crate::log_warn!(
                     "serve: client {i} silent for {:.1}s — unenrolled, degrading to survivors",
                     now.duration_since(slot.last_seen).as_secs_f64()
                 );
@@ -570,6 +705,7 @@ impl Hub {
                     bail!("client at {peer}: resume for unknown client id {i}");
                 }
                 self.slots[i].reconnects += 1;
+                crate::trace::instant(crate::trace::Phase::ServeReconnect);
                 i
             }
             None => match (0..self.slots.len()).find(|&i| !self.slots[i].claimed) {
@@ -630,7 +766,7 @@ impl Hub {
     fn write_direct(&mut self, i: usize, f: &Frame, retransmit: bool) {
         debug_assert!(!f.is_charged());
         if self.cfg.debug_wire {
-            eprintln!("wire: -> {} {}", i, f.summary_json());
+            crate::log_debug!("wire: -> {} {}", i, f.summary_json());
         }
         let mut out = f.clone();
         if retransmit {
@@ -670,7 +806,7 @@ impl Hub {
             out.flags |= FLAG_RETRANSMIT;
         }
         if self.cfg.debug_wire {
-            eprintln!("wire: -> {} {}", i, out.summary_json());
+            crate::log_debug!("wire: -> {} {}", i, out.summary_json());
         }
         let ok = match self.slots[i].conn.as_mut() {
             Some(conn) => out.write_to(conn).is_ok(),
@@ -716,10 +852,19 @@ impl Hub {
     /// Start a new protocol round: advance every slot's gate and drop
     /// delivered outbox entries (undelivered ones stay for replay).
     fn begin_round(&mut self, round: u32) {
+        crate::trace::instant(crate::trace::Phase::ServeRoundOpen);
         for slot in self.slots.iter_mut() {
             slot.gate.begin_round(round);
             slot.outbox.retain(|e| !e.1);
         }
+    }
+
+    /// A check round resolved: remember it for resume synthesis, bump
+    /// the metrics counter, and mark the trace.
+    fn round_closed(&mut self, round: u32) {
+        self.last_resolved = round;
+        self.rounds_done += 1;
+        crate::trace::instant(crate::trace::Phase::ServeRoundClose);
     }
 }
 
@@ -737,11 +882,25 @@ impl WireServer {
             bail!("quorum {} out of (0, 1]", cfg.quorum);
         }
         let listener = TcpListener::bind(("127.0.0.1", port)).context("binding loopback listener")?;
-        Ok(WireServer { cfg, listener })
+        let metrics = match cfg.metrics_port {
+            Some(mp) => {
+                Some(TcpListener::bind(("127.0.0.1", mp)).context("binding metrics listener")?)
+            }
+            None => None,
+        };
+        Ok(WireServer { cfg, listener, metrics })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
         Ok(self.listener.local_addr()?)
+    }
+
+    /// Bound metrics endpoint address, if `metrics_port` was configured.
+    pub fn metrics_addr(&self) -> Result<Option<SocketAddr>> {
+        match &self.metrics {
+            Some(mx) => Ok(Some(mx.local_addr()?)),
+            None => Ok(None),
+        }
     }
 
     /// Write the bound port (one line) so scripts can discover an
@@ -750,6 +909,17 @@ impl WireServer {
         let mut f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
         use std::io::Write as _;
         writeln!(f, "{}", self.local_addr()?.port())?;
+        Ok(())
+    }
+
+    /// Same discovery file for an ephemeral `--metrics-port 0` choice.
+    pub fn write_metrics_port_file(&self, path: &Path) -> Result<()> {
+        let Some(addr) = self.metrics_addr()? else {
+            bail!("no metrics endpoint is bound (pass --metrics-port)");
+        };
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        use std::io::Write as _;
+        writeln!(f, "{}", addr.port())?;
         Ok(())
     }
 
@@ -766,7 +936,7 @@ impl WireServer {
         let p = mrt.model.param_count;
         let m = cfg.m;
         let enc = cfg.encoding;
-        let mut hub = Hub::new(self.cfg, self.listener)?;
+        let mut hub = Hub::new(self.cfg, self.listener, self.metrics)?;
 
         // --- enrollment ---------------------------------------------------
         let enroll_deadline = Instant::now() + cfg.timeout;
@@ -799,8 +969,6 @@ impl WireServer {
         let mut latest: Vec<Vec<f32>> = vec![Vec::new(); m];
         let mut scratch = vec![0.0f32; p];
         let mut payload_buf: Vec<u8> = Vec::new();
-        let mut late_merges = 0u64;
-        let mut shortfalls = 0u64;
 
         let mut t = cfg.check_every;
         while t <= cfg.rounds {
@@ -901,10 +1069,11 @@ impl WireServer {
                                         reported[i] = true;
                                         violated[i] = true;
                                         if f.round != round {
-                                            late_merges += 1;
+                                            hub.late_merges += 1;
+                                            crate::trace::instant(crate::trace::Phase::ServeLateMerge);
                                         }
                                     }
-                                    None => eprintln!(
+                                    None => crate::log_warn!(
                                         "serve: dropped a violation from client {i} against forgotten reference generation {g}"
                                     ),
                                 }
@@ -931,7 +1100,8 @@ impl WireServer {
                 let n_rep = reported.iter().filter(|&&b| b).count();
                 let now = Instant::now();
                 if now >= collect_deadline && n_rep >= need {
-                    shortfalls += 1;
+                    hub.shortfalls += 1;
+                    crate::trace::instant(crate::trace::Phase::ServeShortfall);
                     break;
                 }
                 if now > hard {
@@ -952,7 +1122,7 @@ impl WireServer {
 
             if selected.is_empty() {
                 hub.broadcast_enrolled(FrameKind::Resolved, round);
-                hub.last_resolved = round;
+                hub.round_closed(round);
                 t += cfg.check_every;
                 continue;
             }
@@ -1042,7 +1212,7 @@ impl WireServer {
                 }
             }
             hub.broadcast_enrolled(FrameKind::Resolved, round);
-            hub.last_resolved = round;
+            hub.round_closed(round);
             t += cfg.check_every;
         }
 
@@ -1161,8 +1331,8 @@ impl WireServer {
             averaged,
             cumulative_loss,
             eval,
-            shortfalls,
-            late_merges,
+            shortfalls: hub.shortfalls,
+            late_merges: hub.late_merges,
             reconnects,
             dead,
         })
@@ -1224,7 +1394,7 @@ fn query_upload(
             }
         }
         if !hub.slots[i].enrolled {
-            eprintln!("serve: client {i} died mid-balancing in round {round} — dropped from this sync");
+            crate::log_warn!("serve: client {i} died mid-balancing in round {round} — dropped from this sync");
             return Ok(false);
         }
         if Instant::now() > hard {

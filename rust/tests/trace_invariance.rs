@@ -1,0 +1,80 @@
+//! The tracing contract: span recording is bitwise-invisible to
+//! numerics. Instrumentation only reads clocks — it never touches model
+//! state, rng draws, or byte accounting — so the same engine config run
+//! untraced and then with tracing enabled produces identical models,
+//! averaged parameters, losses, and NetStats (only the telemetry-only
+//! `*_ns` columns may differ). One `#[test]` in its own binary because
+//! `trace::enable()` is process-global.
+
+use dynavg::coordinator::ProtocolSpec;
+use dynavg::experiments::Dataset;
+use dynavg::runtime::Runtime;
+use dynavg::sim::engine::{Engine, RunResult};
+use dynavg::sim::SimConfig;
+
+const SEED: u64 = 77;
+const M: usize = 4;
+const ROUNDS: u64 = 30;
+
+fn engine_run(rt: &Runtime) -> RunResult {
+    let mut cfg = SimConfig::new("mnist_logistic", "sgd", M, ROUNDS, 0.05);
+    cfg.seed = SEED;
+    cfg.final_eval = true;
+    let spec = ProtocolSpec::Dynamic {
+        delta: 1.0,
+        check_every: 5,
+    };
+    let engine = Engine::new(rt, cfg).expect("engine");
+    let factory = Dataset::MnistLike.factory(SEED);
+    engine.run(&spec, &factory).expect("engine run")
+}
+
+#[test]
+fn traced_runs_are_bitwise_identical_to_untraced() {
+    let rt = Runtime::new(dynavg::artifacts_dir()).expect("runtime");
+
+    assert!(!dynavg::trace::enabled(), "tracing must default to off");
+    let base = engine_run(&rt);
+
+    dynavg::trace::enable();
+    let traced = engine_run(&rt);
+
+    for (i, (ma, mb)) in base.models.iter().zip(&traced.models).enumerate() {
+        assert_eq!(ma.len(), mb.len(), "model {i} length");
+        for (j, (x, y)) in ma.iter().zip(mb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "model {i} entry {j} ({x} vs {y})");
+        }
+    }
+    for (j, (x, y)) in base.averaged.iter().zip(&traced.averaged).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "averaged entry {j}");
+    }
+    assert_eq!(
+        base.summary.cumulative_loss.to_bits(),
+        traced.summary.cumulative_loss.to_bits(),
+        "cumulative loss {} vs {}",
+        base.summary.cumulative_loss,
+        traced.summary.cumulative_loss
+    );
+    assert_eq!(base.summary.eval_loss, traced.summary.eval_loss, "eval loss");
+    assert_eq!(base.net, traced.net, "NetStats diverge under tracing");
+    // per-round numerics, excluding the telemetry-only ns columns
+    assert_eq!(base.recorder.rows.len(), traced.recorder.rows.len(), "round count");
+    for (ra, rb) in base.recorder.rows.iter().zip(&traced.recorder.rows) {
+        assert_eq!(ra.round, rb.round, "round index");
+        assert_eq!(ra.loss_sum.to_bits(), rb.loss_sum.to_bits(), "round {} loss", ra.round);
+        assert_eq!(ra.cum_bytes, rb.cum_bytes, "round {} bytes", ra.round);
+        assert_eq!(ra.synced, rb.synced, "round {} synced", ra.round);
+    }
+
+    // the traced run recorded real spans and exports well-formed
+    // Chrome trace JSON
+    let out = std::env::temp_dir().join("dynavg_trace_invariance.json");
+    dynavg::trace::export_chrome(&out).expect("export");
+    let text = std::fs::read_to_string(&out).expect("read trace");
+    assert!(text.starts_with("{\"traceEvents\":["));
+    assert!(text.contains("\"round.compute\""), "missing compute spans");
+    assert!(text.contains("\"round.sync\""), "missing sync spans");
+    assert!(text.contains("\"ph\":\"X\""));
+    assert!(text.ends_with('}'));
+    std::fs::remove_file(&out).ok();
+}

@@ -72,6 +72,13 @@ fn allocs_during(mut f: impl FnMut()) -> u64 {
 fn steady_state_steps_allocate_nothing() {
     let rt = Runtime::native();
 
+    // The whole contract is measured with tracing ACTIVE: a steady-state
+    // span record is an Instant read + a write into the thread's
+    // preallocated ring. Ring registration itself allocates — once per
+    // thread, during the warm-up passes below (every fleet worker opens
+    // a slot span per dispatch, so warm rounds register all of them).
+    dynavg::trace::enable();
+
     // train: the paper's CNN (the step the ROADMAP flagged), the driving
     // CNN (strided convs, no pool), a dense stack for the general claim,
     // the transformer LM (attention scratch, i32 windows, the
